@@ -1,0 +1,69 @@
+//! Non-binary extension (the paper's stated future work): mutual
+//! information over *categorical* variables via one-hot expansion — one
+//! binary Gram yields every pairwise contingency table at once.
+//!
+//! Scenario: a synthetic survey with demographic variables where some
+//! answers depend on others; the bulk categorical MI recovers the
+//! dependency structure.
+//!
+//! ```sh
+//! cargo run --release --example categorical_survey
+//! ```
+
+use bulkmi::mi::categorical::{
+    categorical_entropies, mi_categorical, mi_pair_categorical, CategoricalDataset,
+};
+use bulkmi::util::rng::Rng;
+use bulkmi::util::timer::{fmt_secs, time_it};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let n = 20_000;
+    let mut rng = Rng::new(17);
+    // variables: region(5), age_band(4), product(6 <- depends on region),
+    // channel(3 <- depends on age_band), satisfaction(5, independent)
+    let mut data: Vec<u16> = Vec::with_capacity(n * 5);
+    for _ in 0..n {
+        let region = rng.gen_range(5) as u16;
+        let age = rng.gen_range(4) as u16;
+        let product = if rng.bernoulli(0.7) { region } else { rng.gen_range(6) as u16 };
+        let channel = if rng.bernoulli(0.6) { age % 3 } else { rng.gen_range(3) as u16 };
+        let satisfaction = rng.gen_range(5) as u16;
+        data.extend_from_slice(&[region, age, product, channel, satisfaction]);
+    }
+    let ds = CategoricalDataset::new(n, 5, data)?;
+    let names = ["region", "age_band", "product", "channel", "satisfaction"];
+    println!(
+        "survey: {} respondents x {} variables, cardinalities {:?} ({} one-hot cols)",
+        n,
+        ds.n_vars(),
+        ds.cardinality(),
+        ds.onehot_cols()
+    );
+
+    let (mi, secs) = time_it(|| mi_categorical(&ds));
+    let mi = mi?;
+    println!("bulk categorical MI in {} (one binary Gram)\n", fmt_secs(secs));
+
+    let h = categorical_entropies(&ds);
+    println!("{:<14} {}", "", names.join("  "));
+    for i in 0..5 {
+        print!("{:<14}", names[i]);
+        for j in 0..5 {
+            print!("{:>9.4} ", mi.get(i, j));
+        }
+        println!("   H = {:.3}", h[i]);
+    }
+
+    // the planted dependencies dominate
+    assert!(mi.get(0, 2) > 10.0 * mi.get(0, 4), "region->product signal");
+    assert!(mi.get(1, 3) > 10.0 * mi.get(1, 4), "age->channel signal");
+    // bulk equals the explicit contingency oracle
+    for x in 0..5 {
+        for y in 0..5 {
+            assert!((mi.get(x, y) - mi_pair_categorical(&ds, x, y)).abs() < 1e-10);
+        }
+    }
+    println!("\nplanted dependencies recovered: region->product MI = {:.4}, age->channel MI = {:.4}", mi.get(0, 2), mi.get(1, 3));
+    println!("categorical survey OK");
+    Ok(())
+}

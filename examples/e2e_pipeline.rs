@@ -1,0 +1,164 @@
+//! END-TO-END DRIVER: exercises every layer of the stack on a real
+//! small workload and reports the paper's headline metric (bulk-vs-
+//! pairwise speedup). Recorded in EXPERIMENTS.md.
+//!
+//! Pipeline stages:
+//!   1. data      — synthetic genomics panel (the paper's motivating
+//!                  domain), written to and re-read from .bmat;
+//!   2. backends  — all native backends + the XLA/PJRT artifact path
+//!                  (L1 Pallas / L2 JAX lowered, L3 executes) computed
+//!                  on the same dataset, cross-validated cell by cell;
+//!   3. coordinator — the same computation through the blockwise job
+//!                  service (memory-budgeted plan, worker pool),
+//!                  verified bit-identical to the monolithic run;
+//!   4. analysis  — LD-pair recovery as the application-level check;
+//!   5. report    — Table-1-style timing rows + the headline speedup.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_pipeline
+//! ```
+
+use bulkmi::coordinator::planner::{block_for_budget, plan_blocks};
+use bulkmi::coordinator::progress::Progress;
+use bulkmi::coordinator::service::{JobService, JobSpec, JobStatus};
+use bulkmi::coordinator::{execute_plan, execute_plan_serial, NativeProvider, XlaProvider};
+use bulkmi::coordinator::executor::NativeKind;
+use bulkmi::data::genomics::GenomicsSpec;
+use bulkmi::data::io;
+use bulkmi::mi::backend::{compute_mi_with, Backend};
+use bulkmi::mi::topk::top_k_pairs;
+use bulkmi::mi::xla::XlaMi;
+use bulkmi::runtime::{ArtifactRegistry, Impl, XlaRuntime};
+use bulkmi::util::timer::{fmt_secs, time_it};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    println!("=== bulkmi end-to-end pipeline ===\n");
+
+    // ---- 1. data -------------------------------------------------------
+    let spec = GenomicsSpec {
+        n_samples: 20_000,
+        n_markers: 500,
+        n_causal: 8,
+        ld_per_causal: 3,
+        seed: 99,
+        ..Default::default()
+    };
+    let panel = spec.generate();
+    let path = std::env::temp_dir().join("bulkmi-e2e-panel.bmat");
+    io::write_bmat(&panel.dataset, &path)?;
+    let ds = io::read_bmat(&path)?;
+    println!(
+        "[data] {} samples x {} markers, sparsity {:.3}, {} on disk",
+        ds.n_rows(),
+        ds.n_cols(),
+        ds.sparsity(),
+        std::fs::metadata(&path)?.len()
+    );
+
+    // ---- 2. all backends on the same dataset ---------------------------
+    println!("\n[backends] (paper Table-1 style)");
+    println!("{:<22} {:>12} {:>14}", "implementation", "time", "max diff");
+    let (reference, pair_secs) = time_it(|| compute_mi_with(&ds, Backend::Pairwise, 1));
+    let reference = reference?;
+    println!("{:<22} {:>12} {:>14}", "SKL Pairwise (ours)", fmt_secs(pair_secs), "reference");
+
+    let mut bulk_best = f64::INFINITY;
+    let mut bitpack_mi = None;
+    for backend in [
+        Backend::BulkBasic,
+        Backend::BulkOpt,
+        Backend::BulkSparse,
+        Backend::BulkBitpack,
+    ] {
+        let (mi, secs) = time_it(|| compute_mi_with(&ds, backend, 1));
+        let mi = mi?;
+        let diff = mi.max_abs_diff(&reference);
+        assert!(diff < 1e-10, "{backend}: diff {diff}");
+        bulk_best = bulk_best.min(secs);
+        println!("{:<22} {:>12} {:>14.2e}", backend.paper_label(), fmt_secs(secs), diff);
+        if backend == Backend::BulkBitpack {
+            bitpack_mi = Some(mi);
+        }
+    }
+    let bitpack_mi = bitpack_mi.expect("bitpack ran");
+
+    // XLA path (L1/L2 artifacts through PJRT), if artifacts are built
+    match ArtifactRegistry::load_default() {
+        Ok(reg) => {
+            let xla = XlaMi::new(XlaRuntime::new(reg)?, Impl::Xla);
+            let (mi, secs) = time_it(|| xla.compute(&ds));
+            let mi = mi?;
+            let diff = mi.max_abs_diff(&reference);
+            assert!(diff < 1e-3, "xla diff {diff}");
+            bulk_best = bulk_best.min(secs);
+            println!("{:<22} {:>12} {:>14.2e}", "Opt-T (XLA/PJRT)", fmt_secs(secs), diff);
+        }
+        Err(e) => println!("{:<22} skipped ({e})", "Opt-T (XLA/PJRT)"),
+    }
+
+    let speedup = pair_secs / bulk_best;
+    println!("\n[headline] best bulk vs pairwise speedup: {speedup:.0}x");
+
+    // ---- 3. coordinator: blockwise + service ----------------------------
+    let budget = 64 << 20; // 64 MiB working set per task
+    let block = block_for_budget(ds.n_rows(), ds.n_cols(), budget);
+    let plan = plan_blocks(ds.n_cols(), block)?;
+    println!(
+        "\n[coordinator] memory budget {} MiB -> block {} cols, {} tasks",
+        budget >> 20,
+        block,
+        plan.tasks.len()
+    );
+    let provider = NativeProvider::new(&ds, NativeKind::Bitpack);
+    let progress = Progress::new(plan.tasks.len());
+    let (blockwise, secs) = time_it(|| execute_plan(&ds, &plan, &provider, 1, &progress));
+    let blockwise = blockwise?;
+    assert_eq!(
+        blockwise.max_abs_diff(&bitpack_mi),
+        0.0,
+        "blockwise must be bit-identical to the monolithic bitpack run"
+    );
+    println!("  blockwise run: {} (bit-identical to monolithic)", fmt_secs(secs));
+
+    // XLA provider through the coordinator (column-blocked xgram path)
+    if let Ok(reg) = ArtifactRegistry::load_default() {
+        let xla = XlaMi::new(XlaRuntime::new(reg)?, Impl::Xla);
+        let xprov = XlaProvider::new(xla, Impl::Xla, &ds);
+        let xplan = plan_blocks(ds.n_cols(), 256)?;
+        let xprog = Progress::new(xplan.tasks.len());
+        let (xmi, xsecs) = time_it(|| execute_plan_serial(&ds, &xplan, &xprov, &xprog));
+        let xmi = xmi?;
+        let diff = xmi.max_abs_diff(&reference);
+        assert!(diff < 1e-3, "xla blockwise diff {diff}");
+        println!("  xla blockwise (256-col xgram blocks): {} (diff {diff:.1e})", fmt_secs(xsecs));
+    }
+
+    // the job service surface
+    let svc = JobService::new(2, 4);
+    let h = svc.submit(
+        ds.clone(),
+        JobSpec { kind: NativeKind::Bitpack, block_cols: block, ..Default::default() },
+    )?;
+    let status = svc.wait(h)?;
+    let JobStatus::Done(service_mi) = status else {
+        panic!("service job failed: {status:?}");
+    };
+    assert_eq!(service_mi.max_abs_diff(&bitpack_mi), 0.0);
+    println!("  job service round-trip OK\n{}", svc.metrics().report());
+
+    // ---- 4. application-level check ------------------------------------
+    let k = panel.ld_pairs.len();
+    let top = top_k_pairs(&reference, k);
+    let truth: std::collections::HashSet<(usize, usize)> =
+        panel.ld_pairs.iter().copied().collect();
+    let sibling = |i: usize, j: usize| {
+        panel.ld_pairs.iter().any(|&(c, l)| l == i || c == i)
+            && panel.ld_pairs.iter().any(|&(c, l)| l == j || c == j)
+    };
+    let hits = top.iter().filter(|p| truth.contains(&(p.i, p.j)) || sibling(p.i, p.j)).count();
+    println!("[analysis] LD recovery: {hits}/{k} of top-{k} pairs hit linkage structure");
+    assert!(hits as f64 / k as f64 >= 0.8);
+
+    println!("\n=== e2e pipeline OK (speedup {speedup:.0}x) ===");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Network-science scenario (paper §1: "binary adjacency matrices
+//! represent connections between nodes"): MI between adjacency columns
+//! measures neighborhood overlap. On a planted-partition graph, high-MI
+//! node pairs should be same-community — the MI-based link/community
+//! signal of Tan et al. (paper ref [16]).
+//!
+//! ```sh
+//! cargo run --release --example network_link_prediction
+//! ```
+
+use bulkmi::data::graph::SbmSpec;
+use bulkmi::mi::backend::{compute_mi, Backend};
+use bulkmi::mi::topk::top_k_pairs;
+use bulkmi::util::timer::{fmt_secs, time_it};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let spec = SbmSpec { n_nodes: 240, k: 4, p_in: 0.35, p_out: 0.03, seed: 21 };
+    let graph = spec.generate();
+    let adj = &graph.adjacency;
+    println!(
+        "graph: {} nodes, {} communities, adjacency sparsity {:.3}",
+        spec.n_nodes,
+        spec.k,
+        adj.sparsity()
+    );
+
+    let (mi, secs) = time_it(|| compute_mi(adj, Backend::BulkBitpack));
+    let mi = mi?;
+    println!(
+        "bulk MI over {} node pairs in {}",
+        spec.n_nodes * (spec.n_nodes - 1) / 2,
+        fmt_secs(secs)
+    );
+
+    // top pairs should be same-community (shared neighborhoods)
+    let k_eval = 200;
+    let top = top_k_pairs(&mi, k_eval);
+    let same = top
+        .iter()
+        .filter(|p| graph.community[p.i] == graph.community[p.j])
+        .count();
+    let precision = same as f64 / k_eval as f64;
+    println!("top-{k_eval} MI pairs: {same} same-community (precision {precision:.3})");
+
+    // simple community recovery: assign each node to its highest-MI peer's
+    // community and measure agreement
+    let mut correct = 0usize;
+    for i in 0..spec.n_nodes {
+        let mut best = (0usize, f64::NEG_INFINITY);
+        for j in 0..spec.n_nodes {
+            if j != i && mi.get(i, j) > best.1 {
+                best = (j, mi.get(i, j));
+            }
+        }
+        if graph.community[best.0] == graph.community[i] {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / spec.n_nodes as f64;
+    println!("nearest-MI-neighbor community agreement: {acc:.3}");
+
+    assert!(precision > 0.9, "same-community precision {precision} too low");
+    assert!(acc > 0.9, "neighbor agreement {acc} too low");
+    println!("\nnetwork link prediction OK");
+    Ok(())
+}

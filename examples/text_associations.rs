@@ -1,0 +1,48 @@
+//! NLP scenario (paper §1): word-association mining over a bag-of-words
+//! presence matrix. MI between vocabulary columns surfaces topical word
+//! pairs from the built-in mini-corpus.
+//!
+//! ```sh
+//! cargo run --release --example text_associations
+//! ```
+
+use bulkmi::data::text::{binarize, builtin_corpus};
+use bulkmi::mi::backend::{compute_mi, Backend};
+use bulkmi::mi::entropy::{normalized_mi, Normalization};
+use bulkmi::mi::topk::top_k_pairs;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let docs = builtin_corpus();
+    let ds = binarize(&docs, 2, 200);
+    println!(
+        "corpus: {} docs, vocabulary {} words, sparsity {:.3}",
+        ds.n_rows(),
+        ds.n_cols(),
+        ds.sparsity()
+    );
+
+    let mi = compute_mi(&ds, Backend::BulkOpt)?;
+    let nmi = normalized_mi(&ds, &mi, Normalization::Mean);
+
+    println!("\ntop word associations (symmetric uncertainty):");
+    let names = ds.names().unwrap();
+    for p in top_k_pairs(&nmi, 12) {
+        println!("  {:<14} <-> {:<14} {:.3}", names[p.i], names[p.j], p.mi);
+    }
+
+    // sanity: at least one association from each topic cluster shows up
+    let top: Vec<(String, String)> = top_k_pairs(&nmi, 12)
+        .iter()
+        .map(|p| (names[p.i].clone(), names[p.j].clone()))
+        .collect();
+    let has_pair = |a: &str, b: &str| {
+        top.iter().any(|(x, y)| (x == a && y == b) || (x == b && y == a))
+    };
+    // these co-occur in every document of their topic
+    assert!(
+        has_pair("game", "team") || has_pair("championship", "team") || has_pair("game", "the"),
+        "sports topic missing from top associations: {top:?}"
+    );
+    println!("\ntext associations OK");
+    Ok(())
+}

@@ -1,0 +1,144 @@
+"""AOT bridge: lower the Layer-2 graphs to HLO *text* artifacts.
+
+Run once at build time (``make artifacts``); the Rust runtime
+(`rust/src/runtime/artifacts.rs`) discovers the results through
+``artifacts/manifest.txt`` and never touches Python again.
+
+Interchange format is HLO TEXT, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+Everything is lowered with ``return_tuple=True`` and unwrapped with
+``to_tupleN`` on the Rust side.
+
+Manifest format (one artifact per line, '#' comments):
+
+    name kind rows cols impl filename
+
+* kind in {mi, gram, xgram, combine, mi_basic}
+* rows is 0 for ``combine`` (row-count independent)
+* impl in {xla, pallas}: same math; ``xla`` uses XLA's native dot for
+  the Gram (the request-path default), ``pallas`` routes it through the
+  interpret-mode Layer-1 kernel grid (correctness/ablation path).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+F32 = jnp.float32
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+# ---------------------------------------------------------------------------
+# Artifact table. Shape buckets are chosen so the Rust runtime can serve
+# any (n, m) by (a) padding up to the nearest bucket, or (b) row-chunking
+# through `gram` + `combine` when n exceeds the largest bucket, or
+# (c) column-blocking through `xgram` + `combine` when m does.
+# ---------------------------------------------------------------------------
+
+MI_BUCKETS_XLA = [(1024, 128), (2048, 256), (4096, 512), (8192, 1024), (16384, 1024)]
+MI_BUCKETS_PALLAS = [(1024, 128), (2048, 256)]
+GRAM_BUCKETS_XLA = [(2048, 128), (2048, 256), (2048, 512), (2048, 1024), (4096, 1024), (4096, 2048)]
+GRAM_BUCKETS_PALLAS = [(1024, 128)]
+XGRAM_BUCKETS_XLA = [(2048, 128), (2048, 256), (4096, 256), (4096, 512)]
+XGRAM_BUCKETS_PALLAS = [(1024, 128)]
+COMBINE_BUCKETS_XLA = [128, 256, 512, 1024, 2048]
+COMBINE_BUCKETS_PALLAS = [128, 256]
+MI_BASIC_BUCKETS = [(1024, 128), (2048, 256)]
+
+
+def artifact_table():
+    """Yield (name, kind, rows, cols, impl, fn, arg_specs) tuples."""
+    for r, c in MI_BUCKETS_XLA:
+        yield (f"mi_xla_{r}x{c}", "mi", r, c, "xla", model.mi_fused_xla, (_spec(r, c), _spec(1)))
+    for r, c in MI_BUCKETS_PALLAS:
+        yield (f"mi_pallas_{r}x{c}", "mi", r, c, "pallas", model.mi_fused, (_spec(r, c), _spec(1)))
+    for r, c in GRAM_BUCKETS_XLA:
+        yield (f"gram_xla_{r}x{c}", "gram", r, c, "xla", model.gram_partial_xla, (_spec(r, c),))
+    for r, c in GRAM_BUCKETS_PALLAS:
+        yield (f"gram_pallas_{r}x{c}", "gram", r, c, "pallas", model.gram_partial, (_spec(r, c),))
+    for r, c in XGRAM_BUCKETS_XLA:
+        yield (
+            f"xgram_xla_{r}x{c}", "xgram", r, c, "xla",
+            model.xgram_partial_xla, (_spec(r, c), _spec(r, c)),
+        )
+    for r, c in XGRAM_BUCKETS_PALLAS:
+        yield (
+            f"xgram_pallas_{r}x{c}", "xgram", r, c, "pallas",
+            model.xgram_partial, (_spec(r, c), _spec(r, c)),
+        )
+    for c in COMBINE_BUCKETS_XLA:
+        yield (
+            f"combine_xla_{c}", "combine", 0, c, "xla",
+            model.combine_xla, (_spec(c, c), _spec(c), _spec(c), _spec(1)),
+        )
+    for c in COMBINE_BUCKETS_PALLAS:
+        yield (
+            f"combine_pallas_{c}", "combine", 0, c, "pallas",
+            model.combine, (_spec(c, c), _spec(c), _spec(c), _spec(1)),
+        )
+    for r, c in MI_BASIC_BUCKETS:
+        yield (f"mi_basic_{r}x{c}", "mi_basic", r, c, "xla", model.mi_basic, (_spec(r, c),))
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(fn, arg_specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*arg_specs))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    ap.add_argument("--only", default=None, help="substring filter on artifact names")
+    ap.add_argument(
+        "--force", action="store_true",
+        help="re-lower even if the artifact file already exists",
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_lines = ["# name kind rows cols impl filename"]
+    n_written = n_skipped = 0
+    for name, kind, rows, cols, impl, fn, specs in artifact_table():
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        manifest_lines.append(f"{name} {kind} {rows} {cols} {impl} {fname}")
+        if args.only and args.only not in name:
+            continue
+        if os.path.exists(path) and not args.force:
+            n_skipped += 1
+            continue
+        text = lower_one(fn, specs)
+        with open(path, "w") as f:
+            f.write(text)
+        n_written += 1
+        print(f"  lowered {name:<24} {len(text):>10} chars", file=sys.stderr)
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"aot: {n_written} lowered, {n_skipped} up-to-date -> {args.out_dir}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,168 @@
+"""Pure-jnp / numpy correctness oracles for bulk mutual information.
+
+Two families of reference implementations:
+
+* ``mi_pair`` / ``mi_pairwise_ref``: the textbook per-pair 2x2-contingency
+  computation (numpy, no tricks).  This is what scikit-learn's
+  ``mutual_info_score`` computes for binary data and is the ground truth
+  every other implementation (jnp bulk forms, Pallas kernels, all five
+  Rust backends) is validated against.
+
+* ``bulk_mi_basic_ref`` / ``bulk_mi_opt_ref``: the paper's Section-2 and
+  Section-3 algorithms written in plain jnp.  These serve both as oracles
+  for the Pallas kernels and as the "basic vs optimized" ablation pair.
+
+Numerical convention (shared with the Rust side, see ``mi/counts.rs``):
+MI terms with a zero joint probability contribute exactly 0 —
+``0 * log2(0 / e) := 0`` — implemented with masked/where arithmetic
+instead of the paper's additive epsilon so the oracle is *exact*.  The
+paper's epsilon variant is also provided (``bulk_mi_opt_eps_ref``) to
+bound the difference between the two conventions in tests.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = [
+    "mi_pair",
+    "mi_pairwise_ref",
+    "bulk_mi_basic_ref",
+    "bulk_mi_opt_ref",
+    "bulk_mi_opt_eps_ref",
+    "gram_ref",
+    "combine_ref",
+]
+
+
+def mi_pair(x: np.ndarray, y: np.ndarray) -> float:
+    """Textbook MI (bits) between two binary vectors via 2x2 contingency."""
+    x = np.asarray(x).astype(np.int64)
+    y = np.asarray(y).astype(np.int64)
+    n = x.shape[0]
+    n11 = int(np.sum((x == 1) & (y == 1)))
+    n10 = int(np.sum((x == 1) & (y == 0)))
+    n01 = int(np.sum((x == 0) & (y == 1)))
+    n00 = n - n11 - n10 - n01
+    mi = 0.0
+    for nxy, nx, ny in (
+        (n11, n11 + n10, n11 + n01),
+        (n10, n11 + n10, n10 + n00),
+        (n01, n01 + n00, n11 + n01),
+        (n00, n01 + n00, n10 + n00),
+    ):
+        if nxy > 0:
+            p_xy = nxy / n
+            p_x = nx / n
+            p_y = ny / n
+            mi += p_xy * np.log2(p_xy / (p_x * p_y))
+    return float(mi)
+
+
+def mi_pairwise_ref(D: np.ndarray) -> np.ndarray:
+    """m x m MI matrix via the per-pair oracle (slow; small inputs only)."""
+    D = np.asarray(D)
+    m = D.shape[1]
+    out = np.zeros((m, m), dtype=np.float64)
+    for i in range(m):
+        for j in range(m):
+            out[i, j] = mi_pair(D[:, i], D[:, j])
+    return out
+
+
+def _masked_term(p: jnp.ndarray, e: jnp.ndarray) -> jnp.ndarray:
+    """p * log2(p / e), with the 0*log(0) := 0 convention, NaN-safe."""
+    safe_p = jnp.where(p > 0, p, 1.0)
+    safe_e = jnp.where(e > 0, e, 1.0)
+    return jnp.where(p > 0, p * (jnp.log2(safe_p) - jnp.log2(safe_e)), 0.0)
+
+
+def bulk_mi_basic_ref(D: jnp.ndarray) -> jnp.ndarray:
+    """Paper Section 2: the basic bulk algorithm with all four Gram matrices."""
+    D = D.astype(jnp.float32)
+    n = D.shape[0]
+    nD = 1.0 - D
+    G11 = D.T @ D
+    G00 = nD.T @ nD
+    G01 = nD.T @ D
+    G10 = D.T @ nD
+    P11, P00, P01, P10 = (G / n for G in (G11, G00, G01, G10))
+    p1 = jnp.diag(G11) / n
+    p0 = jnp.diag(G00) / n
+    E11 = jnp.outer(p1, p1)
+    E00 = jnp.outer(p0, p0)
+    E10 = jnp.outer(p1, p0)
+    E01 = jnp.outer(p0, p1)
+    return (
+        _masked_term(P11, E11)
+        + _masked_term(P10, E10)
+        + _masked_term(P01, E01)
+        + _masked_term(P00, E00)
+    )
+
+
+def gram_ref(Da: jnp.ndarray, Db: jnp.ndarray):
+    """Cross Gram + column sums: (Da^T Db, colsums(Da), colsums(Db))."""
+    Da = Da.astype(jnp.float32)
+    Db = Db.astype(jnp.float32)
+    return Da.T @ Db, jnp.sum(Da, axis=0), jnp.sum(Db, axis=0)
+
+
+def combine_ref(G11: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray, n) -> jnp.ndarray:
+    """Paper Section 3: MI from (G11, colsums, n) alone.
+
+    For output cell (i, j) with i indexing ``ca`` columns and j ``cb``:
+      n11 = G11[i,j]          n10 = ca[i] - G11[i,j]
+      n01 = cb[j] - G11[i,j]  n00 = n - ca[i] - cb[j] + G11[i,j]
+    """
+    n = jnp.asarray(n, dtype=jnp.float32)
+    ca_col = ca[:, None]
+    cb_row = cb[None, :]
+    P11 = G11 / n
+    P10 = (ca_col - G11) / n
+    P01 = (cb_row - G11) / n
+    P00 = (n - ca_col - cb_row + G11) / n
+    p1a = ca_col / n
+    p0a = 1.0 - p1a
+    p1b = cb_row / n
+    p0b = 1.0 - p1b
+    return (
+        _masked_term(P11, p1a * p1b)
+        + _masked_term(P10, p1a * p0b)
+        + _masked_term(P01, p0a * p1b)
+        + _masked_term(P00, p0a * p0b)
+    )
+
+
+def bulk_mi_opt_ref(D: jnp.ndarray, n=None) -> jnp.ndarray:
+    """Paper Section 3: optimized bulk algorithm — one Gram matmul only."""
+    D = D.astype(jnp.float32)
+    if n is None:
+        n = D.shape[0]
+    G11, c, _ = gram_ref(D, D)
+    return combine_ref(G11, c, c, n)
+
+
+def bulk_mi_opt_eps_ref(D: jnp.ndarray, eps: float = 1e-10) -> jnp.ndarray:
+    """The paper's literal epsilon formulation (for convention-difference tests)."""
+    D = D.astype(jnp.float32)
+    n = D.shape[0]
+    G11 = D.T @ D
+    c = jnp.sum(D, axis=0)
+    ca, cb = c[:, None], c[None, :]
+    P11 = G11 / n
+    P10 = (ca - G11) / n
+    P01 = (cb - G11) / n
+    P00 = (n - ca - cb + G11) / n
+    p1a, p1b = ca / n, cb / n
+    p0a, p0b = 1.0 - p1a, 1.0 - p1b
+    out = jnp.zeros_like(G11)
+    for P, E in (
+        (P11, p1a * p1b),
+        (P10, p1a * p0b),
+        (P01, p0a * p1b),
+        (P00, p0a * p0b),
+    ):
+        out = out + P * jnp.log2((P + eps) / (E + eps))
+    return out

@@ -1,0 +1,116 @@
+"""Layer-2 JAX compute graphs for bulk mutual information.
+
+These are the functions that get AOT-lowered (``aot.py``) into the HLO
+artifacts the Rust runtime executes. Each is a thin composition over the
+Layer-1 Pallas kernels (``kernels.mi_pallas``); nothing here runs at
+request time — Python exists only on the compile path.
+
+Entry points (all return tuples — the AOT bridge lowers with
+``return_tuple=True`` and Rust unwraps with ``to_tupleN``):
+
+* ``mi_fused(D, n1)``      — full optimized bulk MI in one executable.
+* ``gram_partial(D)``      — (G11 partial, colsums partial) for one row
+                             chunk; Rust sums chunk outputs (exact).
+* ``xgram_partial(Da,Db)`` — cross-block Gram for column blocking.
+* ``combine(G11,ca,cb,n1)``— MI from accumulated counts.
+* ``mi_basic(D)``          — the *un*-optimized Section-2 algorithm
+                             (4 Gram matmuls), kept for the ablation
+                             bench; deliberately NOT Pallas-tiled.
+
+``n1`` is the true (un-padded) row count as an ``f32[1]`` — scalar
+plumbing through the text-HLO bridge is simpler with a rank-1 literal.
+Padding exactness: see DESIGN.md §2 and tests/test_padding.py.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import mi_pallas
+from .kernels.ref import bulk_mi_basic_ref, combine_ref, gram_ref
+
+__all__ = [
+    "mi_fused",
+    "gram_partial",
+    "xgram_partial",
+    "combine",
+    "mi_basic",
+    "mi_fused_xla",
+    "gram_partial_xla",
+    "xgram_partial_xla",
+    "combine_xla",
+]
+
+
+def mi_fused(D: jnp.ndarray, n1: jnp.ndarray):
+    """Optimized bulk MI (paper §3) for a whole (padded) dataset.
+
+    D: f32[R, C] zero-padded binary data; n1: f32[1] true row count.
+    Returns (f32[C, C] MI matrix in bits,).
+    """
+    D = D.astype(jnp.float32)
+    n = n1[0]
+    G11 = mi_pallas.gram(D, D)
+    c = jnp.sum(D, axis=0)
+    return (mi_pallas.mi_combine(G11, c, c, n),)
+
+
+def gram_partial(D: jnp.ndarray):
+    """Partial Gram + colsums for one row chunk (exact under summation)."""
+    D = D.astype(jnp.float32)
+    return (mi_pallas.gram(D, D), jnp.sum(D, axis=0))
+
+
+def xgram_partial(Da: jnp.ndarray, Db: jnp.ndarray):
+    """Cross-block partial Gram + both colsums, for column-block pairs."""
+    Da = Da.astype(jnp.float32)
+    Db = Db.astype(jnp.float32)
+    return (
+        mi_pallas.gram(Da, Db),
+        jnp.sum(Da, axis=0),
+        jnp.sum(Db, axis=0),
+    )
+
+
+def combine(G11: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray, n1: jnp.ndarray):
+    """MI from accumulated (G11, colsums, n) counts."""
+    return (mi_pallas.mi_combine(G11, ca, cb, n1[0]),)
+
+
+def mi_basic(D: jnp.ndarray):
+    """Paper §2 basic algorithm (4 Gram matmuls) — ablation comparator."""
+    return (bulk_mi_basic_ref(D),)
+
+
+# ---------------------------------------------------------------------------
+# "xla" implementation variants: identical math, but the Gram runs on
+# XLA's native `dot` instead of the interpret-mode Pallas grid loop.
+# Interpret mode emulates the TPU grid as a sequential HLO while-loop,
+# which is the right *structure* for the MXU but slow on the CPU PJRT
+# backend; these variants are what the Rust runtime executes on the
+# Table-1 hot path (the paper's "Opt-T" optimized-framework row), while
+# the Pallas variants prove the L1 kernels lower and run end-to-end.
+# ---------------------------------------------------------------------------
+
+
+def mi_fused_xla(D: jnp.ndarray, n1: jnp.ndarray):
+    """Optimized bulk MI with an XLA-native Gram dot."""
+    D = D.astype(jnp.float32)
+    G11, c, _ = gram_ref(D, D)
+    return (combine_ref(G11, c, c, n1[0]),)
+
+
+def gram_partial_xla(D: jnp.ndarray):
+    """Partial Gram + colsums via XLA-native dot."""
+    G11, c, _ = gram_ref(D, D)
+    return (G11, c)
+
+
+def xgram_partial_xla(Da: jnp.ndarray, Db: jnp.ndarray):
+    """Cross-block partial Gram via XLA-native dot."""
+    return gram_ref(Da, Db)
+
+
+def combine_xla(G11: jnp.ndarray, ca: jnp.ndarray, cb: jnp.ndarray, n1: jnp.ndarray):
+    """MI combine via plain jnp ops."""
+    return (combine_ref(G11, ca, cb, n1[0]),)

@@ -1,0 +1,20 @@
+"""Shared fixtures/helpers for the python-side test suite."""
+
+from __future__ import annotations
+
+import os
+import sys
+
+import numpy as np
+
+# Make `compile` importable when pytest is run from python/ or repo root.
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_PYROOT = os.path.dirname(_HERE)
+for _p in (_PYROOT, _HERE):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+
+def random_binary(rng: np.random.Generator, n: int, m: int, sparsity: float = 0.9):
+    """n x m binary matrix with P(zero) = sparsity."""
+    return (rng.random((n, m)) >= sparsity).astype(np.float32)

@@ -1,0 +1,118 @@
+"""Layer-1 Pallas kernels vs the pure-jnp oracle — the CORE correctness
+signal for the compiled hot path. Includes hypothesis sweeps over shapes,
+sparsity and block sizes (uneven tails exercised via the pad-and-slice
+wrappers)."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import mi_pallas
+from compile.kernels.ref import bulk_mi_opt_ref, combine_ref, gram_ref, mi_pairwise_ref
+from conftest import random_binary
+
+
+class TestGramKernel:
+    @pytest.mark.parametrize("n,m", [(8, 8), (64, 16), (100, 13), (129, 7), (256, 128)])
+    def test_gram_matches_matmul(self, n, m):
+        rng = np.random.default_rng(n + m)
+        D = random_binary(rng, n, m, 0.7)
+        got = np.asarray(mi_pallas.gram(D, D, block_m=16, block_k=32))
+        assert_allclose(got, D.T @ D, atol=0)
+
+    def test_gram_cross_rectangular(self):
+        rng = np.random.default_rng(2)
+        Da = random_binary(rng, 70, 11, 0.5)
+        Db = random_binary(rng, 70, 19, 0.8)
+        got = np.asarray(mi_pallas.gram(Da, Db, block_m=8, block_k=16))
+        assert_allclose(got, Da.T @ Db, atol=0)
+
+    def test_gram_counts_are_integers(self):
+        rng = np.random.default_rng(3)
+        D = random_binary(rng, 200, 24, 0.9)
+        got = np.asarray(mi_pallas.gram(D, D))
+        assert_allclose(got, np.round(got), atol=0)
+
+    def test_gram_row_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            mi_pallas.gram(np.zeros((4, 3), np.float32), np.zeros((5, 3), np.float32))
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 200),
+        m=st.integers(1, 40),
+        sparsity=st.floats(0.0, 1.0),
+        bm=st.sampled_from([4, 8, 16, 128]),
+        bk=st.sampled_from([8, 32, 128]),
+    )
+    def test_gram_hypothesis(self, n, m, sparsity, bm, bk):
+        rng = np.random.default_rng(n * 1000 + m)
+        D = random_binary(rng, n, m, sparsity)
+        got = np.asarray(mi_pallas.gram(D, D, block_m=bm, block_k=bk))
+        assert_allclose(got, D.T @ D, atol=0)
+
+
+class TestCombineKernel:
+    @pytest.mark.parametrize("m", [4, 13, 128, 130])
+    def test_combine_matches_ref(self, m):
+        rng = np.random.default_rng(m)
+        D = random_binary(rng, 90, m, 0.8)
+        G, c, _ = (np.asarray(x) for x in gram_ref(D, D))
+        got = np.asarray(mi_pallas.mi_combine(G, c, c, 90.0, block_m=16))
+        want = np.asarray(combine_ref(G, c, c, 90))
+        assert_allclose(got, want, atol=1e-6)
+
+    def test_combine_rectangular_blocks(self):
+        rng = np.random.default_rng(21)
+        D = random_binary(rng, 64, 20, 0.6)
+        Da, Db = D[:, :8], D[:, 8:]
+        G, ca, cb = (np.asarray(x) for x in gram_ref(Da, Db))
+        got = np.asarray(mi_pallas.mi_combine(G, ca, cb, 64.0, block_m=8))
+        assert_allclose(got, mi_pairwise_ref(D)[:8, 8:], atol=2e-5)
+
+    def test_combine_zero_and_constant_columns(self):
+        # all-zero and all-one columns must produce exactly 0 MI, no NaNs.
+        D = np.zeros((40, 6), dtype=np.float32)
+        D[:, 1] = 1.0
+        D[::2, 3] = 1.0
+        G, c, _ = (np.asarray(x) for x in gram_ref(D, D))
+        got = np.asarray(mi_pallas.mi_combine(G, c, c, 40.0, block_m=8))
+        assert not np.any(np.isnan(got))
+        assert got[0, 0] == 0.0 and got[1, 1] == 0.0
+        assert_allclose(got[3, 3], 1.0, atol=1e-6)  # balanced col -> H = 1 bit
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(2, 150), m=st.integers(1, 30), sparsity=st.floats(0.1, 0.99))
+    def test_combine_hypothesis(self, n, m, sparsity):
+        rng = np.random.default_rng(n * 31 + m)
+        D = random_binary(rng, n, m, sparsity)
+        G, c, _ = (np.asarray(x) for x in gram_ref(D, D))
+        got = np.asarray(mi_pallas.mi_combine(G, c, c, float(n), block_m=8))
+        want = np.asarray(combine_ref(G, c, c, n))
+        assert not np.any(np.isnan(got))
+        assert_allclose(got, want, atol=1e-5)
+
+
+class TestFusedPallas:
+    @pytest.mark.parametrize("n,m", [(64, 8), (100, 13), (256, 32)])
+    def test_fused_matches_pairwise(self, n, m):
+        rng = np.random.default_rng(n ^ m)
+        D = random_binary(rng, n, m, 0.85)
+        got = np.asarray(mi_pallas.bulk_mi_pallas(D, float(n), block_m=16, block_k=32))
+        assert_allclose(got, mi_pairwise_ref(D), atol=2e-5)
+
+    def test_fused_matches_opt_ref(self):
+        rng = np.random.default_rng(99)
+        D = random_binary(rng, 300, 40, 0.9)
+        got = np.asarray(mi_pallas.bulk_mi_pallas(D, 300.0))
+        assert_allclose(got, np.asarray(bulk_mi_opt_ref(D)), atol=1e-5)
+
+    def test_fused_symmetric_nonnegative(self):
+        rng = np.random.default_rng(123)
+        D = random_binary(rng, 128, 24, 0.5)
+        got = np.asarray(mi_pallas.bulk_mi_pallas(D, 128.0, block_m=8, block_k=16))
+        assert_allclose(got, got.T, atol=1e-5)
+        assert np.all(got >= -1e-6)

@@ -1,0 +1,91 @@
+"""Layer-2 model graphs: parity between the Pallas and XLA-native
+variants, composition of the chunk/block entry points, and the tuple
+output contract the Rust runtime relies on."""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels.ref import bulk_mi_basic_ref, bulk_mi_opt_ref
+from conftest import random_binary
+
+
+class TestVariantParity:
+    @pytest.mark.parametrize("n,m", [(64, 16), (128, 128), (200, 40)])
+    def test_pallas_and_xla_fused_agree(self, n, m):
+        rng = np.random.default_rng(n + m)
+        D = random_binary(rng, n, m, 0.85)
+        n1 = np.array([float(n)], np.float32)
+        (a,) = model.mi_fused(D, n1)
+        (b,) = model.mi_fused_xla(D, n1)
+        assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+    def test_fused_matches_oracle(self):
+        rng = np.random.default_rng(5)
+        D = random_binary(rng, 150, 20, 0.9)
+        (out,) = model.mi_fused_xla(D, np.array([150.0], np.float32))
+        assert_allclose(np.asarray(out), np.asarray(bulk_mi_opt_ref(D)), atol=1e-5)
+
+    def test_basic_matches_section2_oracle(self):
+        rng = np.random.default_rng(6)
+        D = random_binary(rng, 100, 12, 0.7)
+        (out,) = model.mi_basic(D)
+        assert_allclose(np.asarray(out), np.asarray(bulk_mi_basic_ref(D)), atol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.integers(4, 120), m=st.integers(2, 24), s=st.floats(0.3, 0.98))
+    def test_variant_parity_hypothesis(self, n, m, s):
+        rng = np.random.default_rng(n * 131 + m)
+        D = random_binary(rng, n, m, s)
+        n1 = np.array([float(n)], np.float32)
+        (a,) = model.mi_fused(D, n1)
+        (b,) = model.mi_fused_xla(D, n1)
+        assert not np.any(np.isnan(np.asarray(a)))
+        assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+class TestComposition:
+    def test_gram_then_combine_equals_fused(self):
+        rng = np.random.default_rng(7)
+        D = random_binary(rng, 90, 14, 0.8)
+        G, c = model.gram_partial_xla(D)
+        (via_parts,) = model.combine_xla(G, c, c, np.array([90.0], np.float32))
+        (fused,) = model.mi_fused_xla(D, np.array([90.0], np.float32))
+        assert_allclose(np.asarray(via_parts), np.asarray(fused), atol=1e-6)
+
+    def test_xgram_tiles_assemble_full_matrix(self):
+        rng = np.random.default_rng(8)
+        D = random_binary(rng, 70, 12, 0.75)
+        n1 = np.array([70.0], np.float32)
+        full = np.asarray(model.mi_fused_xla(D, n1)[0])
+        blocks = [(0, 6), (6, 6)]
+        out = np.zeros((12, 12), np.float32)
+        for a_start, a_len in blocks:
+            for b_start, b_len in blocks:
+                Da = D[:, a_start : a_start + a_len]
+                Db = D[:, b_start : b_start + b_len]
+                G, ca, cb = model.xgram_partial_xla(Da, Db)
+                (mi,) = model.combine_xla(np.asarray(G), np.asarray(ca), np.asarray(cb), n1)
+                out[a_start : a_start + a_len, b_start : b_start + b_len] = np.asarray(mi)
+        assert_allclose(out, full, atol=1e-5)
+
+    def test_outputs_are_tuples(self):
+        # the AOT bridge lowers with return_tuple=True; rust unwraps
+        # to_tupleN — every entry point must return a tuple.
+        rng = np.random.default_rng(9)
+        D = random_binary(rng, 32, 8, 0.5)
+        n1 = np.array([32.0], np.float32)
+        assert isinstance(model.mi_fused(D, n1), tuple)
+        assert isinstance(model.mi_fused_xla(D, n1), tuple)
+        assert isinstance(model.gram_partial(D), tuple)
+        assert isinstance(model.gram_partial_xla(D), tuple)
+        assert isinstance(model.xgram_partial(D, D), tuple)
+        assert isinstance(model.xgram_partial_xla(D, D), tuple)
+        assert isinstance(model.mi_basic(D), tuple)
+        G, c = model.gram_partial_xla(D)
+        assert isinstance(model.combine(G, c, c, n1), tuple)
+        assert isinstance(model.combine_xla(G, c, c, n1), tuple)

@@ -1,0 +1,105 @@
+"""Padding/chunking exactness — the property the Rust runtime's shape
+bucketing relies on (DESIGN.md §2): every quantity in the optimized
+algorithm is a function of (G11, colsums, n) only, so
+
+* zero-padding ROWS is exact when the true n is passed as a scalar;
+* zero-padding COLUMNS only pollutes output rows/cols that get sliced away;
+* row-chunked accumulation of (G11, colsums) is exact.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels.ref import bulk_mi_opt_ref
+from conftest import random_binary
+
+
+def pad_rows(D, total):
+    out = np.zeros((total, D.shape[1]), dtype=D.dtype)
+    out[: D.shape[0]] = D
+    return out
+
+
+def pad_cols(D, total):
+    out = np.zeros((D.shape[0], total), dtype=D.dtype)
+    out[:, : D.shape[1]] = D
+    return out
+
+
+class TestRowPadding:
+    def test_row_padding_exact(self):
+        rng = np.random.default_rng(1)
+        D = random_binary(rng, 77, 10, 0.8)
+        want = np.asarray(bulk_mi_opt_ref(D))
+        padded = pad_rows(D, 128)
+        (got,) = model.mi_fused_xla(padded, np.array([77.0], np.float32))
+        assert_allclose(np.asarray(got), want, atol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(2, 100), extra=st.integers(0, 100), m=st.integers(1, 20))
+    def test_row_padding_hypothesis(self, n, extra, m):
+        rng = np.random.default_rng(n * 7 + extra + m)
+        D = random_binary(rng, n, m, 0.7)
+        want = np.asarray(bulk_mi_opt_ref(D))
+        (got,) = model.mi_fused_xla(pad_rows(D, n + extra), np.array([float(n)], np.float32))
+        assert_allclose(np.asarray(got), want, atol=1e-5)
+
+
+class TestColPadding:
+    def test_col_padding_slices_clean(self):
+        rng = np.random.default_rng(2)
+        D = random_binary(rng, 64, 9, 0.8)
+        want = np.asarray(bulk_mi_opt_ref(D))
+        (got,) = model.mi_fused_xla(pad_cols(D, 16), np.array([64.0], np.float32))
+        got = np.asarray(got)
+        assert not np.any(np.isnan(got))  # padded cells must stay finite
+        assert_allclose(got[:9, :9], want, atol=1e-5)
+
+    def test_row_and_col_padding_together(self):
+        rng = np.random.default_rng(3)
+        D = random_binary(rng, 50, 6, 0.6)
+        want = np.asarray(bulk_mi_opt_ref(D))
+        padded = pad_cols(pad_rows(D, 128), 16)
+        (got,) = model.mi_fused_xla(padded, np.array([50.0], np.float32))
+        assert_allclose(np.asarray(got)[:6, :6], want, atol=1e-5)
+
+
+class TestChunkedAccumulation:
+    def test_gram_partials_sum_to_full(self):
+        rng = np.random.default_rng(4)
+        D = random_binary(rng, 150, 12, 0.85)
+        G = np.zeros((12, 12), np.float64)
+        c = np.zeros(12, np.float64)
+        for lo, hi in [(0, 64), (64, 128), (128, 150)]:
+            chunk = pad_rows(D[lo:hi], 64)  # Rust pads the tail chunk too
+            Gp, cp = model.gram_partial_xla(chunk)
+            G += np.asarray(Gp)
+            c += np.asarray(cp)
+        (got,) = model.combine_xla(
+            G.astype(np.float32), c.astype(np.float32), c.astype(np.float32),
+            np.array([150.0], np.float32),
+        )
+        assert_allclose(np.asarray(got), np.asarray(bulk_mi_opt_ref(D)), atol=1e-5)
+
+    def test_xgram_block_pair_matches_full(self):
+        rng = np.random.default_rng(5)
+        D = random_binary(rng, 90, 20, 0.75)
+        full = np.asarray(bulk_mi_opt_ref(D))
+        Da, Db = D[:, :8], D[:, 8:]
+        G, ca, cb = model.xgram_partial_xla(pad_cols(Da, 8), pad_cols(Db, 12))
+        (got,) = model.combine_xla(
+            np.asarray(G), np.asarray(ca), np.asarray(cb), np.array([90.0], np.float32)
+        )
+        assert_allclose(np.asarray(got), full[:8, 8:], atol=1e-5)
+
+    def test_pallas_gram_partials_match_xla(self):
+        rng = np.random.default_rng(6)
+        D = random_binary(rng, 128, 16, 0.9)
+        Gx, cx = model.gram_partial_xla(D)
+        Gp, cp = model.gram_partial(D)
+        assert_allclose(np.asarray(Gp), np.asarray(Gx), atol=0)
+        assert_allclose(np.asarray(cp), np.asarray(cx), atol=0)

@@ -1,0 +1,152 @@
+"""Validate the oracles themselves: bulk forms vs the textbook per-pair MI,
+plus closed-form identities. If these fail nothing downstream is trustworthy.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels.ref import (
+    bulk_mi_basic_ref,
+    bulk_mi_opt_ref,
+    bulk_mi_opt_eps_ref,
+    combine_ref,
+    gram_ref,
+    mi_pair,
+    mi_pairwise_ref,
+)
+from conftest import random_binary
+
+
+def entropy_bits(p: float) -> float:
+    if p <= 0.0 or p >= 1.0:
+        return 0.0
+    return float(-p * np.log2(p) - (1 - p) * np.log2(1 - p))
+
+
+class TestMiPair:
+    def test_identical_columns_give_entropy(self):
+        x = np.array([1, 1, 0, 0, 1, 0, 1, 1])
+        p = x.mean()
+        assert_allclose(mi_pair(x, x), entropy_bits(p), rtol=1e-12)
+
+    def test_complementary_columns_give_entropy(self):
+        x = np.array([1, 0, 0, 1, 1, 0])
+        assert_allclose(mi_pair(x, 1 - x), entropy_bits(x.mean()), rtol=1e-12)
+
+    def test_constant_column_gives_zero(self):
+        x = np.zeros(10, dtype=int)
+        y = np.array([0, 1] * 5)
+        assert mi_pair(x, y) == 0.0
+        assert mi_pair(y, x) == 0.0
+        assert mi_pair(x, x) == 0.0
+
+    def test_perfectly_balanced_independent(self):
+        # x/y hit every 2x2 cell equally -> exactly independent -> MI = 0.
+        x = np.array([0, 0, 1, 1])
+        y = np.array([0, 1, 0, 1])
+        assert_allclose(mi_pair(x, y), 0.0, atol=1e-12)
+
+    def test_symmetry(self):
+        rng = np.random.default_rng(0)
+        for _ in range(20):
+            x = (rng.random(50) > 0.6).astype(int)
+            y = (rng.random(50) > 0.3).astype(int)
+            assert_allclose(mi_pair(x, y), mi_pair(y, x), rtol=1e-12)
+
+    def test_nonnegative_and_bounded(self):
+        rng = np.random.default_rng(1)
+        for _ in range(50):
+            x = (rng.random(64) > rng.random()).astype(int)
+            y = (rng.random(64) > rng.random()).astype(int)
+            mi = mi_pair(x, y)
+            assert mi >= -1e-12
+            assert mi <= min(entropy_bits(x.mean()), entropy_bits(y.mean())) + 1e-9
+
+
+class TestBulkForms:
+    @pytest.mark.parametrize("n,m,sparsity", [(40, 7, 0.5), (100, 13, 0.9), (64, 16, 0.2)])
+    def test_basic_matches_pairwise(self, n, m, sparsity):
+        rng = np.random.default_rng(n * m)
+        D = random_binary(rng, n, m, sparsity)
+        assert_allclose(np.asarray(bulk_mi_basic_ref(D)), mi_pairwise_ref(D), atol=2e-5)
+
+    @pytest.mark.parametrize("n,m,sparsity", [(40, 7, 0.5), (100, 13, 0.9), (64, 16, 0.2)])
+    def test_opt_matches_pairwise(self, n, m, sparsity):
+        rng = np.random.default_rng(n * m + 1)
+        D = random_binary(rng, n, m, sparsity)
+        assert_allclose(np.asarray(bulk_mi_opt_ref(D)), mi_pairwise_ref(D), atol=2e-5)
+
+    def test_opt_matches_basic_exactly_in_float(self):
+        rng = np.random.default_rng(7)
+        D = random_binary(rng, 128, 32, 0.8)
+        assert_allclose(
+            np.asarray(bulk_mi_opt_ref(D)), np.asarray(bulk_mi_basic_ref(D)), atol=1e-5
+        )
+
+    def test_eps_variant_close_to_masked(self):
+        # The paper's +eps formulation differs from the exact masked form
+        # by O(eps * n-cells); confirm it is numerically negligible.
+        rng = np.random.default_rng(11)
+        D = random_binary(rng, 200, 20, 0.9)
+        assert_allclose(
+            np.asarray(bulk_mi_opt_eps_ref(D)), np.asarray(bulk_mi_opt_ref(D)), atol=1e-4
+        )
+
+    def test_constant_columns_all_zero_mi(self):
+        D = np.zeros((30, 5), dtype=np.float32)
+        D[:, 2] = 1.0  # constant-one column
+        out = np.asarray(bulk_mi_opt_ref(D))
+        assert_allclose(out, 0.0, atol=1e-7)
+
+    def test_diag_equals_entropy(self):
+        rng = np.random.default_rng(3)
+        D = random_binary(rng, 256, 10, 0.7)
+        out = np.asarray(bulk_mi_opt_ref(D))
+        for j in range(10):
+            assert_allclose(out[j, j], entropy_bits(D[:, j].mean()), atol=1e-5)
+
+
+class TestGramCombine:
+    def test_gram_counts(self):
+        rng = np.random.default_rng(5)
+        D = random_binary(rng, 50, 8, 0.6)
+        G, ca, cb = (np.asarray(x) for x in gram_ref(D, D))
+        assert_allclose(G, D.T @ D, atol=0)
+        assert_allclose(ca, D.sum(axis=0), atol=0)
+        assert_allclose(cb, D.sum(axis=0), atol=0)
+
+    def test_cross_gram_rectangular(self):
+        rng = np.random.default_rng(6)
+        Da = random_binary(rng, 50, 5, 0.6)
+        Db = random_binary(rng, 50, 9, 0.4)
+        G, ca, cb = (np.asarray(x) for x in gram_ref(Da, Db))
+        assert G.shape == (5, 9)
+        assert_allclose(G, Da.T @ Db, atol=0)
+
+    def test_combine_equals_pairwise_on_blocks(self):
+        rng = np.random.default_rng(8)
+        D = random_binary(rng, 80, 12, 0.7)
+        Da, Db = D[:, :5], D[:, 5:]
+        G, ca, cb = gram_ref(Da, Db)
+        out = np.asarray(combine_ref(G, ca, cb, 80))
+        full = mi_pairwise_ref(D)
+        assert_allclose(out, full[:5, 5:], atol=2e-5)
+
+    def test_combine_row_chunk_accumulation_is_exact(self):
+        # G11 and colsums are sums over rows: chunked accumulation must
+        # reproduce the monolithic result exactly (this is what the Rust
+        # coordinator relies on for n > bucket rows).
+        rng = np.random.default_rng(9)
+        D = random_binary(rng, 120, 10, 0.8)
+        chunks = [D[:50], D[50:90], D[90:]]
+        G = np.zeros((10, 10), dtype=np.float64)
+        c = np.zeros(10, dtype=np.float64)
+        for ch in chunks:
+            Gp, cp, _ = (np.asarray(x) for x in gram_ref(ch, ch))
+            G += Gp
+            c += cp
+        out = np.asarray(combine_ref(G.astype(np.float32), c.astype(np.float32), c.astype(np.float32), 120))
+        assert_allclose(out, np.asarray(bulk_mi_opt_ref(D)), atol=1e-5)

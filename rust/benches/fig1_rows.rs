@@ -1,0 +1,62 @@
+//! Reproduces **Figure 1**: computation time vs number of ROWS
+//! (columns fixed at 1000, 90% sparsity) for the bulk implementations.
+//!
+//! Paper series: Bas-NN, Opt-NN, Opt-SS, Opt-T (pairwise excluded — it
+//! is off the chart). We add Opt-bitpack. Expected shape: all grow
+//! roughly linearly in rows; basic is the slowest; the hardware-
+//! optimized framework is fastest at scale.
+
+use bulkmi::data::synth::SynthSpec;
+use bulkmi::mi::backend::{compute_mi_with, Backend};
+use bulkmi::util::bench::{
+    emit_json, full_mode, measure, measure_result, print_header, print_row, Cell,
+};
+
+fn main() {
+    const COLS: usize = 1000;
+    let row_points: &[usize] = if full_mode() {
+        &[1_000, 5_000, 10_000, 20_000, 50_000, 100_000]
+    } else {
+        // default: same sweep shape, capped at 50k rows for the slow
+        // basic series (documented in EXPERIMENTS.md)
+        &[1_000, 5_000, 10_000, 20_000, 50_000, 100_000]
+    };
+    let impls = [
+        Backend::BulkBasic,
+        Backend::BulkOpt,
+        Backend::BulkSparse,
+        Backend::BulkBitpack,
+        Backend::Xla,
+    ];
+    // default-mode caps: basic is O(4 dense Grams) with no sparsity skip
+    let basic_cap = if full_mode() { usize::MAX } else { 50_000 };
+
+    println!("=== Figure 1: time (s) vs rows (cols = {COLS}, 90% sparse) ===\n");
+    let headers: Vec<&str> = impls.iter().map(|b| b.name()).collect();
+    print_header("rows", &headers);
+
+    for &rows in row_points {
+        let ds = SynthSpec::new(rows, COLS).sparsity(0.9).seed(1).generate();
+        let mut cells = Vec::new();
+        for &b in &impls {
+            let cell = if b == Backend::BulkBasic && rows > basic_cap {
+                Cell::Skipped
+            } else {
+                if b == Backend::Xla {
+                    measure_result(b.name(), || compute_mi_with(&ds, b, 1))
+                } else {
+                    Cell::Secs(measure(|| compute_mi_with(&ds, b, 1).unwrap()))
+                }
+            };
+            emit_json(
+                "fig1_rows",
+                &[("rows", rows.to_string()), ("impl", b.name().to_string())],
+                &cell,
+            );
+            cells.push(cell);
+        }
+        print_row(&rows.to_string(), &cells);
+    }
+    println!("\nexpected shape: ~linear growth in rows; basic slowest; optimized");
+    println!("framework (xla/bitpack) fastest for large row counts.");
+}

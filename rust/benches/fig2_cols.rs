@@ -1,0 +1,72 @@
+//! Reproduces **Figure 2**: computation time vs number of COLUMNS
+//! (rows fixed at 100,000; 90% sparsity). The quadratic term.
+//!
+//! Paper series: Bas-NN, Opt-NN, Opt-SS, Opt-T over 500..10,000 cols.
+//! Default mode applies per-impl column caps (this container has one
+//! vCPU vs the paper's 12-core M2; the caps keep `cargo bench` under
+//! control and are lifted by `BULKMI_BENCH_FULL=1`). The crossover
+//! shapes — opt ~3-4x under basic, sparse losing ground as columns
+//! grow, the optimized framework scaling best — appear well inside the
+//! capped range.
+
+use bulkmi::data::synth::SynthSpec;
+use bulkmi::mi::backend::{compute_mi_with, Backend};
+use bulkmi::util::bench::{
+    emit_json, full_mode, measure, measure_result, print_header, print_row, Cell,
+};
+
+fn main() {
+    let rows: usize = if full_mode() { 100_000 } else { 100_000 };
+    let col_points: &[usize] =
+        if full_mode() { &[500, 1_000, 2_000, 5_000, 10_000] } else { &[500, 1_000, 2_000, 4_000] };
+    let impls = [
+        Backend::BulkBasic,
+        Backend::BulkOpt,
+        Backend::BulkSparse,
+        Backend::BulkBitpack,
+        Backend::Xla,
+    ];
+    // default caps per implementation (columns)
+    let cap = |b: Backend| -> usize {
+        if full_mode() {
+            return usize::MAX;
+        }
+        match b {
+            Backend::BulkBasic => 1_000,  // 4 dense Grams, no skip
+            Backend::BulkOpt => 4_000,    // 1 dense Gram with zero-skip
+            Backend::BulkSparse => 2_000, // nnz² row expansion
+            Backend::BulkBitpack => 4_000,
+            Backend::Xla => 2_000, // largest xgram-chunked width kept cheap
+            _ => usize::MAX,
+        }
+    };
+
+    println!("=== Figure 2: time (s) vs cols (rows = {rows}, 90% sparse) ===\n");
+    let headers: Vec<&str> = impls.iter().map(|b| b.name()).collect();
+    print_header("cols", &headers);
+
+    for &cols in col_points {
+        let ds = SynthSpec::new(rows, cols).sparsity(0.9).seed(2).generate();
+        let mut cells = Vec::new();
+        for &b in &impls {
+            let cell = if cols > cap(b) {
+                Cell::Skipped
+            } else {
+                if b == Backend::Xla {
+                    measure_result(b.name(), || compute_mi_with(&ds, b, 1))
+                } else {
+                    Cell::Secs(measure(|| compute_mi_with(&ds, b, 1).unwrap()))
+                }
+            };
+            emit_json(
+                "fig2_cols",
+                &[("cols", cols.to_string()), ("impl", b.name().to_string())],
+                &cell,
+            );
+            cells.push(cell);
+        }
+        print_row(&cols.to_string(), &cells);
+    }
+    println!("\nexpected shape: quadratic growth in cols; opt ~3-4x under basic;");
+    println!("sparse overhead grows; optimized framework scales best.");
+}

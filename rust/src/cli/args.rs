@@ -1,0 +1,156 @@
+//! Minimal `--key value` / `--flag` argument parser.
+
+use crate::util::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed arguments: repeatable options, flags, and positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    options: BTreeMap<String, Vec<String>>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    /// Option names consumed so far (for unknown-option detection).
+    known: std::cell::RefCell<Vec<String>>,
+}
+
+/// Names that take no value (everything else with `--` expects one).
+const FLAG_NAMES: &[&str] = &["with-xla", "header", "verbose", "quiet"];
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if FLAG_NAMES.contains(&name) {
+                    args.flags.push(name.to_string());
+                } else {
+                    let value = argv
+                        .get(i + 1)
+                        .ok_or_else(|| Error::Parse(format!("--{name} needs a value")))?;
+                    args.options.entry(name.to_string()).or_default().push(value.clone());
+                    i += 1;
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    fn mark(&self, name: &str) {
+        self.known.borrow_mut().push(name.to_string());
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.mark(name);
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.mark(name);
+        self.options.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.mark(name);
+        self.options.get(name).map(|v| v.iter().map(|s| s.as_str()).collect()).unwrap_or_default()
+    }
+
+    pub fn req(&self, name: &str) -> Result<&str> {
+        self.get(name).ok_or_else(|| Error::Parse(format!("missing required --{name}")))
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Parse(format!("--{name}: expected integer, got '{s}'"))),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Parse(format!("--{name}: expected number, got '{s}'"))),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| Error::Parse(format!("--{name}: expected integer, got '{s}'"))),
+        }
+    }
+
+    /// Error on options that were provided but never consumed (typos).
+    pub fn reject_unknown(&self) -> Result<()> {
+        let known = self.known.borrow();
+        for name in self.options.keys() {
+            if !known.iter().any(|k| k == name) {
+                return Err(Error::Parse(format!("unknown option --{name}")));
+            }
+        }
+        for name in &self.flags {
+            if !known.iter().any(|k| k == name) {
+                return Err(Error::Parse(format!("unknown flag --{name}")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_flags_positionals() {
+        let a = Args::parse(&sv(&["--rows", "10", "pos1", "--with-xla", "--cols", "5"])).unwrap();
+        assert_eq!(a.get("rows"), Some("10"));
+        assert_eq!(a.get_usize("cols", 0).unwrap(), 5);
+        assert!(a.flag("with-xla"));
+        assert!(!a.flag("header"));
+    }
+
+    #[test]
+    fn repeated_options_collect() {
+        let a = Args::parse(&sv(&["--plant", "0:1:0.1", "--plant", "2:3:0.0"])).unwrap();
+        assert_eq!(a.get_all("plant"), vec!["0:1:0.1", "2:3:0.0"]);
+        assert_eq!(a.get("plant"), Some("2:3:0.0")); // last wins for single get
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["--rows"])).is_err());
+    }
+
+    #[test]
+    fn required_and_typed() {
+        let a = Args::parse(&sv(&["--rows", "ten"])).unwrap();
+        assert!(a.get_usize("rows", 0).is_err());
+        assert!(a.req("cols").is_err());
+        assert_eq!(a.get_f64("sparsity", 0.9).unwrap(), 0.9);
+    }
+
+    #[test]
+    fn unknown_rejection() {
+        let a = Args::parse(&sv(&["--rows", "1", "--bogus", "2"])).unwrap();
+        let _ = a.get("rows");
+        assert!(a.reject_unknown().is_err());
+        let b = Args::parse(&sv(&["--rows", "1"])).unwrap();
+        let _ = b.get("rows");
+        assert!(b.reject_unknown().is_ok());
+    }
+}

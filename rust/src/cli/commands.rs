@@ -1,0 +1,465 @@
+//! Subcommand implementations.
+
+use super::args::Args;
+use crate::config::RunConfig;
+use crate::coordinator::executor::NativeKind;
+use crate::coordinator::planner::{plan_with_config, PlannerConfig};
+use crate::coordinator::progress::Progress;
+use crate::coordinator::service::{JobService, JobSpec, JobStatus};
+use crate::coordinator::{execute_plan, NativeProvider};
+use crate::data::dataset::BinaryDataset;
+use crate::data::io;
+use crate::data::synth::SynthSpec;
+use crate::mi::backend::{compute_mi_with, Backend};
+use crate::mi::entropy::{normalized_mi, Normalization};
+use crate::mi::topk::top_k_pairs;
+use crate::mi::MiMatrix;
+use crate::runtime::ArtifactRegistry;
+use crate::util::error::{Error, Result};
+use crate::util::timer::{fmt_secs, time_it};
+use std::path::{Path, PathBuf};
+
+pub fn generate(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    let rows = args.req("rows")?.parse::<usize>().map_err(|_| bad("rows"))?;
+    let cols = args.req("cols")?.parse::<usize>().map_err(|_| bad("cols"))?;
+    let sparsity = args.get_f64("sparsity", 0.9)?;
+    let seed = args.get_u64("seed", 0)?;
+    let out = PathBuf::from(args.req("out")?);
+    let mut spec = SynthSpec::new(rows, cols).sparsity(sparsity).seed(seed);
+    for p in args.get_all("plant") {
+        let parts: Vec<&str> = p.split(':').collect();
+        if parts.len() != 3 {
+            return Err(Error::Parse(format!("--plant expects A:B:NOISE, got '{p}'")));
+        }
+        let a = parts[0].parse().map_err(|_| bad("plant"))?;
+        let b = parts[1].parse().map_err(|_| bad("plant"))?;
+        let noise = parts[2].parse().map_err(|_| bad("plant"))?;
+        spec = spec.plant(a, b, noise);
+    }
+    args.reject_unknown()?;
+    let (ds, secs) = time_it(|| spec.generate());
+    save_dataset(&ds, &out)?;
+    crate::info!(
+        "generated {}x{} (sparsity {:.3}) in {} -> {}",
+        ds.n_rows(),
+        ds.n_cols(),
+        ds.sparsity(),
+        fmt_secs(secs),
+        out.display()
+    );
+    Ok(())
+}
+
+pub fn compute(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    // config file gives defaults; explicit options override
+    let mut cfg = match args.get("config") {
+        Some(path) => RunConfig::load(Path::new(path))?,
+        None => RunConfig::default(),
+    };
+    if let Some(b) = args.get("backend") {
+        cfg.backend =
+            Backend::parse(b).ok_or_else(|| Error::Parse(format!("unknown backend '{b}'")))?;
+    }
+    cfg.workers = args.get_usize("workers", cfg.workers)?;
+    cfg.block_cols = args.get_usize("block-cols", cfg.block_cols)?;
+    cfg.memory_budget = args.get_usize("memory-budget", cfg.memory_budget)?;
+    let input = PathBuf::from(args.req("input")?);
+    let top = args.get_usize("top", 10)?;
+    let normalize = args.get("normalize").map(|s| s.to_string());
+    let out = args.get("out").map(PathBuf::from);
+    args.reject_unknown()?;
+
+    let ds = io::load(&input)?;
+    crate::info!(
+        "loaded {}x{} (sparsity {:.3}) from {}",
+        ds.n_rows(),
+        ds.n_cols(),
+        ds.sparsity(),
+        input.display()
+    );
+
+    let (mi, secs) = compute_with_plan(&ds, &cfg)?;
+    println!(
+        "computed {}x{} MI matrix with {} in {}",
+        mi.dim(),
+        mi.dim(),
+        cfg.backend,
+        fmt_secs(secs)
+    );
+
+    let display = match normalize.as_deref() {
+        None => mi.clone(),
+        Some(norm) => {
+            let n = match norm {
+                "min" => Normalization::Min,
+                "max" => Normalization::Max,
+                "mean" => Normalization::Mean,
+                "joint" => Normalization::Joint,
+                other => return Err(Error::Parse(format!("unknown normalization '{other}'"))),
+            };
+            normalized_mi(&ds, &mi, n)
+        }
+    };
+
+    if top > 0 {
+        println!("top {top} pairs:");
+        for p in top_k_pairs(&display, top) {
+            println!(
+                "  {:<20} {:<20} {:.6}",
+                ds.col_name(p.i),
+                ds.col_name(p.j),
+                p.mi
+            );
+        }
+    }
+    if let Some(path) = out {
+        write_mi_csv(&display, &ds, &path)?;
+        crate::info!("wrote MI matrix to {}", path.display());
+    }
+    Ok(())
+}
+
+/// Compute respecting block/budget settings (blockwise plans go through
+/// the coordinator; monolithic through the plain backend).
+pub fn compute_with_plan(ds: &BinaryDataset, cfg: &RunConfig) -> Result<(MiMatrix, f64)> {
+    let planner = PlannerConfig {
+        block_cols: cfg.block_cols,
+        memory_budget: cfg.memory_budget,
+        n_rows: ds.n_rows(),
+    };
+    let needs_plan = cfg.block_cols > 0 || cfg.memory_budget > 0;
+    if needs_plan && cfg.backend.is_native() {
+        let kind = match cfg.backend {
+            Backend::BulkSparse => NativeKind::Sparse,
+            Backend::BulkBasic | Backend::BulkOpt => NativeKind::Dense,
+            _ => NativeKind::Bitpack,
+        };
+        let plan = plan_with_config(ds.n_cols(), &planner)?;
+        crate::info!(
+            "blockwise plan: {} tasks, block {} cols",
+            plan.tasks.len(),
+            plan.block
+        );
+        let provider = NativeProvider::new(ds, kind);
+        let progress = Progress::new(plan.tasks.len());
+        let t0 = std::time::Instant::now();
+        let mi = execute_plan(ds, &plan, &provider, cfg.workers, &progress)?;
+        Ok((mi, t0.elapsed().as_secs_f64()))
+    } else {
+        let t0 = std::time::Instant::now();
+        let mi = compute_mi_with(ds, cfg.backend, cfg.workers)?;
+        Ok((mi, t0.elapsed().as_secs_f64()))
+    }
+}
+
+pub fn analyze(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    let input = PathBuf::from(args.req("input")?);
+    let backend = match args.get("backend") {
+        Some(b) => Backend::parse(b)
+            .ok_or_else(|| Error::Parse(format!("unknown backend '{b}'")))?,
+        None => Backend::BulkBitpack,
+    };
+    let top = args.get_usize("top", 10)?;
+    let threshold = args.get_f64("threshold", 0.0)?;
+    let permutations = args.get_usize("permutations", 0)?;
+    let corrected = args.get("bias-correction").map(|s| s.to_string());
+    let edges_out = args.get("edges-out").map(PathBuf::from);
+    args.reject_unknown()?;
+
+    let ds = io::load(&input)?;
+    let (mi, secs) = time_it(|| compute_mi_with(&ds, backend, 1));
+    let mut mi = mi?;
+    println!(
+        "analyzed {}x{} with {} in {}",
+        ds.n_rows(),
+        ds.n_cols(),
+        backend,
+        fmt_secs(secs)
+    );
+    match corrected.as_deref() {
+        None | Some("none") => {}
+        Some("miller-madow") => {
+            mi = crate::mi::significance::miller_madow(&ds, &mi);
+            println!("applied Miller-Madow bias correction");
+        }
+        Some(other) => {
+            return Err(Error::Parse(format!("unknown bias correction '{other}'")))
+        }
+    }
+
+    if top > 0 {
+        println!("top {top} pairs:");
+        if permutations > 0 {
+            for (i, j, v, p) in crate::mi::significance::top_pairs_significance(
+                &ds, &mi, top, permutations, 42,
+            ) {
+                println!(
+                    "  {:<18} {:<18} MI={:.6}  p={:.4}",
+                    ds.col_name(i),
+                    ds.col_name(j),
+                    v,
+                    p
+                );
+            }
+        } else {
+            for p in top_k_pairs(&mi, top) {
+                println!(
+                    "  {:<18} {:<18} MI={:.6}",
+                    ds.col_name(p.i),
+                    ds.col_name(p.j),
+                    p.mi
+                );
+            }
+        }
+    }
+
+    if let Some(path) = edges_out {
+        use std::io::Write;
+        let edges = crate::mi::topk::edges_above(&mi, threshold);
+        let mut w = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        writeln!(w, "source,target,mi")?;
+        for e in &edges {
+            writeln!(w, "{},{},{:.8}", ds.col_name(e.i), ds.col_name(e.j), e.mi)?;
+        }
+        println!("wrote {} edges (MI >= {threshold}) to {}", edges.len(), path.display());
+    }
+    Ok(())
+}
+
+pub fn info(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    let dir = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(crate::runtime::artifacts::default_dir);
+    args.reject_unknown()?;
+    println!("bulkmi {}", env!("CARGO_PKG_VERSION"));
+    println!("native backends: always available");
+    for b in Backend::ALL.iter().filter(|b| b.is_native()) {
+        println!("  {:<14} {}", b.name(), b.paper_label());
+    }
+    match ArtifactRegistry::load(&dir) {
+        Ok(reg) => {
+            println!("artifacts ({}):", reg.dir().display());
+            for a in reg.all() {
+                println!(
+                    "  {:<24} {:?}/{:?} {}x{}",
+                    a.name, a.kind, a.impl_, a.rows, a.cols
+                );
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e}); xla backends disabled"),
+    }
+    Ok(())
+}
+
+pub fn selftest(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    let rows = args.get_usize("rows", 500)?;
+    let cols = args.get_usize("cols", 40)?;
+    let with_xla = args.flag("with-xla");
+    args.reject_unknown()?;
+
+    let ds = SynthSpec::new(rows, cols).sparsity(0.9).seed(42).generate();
+    let (reference, ref_secs) = time_it(|| compute_mi_with(&ds, Backend::Pairwise, 1));
+    let reference = reference?;
+    println!("{:<14} {:>10}   (reference)", "pairwise", fmt_secs(ref_secs));
+    let mut failures = 0;
+    for b in Backend::ALL {
+        if b == Backend::Pairwise || (!b.is_native() && !with_xla) {
+            continue;
+        }
+        let (result, secs) = time_it(|| compute_mi_with(&ds, b, 1));
+        match result {
+            Ok(mi) => {
+                let diff = mi.max_abs_diff(&reference);
+                let tol = if b.is_native() { 1e-10 } else { 1e-4 };
+                let verdict = if diff < tol { "OK" } else { "MISMATCH" };
+                if diff >= tol {
+                    failures += 1;
+                }
+                println!("{:<14} {:>10}   max diff {:.2e}  {}", b.name(), fmt_secs(secs), diff, verdict);
+            }
+            Err(e) => {
+                failures += 1;
+                println!("{:<14} FAILED: {e}", b.name());
+            }
+        }
+    }
+    if failures > 0 {
+        return Err(Error::Coordinator(format!("{failures} backend(s) failed selftest")));
+    }
+    println!("selftest OK");
+    Ok(())
+}
+
+pub fn serve(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    let workers = args.get_usize("workers", crate::util::threadpool::default_workers())?;
+    let max_queued = args.get_usize("max-queued", 4)?;
+    let jobs = args.get_usize("jobs", 8)?;
+    let block_cols = args.get_usize("block-cols", 64)?;
+    args.reject_unknown()?;
+
+    let svc = JobService::new(workers, max_queued);
+    println!("service up: {workers} workers, {max_queued} queue slots, {jobs} demo jobs");
+    let mut handles = Vec::new();
+    let mut rejected = 0usize;
+    for k in 0..jobs {
+        let ds = SynthSpec::new(2000 + 500 * (k % 4), 100 + 20 * (k % 3))
+            .sparsity(0.9)
+            .seed(k as u64)
+            .generate();
+        let spec = JobSpec { block_cols, ..Default::default() };
+        loop {
+            match svc.submit(ds.clone(), spec.clone()) {
+                Ok(h) => {
+                    println!("job {k}: submitted ({}x{})", ds.n_rows(), ds.n_cols());
+                    handles.push(h);
+                    break;
+                }
+                Err(_) => {
+                    rejected += 1; // backpressure: wait and retry
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+            }
+        }
+    }
+    for (k, h) in handles.iter().enumerate() {
+        match svc.wait(*h)? {
+            JobStatus::Done(mi) => println!("job {k}: done, dim {}", mi.dim()),
+            other => println!("job {k}: {other:?}"),
+        }
+    }
+    println!("backpressure retries: {rejected}");
+    print!("{}", svc.metrics().report());
+    Ok(())
+}
+
+fn save_dataset(ds: &BinaryDataset, path: &Path) -> Result<()> {
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("csv") => io::write_csv(ds, path, ds.names().is_some()),
+        Some("bmat") => io::write_bmat(ds, path),
+        other => Err(Error::Parse(format!("unsupported output extension {other:?}"))),
+    }
+}
+
+fn write_mi_csv(mi: &MiMatrix, ds: &BinaryDataset, path: &Path) -> Result<()> {
+    use std::io::Write;
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    let names: Vec<String> = (0..mi.dim()).map(|c| ds.col_name(c)).collect();
+    writeln!(w, ",{}", names.join(","))?;
+    for i in 0..mi.dim() {
+        write!(w, "{}", names[i])?;
+        for j in 0..mi.dim() {
+            write!(w, ",{:.8}", mi.get(i, j))?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+fn bad(name: &str) -> Error {
+    Error::Parse(format!("--{name}: invalid value"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("bulkmi-cli-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn generate_then_compute_round_trip() {
+        let data = tmp("ds.bmat");
+        generate(&sv(&[
+            "--rows", "200", "--cols", "12", "--sparsity", "0.8", "--seed", "7",
+            "--plant", "0:3:0.05", "--out", data.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let out = tmp("mi.csv");
+        compute(&sv(&[
+            "--input", data.to_str().unwrap(), "--backend", "bulk-opt",
+            "--top", "3", "--out", out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        assert_eq!(text.lines().count(), 13); // header + 12 rows
+    }
+
+    #[test]
+    fn compute_blockwise_path() {
+        let data = tmp("blk.csv");
+        generate(&sv(&["--rows", "100", "--cols", "9", "--out", data.to_str().unwrap()]))
+            .unwrap();
+        compute(&sv(&[
+            "--input", data.to_str().unwrap(), "--backend", "bulk-bitpack",
+            "--block-cols", "4", "--top", "0",
+        ]))
+        .unwrap();
+    }
+
+    #[test]
+    fn selftest_native_passes() {
+        selftest(&sv(&["--rows", "120", "--cols", "10"])).unwrap();
+    }
+
+    #[test]
+    fn bad_options_rejected() {
+        assert!(generate(&sv(&["--rows", "10"])).is_err()); // missing cols/out
+        assert!(compute(&sv(&["--input", "nope.csv", "--backend", "warp"])).is_err());
+        assert!(generate(&sv(&[
+            "--rows", "4", "--cols", "4", "--out", "/tmp/x.bmat", "--bogus", "1"
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn analyze_with_significance_and_edges() {
+        let data = tmp("an.bmat");
+        generate(&sv(&[
+            "--rows", "300", "--cols", "8", "--sparsity", "0.6", "--seed", "1",
+            "--plant", "0:4:0.05", "--out", data.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let edges = tmp("edges.csv");
+        analyze(&sv(&[
+            "--input", data.to_str().unwrap(), "--bias-correction", "miller-madow",
+            "--permutations", "50", "--top", "2", "--threshold", "0.1",
+            "--edges-out", edges.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let text = std::fs::read_to_string(&edges).unwrap();
+        assert!(text.lines().count() >= 2, "planted edge above threshold: {text}");
+        assert!(text.starts_with("source,target,mi"));
+        // bad bias-correction rejected
+        assert!(analyze(&sv(&[
+            "--input", data.to_str().unwrap(), "--bias-correction", "nope",
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn normalize_option_validated() {
+        let data = tmp("norm.csv");
+        generate(&sv(&["--rows", "50", "--cols", "5", "--out", data.to_str().unwrap()]))
+            .unwrap();
+        assert!(compute(&sv(&[
+            "--input", data.to_str().unwrap(), "--normalize", "bogus",
+        ]))
+        .is_err());
+        compute(&sv(&[
+            "--input", data.to_str().unwrap(), "--normalize", "min", "--top", "2",
+        ]))
+        .unwrap();
+    }
+}

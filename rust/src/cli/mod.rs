@@ -1,0 +1,79 @@
+//! Command-line interface (own arg parser — no `clap` offline).
+//!
+//! Subcommands: `generate`, `compute`, `info`, `selftest`, `serve`.
+//! Run `bulkmi help` for usage.
+
+pub mod args;
+pub mod commands;
+
+use crate::util::error::Result;
+
+pub const USAGE: &str = "\
+bulkmi — fast bulk mutual information for large binary datasets
+(reproduction of Falcao 2024; three-layer Rust + JAX + Pallas stack)
+
+USAGE:
+    bulkmi <command> [options]
+
+COMMANDS:
+    generate    Generate a synthetic binary dataset
+        --rows N --cols M [--sparsity S=0.9] [--seed K=0]
+        [--plant A:B:NOISE ...] --out FILE.{csv,bmat}
+    compute     Compute the full MI matrix of a dataset
+        --input FILE.{csv,bmat} [--backend NAME=bulk-bitpack]
+        [--workers N] [--block-cols B=0] [--memory-budget BYTES=0]
+        [--top K=10] [--normalize min|max|mean|joint] [--out FILE.csv]
+        [--config FILE.toml]
+    analyze     MI with statistical post-processing + edge-list export
+        --input FILE [--backend NAME] [--top K=10]
+        [--bias-correction miller-madow] [--permutations P=0]
+        [--threshold T=0] [--edges-out FILE.csv]
+    info        Show artifact registry and backend availability
+        [--artifacts DIR]
+    selftest    Cross-check every available backend on random data
+        [--rows N=500] [--cols M=40] [--with-xla]
+    serve       Run the job service on a stream of generated jobs (demo)
+        [--workers N] [--max-queued Q=4] [--jobs J=8] [--block-cols B]
+    help        Show this message
+
+BACKENDS:
+    pairwise bulk-basic bulk-opt bulk-sparse bulk-bitpack xla xla-pallas
+
+ENVIRONMENT:
+    BULKMI_LOG=error|warn|info|debug|trace    log level (default info)
+    BULKMI_ARTIFACTS=DIR                      artifact directory
+";
+
+/// CLI entry point; returns the process exit code.
+pub fn run(argv: &[String]) -> i32 {
+    match dispatch(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "generate" => commands::generate(rest),
+        "compute" => commands::compute(rest),
+        "analyze" => commands::analyze(rest),
+        "info" => commands::info(rest),
+        "selftest" => commands::selftest(rest),
+        "serve" => commands::serve(rest),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(crate::util::error::Error::Parse(format!(
+            "unknown command '{other}' (try `bulkmi help`)"
+        ))),
+    }
+}

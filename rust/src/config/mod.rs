@@ -1,0 +1,233 @@
+//! Run configuration + a minimal TOML-subset parser (the offline
+//! registry has no `serde`/`toml`). Supported syntax: `[section]`
+//! headers, `key = value` with string / integer / float / boolean
+//! values, `#` comments.
+
+use crate::mi::backend::Backend;
+use crate::util::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Parsed key-value view of a TOML-subset document; keys are
+/// `section.key` (or bare `key` before any section header).
+#[derive(Clone, Debug, Default)]
+pub struct RawConfig {
+    values: BTreeMap<String, String>,
+}
+
+impl RawConfig {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') || line.len() < 3 {
+                    return Err(Error::Config(format!("line {}: bad section", lineno + 1)));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let (key, value) = line.split_once('=').ok_or_else(|| {
+                Error::Config(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            let key = key.trim();
+            let mut value = value.trim().to_string();
+            if value.starts_with('"') && value.ends_with('"') && value.len() >= 2 {
+                value = value[1..value.len() - 1].to_string();
+            }
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            values.insert(full, value);
+        }
+        Ok(RawConfig { values })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.typed(key, "integer", |s| s.parse().ok())
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.typed(key, "float", |s| s.parse().ok())
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>> {
+        self.typed(key, "boolean", |s| match s {
+            "true" => Some(true),
+            "false" => Some(false),
+            _ => None,
+        })
+    }
+
+    fn typed<T>(&self, key: &str, ty: &str, parse: impl Fn(&str) -> Option<T>) -> Result<Option<T>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => parse(s)
+                .map(Some)
+                .ok_or_else(|| Error::Config(format!("{key}: expected {ty}, got '{s}'"))),
+        }
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // no escaped-quote handling needed for our subset: cut at # outside quotes
+    let mut in_str = false;
+    for (i, ch) in line.char_indices() {
+        match ch {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+/// Typed run configuration for the compute/serve paths.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    /// Backend to compute with.
+    pub backend: Backend,
+    /// Worker threads for parallel backends and the coordinator.
+    pub workers: usize,
+    /// Column-block size for the blockwise plan (0 = monolithic if it fits).
+    pub block_cols: usize,
+    /// Memory budget in bytes for the planner (0 = unlimited).
+    pub memory_budget: usize,
+    /// Artifact directory override (None = default discovery).
+    pub artifacts_dir: Option<String>,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            backend: Backend::BulkBitpack,
+            workers: crate::util::threadpool::default_workers(),
+            block_cols: 0,
+            memory_budget: 0,
+            artifacts_dir: None,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Build from a parsed document; unknown keys under `run.` are errors
+    /// (typo protection), other sections are left to their consumers.
+    pub fn from_raw(raw: &RawConfig) -> Result<Self> {
+        let mut cfg = RunConfig::default();
+        for key in raw.keys() {
+            if let Some(name) = key.strip_prefix("run.") {
+                match name {
+                    "backend" | "workers" | "block_cols" | "memory_budget" | "artifacts_dir" => {}
+                    other => {
+                        return Err(Error::Config(format!("unknown key run.{other}")));
+                    }
+                }
+            }
+        }
+        if let Some(b) = raw.get("run.backend") {
+            cfg.backend = Backend::parse(b)
+                .ok_or_else(|| Error::Config(format!("unknown backend '{b}'")))?;
+        }
+        if let Some(w) = raw.get_usize("run.workers")? {
+            cfg.workers = w.max(1);
+        }
+        if let Some(b) = raw.get_usize("run.block_cols")? {
+            cfg.block_cols = b;
+        }
+        if let Some(m) = raw.get_usize("run.memory_budget")? {
+            cfg.memory_budget = m;
+        }
+        if let Some(d) = raw.get("run.artifacts_dir") {
+            cfg.artifacts_dir = Some(d.to_string());
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_raw(&RawConfig::load(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let raw = RawConfig::parse(
+            "top = 1\n\
+             [run]\n\
+             backend = \"bulk-opt\"   # comment\n\
+             workers = 4\n\
+             flag = true\n\
+             ratio = 0.5\n",
+        )
+        .unwrap();
+        assert_eq!(raw.get("top"), Some("1"));
+        assert_eq!(raw.get("run.backend"), Some("bulk-opt"));
+        assert_eq!(raw.get_usize("run.workers").unwrap(), Some(4));
+        assert_eq!(raw.get_bool("run.flag").unwrap(), Some(true));
+        assert_eq!(raw.get_f64("run.ratio").unwrap(), Some(0.5));
+        assert_eq!(raw.get("run.missing"), None);
+    }
+
+    #[test]
+    fn type_errors_are_reported() {
+        let raw = RawConfig::parse("[run]\nworkers = banana\n").unwrap();
+        assert!(raw.get_usize("run.workers").is_err());
+    }
+
+    #[test]
+    fn syntax_errors() {
+        assert!(RawConfig::parse("[unclosed\n").is_err());
+        assert!(RawConfig::parse("novalue\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let raw = RawConfig::parse("k = \"a#b\"\n").unwrap();
+        assert_eq!(raw.get("k"), Some("a#b"));
+    }
+
+    #[test]
+    fn run_config_from_raw() {
+        let raw = RawConfig::parse(
+            "[run]\nbackend = \"pairwise\"\nworkers = 2\nblock_cols = 256\n",
+        )
+        .unwrap();
+        let cfg = RunConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.backend, Backend::Pairwise);
+        assert_eq!(cfg.workers, 2);
+        assert_eq!(cfg.block_cols, 256);
+    }
+
+    #[test]
+    fn unknown_run_key_rejected() {
+        let raw = RawConfig::parse("[run]\nbakcend = \"xla\"\n").unwrap();
+        assert!(RunConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn bad_backend_rejected() {
+        let raw = RawConfig::parse("[run]\nbackend = \"warp-drive\"\n").unwrap();
+        assert!(RunConfig::from_raw(&raw).is_err());
+    }
+}

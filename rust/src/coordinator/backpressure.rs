@@ -1,0 +1,111 @@
+//! Admission control for the job service: a counting semaphore built on
+//! Mutex + Condvar (no `tokio` offline). `acquire` blocks, `try_acquire`
+//! fails fast — the service uses the latter to shed load when the queue
+//! is full, mirroring a serving router's backpressure behaviour.
+
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Counting semaphore with RAII permits.
+#[derive(Clone)]
+pub struct Semaphore {
+    inner: Arc<Inner>,
+}
+
+struct Inner {
+    state: Mutex<usize>,
+    cv: Condvar,
+    capacity: usize,
+}
+
+/// RAII permit; releases on drop.
+pub struct Permit {
+    inner: Arc<Inner>,
+}
+
+impl Semaphore {
+    pub fn new(capacity: usize) -> Self {
+        assert!(capacity > 0, "semaphore capacity must be > 0");
+        Semaphore {
+            inner: Arc::new(Inner { state: Mutex::new(capacity), cv: Condvar::new(), capacity }),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.inner.capacity
+    }
+
+    /// Currently available permits.
+    pub fn available(&self) -> usize {
+        *self.inner.state.lock().unwrap()
+    }
+
+    /// Block until a permit is available.
+    pub fn acquire(&self) -> Permit {
+        let mut avail = self.inner.state.lock().unwrap();
+        while *avail == 0 {
+            avail = self.inner.cv.wait(avail).unwrap();
+        }
+        *avail -= 1;
+        Permit { inner: Arc::clone(&self.inner) }
+    }
+
+    /// Take a permit without blocking; `None` when saturated.
+    pub fn try_acquire(&self) -> Option<Permit> {
+        let mut avail = self.inner.state.lock().unwrap();
+        if *avail == 0 {
+            None
+        } else {
+            *avail -= 1;
+            Some(Permit { inner: Arc::clone(&self.inner) })
+        }
+    }
+}
+
+impl Drop for Permit {
+    fn drop(&mut self) {
+        let mut avail = self.inner.state.lock().unwrap();
+        *avail += 1;
+        self.inner.cv.notify_one();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn permits_count_down_and_restore() {
+        let s = Semaphore::new(2);
+        assert_eq!(s.available(), 2);
+        let p1 = s.acquire();
+        let p2 = s.try_acquire().unwrap();
+        assert_eq!(s.available(), 0);
+        assert!(s.try_acquire().is_none());
+        drop(p1);
+        assert_eq!(s.available(), 1);
+        drop(p2);
+        assert_eq!(s.available(), 2);
+    }
+
+    #[test]
+    fn acquire_blocks_until_release() {
+        let s = Semaphore::new(1);
+        let p = s.acquire();
+        let s2 = s.clone();
+        let handle = std::thread::spawn(move || {
+            let _p = s2.acquire(); // blocks until main drops
+            true
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(!handle.is_finished(), "acquire should still be blocked");
+        drop(p);
+        assert!(handle.join().unwrap());
+    }
+
+    #[test]
+    #[should_panic(expected = "capacity must be > 0")]
+    fn zero_capacity_panics() {
+        let _ = Semaphore::new(0);
+    }
+}

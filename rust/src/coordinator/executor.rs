@@ -1,0 +1,361 @@
+//! Plan execution: run block tasks on a Gram provider, combine each
+//! block's counts into MI, and assemble the full matrix.
+//!
+//! Providers abstract the Gram substrate; the combine is always the
+//! shared exact implementation (`mi::bulk_opt::combine`), so a blockwise
+//! run is bit-identical to the monolithic one.
+
+use super::planner::{BlockPlan, BlockTask};
+use super::progress::Progress;
+use crate::data::dataset::BinaryDataset;
+use crate::linalg::bitmat::BitMatrix;
+use crate::linalg::csr::CsrMatrix;
+use crate::linalg::dense::Mat64;
+use crate::mi::bulk_opt::combine;
+use crate::mi::xla::XlaMi;
+use crate::mi::MiMatrix;
+use crate::runtime::Impl;
+use crate::util::error::{Error, Result};
+use crate::util::threadpool::parallel_for;
+use std::sync::Mutex;
+
+/// Computes the ones-co-occurrence Gram block for a column-block pair.
+pub trait GramProvider {
+    fn name(&self) -> &'static str;
+    /// G11 block of shape (t.a_len, t.b_len).
+    fn block_gram(&self, t: &BlockTask) -> Result<Mat64>;
+}
+
+/// Which native substrate a [`NativeProvider`] uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NativeKind {
+    Bitpack,
+    Dense,
+    Sparse,
+}
+
+/// Gram provider over the in-process substrates. Cheap block extraction:
+/// the bit-packed/CSR forms are built once up front.
+pub struct NativeProvider {
+    kind: NativeKind,
+    ds: BinaryDataset,
+    bit: Option<BitMatrix>,
+    csr: Option<CsrMatrix>,
+}
+
+impl NativeProvider {
+    pub fn new(ds: &BinaryDataset, kind: NativeKind) -> Self {
+        let bit = matches!(kind, NativeKind::Bitpack).then(|| ds.to_bitmatrix());
+        let csr = matches!(kind, NativeKind::Sparse).then(|| ds.to_csr());
+        NativeProvider { kind, ds: ds.clone(), bit, csr }
+    }
+}
+
+impl GramProvider for NativeProvider {
+    fn name(&self) -> &'static str {
+        match self.kind {
+            NativeKind::Bitpack => "native-bitpack",
+            NativeKind::Dense => "native-dense",
+            NativeKind::Sparse => "native-sparse",
+        }
+    }
+
+    fn block_gram(&self, t: &BlockTask) -> Result<Mat64> {
+        match self.kind {
+            NativeKind::Bitpack => {
+                let bit = self.bit.as_ref().expect("built in new");
+                let a = bit.col_block(t.a_start, t.a_len)?;
+                if t.is_diagonal() {
+                    Ok(a.gram())
+                } else {
+                    let b = bit.col_block(t.b_start, t.b_len)?;
+                    a.gram_cross(&b)
+                }
+            }
+            NativeKind::Dense => {
+                let a = self.ds.col_block(t.a_start, t.a_len)?.to_mat32();
+                if t.is_diagonal() {
+                    Ok(crate::linalg::blas::gram(&a))
+                } else {
+                    let b = self.ds.col_block(t.b_start, t.b_len)?.to_mat32();
+                    crate::linalg::blas::gemm_at_b(&a, &b)
+                }
+            }
+            NativeKind::Sparse => {
+                let csr = self.csr.as_ref().expect("built in new");
+                let a = csr.col_block(t.a_start, t.a_len)?;
+                if t.is_diagonal() {
+                    Ok(a.gram())
+                } else {
+                    let b = csr.col_block(t.b_start, t.b_len)?;
+                    a.gram_cross(&b)
+                }
+            }
+        }
+    }
+}
+
+/// Gram provider over the AOT XLA artifacts (`xgram` buckets). Not
+/// `Sync` (PJRT executable cache is thread-affine): use
+/// [`execute_plan_serial`].
+pub struct XlaProvider {
+    xla: XlaMi,
+    impl_: Impl,
+    ds: BinaryDataset,
+}
+
+impl XlaProvider {
+    pub fn new(xla: XlaMi, impl_: Impl, ds: &BinaryDataset) -> Self {
+        XlaProvider { xla, impl_, ds: ds.clone() }
+    }
+
+    fn block_f32(&self, start: usize, len: usize) -> Result<Vec<f32>> {
+        let blk = self.ds.col_block(start, len)?;
+        Ok(blk.bytes().iter().map(|&b| b as f32).collect())
+    }
+}
+
+impl GramProvider for XlaProvider {
+    fn name(&self) -> &'static str {
+        "xla-xgram"
+    }
+
+    fn block_gram(&self, t: &BlockTask) -> Result<Mat64> {
+        let n = self.ds.n_rows();
+        // Row-chunk through the xgram bucket rows so arbitrary n works.
+        let meta = self.xla.runtime().bucket(
+            crate::runtime::ArtifactKind::Xgram,
+            self.impl_,
+            n.min(usize::MAX),
+            t.a_len.max(t.b_len),
+        );
+        let chunk_rows = match meta {
+            Ok(m) => m.rows,
+            Err(_) => self
+                .xla
+                .runtime()
+                .registry()
+                .max_rows_for_cols(
+                    crate::runtime::ArtifactKind::Xgram,
+                    self.impl_,
+                    t.a_len.max(t.b_len),
+                )
+                .ok_or_else(|| {
+                    Error::NoArtifact(format!(
+                        "no xgram bucket with >= {} cols",
+                        t.a_len.max(t.b_len)
+                    ))
+                })?,
+        };
+        let da = self.block_f32(t.a_start, t.a_len)?;
+        let db = self.block_f32(t.b_start, t.b_len)?;
+        let mut g_acc = vec![0.0f64; t.a_len * t.b_len];
+        let mut start = 0usize;
+        while start < n {
+            let len = chunk_rows.min(n - start);
+            let (g, _, _) = self.xla.runtime().run_xgram(
+                self.impl_,
+                &da[start * t.a_len..(start + len) * t.a_len],
+                &db[start * t.b_len..(start + len) * t.b_len],
+                len,
+                t.a_len,
+                t.b_len,
+            )?;
+            for (acc, v) in g_acc.iter_mut().zip(&g) {
+                *acc += v;
+            }
+            start += len;
+        }
+        Mat64::from_vec(t.a_len, t.b_len, g_acc)
+    }
+}
+
+/// Execute a plan in parallel over `workers` threads (provider must be
+/// shareable). Returns the assembled MI matrix; respects cancellation
+/// through `progress`.
+pub fn execute_plan<P: GramProvider + Sync>(
+    ds: &BinaryDataset,
+    plan: &BlockPlan,
+    provider: &P,
+    workers: usize,
+    progress: &Progress,
+) -> Result<MiMatrix> {
+    run_tasks(ds, plan, provider, workers, progress)
+}
+
+/// Execute a plan serially (for providers that are not `Sync`, e.g.
+/// [`XlaProvider`]).
+pub fn execute_plan_serial<P: GramProvider>(
+    ds: &BinaryDataset,
+    plan: &BlockPlan,
+    provider: &P,
+    progress: &Progress,
+) -> Result<MiMatrix> {
+    let m = plan.m;
+    let n = ds.n_rows() as f64;
+    let colsums: Vec<f64> = ds.col_counts().iter().map(|&v| v as f64).collect();
+    let mut out = Mat64::zeros(m, m);
+    for t in &plan.tasks {
+        if progress.is_cancelled() {
+            return Err(Error::Coordinator("job cancelled".into()));
+        }
+        let block = compute_block(provider, t, &colsums, n)?;
+        write_block(&mut out, t, &block, m);
+        progress.task_done();
+    }
+    Ok(MiMatrix::from_mat(out))
+}
+
+fn run_tasks<P: GramProvider + Sync>(
+    ds: &BinaryDataset,
+    plan: &BlockPlan,
+    provider: &P,
+    workers: usize,
+    progress: &Progress,
+) -> Result<MiMatrix> {
+    let m = plan.m;
+    if ds.n_cols() != m {
+        return Err(Error::Shape(format!(
+            "plan is over {m} columns but dataset has {}",
+            ds.n_cols()
+        )));
+    }
+    let n = ds.n_rows() as f64;
+    let colsums: Vec<f64> = ds.col_counts().iter().map(|&v| v as f64).collect();
+    let out = Mutex::new(Mat64::zeros(m, m));
+    let first_err: Mutex<Option<Error>> = Mutex::new(None);
+    parallel_for(plan.tasks.len(), workers, |idx| {
+        if progress.is_cancelled() || first_err.lock().unwrap().is_some() {
+            return;
+        }
+        let t = &plan.tasks[idx];
+        match compute_block(provider, t, &colsums, n) {
+            Ok(block) => {
+                let mut guard = out.lock().unwrap();
+                write_block(&mut guard, t, &block, m);
+                progress.task_done();
+            }
+            Err(e) => {
+                let mut guard = first_err.lock().unwrap();
+                if guard.is_none() {
+                    *guard = Some(e);
+                }
+            }
+        }
+    });
+    if let Some(e) = first_err.into_inner().unwrap() {
+        return Err(e);
+    }
+    if progress.is_cancelled() {
+        return Err(Error::Coordinator("job cancelled".into()));
+    }
+    Ok(MiMatrix::from_mat(out.into_inner().unwrap()))
+}
+
+/// Gram + combine for one task.
+fn compute_block<P: GramProvider + ?Sized>(
+    provider: &P,
+    t: &BlockTask,
+    colsums: &[f64],
+    n: f64,
+) -> Result<Mat64> {
+    let g = provider.block_gram(t)?;
+    if (g.rows(), g.cols()) != (t.a_len, t.b_len) {
+        return Err(Error::Shape(format!(
+            "provider {} returned {}x{} block for task {t:?}",
+            provider.name(),
+            g.rows(),
+            g.cols()
+        )));
+    }
+    let ca = &colsums[t.a_start..t.a_start + t.a_len];
+    let cb = &colsums[t.b_start..t.b_start + t.b_len];
+    Ok(combine(&g, ca, cb, n))
+}
+
+/// Write a combined block (and its mirror for off-diagonal tasks).
+fn write_block(out: &mut Mat64, t: &BlockTask, block: &Mat64, m: usize) {
+    let _ = m;
+    for i in 0..t.a_len {
+        for j in 0..t.b_len {
+            let v = block.get(i, j);
+            out.set(t.a_start + i, t.b_start + j, v);
+            if !t.is_diagonal() {
+                out.set(t.b_start + j, t.a_start + i, v);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::planner::plan_blocks;
+    use crate::data::synth::SynthSpec;
+    use crate::mi::backend::{compute_mi, Backend};
+
+    fn check_blockwise_matches(kind: NativeKind, workers: usize) {
+        let ds = SynthSpec::new(200, 23).sparsity(0.8).seed(kind as u64).generate();
+        let want = compute_mi(&ds, Backend::Pairwise).unwrap();
+        let provider = NativeProvider::new(&ds, kind);
+        for block in [1usize, 5, 8, 23, 100] {
+            let plan = plan_blocks(23, block).unwrap();
+            let progress = Progress::new(plan.tasks.len());
+            let got = execute_plan(&ds, &plan, &provider, workers, &progress).unwrap();
+            assert!(
+                got.max_abs_diff(&want) < 1e-12,
+                "{kind:?} block={block}: diff {}",
+                got.max_abs_diff(&want)
+            );
+            assert_eq!(progress.done(), plan.tasks.len());
+        }
+    }
+
+    #[test]
+    fn bitpack_blockwise_matches_monolithic() {
+        check_blockwise_matches(NativeKind::Bitpack, 1);
+        check_blockwise_matches(NativeKind::Bitpack, 4);
+    }
+
+    #[test]
+    fn dense_blockwise_matches_monolithic() {
+        check_blockwise_matches(NativeKind::Dense, 2);
+    }
+
+    #[test]
+    fn sparse_blockwise_matches_monolithic() {
+        check_blockwise_matches(NativeKind::Sparse, 3);
+    }
+
+    #[test]
+    fn serial_equals_parallel() {
+        let ds = SynthSpec::new(150, 17).sparsity(0.6).seed(9).generate();
+        let provider = NativeProvider::new(&ds, NativeKind::Bitpack);
+        let plan = plan_blocks(17, 4).unwrap();
+        let par =
+            execute_plan(&ds, &plan, &provider, 4, &Progress::new(plan.tasks.len())).unwrap();
+        let ser =
+            execute_plan_serial(&ds, &plan, &provider, &Progress::new(plan.tasks.len()))
+                .unwrap();
+        assert_eq!(par.max_abs_diff(&ser), 0.0);
+    }
+
+    #[test]
+    fn cancellation_aborts() {
+        let ds = SynthSpec::new(50, 12).sparsity(0.5).seed(1).generate();
+        let provider = NativeProvider::new(&ds, NativeKind::Bitpack);
+        let plan = plan_blocks(12, 3).unwrap();
+        let progress = Progress::new(plan.tasks.len());
+        progress.cancel();
+        let err = execute_plan(&ds, &plan, &provider, 2, &progress).unwrap_err();
+        assert!(matches!(err, Error::Coordinator(_)));
+    }
+
+    #[test]
+    fn plan_dataset_mismatch_rejected() {
+        let ds = SynthSpec::new(50, 12).seed(2).generate();
+        let provider = NativeProvider::new(&ds, NativeKind::Bitpack);
+        let plan = plan_blocks(13, 4).unwrap();
+        assert!(execute_plan(&ds, &plan, &provider, 1, &Progress::new(1)).is_err());
+    }
+}

@@ -1,0 +1,33 @@
+//! The Layer-3 coordinator: blockwise bulk-MI over arbitrary (n, m) —
+//! the paper's stated future work ("blockwise computation for situations
+//! when the number of columns is too large ... might exhaust the
+//! machine's memory") built as a first-class feature.
+//!
+//! Pipeline:
+//!
+//! 1. [`planner`] — split the m x m MI matrix into column-block pair
+//!   tasks under a memory budget.
+//! 2. [`scheduler`] — order tasks and track their lifecycle.
+//! 3. [`executor`] — run tasks on any Gram provider (bit-packed, dense,
+//!   sparse, or the XLA/PJRT artifacts) and assemble the full matrix.
+//! 4. [`service`] — a long-lived job API (submit / poll / cancel)
+//!   with worker pool, progress reporting and admission control
+//!   ([`backpressure`]).
+//!
+//! The key exactness property (tested in `rust/tests/coordinator.rs`):
+//! a blockwise run equals the monolithic computation *bit for bit*,
+//! because every block combines the same integer counts.
+
+pub mod backpressure;
+pub mod executor;
+pub mod planner;
+pub mod progress;
+pub mod scheduler;
+pub mod service;
+pub mod streaming;
+
+pub use executor::{
+    execute_plan, execute_plan_serial, GramProvider, NativeProvider, XlaProvider,
+};
+pub use planner::{plan_blocks, BlockPlan, BlockTask, PlannerConfig};
+pub use service::{JobHandle, JobService, JobStatus};

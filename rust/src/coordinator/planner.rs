@@ -1,0 +1,218 @@
+//! Blockwise planning: tile the symmetric m x m MI matrix into
+//! column-block pair tasks, sized under a memory budget.
+//!
+//! For block size B the plan has one task per unordered block pair
+//! (including diagonal blocks); task (a, b) with a <= b computes the
+//! cross Gram of column blocks a and b and fills both the (a, b) and
+//! (b, a) regions of the output. Every column pair is covered exactly
+//! once — the invariant property-tested in `rust/tests/coordinator.rs`.
+
+use crate::util::error::{Error, Result};
+
+/// One unit of work: the cross-block Gram + combine for column ranges
+/// `[a_start, a_start + a_len)` x `[b_start, b_start + b_len)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BlockTask {
+    pub a_start: usize,
+    pub a_len: usize,
+    pub b_start: usize,
+    pub b_len: usize,
+}
+
+impl BlockTask {
+    /// Is this a diagonal task (same block on both sides)?
+    pub fn is_diagonal(&self) -> bool {
+        self.a_start == self.b_start && self.a_len == self.b_len
+    }
+
+    /// Number of output cells this task fills (counting both mirror
+    /// halves for off-diagonal tasks).
+    pub fn cells(&self) -> usize {
+        if self.is_diagonal() {
+            self.a_len * self.a_len
+        } else {
+            2 * self.a_len * self.b_len
+        }
+    }
+}
+
+/// A full plan over the dataset's columns.
+#[derive(Clone, Debug)]
+pub struct BlockPlan {
+    pub m: usize,
+    pub block: usize,
+    pub tasks: Vec<BlockTask>,
+}
+
+impl BlockPlan {
+    /// Total output cells across tasks (must equal m²; see tests).
+    pub fn total_cells(&self) -> usize {
+        self.tasks.iter().map(|t| t.cells()).sum()
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.m.div_ceil(self.block.max(1))
+    }
+}
+
+/// Planner inputs.
+#[derive(Clone, Copy, Debug)]
+pub struct PlannerConfig {
+    /// Requested block size in columns; 0 = derive from `memory_budget`
+    /// (or monolithic when that is also 0).
+    pub block_cols: usize,
+    /// Peak extra bytes a worker may use; 0 = unlimited.
+    pub memory_budget: usize,
+    /// Bytes per matrix cell of the Gram substrate (8 for f64 output
+    /// blocks; used in the budget model).
+    pub n_rows: usize,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig { block_cols: 0, memory_budget: 0, n_rows: 0 }
+    }
+}
+
+/// Build a plan for `m` columns with explicit block size.
+pub fn plan_blocks(m: usize, block_cols: usize) -> Result<BlockPlan> {
+    if m == 0 {
+        return Err(Error::Shape("cannot plan over zero columns".into()));
+    }
+    let block = if block_cols == 0 { m } else { block_cols.min(m) };
+    let n_blocks = m.div_ceil(block);
+    let mut tasks = Vec::with_capacity(n_blocks * (n_blocks + 1) / 2);
+    for a in 0..n_blocks {
+        let a_start = a * block;
+        let a_len = block.min(m - a_start);
+        for b in a..n_blocks {
+            let b_start = b * block;
+            let b_len = block.min(m - b_start);
+            tasks.push(BlockTask { a_start, a_len, b_start, b_len });
+        }
+    }
+    Ok(BlockPlan { m, block, tasks })
+}
+
+/// Estimate the peak working-set bytes of one block task for block size
+/// `b` and `n` rows: two dense f32 column blocks streamed (2·n·b·4), one
+/// f64 Gram/count block (b²·8), one f64 MI block (b²·8).
+pub fn task_bytes(n: usize, b: usize) -> usize {
+    2 * n * b * 4 + 2 * b * b * 8
+}
+
+/// Largest block size whose task working set fits `budget` bytes
+/// (minimum 1 column). Solves the quadratic 16 b² + 8 n b <= budget.
+pub fn block_for_budget(n: usize, m: usize, budget: usize) -> usize {
+    if budget == 0 {
+        return m;
+    }
+    let mut lo = 1usize;
+    let mut hi = m.max(1);
+    while lo < hi {
+        let mid = (lo + hi + 1) / 2;
+        if task_bytes(n, mid) <= budget {
+            lo = mid;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    lo
+}
+
+/// Plan from a [`PlannerConfig`] (block size override wins over budget).
+pub fn plan_with_config(m: usize, cfg: &PlannerConfig) -> Result<BlockPlan> {
+    let block = if cfg.block_cols > 0 {
+        cfg.block_cols
+    } else if cfg.memory_budget > 0 {
+        block_for_budget(cfg.n_rows, m, cfg.memory_budget)
+    } else {
+        0
+    };
+    plan_blocks(m, block)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn monolithic_plan_is_one_task() {
+        let plan = plan_blocks(100, 0).unwrap();
+        assert_eq!(plan.tasks.len(), 1);
+        assert!(plan.tasks[0].is_diagonal());
+        assert_eq!(plan.total_cells(), 100 * 100);
+    }
+
+    #[test]
+    fn block_plan_covers_all_cells() {
+        for (m, b) in [(10usize, 3usize), (100, 7), (64, 64), (65, 64), (5, 1)] {
+            let plan = plan_blocks(m, b).unwrap();
+            assert_eq!(plan.total_cells(), m * m, "m={m} b={b}");
+            let nb = m.div_ceil(b);
+            assert_eq!(plan.tasks.len(), nb * (nb + 1) / 2);
+        }
+    }
+
+    #[test]
+    fn every_column_pair_covered_exactly_once() {
+        let m = 23;
+        let plan = plan_blocks(m, 5).unwrap();
+        let mut covered = vec![0u32; m * m];
+        for t in &plan.tasks {
+            for i in t.a_start..t.a_start + t.a_len {
+                for j in t.b_start..t.b_start + t.b_len {
+                    covered[i * m + j] += 1;
+                    if !t.is_diagonal() {
+                        covered[j * m + i] += 1;
+                    }
+                }
+            }
+        }
+        assert!(covered.iter().all(|&c| c == 1), "coverage map: {covered:?}");
+    }
+
+    #[test]
+    fn zero_columns_rejected() {
+        assert!(plan_blocks(0, 4).is_err());
+    }
+
+    #[test]
+    fn budget_block_sizing() {
+        // generous budget: monolithic
+        assert_eq!(block_for_budget(1000, 500, usize::MAX), 500);
+        // tiny budget: still at least 1
+        assert_eq!(block_for_budget(1_000_000, 500, 1), 1);
+        // budget respected
+        for &budget in &[1 << 20, 16 << 20, 256 << 20] {
+            let b = block_for_budget(100_000, 10_000, budget);
+            assert!(task_bytes(100_000, b) <= budget || b == 1);
+            if b < 10_000 {
+                // maximality: next size up must exceed the budget
+                assert!(task_bytes(100_000, b + 1) > budget);
+            }
+        }
+    }
+
+    #[test]
+    fn config_plan_modes() {
+        let explicit = plan_with_config(100, &PlannerConfig {
+            block_cols: 10,
+            memory_budget: 1,
+            n_rows: 50,
+        })
+        .unwrap();
+        assert_eq!(explicit.block, 10); // explicit wins over budget
+
+        let budgeted = plan_with_config(100, &PlannerConfig {
+            block_cols: 0,
+            memory_budget: task_bytes(50, 25),
+            n_rows: 50,
+        })
+        .unwrap();
+        assert!(budgeted.block >= 25);
+
+        let mono = plan_with_config(100, &PlannerConfig::default()).unwrap();
+        assert_eq!(mono.tasks.len(), 1);
+    }
+}

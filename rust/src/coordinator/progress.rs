@@ -1,0 +1,85 @@
+//! Shared progress + cancellation state for a running job.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Cheap cloneable handle tracking task completion and cancellation.
+#[derive(Clone, Debug, Default)]
+pub struct Progress {
+    inner: Arc<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    done: AtomicUsize,
+    total: AtomicUsize,
+    cancelled: AtomicBool,
+}
+
+impl Progress {
+    pub fn new(total: usize) -> Self {
+        let p = Progress::default();
+        p.inner.total.store(total, Ordering::Relaxed);
+        p
+    }
+
+    pub fn task_done(&self) {
+        self.inner.done.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn done(&self) -> usize {
+        self.inner.done.load(Ordering::Relaxed)
+    }
+
+    pub fn total(&self) -> usize {
+        self.inner.total.load(Ordering::Relaxed)
+    }
+
+    /// Completion in [0, 1] (1.0 for empty plans).
+    pub fn fraction(&self) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            1.0
+        } else {
+            self.done() as f64 / total as f64
+        }
+    }
+
+    pub fn cancel(&self) {
+        self.inner.cancelled.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.inner.cancelled.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracks_fraction() {
+        let p = Progress::new(4);
+        assert_eq!(p.fraction(), 0.0);
+        p.task_done();
+        p.task_done();
+        assert!((p.fraction() - 0.5).abs() < 1e-12);
+        assert_eq!(p.done(), 2);
+        assert_eq!(p.total(), 4);
+    }
+
+    #[test]
+    fn empty_plan_is_complete() {
+        assert_eq!(Progress::new(0).fraction(), 1.0);
+    }
+
+    #[test]
+    fn cancellation_is_shared_across_clones() {
+        let p = Progress::new(1);
+        let q = p.clone();
+        assert!(!q.is_cancelled());
+        p.cancel();
+        assert!(q.is_cancelled());
+    }
+}

@@ -1,0 +1,81 @@
+//! Task ordering policies for a block plan. With work-stealing workers
+//! the schedule mostly affects tail latency: issuing the most expensive
+//! tasks first avoids a single large task straggling at the end.
+
+use super::planner::BlockTask;
+
+/// Ordering policy for block tasks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// Plan order (row-major over block pairs).
+    Sequential,
+    /// Most output cells first (default: best tail behaviour).
+    LargestFirst,
+    /// Diagonal blocks first (warms per-column state, useful for
+    /// providers that cache per-block packing).
+    DiagonalFirst,
+}
+
+/// Order `tasks` in place according to `policy` (stable).
+pub fn order_tasks(tasks: &mut [BlockTask], policy: Schedule) {
+    match policy {
+        Schedule::Sequential => {}
+        Schedule::LargestFirst => {
+            tasks.sort_by_key(|t| std::cmp::Reverse(t.cells()));
+        }
+        Schedule::DiagonalFirst => {
+            tasks.sort_by_key(|t| !t.is_diagonal());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::planner::plan_blocks;
+
+    fn sample() -> Vec<BlockTask> {
+        plan_blocks(10, 4).unwrap().tasks // blocks of 4,4,2 -> 6 tasks
+    }
+
+    #[test]
+    fn sequential_is_identity() {
+        let mut t = sample();
+        let orig = t.clone();
+        order_tasks(&mut t, Schedule::Sequential);
+        assert_eq!(t, orig);
+    }
+
+    #[test]
+    fn largest_first_descends() {
+        let mut t = sample();
+        order_tasks(&mut t, Schedule::LargestFirst);
+        for w in t.windows(2) {
+            assert!(w[0].cells() >= w[1].cells());
+        }
+    }
+
+    #[test]
+    fn diagonal_first_puts_diagonals_up_front() {
+        let mut t = sample();
+        order_tasks(&mut t, Schedule::DiagonalFirst);
+        let first_off = t.iter().position(|x| !x.is_diagonal()).unwrap();
+        assert!(t[..first_off].iter().all(|x| x.is_diagonal()));
+        assert!(t[first_off..].iter().all(|x| !x.is_diagonal()));
+        assert_eq!(t[..first_off].len(), 3);
+    }
+
+    #[test]
+    fn ordering_preserves_the_task_set() {
+        for policy in [Schedule::Sequential, Schedule::LargestFirst, Schedule::DiagonalFirst] {
+            let mut t = sample();
+            order_tasks(&mut t, policy);
+            let mut a = t;
+            let mut b = sample();
+            let key = |x: &BlockTask| (x.a_start, x.b_start);
+            a.sort_by_key(key);
+            b.sort_by_key(key);
+            assert_eq!(a, b);
+        }
+    }
+}

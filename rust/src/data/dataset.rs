@@ -1,0 +1,222 @@
+//! The core in-memory dataset type shared by every backend.
+
+use crate::linalg::bitmat::BitMatrix;
+use crate::linalg::csr::CsrMatrix;
+use crate::linalg::dense::Mat32;
+use crate::util::error::{Error, Result};
+
+/// An n_rows x n_cols binary dataset, row-major, one byte per cell
+/// (0 or 1). Columns may carry names (genomics markers, vocabulary...).
+#[derive(Clone, Debug)]
+pub struct BinaryDataset {
+    n_rows: usize,
+    n_cols: usize,
+    data: Vec<u8>,
+    names: Option<Vec<String>>,
+}
+
+impl BinaryDataset {
+    /// Build from a row-major buffer of 0/1 bytes.
+    pub fn new(n_rows: usize, n_cols: usize, data: Vec<u8>) -> Result<Self> {
+        if data.len() != n_rows * n_cols {
+            return Err(Error::Shape(format!(
+                "buffer length {} != {n_rows}x{n_cols}",
+                data.len()
+            )));
+        }
+        if let Some(bad) = data.iter().position(|&b| b > 1) {
+            return Err(Error::Parse(format!(
+                "non-binary value {} at cell {bad}",
+                data[bad]
+            )));
+        }
+        Ok(BinaryDataset { n_rows, n_cols, data, names: None })
+    }
+
+    /// Attach column names (length must equal n_cols).
+    pub fn with_names(mut self, names: Vec<String>) -> Result<Self> {
+        if names.len() != self.n_cols {
+            return Err(Error::Shape(format!(
+                "{} names for {} columns",
+                names.len(),
+                self.n_cols
+            )));
+        }
+        self.names = Some(names);
+        Ok(self)
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    pub fn names(&self) -> Option<&[String]> {
+        self.names.as_deref()
+    }
+
+    /// Name of column `c` (falls back to "col{c}").
+    pub fn col_name(&self, c: usize) -> String {
+        match &self.names {
+            Some(ns) => ns[c].clone(),
+            None => format!("col{c}"),
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> u8 {
+        debug_assert!(r < self.n_rows && c < self.n_cols);
+        self.data[r * self.n_cols + c]
+    }
+
+    /// Raw row-major bytes.
+    pub fn bytes(&self) -> &[u8] {
+        &self.data
+    }
+
+    /// One row as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u8] {
+        &self.data[r * self.n_cols..(r + 1) * self.n_cols]
+    }
+
+    /// Fraction of zero cells.
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let ones: usize = self.data.iter().map(|&b| b as usize).sum();
+        1.0 - ones as f64 / self.data.len() as f64
+    }
+
+    /// Count of ones per column.
+    pub fn col_counts(&self) -> Vec<u64> {
+        let mut counts = vec![0u64; self.n_cols];
+        for r in 0..self.n_rows {
+            for (cnt, &v) in counts.iter_mut().zip(self.row(r)) {
+                *cnt += v as u64;
+            }
+        }
+        counts
+    }
+
+    /// Dense f32 view (what the NumPy/XLA-style backends consume).
+    pub fn to_mat32(&self) -> Mat32 {
+        let data = self.data.iter().map(|&b| b as f32).collect();
+        Mat32::from_vec(self.n_rows, self.n_cols, data).expect("shape consistent")
+    }
+
+    /// Bit-packed view.
+    pub fn to_bitmatrix(&self) -> BitMatrix {
+        BitMatrix::from_row_major(self.n_rows, self.n_cols, &self.data)
+            .expect("shape consistent")
+    }
+
+    /// CSR sparse view.
+    pub fn to_csr(&self) -> CsrMatrix {
+        CsrMatrix::from_row_major(self.n_rows, self.n_cols, &self.data)
+            .expect("shape consistent")
+    }
+
+    /// Contiguous column block `[start, start+len)` as a new dataset.
+    pub fn col_block(&self, start: usize, len: usize) -> Result<BinaryDataset> {
+        if start + len > self.n_cols {
+            return Err(Error::Shape(format!(
+                "col_block [{start}, {}) out of {} cols",
+                start + len,
+                self.n_cols
+            )));
+        }
+        let mut data = Vec::with_capacity(self.n_rows * len);
+        for r in 0..self.n_rows {
+            data.extend_from_slice(&self.row(r)[start..start + len]);
+        }
+        let names = self.names.as_ref().map(|ns| ns[start..start + len].to_vec());
+        Ok(BinaryDataset { n_rows: self.n_rows, n_cols: len, data, names })
+    }
+
+    /// Contiguous row chunk `[start, start+len)` as a new dataset
+    /// (used by the streaming/row-chunked ingestion path).
+    pub fn row_chunk(&self, start: usize, len: usize) -> Result<BinaryDataset> {
+        if start + len > self.n_rows {
+            return Err(Error::Shape(format!(
+                "row_chunk [{start}, {}) out of {} rows",
+                start + len,
+                self.n_rows
+            )));
+        }
+        let data = self.data[start * self.n_cols..(start + len) * self.n_cols].to_vec();
+        Ok(BinaryDataset {
+            n_rows: len,
+            n_cols: self.n_cols,
+            data,
+            names: self.names.clone(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> BinaryDataset {
+        BinaryDataset::new(3, 2, vec![1, 0, 0, 1, 1, 1]).unwrap()
+    }
+
+    #[test]
+    fn construction_validates() {
+        assert!(BinaryDataset::new(2, 2, vec![0, 1, 2, 0]).is_err()); // non-binary
+        assert!(BinaryDataset::new(2, 2, vec![0, 1, 1]).is_err()); // wrong length
+    }
+
+    #[test]
+    fn accessors() {
+        let ds = small();
+        assert_eq!(ds.get(0, 0), 1);
+        assert_eq!(ds.get(1, 1), 1);
+        assert_eq!(ds.row(2), &[1, 1]);
+        assert_eq!(ds.col_counts(), vec![2, 2]);
+        assert!((ds.sparsity() - (2.0 / 6.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn names_round_trip() {
+        let ds = small().with_names(vec!["a".into(), "b".into()]).unwrap();
+        assert_eq!(ds.col_name(1), "b");
+        assert!(small().with_names(vec!["x".into()]).is_err());
+        assert_eq!(small().col_name(0), "col0");
+    }
+
+    #[test]
+    fn views_agree() {
+        let ds = small();
+        let dense = ds.to_mat32();
+        let bits = ds.to_bitmatrix();
+        let csr = ds.to_csr();
+        for r in 0..3 {
+            for c in 0..2 {
+                let v = ds.get(r, c);
+                assert_eq!(dense.get(r, c), v as f32);
+                assert_eq!(bits.get(r, c), v == 1);
+            }
+        }
+        assert_eq!(csr.nnz(), 4);
+    }
+
+    #[test]
+    fn col_block_and_row_chunk() {
+        let ds = BinaryDataset::new(4, 3, vec![1, 0, 1, 0, 1, 0, 1, 1, 0, 0, 0, 1]).unwrap();
+        let blk = ds.col_block(1, 2).unwrap();
+        assert_eq!(blk.n_cols(), 2);
+        assert_eq!(blk.get(1, 0), 1);
+        assert_eq!(blk.get(3, 1), 1);
+        let chunk = ds.row_chunk(2, 2).unwrap();
+        assert_eq!(chunk.n_rows(), 2);
+        assert_eq!(chunk.row(0), ds.row(2));
+        assert!(ds.col_block(2, 2).is_err());
+        assert!(ds.row_chunk(3, 2).is_err());
+    }
+}

@@ -1,0 +1,124 @@
+//! Network-science workload: binary adjacency matrices — the link-
+//! prediction scenario the paper's introduction cites (MI between
+//! adjacency columns measures neighborhood overlap between nodes).
+
+use super::dataset::BinaryDataset;
+use crate::util::rng::Rng;
+
+/// A planted-partition (stochastic block model) random graph.
+///
+/// `k` communities of equal size; edge probability `p_in` within a
+/// community, `p_out` across. Columns of the adjacency matrix belonging
+/// to the same community share neighborhoods, so their pairwise MI is
+/// high — ground truth the network example recovers.
+#[derive(Clone, Debug)]
+pub struct SbmSpec {
+    pub n_nodes: usize,
+    pub k: usize,
+    pub p_in: f64,
+    pub p_out: f64,
+    pub seed: u64,
+}
+
+impl Default for SbmSpec {
+    fn default() -> Self {
+        SbmSpec { n_nodes: 120, k: 3, p_in: 0.4, p_out: 0.02, seed: 0 }
+    }
+}
+
+/// Generated graph: adjacency as a dataset (rows = columns = nodes) and
+/// the community of each node.
+#[derive(Clone, Debug)]
+pub struct SbmGraph {
+    pub adjacency: BinaryDataset,
+    pub community: Vec<usize>,
+}
+
+impl SbmSpec {
+    pub fn generate(&self) -> SbmGraph {
+        let n = self.n_nodes;
+        let mut rng = Rng::new(self.seed);
+        let community: Vec<usize> = (0..n).map(|i| i * self.k / n).collect();
+        let mut data = vec![0u8; n * n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let p = if community[i] == community[j] { self.p_in } else { self.p_out };
+                let edge = rng.bernoulli(p) as u8;
+                data[i * n + j] = edge;
+                data[j * n + i] = edge; // undirected: symmetric adjacency
+            }
+        }
+        let adjacency = BinaryDataset::new(n, n, data)
+            .expect("generator is valid")
+            .with_names((0..n).map(|i| format!("node{i}")).collect())
+            .expect("names sized");
+        SbmGraph { adjacency, community }
+    }
+}
+
+/// Erdos-Renyi random graph adjacency (no structure; null model).
+pub fn erdos_renyi(n_nodes: usize, p: f64, seed: u64) -> BinaryDataset {
+    let mut rng = Rng::new(seed);
+    let mut data = vec![0u8; n_nodes * n_nodes];
+    for i in 0..n_nodes {
+        for j in (i + 1)..n_nodes {
+            let edge = rng.bernoulli(p) as u8;
+            data[i * n_nodes + j] = edge;
+            data[j * n_nodes + i] = edge;
+        }
+    }
+    BinaryDataset::new(n_nodes, n_nodes, data).expect("generator is valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sbm_is_symmetric_no_self_loops() {
+        let g = SbmSpec::default().generate();
+        let a = &g.adjacency;
+        for i in 0..a.n_rows() {
+            assert_eq!(a.get(i, i), 0);
+            for j in 0..a.n_cols() {
+                assert_eq!(a.get(i, j), a.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn sbm_communities_are_balanced() {
+        let g = SbmSpec { n_nodes: 90, k: 3, ..Default::default() }.generate();
+        for c in 0..3 {
+            let size = g.community.iter().filter(|&&x| x == c).count();
+            assert_eq!(size, 30);
+        }
+    }
+
+    #[test]
+    fn sbm_in_density_exceeds_out_density() {
+        let g = SbmSpec { n_nodes: 150, seed: 3, ..Default::default() }.generate();
+        let a = &g.adjacency;
+        let (mut ein, mut nin, mut eout, mut nout) = (0f64, 0f64, 0f64, 0f64);
+        for i in 0..a.n_rows() {
+            for j in (i + 1)..a.n_cols() {
+                if g.community[i] == g.community[j] {
+                    ein += a.get(i, j) as f64;
+                    nin += 1.0;
+                } else {
+                    eout += a.get(i, j) as f64;
+                    nout += 1.0;
+                }
+            }
+        }
+        assert!(ein / nin > 5.0 * (eout / nout));
+    }
+
+    #[test]
+    fn erdos_renyi_density() {
+        let a = erdos_renyi(200, 0.1, 1);
+        let ones: usize = a.bytes().iter().map(|&b| b as usize).sum();
+        let expected = 0.1 * (200.0 * 199.0); // directed cell count of undirected edges
+        assert!((ones as f64 - expected).abs() / expected < 0.15);
+    }
+}

@@ -1,0 +1,210 @@
+//! Dataset IO: CSV (with optional header) and `.bmat`, a compact binary
+//! format (magic + dims + bit-packed payload) for large panels.
+
+use super::dataset::BinaryDataset;
+use crate::util::error::{Error, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Magic bytes for the .bmat format, version 1.
+const BMAT_MAGIC: &[u8; 8] = b"BULKMI\x01\0";
+
+/// Write CSV. `header` controls whether column names are emitted.
+pub fn write_csv(ds: &BinaryDataset, path: &Path, header: bool) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    if header {
+        let names: Vec<String> = (0..ds.n_cols()).map(|c| ds.col_name(c)).collect();
+        writeln!(w, "{}", names.join(","))?;
+    }
+    let mut line = String::with_capacity(ds.n_cols() * 2);
+    for r in 0..ds.n_rows() {
+        line.clear();
+        for (c, &v) in ds.row(r).iter().enumerate() {
+            if c > 0 {
+                line.push(',');
+            }
+            line.push(if v == 1 { '1' } else { '0' });
+        }
+        writeln!(w, "{line}")?;
+    }
+    Ok(())
+}
+
+/// Read CSV of 0/1 cells. If the first row contains any non-numeric
+/// token it is treated as a header of column names.
+pub fn read_csv(path: &Path) -> Result<BinaryDataset> {
+    let f = std::fs::File::open(path)?;
+    let reader = BufReader::new(f);
+    let mut names: Option<Vec<String>> = None;
+    let mut data: Vec<u8> = Vec::new();
+    let mut n_cols = 0usize;
+    let mut n_rows = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(|s| s.trim()).collect();
+        if lineno == 0 && fields.iter().any(|f| f.parse::<u8>().is_err()) {
+            names = Some(fields.iter().map(|s| s.to_string()).collect());
+            n_cols = fields.len();
+            continue;
+        }
+        if n_cols == 0 {
+            n_cols = fields.len();
+        } else if fields.len() != n_cols {
+            return Err(Error::Parse(format!(
+                "line {}: {} fields, expected {n_cols}",
+                lineno + 1,
+                fields.len()
+            )));
+        }
+        for f in &fields {
+            match *f {
+                "0" => data.push(0),
+                "1" => data.push(1),
+                other => {
+                    return Err(Error::Parse(format!(
+                        "line {}: non-binary value '{other}'",
+                        lineno + 1
+                    )))
+                }
+            }
+        }
+        n_rows += 1;
+    }
+    let ds = BinaryDataset::new(n_rows, n_cols, data)?;
+    match names {
+        Some(ns) => ds.with_names(ns),
+        None => Ok(ds),
+    }
+}
+
+/// Write the compact bit-packed `.bmat` format.
+///
+/// Layout: magic(8) | n_rows(u64 LE) | n_cols(u64 LE) | payload where the
+/// payload packs cells row-major, 8 cells per byte, LSB first.
+pub fn write_bmat(ds: &BinaryDataset, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(BMAT_MAGIC)?;
+    w.write_all(&(ds.n_rows() as u64).to_le_bytes())?;
+    w.write_all(&(ds.n_cols() as u64).to_le_bytes())?;
+    let total = ds.n_rows() * ds.n_cols();
+    let bytes = ds.bytes();
+    let mut packed = vec![0u8; total.div_ceil(8)];
+    for (i, &v) in bytes.iter().enumerate() {
+        if v != 0 {
+            packed[i / 8] |= 1 << (i % 8);
+        }
+    }
+    w.write_all(&packed)?;
+    Ok(())
+}
+
+/// Read `.bmat`.
+pub fn read_bmat(path: &Path) -> Result<BinaryDataset> {
+    let mut f = std::fs::File::open(path)?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != BMAT_MAGIC {
+        return Err(Error::Parse("not a .bmat file (bad magic)".into()));
+    }
+    let mut dims = [0u8; 16];
+    f.read_exact(&mut dims)?;
+    let n_rows = u64::from_le_bytes(dims[..8].try_into().unwrap()) as usize;
+    let n_cols = u64::from_le_bytes(dims[8..].try_into().unwrap()) as usize;
+    let total = n_rows
+        .checked_mul(n_cols)
+        .ok_or_else(|| Error::Parse("dimension overflow".into()))?;
+    let mut packed = vec![0u8; total.div_ceil(8)];
+    f.read_exact(&mut packed)?;
+    let mut data = vec![0u8; total];
+    for (i, cell) in data.iter_mut().enumerate() {
+        *cell = (packed[i / 8] >> (i % 8)) & 1;
+    }
+    BinaryDataset::new(n_rows, n_cols, data)
+}
+
+/// Load by extension: `.csv` or `.bmat`.
+pub fn load(path: &Path) -> Result<BinaryDataset> {
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("csv") => read_csv(path),
+        Some("bmat") => read_bmat(path),
+        other => Err(Error::Parse(format!("unsupported dataset extension {other:?}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    fn tmpdir() -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("bulkmi-io-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn csv_round_trip_no_header() {
+        let ds = SynthSpec::new(20, 7).sparsity(0.6).seed(1).generate();
+        let path = tmpdir().join("nh.csv");
+        write_csv(&ds, &path, false).unwrap();
+        let back = read_csv(&path).unwrap();
+        assert_eq!(back.bytes(), ds.bytes());
+        assert_eq!((back.n_rows(), back.n_cols()), (20, 7));
+    }
+
+    #[test]
+    fn csv_round_trip_with_header() {
+        let ds = SynthSpec::new(5, 3)
+            .seed(2)
+            .generate()
+            .with_names(vec!["alpha".into(), "beta".into(), "gamma".into()])
+            .unwrap();
+        let path = tmpdir().join("h.csv");
+        write_csv(&ds, &path, true).unwrap();
+        let back = read_csv(&path).unwrap();
+        assert_eq!(back.names().unwrap(), ds.names().unwrap());
+        assert_eq!(back.bytes(), ds.bytes());
+    }
+
+    #[test]
+    fn csv_rejects_garbage() {
+        let path = tmpdir().join("bad.csv");
+        std::fs::write(&path, "0,1\n1,2\n").unwrap();
+        assert!(read_csv(&path).is_err());
+        std::fs::write(&path, "0,1\n1\n").unwrap();
+        assert!(read_csv(&path).is_err());
+    }
+
+    #[test]
+    fn bmat_round_trip() {
+        let ds = SynthSpec::new(100, 33).sparsity(0.9).seed(3).generate();
+        let path = tmpdir().join("x.bmat");
+        write_bmat(&ds, &path).unwrap();
+        let back = read_bmat(&path).unwrap();
+        assert_eq!(back.bytes(), ds.bytes());
+    }
+
+    #[test]
+    fn bmat_rejects_bad_magic() {
+        let path = tmpdir().join("bad.bmat");
+        std::fs::write(&path, b"NOTBMAT!aaaaaaaaaaaaaaaa").unwrap();
+        assert!(read_bmat(&path).is_err());
+    }
+
+    #[test]
+    fn load_dispatches_on_extension() {
+        let ds = SynthSpec::new(4, 4).seed(4).generate();
+        let dir = tmpdir();
+        let c = dir.join("d.csv");
+        let b = dir.join("d.bmat");
+        write_csv(&ds, &c, false).unwrap();
+        write_bmat(&ds, &b).unwrap();
+        assert_eq!(load(&c).unwrap().bytes(), ds.bytes());
+        assert_eq!(load(&b).unwrap().bytes(), ds.bytes());
+        assert!(load(&dir.join("d.xyz")).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Datasets: the in-memory binary dataset type, synthetic workload
+//! generators matching the paper's experimental setup (sparsity-controlled
+//! Bernoulli data) and the application domains its introduction motivates
+//! (genomics marker panels, text bag-of-words, network adjacency), plus
+//! CSV / `.bmat` IO.
+
+pub mod dataset;
+pub mod genomics;
+pub mod graph;
+pub mod io;
+pub mod synth;
+pub mod text;

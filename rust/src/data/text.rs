@@ -1,0 +1,125 @@
+//! Bag-of-words binarization: documents x vocabulary presence matrix —
+//! the NLP workload the paper's introduction cites. Includes a tiny
+//! built-in corpus so examples run without external data.
+
+use super::dataset::BinaryDataset;
+use std::collections::BTreeMap;
+
+/// Tokenize: lowercase alphanumeric words, length >= `min_len`.
+pub fn tokenize(text: &str, min_len: usize) -> Vec<String> {
+    text.split(|c: char| !c.is_alphanumeric())
+        .filter(|w| w.len() >= min_len)
+        .map(|w| w.to_ascii_lowercase())
+        .collect()
+}
+
+/// Build a documents x vocabulary binary presence dataset.
+///
+/// Vocabulary keeps words appearing in at least `min_df` documents,
+/// ordered by (descending document frequency, then lexicographic),
+/// truncated to `max_vocab`.
+pub fn binarize(docs: &[&str], min_df: usize, max_vocab: usize) -> BinaryDataset {
+    let tokenized: Vec<Vec<String>> = docs.iter().map(|d| tokenize(d, 2)).collect();
+    let mut df: BTreeMap<String, usize> = BTreeMap::new();
+    for toks in &tokenized {
+        let mut seen: Vec<&String> = toks.iter().collect();
+        seen.sort();
+        seen.dedup();
+        for w in seen {
+            *df.entry(w.clone()).or_insert(0) += 1;
+        }
+    }
+    let mut vocab: Vec<(String, usize)> =
+        df.into_iter().filter(|&(_, c)| c >= min_df).collect();
+    vocab.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+    vocab.truncate(max_vocab);
+    let index: BTreeMap<&str, usize> =
+        vocab.iter().enumerate().map(|(i, (w, _))| (w.as_str(), i)).collect();
+
+    let (n, m) = (docs.len(), vocab.len());
+    let mut data = vec![0u8; n * m];
+    for (r, toks) in tokenized.iter().enumerate() {
+        for w in toks {
+            if let Some(&c) = index.get(w.as_str()) {
+                data[r * m + c] = 1;
+            }
+        }
+    }
+    BinaryDataset::new(n, m, data)
+        .expect("generator is valid")
+        .with_names(vocab.into_iter().map(|(w, _)| w).collect())
+        .expect("names sized")
+}
+
+/// A tiny built-in corpus (news-style snippets across three topics) so
+/// the text example runs self-contained.
+pub fn builtin_corpus() -> Vec<&'static str> {
+    vec![
+        "the central bank raised interest rates to fight inflation in the economy",
+        "stock market investors worried about rising interest rates and inflation",
+        "the bank announced new lending rates as inflation pressure continued",
+        "economy shrank last quarter as markets reacted to central bank policy",
+        "investors moved money from stocks to bonds as rates climbed higher",
+        "the genome study identified gene variants linked to disease risk",
+        "researchers sequenced the genome to find mutations causing the disease",
+        "gene expression analysis revealed markers associated with cancer risk",
+        "the mutation in this gene raises disease risk according to the study",
+        "scientists mapped genetic variants across the genome in a large cohort",
+        "the team won the championship game with a late goal in extra time",
+        "players celebrated the victory after the final game of the season",
+        "the coach praised the team defense after winning the championship",
+        "a record crowd watched the game as the home team scored the winning goal",
+        "the season ended with the team lifting the championship trophy",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenizer_basics() {
+        assert_eq!(tokenize("Hello, World! a", 2), vec!["hello", "world"]);
+        assert_eq!(tokenize("", 2), Vec::<String>::new());
+        assert_eq!(tokenize("x1 y2", 2), vec!["x1", "y2"]);
+    }
+
+    #[test]
+    fn binarize_shapes_and_presence() {
+        let docs = vec!["cat dog", "dog bird", "cat bird dog"];
+        let ds = binarize(&docs, 1, 10);
+        assert_eq!(ds.n_rows(), 3);
+        assert_eq!(ds.n_cols(), 3); // cat, dog, bird
+        let names = ds.names().unwrap().to_vec();
+        let dog = names.iter().position(|w| w == "dog").unwrap();
+        assert_eq!(ds.get(0, dog), 1);
+        assert_eq!(ds.get(1, dog), 1);
+        assert_eq!(ds.get(2, dog), 1);
+        let cat = names.iter().position(|w| w == "cat").unwrap();
+        assert_eq!(ds.get(1, cat), 0);
+    }
+
+    #[test]
+    fn min_df_filters_rare_words() {
+        let docs = vec!["common rare1", "common rare2", "common rare3"];
+        let ds = binarize(&docs, 2, 10);
+        assert_eq!(ds.n_cols(), 1);
+        assert_eq!(ds.names().unwrap()[0], "common");
+    }
+
+    #[test]
+    fn max_vocab_truncates() {
+        let docs = vec!["aa bb cc dd", "aa bb cc dd", "aa bb cc dd"];
+        let ds = binarize(&docs, 1, 2);
+        assert_eq!(ds.n_cols(), 2);
+    }
+
+    #[test]
+    fn builtin_corpus_binarizes() {
+        let docs = builtin_corpus();
+        let ds = binarize(&docs, 2, 100);
+        assert_eq!(ds.n_rows(), 15);
+        assert!(ds.n_cols() >= 10);
+        assert!(ds.sparsity() > 0.5);
+    }
+}

@@ -1,0 +1,52 @@
+//! # bulkmi — fast bulk mutual information for large binary datasets
+//!
+//! Production-quality reproduction of *"Fast Mutual Information Computation
+//! for Large Binary Datasets"* (A. O. Falcao, 2024) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: blockwise planning,
+//!   scheduling, the job service, all five native CPU backends the paper
+//!   evaluates, and the PJRT runtime that executes AOT-compiled XLA
+//!   artifacts. Python never runs on the request path.
+//! * **Layer 2** — JAX compute graphs (`python/compile/model.py`),
+//!   AOT-lowered once to HLO text artifacts.
+//! * **Layer 1** — Pallas kernels (`python/compile/kernels/mi_pallas.py`)
+//!   implementing the tiled Gram matmul and the element-wise MI combine.
+//!
+//! ## The algorithm in one paragraph
+//!
+//! For an `n x m` binary matrix `D`, all `m^2` pairwise mutual informations
+//! are a function of just `(G11, c, n)` where `G11 = D^T D` and
+//! `c = colsums(D)`: the paper's Section-3 identities give
+//! `G00 = N - C - C^T + G11`, `G01 = C - G11`, `G10 = G01^T`, so a single
+//! Gram computation replaces the `O(m^2)` per-pair 2x2 contingency scans.
+//! Every backend in [`mi`] is a different substrate for that one Gram:
+//! dense blocked f32 ([`linalg::blas`]), bit-packed AND+popcount
+//! ([`linalg::bitmat`]), CSR sparse ([`linalg::csr`]), or the XLA/PJRT
+//! executable compiled from the Pallas kernel.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use bulkmi::data::synth::SynthSpec;
+//! use bulkmi::mi::backend::{Backend, compute_mi};
+//!
+//! let ds = SynthSpec::new(10_000, 200).sparsity(0.9).seed(7).generate();
+//! let mi = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+//! println!("MI(0,1) = {:.4} bits", mi.get(0, 1));
+//! ```
+//!
+//! See `examples/` for end-to-end drivers and `rust/benches/` for the
+//! reproduction of every table and figure in the paper.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod metrics;
+pub mod mi;
+pub mod runtime;
+pub mod util;
+
+pub use util::error::{Error, Result};

@@ -1,0 +1,255 @@
+//! Bit-packed binary matrix: each column stored as ⌈n/64⌉ u64 words, so
+//! the Gram inner product becomes `popcount(a & b)` over words — 64
+//! elements per instruction. This is the crate's "hardware-optimized
+//! framework" analog of the paper's PyTorch row (Opt-T): same algorithm,
+//! substrate tuned to the machine.
+
+use super::dense::Mat64;
+use crate::util::error::{Error, Result};
+
+/// Column-major packed bit matrix.
+#[derive(Clone, Debug)]
+pub struct BitMatrix {
+    rows: usize,
+    cols: usize,
+    words_per_col: usize,
+    /// Column-major: column `c` occupies
+    /// `data[c * words_per_col .. (c+1) * words_per_col]`.
+    data: Vec<u64>,
+}
+
+impl BitMatrix {
+    /// Pack row-major binary bytes (values 0/1) of shape n x m.
+    pub fn from_row_major(rows: usize, cols: usize, bytes: &[u8]) -> Result<Self> {
+        if bytes.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "buffer length {} != {rows}x{cols}",
+                bytes.len()
+            )));
+        }
+        let words_per_col = rows.div_ceil(64);
+        let mut data = vec![0u64; words_per_col * cols];
+        for r in 0..rows {
+            let word = r / 64;
+            let bit = r % 64;
+            let row = &bytes[r * cols..(r + 1) * cols];
+            for (c, &v) in row.iter().enumerate() {
+                debug_assert!(v <= 1, "binary data expected");
+                if v != 0 {
+                    data[c * words_per_col + word] |= 1u64 << bit;
+                }
+            }
+        }
+        Ok(BitMatrix { rows, cols, words_per_col, data })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Packed words of one column.
+    #[inline]
+    pub fn col(&self, c: usize) -> &[u64] {
+        &self.data[c * self.words_per_col..(c + 1) * self.words_per_col]
+    }
+
+    /// Read a single bit.
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        self.col(c)[r / 64] >> (r % 64) & 1 == 1
+    }
+
+    /// Count of ones per column.
+    pub fn col_counts(&self) -> Vec<u64> {
+        (0..self.cols)
+            .map(|c| self.col(c).iter().map(|w| w.count_ones() as u64).sum())
+            .collect()
+    }
+
+    /// Co-occurrence count of ones between two of *this* matrix's columns.
+    #[inline]
+    pub fn and_count(&self, i: usize, j: usize) -> u64 {
+        dot_popcount(self.col(i), self.col(j))
+    }
+
+    /// Symmetric Gram `D^T D` via AND+popcount (upper triangle mirrored).
+    pub fn gram(&self) -> Mat64 {
+        let m = self.cols;
+        let mut out = Mat64::zeros(m, m);
+        for i in 0..m {
+            let ci = self.col(i);
+            for j in i..m {
+                let v = dot_popcount(ci, self.col(j)) as f64;
+                out.set(i, j, v);
+                out.set(j, i, v);
+            }
+        }
+        out
+    }
+
+    /// Cross Gram `A^T B` against another bit matrix with the same rows.
+    pub fn gram_cross(&self, other: &BitMatrix) -> Result<Mat64> {
+        if self.rows != other.rows {
+            return Err(Error::Shape(format!(
+                "gram_cross: row mismatch {} vs {}",
+                self.rows, other.rows
+            )));
+        }
+        let (ma, mb) = (self.cols, other.cols);
+        let mut out = Mat64::zeros(ma, mb);
+        for i in 0..ma {
+            let ci = self.col(i);
+            for j in 0..mb {
+                out.set(i, j, dot_popcount(ci, other.col(j)) as f64);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Extract a contiguous column block as its own BitMatrix (cheap:
+    /// column-major layout makes this a memcpy).
+    pub fn col_block(&self, start: usize, len: usize) -> Result<BitMatrix> {
+        if start + len > self.cols {
+            return Err(Error::Shape(format!(
+                "col_block [{start}, {}) out of {} cols",
+                start + len,
+                self.cols
+            )));
+        }
+        let data =
+            self.data[start * self.words_per_col..(start + len) * self.words_per_col].to_vec();
+        Ok(BitMatrix { rows: self.rows, cols: len, words_per_col: self.words_per_col, data })
+    }
+}
+
+/// popcount dot product of two packed columns.
+#[inline]
+fn dot_popcount(a: &[u64], b: &[u64]) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled: keeps several popcnt chains in flight
+    let mut acc0 = 0u64;
+    let mut acc1 = 0u64;
+    let mut acc2 = 0u64;
+    let mut acc3 = 0u64;
+    let chunks = a.len() / 4;
+    for k in 0..chunks {
+        let i = k * 4;
+        acc0 += (a[i] & b[i]).count_ones() as u64;
+        acc1 += (a[i + 1] & b[i + 1]).count_ones() as u64;
+        acc2 += (a[i + 2] & b[i + 2]).count_ones() as u64;
+        acc3 += (a[i + 3] & b[i + 3]).count_ones() as u64;
+    }
+    for i in chunks * 4..a.len() {
+        acc0 += (a[i] & b[i]).count_ones() as u64;
+    }
+    acc0 + acc1 + acc2 + acc3
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas;
+    use crate::linalg::dense::Mat32;
+    use crate::util::rng::Rng;
+
+    fn random_bytes(rng: &mut Rng, n: usize, m: usize, density: f64) -> Vec<u8> {
+        (0..n * m).map(|_| if rng.bernoulli(density) { 1 } else { 0 }).collect()
+    }
+
+    #[test]
+    fn pack_round_trip() {
+        let mut rng = Rng::new(1);
+        let (n, m) = (131, 9); // non-multiple of 64 rows
+        let bytes = random_bytes(&mut rng, n, m, 0.5);
+        let bm = BitMatrix::from_row_major(n, m, &bytes).unwrap();
+        for r in 0..n {
+            for c in 0..m {
+                assert_eq!(bm.get(r, c), bytes[r * m + c] == 1, "({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_length() {
+        assert!(BitMatrix::from_row_major(4, 4, &[0u8; 15]).is_err());
+    }
+
+    #[test]
+    fn col_counts_match() {
+        let mut rng = Rng::new(2);
+        let (n, m) = (200, 12);
+        let bytes = random_bytes(&mut rng, n, m, 0.3);
+        let bm = BitMatrix::from_row_major(n, m, &bytes).unwrap();
+        let counts = bm.col_counts();
+        for c in 0..m {
+            let want: u64 = (0..n).map(|r| bytes[r * m + c] as u64).sum();
+            assert_eq!(counts[c], want);
+        }
+    }
+
+    #[test]
+    fn gram_matches_dense_gram() {
+        let mut rng = Rng::new(3);
+        for &(n, m, d) in &[(64usize, 8usize, 0.5f64), (129, 17, 0.1), (300, 31, 0.9)] {
+            let bytes = random_bytes(&mut rng, n, m, d);
+            let bm = BitMatrix::from_row_major(n, m, &bytes).unwrap();
+            let dense =
+                Mat32::from_vec(n, m, bytes.iter().map(|&b| b as f32).collect()).unwrap();
+            let want = blas::gram(&dense);
+            assert_eq!(bm.gram().max_abs_diff(&want), 0.0, "n={n} m={m} d={d}");
+        }
+    }
+
+    #[test]
+    fn gram_cross_matches_dense() {
+        let mut rng = Rng::new(4);
+        let n = 150;
+        let ba = random_bytes(&mut rng, n, 6, 0.4);
+        let bb = random_bytes(&mut rng, n, 9, 0.7);
+        let bma = BitMatrix::from_row_major(n, 6, &ba).unwrap();
+        let bmb = BitMatrix::from_row_major(n, 9, &bb).unwrap();
+        let da = Mat32::from_vec(n, 6, ba.iter().map(|&b| b as f32).collect()).unwrap();
+        let db = Mat32::from_vec(n, 9, bb.iter().map(|&b| b as f32).collect()).unwrap();
+        let want = blas::gemm_at_b(&da, &db).unwrap();
+        assert_eq!(bma.gram_cross(&bmb).unwrap().max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn gram_cross_row_mismatch_errors() {
+        let a = BitMatrix::from_row_major(3, 2, &[0u8; 6]).unwrap();
+        let b = BitMatrix::from_row_major(4, 2, &[0u8; 8]).unwrap();
+        assert!(a.gram_cross(&b).is_err());
+    }
+
+    #[test]
+    fn col_block_extracts() {
+        let mut rng = Rng::new(5);
+        let (n, m) = (70, 10);
+        let bytes = random_bytes(&mut rng, n, m, 0.5);
+        let bm = BitMatrix::from_row_major(n, m, &bytes).unwrap();
+        let blk = bm.col_block(3, 4).unwrap();
+        assert_eq!(blk.cols(), 4);
+        for r in 0..n {
+            for c in 0..4 {
+                assert_eq!(blk.get(r, c), bm.get(r, c + 3));
+            }
+        }
+        assert!(bm.col_block(8, 4).is_err());
+    }
+
+    #[test]
+    fn and_count_is_intersection() {
+        let bytes = vec![
+            1, 1, //
+            1, 0, //
+            0, 1, //
+            1, 1, //
+        ];
+        let bm = BitMatrix::from_row_major(4, 2, &bytes).unwrap();
+        assert_eq!(bm.and_count(0, 1), 2);
+        assert_eq!(bm.and_count(0, 0), 3);
+    }
+}

@@ -1,0 +1,222 @@
+//! Cache-blocked dense kernels: the Gram `D^T D` and the general
+//! `A^T B` product used by the basic (Section-2) algorithm.
+//!
+//! Implementation notes (perf pass is logged in EXPERIMENTS.md §Perf):
+//!
+//! * Row-major `D` is consumed as rank-k updates: for each row `k`,
+//!   `C[i][j] += D[k][i] * D[k][j]`. The (i, j) space is tiled so the
+//!   accumulator tile stays in L1/L2 while row slivers stream through.
+//! * Accumulation is f32: for binary data every partial sum is an
+//!   integer ≤ n, exactly representable up to n = 2^24 (16.7M rows) —
+//!   far beyond the paper's largest dataset (100k rows).
+//! * The symmetric case computes only the upper triangle's tiles and
+//!   mirrors, saving ~2x.
+
+use super::dense::{Mat32, Mat64};
+use crate::util::error::{Error, Result};
+
+/// Output rows accumulated per strip pass (strip buffer = STRIP·m f32;
+/// 64 rows x 1000 cols ≈ 256 KiB, L2-resident).
+const STRIP: usize = 64;
+
+/// Symmetric Gram `D^T D` for a BINARY matrix (counts of co-occurring
+/// ones).
+///
+/// Strip-gather structure (perf-pass iteration 3, see EXPERIMENTS.md
+/// §Perf): for each strip of output rows `[ib, ihi)`, stream all data
+/// rows once; for each data row gather the nonzero columns inside the
+/// strip (cheap: one pass over STRIP cells), and for each hit add the
+/// row's upper-triangle slice into the strip accumulator — for binary
+/// data the multiply disappears (`a == 1`). Work is proportional to
+/// `nnz · m/2` instead of `m²·n/2`, so the dense path gets the same
+/// sparsity advantage NumPy's BLAS cannot see.
+pub fn gram(d: &Mat32) -> Mat64 {
+    let (n, m) = (d.rows(), d.cols());
+    debug_assert!(
+        d.data().iter().all(|&v| v == 0.0 || v == 1.0),
+        "blas::gram is specialized for binary matrices"
+    );
+    let mut out = Mat64::zeros(m, m);
+    let mut strip = vec![0.0f32; STRIP * m];
+    let mut nz: Vec<u32> = Vec::with_capacity(STRIP);
+    for ib in (0..m).step_by(STRIP) {
+        let ihi = (ib + STRIP).min(m);
+        strip[..(ihi - ib) * m].iter_mut().for_each(|v| *v = 0.0);
+        for k in 0..n {
+            let row = d.row(k);
+            nz.clear();
+            for (di, &a) in row[ib..ihi].iter().enumerate() {
+                if a != 0.0 {
+                    nz.push(di as u32);
+                }
+            }
+            for &di in &nz {
+                let i = ib + di as usize;
+                // accumulate the triangle slice j in [i, m)
+                let dst = &mut strip[di as usize * m + i..di as usize * m + m];
+                let src = &row[i..m];
+                for (t, &b) in dst.iter_mut().zip(src) {
+                    *t += b; // binary: a == 1
+                }
+            }
+        }
+        for di in 0..(ihi - ib) {
+            let i = ib + di;
+            for j in i..m {
+                let v = strip[di * m + j] as f64;
+                out.set(i, j, v);
+                out.set(j, i, v);
+            }
+        }
+    }
+    out
+}
+
+/// General product `A^T B` for same-row-count BINARY matrices (used by
+/// the Section-2 basic algorithm for the ¬D Gram matrices, and by the
+/// coordinator for cross column-block Grams). Same strip-gather
+/// structure as [`gram`], full rectangle instead of the triangle.
+pub fn gemm_at_b(a: &Mat32, b: &Mat32) -> Result<Mat64> {
+    if a.rows() != b.rows() {
+        return Err(Error::Shape(format!(
+            "gemm_at_b: row mismatch {} vs {}",
+            a.rows(),
+            b.rows()
+        )));
+    }
+    let (n, ma, mb) = (a.rows(), a.cols(), b.cols());
+    let mut out = Mat64::zeros(ma, mb);
+    let mut strip = vec![0.0f32; STRIP * mb];
+    let mut nz: Vec<u32> = Vec::with_capacity(STRIP);
+    for ib in (0..ma).step_by(STRIP) {
+        let ihi = (ib + STRIP).min(ma);
+        strip[..(ihi - ib) * mb].iter_mut().for_each(|v| *v = 0.0);
+        for k in 0..n {
+            let arow = a.row(k);
+            let brow = b.row(k);
+            nz.clear();
+            for (di, &av) in arow[ib..ihi].iter().enumerate() {
+                if av != 0.0 {
+                    nz.push(di as u32);
+                }
+            }
+            for &di in &nz {
+                let dst = &mut strip[di as usize * mb..(di as usize + 1) * mb];
+                for (t, &bv) in dst.iter_mut().zip(brow) {
+                    *t += bv; // binary: a == 1
+                }
+            }
+        }
+        for di in 0..(ihi - ib) {
+            for j in 0..mb {
+                out.set(ib + di, j, strip[di * mb + j] as f64);
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Naive reference Gram — O(m² n) triple loop, used only to validate the
+/// blocked kernels in tests and the gram-strategy ablation bench.
+pub fn gram_naive(d: &Mat32) -> Mat64 {
+    let (n, m) = (d.rows(), d.cols());
+    let mut out = Mat64::zeros(m, m);
+    for i in 0..m {
+        for j in i..m {
+            let mut acc = 0.0f64;
+            for k in 0..n {
+                acc += (d.get(k, i) * d.get(k, j)) as f64;
+            }
+            out.set(i, j, acc);
+            out.set(j, i, acc);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_binary(rng: &mut Rng, n: usize, m: usize, density: f64) -> Mat32 {
+        let data = (0..n * m)
+            .map(|_| if rng.bernoulli(density) { 1.0f32 } else { 0.0 })
+            .collect();
+        Mat32::from_vec(n, m, data).unwrap()
+    }
+
+    #[test]
+    fn gram_matches_naive_small() {
+        let mut rng = Rng::new(1);
+        for &(n, m) in &[(1usize, 1usize), (7, 3), (65, 17), (130, 70), (513, 129)] {
+            let d = random_binary(&mut rng, n, m, 0.3);
+            let fast = gram(&d);
+            let slow = gram_naive(&d);
+            assert_eq!(fast.max_abs_diff(&slow), 0.0, "n={n} m={m}");
+        }
+    }
+
+    #[test]
+    fn gram_is_symmetric_with_count_diag() {
+        let mut rng = Rng::new(2);
+        let d = random_binary(&mut rng, 100, 20, 0.5);
+        let g = gram(&d);
+        let sums = d.col_sums();
+        for i in 0..20 {
+            assert_eq!(g.get(i, i), sums[i]); // diag = column counts
+            for j in 0..20 {
+                assert_eq!(g.get(i, j), g.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_matches_gram_on_self() {
+        let mut rng = Rng::new(3);
+        let d = random_binary(&mut rng, 90, 33, 0.4);
+        let g1 = gram(&d);
+        let g2 = gemm_at_b(&d, &d).unwrap();
+        assert_eq!(g1.max_abs_diff(&g2), 0.0);
+    }
+
+    #[test]
+    fn gemm_cross_rectangular() {
+        let mut rng = Rng::new(4);
+        let a = random_binary(&mut rng, 50, 10, 0.6);
+        let b = random_binary(&mut rng, 50, 7, 0.2);
+        let g = gemm_at_b(&a, &b).unwrap();
+        assert_eq!((g.rows(), g.cols()), (10, 7));
+        // check one cell by hand
+        let mut acc = 0.0;
+        for k in 0..50 {
+            acc += (a.get(k, 3) * b.get(k, 5)) as f64;
+        }
+        assert_eq!(g.get(3, 5), acc);
+    }
+
+    #[test]
+    fn gemm_rejects_row_mismatch() {
+        let a = Mat32::zeros(3, 2);
+        let b = Mat32::zeros(4, 2);
+        assert!(gemm_at_b(&a, &b).is_err());
+    }
+
+    #[test]
+    fn section2_identity_g00() {
+        // G00 = N - C - C^T + G11 must equal ¬D^T ¬D computed directly.
+        let mut rng = Rng::new(5);
+        let d = random_binary(&mut rng, 64, 12, 0.35);
+        let n = d.rows() as f64;
+        let g11 = gram(&d);
+        let nd = d.complement();
+        let g00_direct = gram(&nd);
+        let c = d.col_sums();
+        for i in 0..12 {
+            for j in 0..12 {
+                let derived = n - c[j] - c[i] + g11.get(i, j);
+                assert_eq!(g00_direct.get(i, j), derived, "({i},{j})");
+            }
+        }
+    }
+}

@@ -1,0 +1,254 @@
+//! Compressed-sparse-row binary matrix (values are implicitly 1).
+//!
+//! The SciPy-sparse analog of the paper's Opt-SS row. The Gram is
+//! computed by *row-pair expansion*: for every row, every ordered pair
+//! of its nonzero columns increments one Gram cell, so total work is
+//! `Σ_r nnz(r)²` — quadratic in density, which is exactly the cost
+//! profile that makes the sparse implementation lose at 90% sparsity
+//! and win at ≥99% (paper Fig. 3).
+
+use super::dense::Mat64;
+use crate::util::error::{Error, Result};
+
+/// CSR binary matrix.
+#[derive(Clone, Debug)]
+pub struct CsrMatrix {
+    rows: usize,
+    cols: usize,
+    /// `indptr[r]..indptr[r+1]` indexes `indices` for row r.
+    indptr: Vec<usize>,
+    /// Column indices of nonzeros, sorted within each row.
+    indices: Vec<u32>,
+}
+
+impl CsrMatrix {
+    /// Build from row-major binary bytes.
+    pub fn from_row_major(rows: usize, cols: usize, bytes: &[u8]) -> Result<Self> {
+        if bytes.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "buffer length {} != {rows}x{cols}",
+                bytes.len()
+            )));
+        }
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::new();
+        indptr.push(0);
+        for r in 0..rows {
+            let row = &bytes[r * cols..(r + 1) * cols];
+            for (c, &v) in row.iter().enumerate() {
+                if v != 0 {
+                    indices.push(c as u32);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Ok(CsrMatrix { rows, cols, indptr, indices })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Total number of stored ones.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Fraction of zero cells.
+    pub fn sparsity(&self) -> f64 {
+        if self.rows * self.cols == 0 {
+            return 0.0;
+        }
+        1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Nonzero column indices of one row.
+    #[inline]
+    pub fn row_indices(&self, r: usize) -> &[u32] {
+        &self.indices[self.indptr[r]..self.indptr[r + 1]]
+    }
+
+    /// Count of ones per column.
+    pub fn col_counts(&self) -> Vec<u64> {
+        let mut counts = vec![0u64; self.cols];
+        for &c in &self.indices {
+            counts[c as usize] += 1;
+        }
+        counts
+    }
+
+    /// Symmetric Gram `D^T D` via row-pair expansion (upper triangle,
+    /// mirrored). Output is dense m x m — the Gram of sparse data is
+    /// generally dense, as the paper notes for ¬D.
+    pub fn gram(&self) -> Mat64 {
+        let m = self.cols;
+        let mut acc = vec![0u32; m * m];
+        for r in 0..self.rows {
+            let nz = self.row_indices(r);
+            for (a, &i) in nz.iter().enumerate() {
+                let base = i as usize * m;
+                for &j in &nz[a..] {
+                    acc[base + j as usize] += 1;
+                }
+            }
+        }
+        let mut out = Mat64::zeros(m, m);
+        for i in 0..m {
+            for j in i..m {
+                let v = acc[i * m + j] as f64;
+                out.set(i, j, v);
+                out.set(j, i, v);
+            }
+        }
+        out
+    }
+
+    /// Cross Gram `A^T B` for two CSR matrices over the same rows.
+    pub fn gram_cross(&self, other: &CsrMatrix) -> Result<Mat64> {
+        if self.rows != other.rows {
+            return Err(Error::Shape(format!(
+                "gram_cross: row mismatch {} vs {}",
+                self.rows, other.rows
+            )));
+        }
+        let (ma, mb) = (self.cols, other.cols);
+        let mut acc = vec![0u32; ma * mb];
+        for r in 0..self.rows {
+            let nza = self.row_indices(r);
+            let nzb = other.row_indices(r);
+            for &i in nza {
+                let base = i as usize * mb;
+                for &j in nzb {
+                    acc[base + j as usize] += 1;
+                }
+            }
+        }
+        let mut out = Mat64::zeros(ma, mb);
+        for i in 0..ma {
+            for j in 0..mb {
+                out.set(i, j, acc[i * mb + j] as f64);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Extract a contiguous column block as its own CsrMatrix.
+    pub fn col_block(&self, start: usize, len: usize) -> Result<CsrMatrix> {
+        if start + len > self.cols {
+            return Err(Error::Shape(format!(
+                "col_block [{start}, {}) out of {} cols",
+                start + len,
+                self.cols
+            )));
+        }
+        let (lo, hi) = (start as u32, (start + len) as u32);
+        let mut indptr = Vec::with_capacity(self.rows + 1);
+        let mut indices = Vec::new();
+        indptr.push(0);
+        for r in 0..self.rows {
+            for &c in self.row_indices(r) {
+                if c >= lo && c < hi {
+                    indices.push(c - lo);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Ok(CsrMatrix { rows: self.rows, cols: len, indptr, indices })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::blas;
+    use crate::linalg::dense::Mat32;
+    use crate::util::rng::Rng;
+
+    fn random_bytes(rng: &mut Rng, n: usize, m: usize, density: f64) -> Vec<u8> {
+        (0..n * m).map(|_| if rng.bernoulli(density) { 1 } else { 0 }).collect()
+    }
+
+    #[test]
+    fn construction_and_nnz() {
+        let bytes = vec![1, 0, 0, 1, 1, 0];
+        let c = CsrMatrix::from_row_major(2, 3, &bytes).unwrap();
+        assert_eq!(c.nnz(), 3);
+        assert_eq!(c.row_indices(0), &[0]);
+        assert_eq!(c.row_indices(1), &[0, 1]);
+        assert!((c.sparsity() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_length() {
+        assert!(CsrMatrix::from_row_major(2, 3, &[0u8; 5]).is_err());
+    }
+
+    #[test]
+    fn col_counts_match() {
+        let mut rng = Rng::new(1);
+        let (n, m) = (80, 11);
+        let bytes = random_bytes(&mut rng, n, m, 0.2);
+        let c = CsrMatrix::from_row_major(n, m, &bytes).unwrap();
+        let counts = c.col_counts();
+        for j in 0..m {
+            let want: u64 = (0..n).map(|r| bytes[r * m + j] as u64).sum();
+            assert_eq!(counts[j], want);
+        }
+    }
+
+    #[test]
+    fn gram_matches_dense() {
+        let mut rng = Rng::new(2);
+        for &(n, m, d) in &[(60usize, 9usize, 0.1f64), (128, 16, 0.5), (40, 5, 0.95)] {
+            let bytes = random_bytes(&mut rng, n, m, d);
+            let sparse = CsrMatrix::from_row_major(n, m, &bytes).unwrap();
+            let dense =
+                Mat32::from_vec(n, m, bytes.iter().map(|&b| b as f32).collect()).unwrap();
+            let want = blas::gram(&dense);
+            assert_eq!(sparse.gram().max_abs_diff(&want), 0.0, "n={n} m={m} d={d}");
+        }
+    }
+
+    #[test]
+    fn gram_cross_matches_dense() {
+        let mut rng = Rng::new(3);
+        let n = 100;
+        let ba = random_bytes(&mut rng, n, 7, 0.15);
+        let bb = random_bytes(&mut rng, n, 5, 0.3);
+        let ca = CsrMatrix::from_row_major(n, 7, &ba).unwrap();
+        let cb = CsrMatrix::from_row_major(n, 5, &bb).unwrap();
+        let da = Mat32::from_vec(n, 7, ba.iter().map(|&b| b as f32).collect()).unwrap();
+        let db = Mat32::from_vec(n, 5, bb.iter().map(|&b| b as f32).collect()).unwrap();
+        let want = blas::gemm_at_b(&da, &db).unwrap();
+        assert_eq!(ca.gram_cross(&cb).unwrap().max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn col_block_extracts() {
+        let mut rng = Rng::new(4);
+        let (n, m) = (50, 12);
+        let bytes = random_bytes(&mut rng, n, m, 0.25);
+        let c = CsrMatrix::from_row_major(n, m, &bytes).unwrap();
+        let blk = c.col_block(4, 5).unwrap();
+        assert_eq!(blk.cols(), 5);
+        let full = c.gram();
+        let sub = blk.gram();
+        for i in 0..5 {
+            for j in 0..5 {
+                assert_eq!(sub.get(i, j), full.get(i + 4, j + 4));
+            }
+        }
+    }
+
+    #[test]
+    fn empty_matrix_gram_is_zero() {
+        let c = CsrMatrix::from_row_major(5, 3, &[0u8; 15]).unwrap();
+        assert_eq!(c.nnz(), 0);
+        let g = c.gram();
+        assert!(g.data().iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,259 @@
+//! Dense row-major matrices (f32 for data, f64 for results).
+//!
+//! `Mat32` holds binary data as f32 — matching what the NumPy/PyTorch/XLA
+//! paths operate on — while MI outputs accumulate in f64 (`Mat64`) since
+//! the Rust-native backends derive them from exact integer counts.
+
+use crate::util::error::{Error, Result};
+
+/// Row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat32 {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Mat32 {
+    /// All-zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat32 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "buffer length {} != {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Ok(Mat32 { rows, cols, data })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Contiguous row slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Out-of-place transpose.
+    pub fn transpose(&self) -> Mat32 {
+        let mut out = Mat32::zeros(self.cols, self.rows);
+        // simple cache-blocked transpose
+        const B: usize = 64;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        out.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Column sums (counts of ones for binary data).
+    pub fn col_sums(&self) -> Vec<f64> {
+        let mut sums = vec![0.0f64; self.cols];
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for (s, &v) in sums.iter_mut().zip(row) {
+                *s += v as f64;
+            }
+        }
+        sums
+    }
+
+    /// Element-wise `1 - x` (the paper's complementary matrix ¬D).
+    pub fn complement(&self) -> Mat32 {
+        let data = self.data.iter().map(|&v| 1.0 - v).collect();
+        Mat32 { rows: self.rows, cols: self.cols, data }
+    }
+}
+
+/// Row-major f64 matrix (results: Gram counts, MI values).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat64 {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat64 {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat64 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "buffer length {} != {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Ok(Mat64 { rows, cols, data })
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline]
+    pub fn add_assign_at(&mut self, r: usize, c: usize, v: f64) {
+        self.data[r * self.cols + c] += v;
+    }
+
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    pub fn transpose(&self) -> Mat64 {
+        let mut out = Mat64::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Diagonal as a vector (marginal counts in the paper's step 3).
+    pub fn diag(&self) -> Vec<f64> {
+        (0..self.rows.min(self.cols)).map(|i| self.get(i, i)).collect()
+    }
+
+    /// max |a - b| across all cells; matrices must be same shape.
+    pub fn max_abs_diff(&self, other: &Mat64) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let mut m = Mat32::zeros(2, 3);
+        m.set(1, 2, 5.0);
+        assert_eq!(m.get(1, 2), 5.0);
+        assert_eq!(m.get(0, 0), 0.0);
+        assert_eq!(m.rows(), 2);
+        assert_eq!(m.cols(), 3);
+    }
+
+    #[test]
+    fn from_vec_validates_length() {
+        assert!(Mat32::from_vec(2, 2, vec![1.0; 3]).is_err());
+        assert!(Mat32::from_vec(2, 2, vec![1.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let m = Mat32::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let t = m.transpose();
+        assert_eq!(t.rows(), 3);
+        assert_eq!(t.get(2, 1), 6.0);
+        assert_eq!(t.transpose(), m);
+    }
+
+    #[test]
+    fn transpose_large_blocked() {
+        // exercise the blocked path with a non-multiple-of-64 shape
+        let mut m = Mat32::zeros(100, 70);
+        for r in 0..100 {
+            for c in 0..70 {
+                m.set(r, c, (r * 70 + c) as f32);
+            }
+        }
+        let t = m.transpose();
+        for r in 0..100 {
+            for c in 0..70 {
+                assert_eq!(t.get(c, r), m.get(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn col_sums_counts_ones() {
+        let m = Mat32::from_vec(3, 2, vec![1., 0., 1., 1., 0., 1.]).unwrap();
+        assert_eq!(m.col_sums(), vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn complement_flips() {
+        let m = Mat32::from_vec(1, 3, vec![1., 0., 1.]).unwrap();
+        assert_eq!(m.complement().data(), &[0., 1., 0.]);
+    }
+
+    #[test]
+    fn mat64_diag_and_diff() {
+        let a = Mat64::from_vec(2, 2, vec![1., 2., 3., 4.]).unwrap();
+        assert_eq!(a.diag(), vec![1., 4.]);
+        let b = Mat64::from_vec(2, 2, vec![1., 2., 3., 5.]).unwrap();
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+    }
+}

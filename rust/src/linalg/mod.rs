@@ -1,0 +1,17 @@
+//! Linear-algebra substrates for the one operation that dominates the
+//! paper's algorithm: the Gram matrix `G11 = D^T D` of a binary matrix.
+//!
+//! Four strategies, mirroring the paper's implementation comparison:
+//!
+//! * [`dense`] + [`blas`] — dense f32 row-major matrix with a
+//!   cache-blocked `syrk`-style Gram (the NumPy/Numba analog).
+//! * [`bitmat`] — bit-packed columns, Gram via `AND` + `popcount`
+//!   (64 elements per word; the "hardware-optimized framework" analog).
+//! * [`csr`] — compressed sparse rows, Gram via row-pair expansion
+//!   (the SciPy-sparse analog; cost ∝ Σ nnz(row)²).
+//! * the XLA/PJRT path lives in [`crate::runtime`] and [`crate::mi::xla`].
+
+pub mod bitmat;
+pub mod blas;
+pub mod csr;
+pub mod dense;

@@ -1,0 +1,7 @@
+//! `bulkmi` binary: the Layer-3 coordinator CLI.
+//! See `bulkmi help` or `rust/src/cli/mod.rs` for usage.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(bulkmi::cli::run(&argv));
+}

@@ -1,0 +1,191 @@
+//! Lightweight metrics: counters and wall-time histograms with a text
+//! report, used by the coordinator service and the bench harness.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// A monotonically increasing counter.
+#[derive(Default, Debug)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-boundary latency histogram (seconds) with sum/count, so mean
+/// and tail buckets are reportable without storing samples.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// sum in nanoseconds for lock-free accumulation
+    sum_nanos: AtomicU64,
+    max_nanos: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        // 100µs .. 100s, decade-ish boundaries
+        Self::new(&[1e-4, 1e-3, 1e-2, 0.1, 0.5, 1.0, 5.0, 30.0, 100.0])
+    }
+}
+
+impl Histogram {
+    pub fn new(bounds: &[f64]) -> Self {
+        Histogram {
+            bounds: bounds.to_vec(),
+            buckets: (0..=bounds.len()).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_nanos: AtomicU64::new(0),
+            max_nanos: AtomicU64::new(0),
+        }
+    }
+
+    pub fn observe(&self, secs: f64) {
+        let idx = self.bounds.iter().position(|&b| secs <= b).unwrap_or(self.bounds.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let nanos = (secs * 1e9) as u64;
+        self.sum_nanos.fetch_add(nanos, Ordering::Relaxed);
+        self.max_nanos.fetch_max(nanos, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            return 0.0;
+        }
+        self.sum_nanos.load(Ordering::Relaxed) as f64 / 1e9 / c as f64
+    }
+
+    pub fn max_secs(&self) -> f64 {
+        self.max_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn total_secs(&self) -> f64 {
+        self.sum_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+}
+
+/// A named registry of counters and histograms.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        let mut guard = self.counters.lock().unwrap();
+        guard.entry(name.to_string()).or_default().clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        let mut guard = self.histograms.lock().unwrap();
+        guard.entry(name.to_string()).or_default().clone()
+    }
+
+    /// Time a closure into the named histogram.
+    pub fn time<T>(&self, name: &str, f: impl FnOnce() -> T) -> T {
+        let h = self.histogram(name);
+        let t0 = Instant::now();
+        let out = f();
+        h.observe(t0.elapsed().as_secs_f64());
+        out
+    }
+
+    /// Text report, sorted by name.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("counter {name} = {}\n", c.get()));
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "timer   {name}: count={} mean={} max={} total={}\n",
+                h.count(),
+                crate::util::timer::fmt_secs(h.mean_secs()),
+                crate::util::timer::fmt_secs(h.max_secs()),
+                crate::util::timer::fmt_secs(h.total_secs()),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let h = Histogram::default();
+        h.observe(0.2);
+        h.observe(0.4);
+        assert_eq!(h.count(), 2);
+        assert!((h.mean_secs() - 0.3).abs() < 1e-6);
+        assert!((h.max_secs() - 0.4).abs() < 1e-6);
+        assert!((h.total_secs() - 0.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn registry_reuses_instruments() {
+        let m = Metrics::new();
+        m.counter("jobs").inc();
+        m.counter("jobs").inc();
+        assert_eq!(m.counter("jobs").get(), 2);
+        let out = m.time("work", || 7);
+        assert_eq!(out, 7);
+        assert_eq!(m.histogram("work").count(), 1);
+        let report = m.report();
+        assert!(report.contains("counter jobs = 2"));
+        assert!(report.contains("timer   work"));
+    }
+
+    #[test]
+    fn concurrent_counting() {
+        let m = std::sync::Arc::new(Metrics::new());
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let m = std::sync::Arc::clone(&m);
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        m.counter("n").inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(m.counter("n").get(), 4000);
+    }
+}

@@ -1,0 +1,151 @@
+//! Backend selection and dispatch: one enum covering every
+//! implementation the paper compares (Table 1's five columns, plus the
+//! bit-packed extra), a parser for CLI/config use, and a uniform
+//! `compute_mi` entry point.
+
+use super::bulk_basic::mi_bulk_basic;
+use super::bulk_bitpack::mi_bulk_bitpack_threads;
+use super::bulk_opt::mi_bulk_opt;
+use super::bulk_sparse::mi_bulk_sparse;
+use super::pairwise::mi_pairwise;
+use super::xla::XlaMi;
+use super::MiMatrix;
+use crate::data::dataset::BinaryDataset;
+use crate::util::error::{Error, Result};
+
+/// Every MI implementation the crate ships.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// Sequential per-pair baseline (paper: "SKL Pairwise").
+    Pairwise,
+    /// Section-2 basic bulk, four dense Grams (paper: "Bas-NN").
+    BulkBasic,
+    /// Section-3 optimized bulk, one dense Gram (paper: "Opt-NN").
+    BulkOpt,
+    /// Section-3 on CSR sparse (paper: "Opt-SS").
+    BulkSparse,
+    /// Section-3 on bit-packed popcount (hardware-optimized native).
+    BulkBitpack,
+    /// Section-3 through AOT XLA artifacts (paper: "Opt-T").
+    Xla,
+    /// Same, routed through the interpret-mode Pallas kernels.
+    XlaPallas,
+}
+
+impl Backend {
+    /// All backends, in the paper's Table-1 column order (+ extras).
+    pub const ALL: [Backend; 7] = [
+        Backend::Pairwise,
+        Backend::BulkBasic,
+        Backend::BulkOpt,
+        Backend::BulkSparse,
+        Backend::BulkBitpack,
+        Backend::Xla,
+        Backend::XlaPallas,
+    ];
+
+    /// Stable identifier used by the CLI, config and bench output.
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Pairwise => "pairwise",
+            Backend::BulkBasic => "bulk-basic",
+            Backend::BulkOpt => "bulk-opt",
+            Backend::BulkSparse => "bulk-sparse",
+            Backend::BulkBitpack => "bulk-bitpack",
+            Backend::Xla => "xla",
+            Backend::XlaPallas => "xla-pallas",
+        }
+    }
+
+    /// The paper's label for this implementation (where one exists).
+    pub fn paper_label(self) -> &'static str {
+        match self {
+            Backend::Pairwise => "SKL Pairwise",
+            Backend::BulkBasic => "Bas-NN",
+            Backend::BulkOpt => "Opt-NN",
+            Backend::BulkSparse => "Opt-SS",
+            Backend::BulkBitpack => "Opt-bitpack (ours)",
+            Backend::Xla => "Opt-T",
+            Backend::XlaPallas => "Opt-T (pallas)",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Backend> {
+        Backend::ALL.iter().copied().find(|b| b.name() == s)
+    }
+
+    /// Backends that need no XLA artifacts (always available).
+    pub fn is_native(self) -> bool {
+        !matches!(self, Backend::Xla | Backend::XlaPallas)
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Compute the full MI matrix with the chosen backend.
+///
+/// XLA backends construct a fresh runtime per call; callers doing many
+/// computations should hold an [`XlaMi`] instead (executable caching).
+pub fn compute_mi(ds: &BinaryDataset, backend: Backend) -> Result<MiMatrix> {
+    compute_mi_with(ds, backend, 1)
+}
+
+/// Like [`compute_mi`] with an explicit worker count for backends that
+/// parallelize.
+pub fn compute_mi_with(ds: &BinaryDataset, backend: Backend, workers: usize) -> Result<MiMatrix> {
+    if ds.n_rows() == 0 || ds.n_cols() == 0 {
+        return Err(Error::Shape("empty dataset".into()));
+    }
+    match backend {
+        Backend::Pairwise => Ok(mi_pairwise(ds)),
+        Backend::BulkBasic => Ok(mi_bulk_basic(ds)),
+        Backend::BulkOpt => Ok(mi_bulk_opt(ds)),
+        Backend::BulkSparse => Ok(mi_bulk_sparse(ds)),
+        Backend::BulkBitpack => Ok(mi_bulk_bitpack_threads(ds, workers)),
+        Backend::Xla => XlaMi::load_default()?.compute(ds),
+        Backend::XlaPallas => XlaMi::load_default_pallas()?.compute(ds),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    #[test]
+    fn names_round_trip() {
+        for b in Backend::ALL {
+            assert_eq!(Backend::parse(b.name()), Some(b));
+        }
+        assert_eq!(Backend::parse("nope"), None);
+    }
+
+    #[test]
+    fn native_backends_agree() {
+        let ds = SynthSpec::new(120, 14).sparsity(0.8).seed(1).generate();
+        let reference = compute_mi(&ds, Backend::Pairwise).unwrap();
+        for b in Backend::ALL.iter().copied().filter(|b| b.is_native()) {
+            let got = compute_mi(&ds, b).unwrap();
+            assert!(
+                got.max_abs_diff(&reference) < 1e-10,
+                "{b}: diff {}",
+                got.max_abs_diff(&reference)
+            );
+        }
+    }
+
+    #[test]
+    fn empty_dataset_rejected() {
+        let ds = BinaryDataset::new(0, 0, vec![]).unwrap();
+        assert!(compute_mi(&ds, Backend::BulkOpt).is_err());
+    }
+
+    #[test]
+    fn display_matches_name() {
+        assert_eq!(Backend::BulkOpt.to_string(), "bulk-opt");
+    }
+}

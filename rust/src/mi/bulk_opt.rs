@@ -1,0 +1,121 @@
+//! Section-3 optimized bulk algorithm (the paper's "Opt-NN" row):
+//! ONE dense Gram matmul (`G11 = D^T D`), then every other Gram matrix
+//! derived from the identities
+//!
+//! ```text
+//! G00 = N - C - C^T + G11      G01 = C - G11      G10 = G01^T
+//! ```
+//!
+//! so the element-wise combine needs only `(G11, colsums, n)`. The
+//! combine here is the shared implementation reused by the sparse,
+//! bit-packed and coordinator paths.
+
+use super::counts::mi_from_counts_f64;
+use super::MiMatrix;
+use crate::data::dataset::BinaryDataset;
+use crate::linalg::blas;
+use crate::linalg::dense::Mat64;
+
+/// Element-wise eq. (3) from `(G11, colsums_a, colsums_b, n)`.
+///
+/// Works for rectangular cross-blocks: `g11[i][j]` counts co-occurring
+/// ones between variable `i` of block a and variable `j` of block b.
+pub fn combine(g11: &Mat64, ca: &[f64], cb: &[f64], n: f64) -> Mat64 {
+    let (ma, mb) = (g11.rows(), g11.cols());
+    assert_eq!(ca.len(), ma, "colsums_a length");
+    assert_eq!(cb.len(), mb, "colsums_b length");
+    let mut out = Mat64::zeros(ma, mb);
+    for i in 0..ma {
+        let ci = ca[i];
+        let grow = g11.row(i);
+        let orow = &mut out.data_mut()[i * mb..(i + 1) * mb];
+        for j in 0..mb {
+            let n11 = grow[j];
+            let n10 = ci - n11;
+            let n01 = cb[j] - n11;
+            let n00 = n - ci - cb[j] + n11;
+            orow[j] = mi_from_counts_f64(n11, n10, n01, n00, n);
+        }
+    }
+    out
+}
+
+/// Full optimized bulk MI for a dataset (dense f32 Gram substrate).
+pub fn mi_bulk_opt(ds: &BinaryDataset) -> MiMatrix {
+    let d = ds.to_mat32();
+    let g11 = blas::gram(&d);
+    let c = d.col_sums();
+    let n = ds.n_rows() as f64;
+    MiMatrix::from_mat(combine(&g11, &c, &c, n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::mi::pairwise::mi_pairwise;
+
+    #[test]
+    fn matches_pairwise_exactly() {
+        for &(n, m, s) in &[(200usize, 10usize, 0.9f64), (97, 17, 0.5), (64, 33, 0.1)] {
+            let ds = SynthSpec::new(n, m).sparsity(s).seed(n as u64).generate();
+            let bulk = mi_bulk_opt(&ds);
+            let pair = mi_pairwise(&ds);
+            assert!(
+                bulk.max_abs_diff(&pair) < 1e-12,
+                "n={n} m={m} s={s}: diff {}",
+                bulk.max_abs_diff(&pair)
+            );
+        }
+    }
+
+    #[test]
+    fn symmetric_nonnegative() {
+        let ds = SynthSpec::new(300, 20).sparsity(0.8).seed(9).generate();
+        let mi = mi_bulk_opt(&ds);
+        assert!(mi.max_asymmetry() < 1e-12);
+        assert!(mi.min_value() > -1e-12);
+    }
+
+    #[test]
+    fn constant_columns_are_zero() {
+        // all-zero and all-one columns: MI must be exactly 0 everywhere
+        let mut data = vec![0u8; 50 * 3];
+        for r in 0..50 {
+            data[r * 3 + 1] = 1; // constant one column
+            data[r * 3 + 2] = (r % 2) as u8;
+        }
+        let ds = crate::data::dataset::BinaryDataset::new(50, 3, data).unwrap();
+        let mi = mi_bulk_opt(&ds);
+        assert_eq!(mi.get(0, 1), 0.0);
+        assert_eq!(mi.get(0, 2), 0.0);
+        assert_eq!(mi.get(1, 2), 0.0);
+    }
+
+    #[test]
+    fn cross_block_combine_matches_full() {
+        let ds = SynthSpec::new(150, 12).sparsity(0.6).seed(4).generate();
+        let full = mi_bulk_opt(&ds);
+        let a = ds.col_block(0, 5).unwrap().to_mat32();
+        let b = ds.col_block(5, 7).unwrap().to_mat32();
+        let g = crate::linalg::blas::gemm_at_b(&a, &b).unwrap();
+        let cross = combine(&g, &a.col_sums(), &b.col_sums(), 150.0);
+        for i in 0..5 {
+            for j in 0..7 {
+                assert!((cross.get(i, j) - full.get(i, 5 + j)).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn single_row_dataset() {
+        let ds = crate::data::dataset::BinaryDataset::new(1, 4, vec![1, 0, 1, 0]).unwrap();
+        let mi = mi_bulk_opt(&ds);
+        // single observation: every variable is constant -> all MI zero
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(mi.get(i, j), 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,65 @@
+//! Section-3 algorithm on the CSR substrate (the paper's "Opt-SS" row).
+//!
+//! Only `G11` is ever computed sparsely — the paper's key observation is
+//! that ¬D of a sparse matrix is dense, so the optimized derivation is
+//! what makes a sparse implementation possible at all. Cost of the Gram
+//! is Σ_r nnz(r)², which loses to dense at ~90% sparsity and wins
+//! decisively at ≥99% (reproduced by `benches/fig3_sparsity.rs`).
+
+use super::bulk_opt::combine;
+use super::MiMatrix;
+use crate::data::dataset::BinaryDataset;
+
+/// Full optimized bulk MI with a sparse (CSR row-pair expansion) Gram.
+pub fn mi_bulk_sparse(ds: &BinaryDataset) -> MiMatrix {
+    let csr = ds.to_csr();
+    let g11 = csr.gram();
+    let c: Vec<f64> = csr.col_counts().iter().map(|&v| v as f64).collect();
+    let n = ds.n_rows() as f64;
+    MiMatrix::from_mat(combine(&g11, &c, &c, n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::mi::pairwise::mi_pairwise;
+
+    #[test]
+    fn matches_pairwise_across_sparsities() {
+        for &s in &[0.5, 0.9, 0.99] {
+            let ds = SynthSpec::new(400, 15).sparsity(s).seed((s * 100.0) as u64).generate();
+            let sparse = mi_bulk_sparse(&ds);
+            let pair = mi_pairwise(&ds);
+            assert!(
+                sparse.max_abs_diff(&pair) < 1e-12,
+                "s={s}: diff {}",
+                sparse.max_abs_diff(&pair)
+            );
+        }
+    }
+
+    #[test]
+    fn all_zero_dataset() {
+        let ds = crate::data::dataset::BinaryDataset::new(20, 4, vec![0; 80]).unwrap();
+        let mi = mi_bulk_sparse(&ds);
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(mi.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn extremely_sparse_single_ones() {
+        // one 1 per column, all in different rows
+        let mut data = vec![0u8; 100 * 5];
+        for c in 0..5 {
+            data[(c * 13) * 5 + c] = 1;
+        }
+        let ds = crate::data::dataset::BinaryDataset::new(100, 5, data).unwrap();
+        let sparse = mi_bulk_sparse(&ds);
+        let pair = mi_pairwise(&ds);
+        assert!(sparse.max_abs_diff(&pair) < 1e-12);
+    }
+}

@@ -1,0 +1,299 @@
+//! Non-binary (categorical) extension — the paper's stated future work
+//! ("extensions to non-binary datasets").
+//!
+//! The bulk trick generalizes cleanly: one-hot encode each categorical
+//! variable into its indicator columns; then the joint count
+//! `#(X = a, Y = b)` for any category pair *is* a cell of the binary
+//! Gram matrix `G11` between indicator columns. One Gram computation
+//! (on any substrate — we use the bit-packed one) yields every joint
+//! contingency table of every variable pair at once, and MI assembles
+//! per pair from its block of `G11`:
+//!
+//! ```text
+//! MI(X, Y) = Σ_{a ∈ X} Σ_{b ∈ Y} p_ab log2( p_ab / (p_a p_b) )
+//! ```
+
+use super::MiMatrix;
+use crate::linalg::dense::Mat64;
+use crate::util::error::{Error, Result};
+
+/// A dataset of categorical variables (each cell a small category id).
+#[derive(Clone, Debug)]
+pub struct CategoricalDataset {
+    n_rows: usize,
+    n_vars: usize,
+    /// Row-major category ids; `data[r * n_vars + v] < cardinality[v]`.
+    data: Vec<u16>,
+    cardinality: Vec<u16>,
+}
+
+impl CategoricalDataset {
+    /// Build from row-major category ids; cardinalities are inferred
+    /// (max id + 1 per variable).
+    pub fn new(n_rows: usize, n_vars: usize, data: Vec<u16>) -> Result<Self> {
+        if data.len() != n_rows * n_vars {
+            return Err(Error::Shape(format!(
+                "buffer length {} != {n_rows}x{n_vars}",
+                data.len()
+            )));
+        }
+        let mut cardinality = vec![0u16; n_vars];
+        for r in 0..n_rows {
+            for v in 0..n_vars {
+                let c = data[r * n_vars + v];
+                if c == u16::MAX {
+                    return Err(Error::Parse("category id 65535 is reserved".into()));
+                }
+                cardinality[v] = cardinality[v].max(c + 1);
+            }
+        }
+        Ok(CategoricalDataset { n_rows, n_vars, data, cardinality })
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_vars(&self) -> usize {
+        self.n_vars
+    }
+
+    pub fn cardinality(&self) -> &[u16] {
+        &self.cardinality
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, v: usize) -> u16 {
+        self.data[r * self.n_vars + v]
+    }
+
+    /// Total one-hot indicator columns.
+    pub fn onehot_cols(&self) -> usize {
+        self.cardinality.iter().map(|&c| c as usize).sum()
+    }
+
+    /// One-hot expansion to a binary dataset; returns the binary matrix
+    /// and the starting indicator column of each variable.
+    pub fn one_hot(&self) -> (crate::data::dataset::BinaryDataset, Vec<usize>) {
+        let total = self.onehot_cols();
+        let mut offsets = Vec::with_capacity(self.n_vars);
+        let mut acc = 0usize;
+        for &c in &self.cardinality {
+            offsets.push(acc);
+            acc += c as usize;
+        }
+        let mut bytes = vec![0u8; self.n_rows * total];
+        for r in 0..self.n_rows {
+            let base = r * total;
+            for v in 0..self.n_vars {
+                bytes[base + offsets[v] + self.get(r, v) as usize] = 1;
+            }
+        }
+        (
+            crate::data::dataset::BinaryDataset::new(self.n_rows, total, bytes)
+                .expect("one-hot expansion is consistent"),
+            offsets,
+        )
+    }
+}
+
+/// Bulk MI (bits) between all pairs of categorical variables: ONE binary
+/// Gram over the one-hot expansion, then per-pair assembly from blocks.
+pub fn mi_categorical(ds: &CategoricalDataset) -> Result<MiMatrix> {
+    if ds.n_rows() == 0 || ds.n_vars() == 0 {
+        return Err(Error::Shape("empty dataset".into()));
+    }
+    let (binary, offsets) = ds.one_hot();
+    let bits = binary.to_bitmatrix();
+    let g11 = bits.gram(); // every pairwise category contingency at once
+    let counts = bits.col_counts();
+    let n = ds.n_rows() as f64;
+    let v = ds.n_vars();
+    let mut out = Mat64::zeros(v, v);
+    for x in 0..v {
+        let (ox, cx) = (offsets[x], ds.cardinality[x] as usize);
+        for y in x..v {
+            let (oy, cy) = (offsets[y], ds.cardinality[y] as usize);
+            let mut mi = 0.0;
+            for a in 0..cx {
+                let pa = counts[ox + a] as f64 / n;
+                if pa == 0.0 {
+                    continue;
+                }
+                for b in 0..cy {
+                    let pb = counts[oy + b] as f64 / n;
+                    let pab = g11.get(ox + a, oy + b) / n;
+                    if pab > 0.0 && pb > 0.0 {
+                        mi += pab * (pab / (pa * pb)).log2();
+                    }
+                }
+            }
+            // diagonal: MI(X, X) = H(X); the double loop already gives
+            // exactly that (pab = pa when a == b, 0 otherwise)
+            out.set(x, y, mi);
+            out.set(y, x, mi);
+        }
+    }
+    Ok(MiMatrix::from_mat(out))
+}
+
+/// Categorical entropy H(X_v) in bits per variable.
+pub fn categorical_entropies(ds: &CategoricalDataset) -> Vec<f64> {
+    let n = ds.n_rows() as f64;
+    (0..ds.n_vars())
+        .map(|v| {
+            let card = ds.cardinality[v] as usize;
+            let mut counts = vec![0u64; card];
+            for r in 0..ds.n_rows() {
+                counts[ds.get(r, v) as usize] += 1;
+            }
+            counts
+                .iter()
+                .filter(|&&c| c > 0)
+                .map(|&c| {
+                    let p = c as f64 / n;
+                    -p * p.log2()
+                })
+                .sum()
+        })
+        .collect()
+}
+
+/// Reference per-pair categorical MI via an explicit contingency table
+/// (oracle for tests).
+pub fn mi_pair_categorical(ds: &CategoricalDataset, x: usize, y: usize) -> f64 {
+    let (cx, cy) = (ds.cardinality[x] as usize, ds.cardinality[y] as usize);
+    let mut joint = vec![0u64; cx * cy];
+    for r in 0..ds.n_rows() {
+        joint[ds.get(r, x) as usize * cy + ds.get(r, y) as usize] += 1;
+    }
+    let n = ds.n_rows() as f64;
+    let mut px = vec![0.0; cx];
+    let mut py = vec![0.0; cy];
+    for a in 0..cx {
+        for b in 0..cy {
+            px[a] += joint[a * cy + b] as f64 / n;
+            py[b] += joint[a * cy + b] as f64 / n;
+        }
+    }
+    let mut mi = 0.0;
+    for a in 0..cx {
+        for b in 0..cy {
+            let pab = joint[a * cy + b] as f64 / n;
+            if pab > 0.0 {
+                mi += pab * (pab / (px[a] * py[b])).log2();
+            }
+        }
+    }
+    mi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mi::counts::entropy_bits;
+    use crate::util::rng::Rng;
+
+    fn random_cat(rng: &mut Rng, n: usize, cards: &[u16]) -> CategoricalDataset {
+        let v = cards.len();
+        let data = (0..n * v)
+            .map(|i| rng.gen_range(cards[i % v] as usize) as u16)
+            .collect();
+        CategoricalDataset::new(n, v, data).unwrap()
+    }
+
+    #[test]
+    fn construction_and_cardinality() {
+        let ds = CategoricalDataset::new(3, 2, vec![0, 2, 1, 0, 2, 1]).unwrap();
+        assert_eq!(ds.cardinality(), &[3, 3]);
+        assert_eq!(ds.onehot_cols(), 6);
+        assert!(CategoricalDataset::new(2, 2, vec![0, 1, 2]).is_err());
+    }
+
+    #[test]
+    fn one_hot_round_trip() {
+        let ds = CategoricalDataset::new(4, 2, vec![0, 1, 2, 0, 1, 1, 0, 0]).unwrap();
+        let (bin, offsets) = ds.one_hot();
+        assert_eq!(bin.n_cols(), ds.onehot_cols());
+        for r in 0..4 {
+            for v in 0..2 {
+                for c in 0..ds.cardinality[v] as usize {
+                    let want = (ds.get(r, v) as usize == c) as u8;
+                    assert_eq!(bin.get(r, offsets[v] + c), want, "({r},{v},{c})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bulk_matches_pairwise_oracle() {
+        let mut rng = Rng::new(1);
+        let ds = random_cat(&mut rng, 300, &[2, 3, 4, 5, 2]);
+        let bulk = mi_categorical(&ds).unwrap();
+        for x in 0..5 {
+            for y in 0..5 {
+                let want = mi_pair_categorical(&ds, x, y);
+                assert!(
+                    (bulk.get(x, y) - want).abs() < 1e-10,
+                    "({x},{y}): {} vs {want}",
+                    bulk.get(x, y)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn binary_special_case_matches_binary_backend() {
+        // cardinality-2 categorical MI == binary bulk MI
+        let mut rng = Rng::new(2);
+        let ds = random_cat(&mut rng, 200, &[2, 2, 2, 2]);
+        let cat_mi = mi_categorical(&ds).unwrap();
+        let bytes: Vec<u8> = (0..200 * 4).map(|i| ds.data[i] as u8).collect();
+        let bin = crate::data::dataset::BinaryDataset::new(200, 4, bytes).unwrap();
+        let bin_mi = crate::mi::bulk_opt::mi_bulk_opt(&bin);
+        assert!(cat_mi.max_abs_diff(&bin_mi) < 1e-10);
+    }
+
+    #[test]
+    fn diag_is_categorical_entropy() {
+        let mut rng = Rng::new(3);
+        let ds = random_cat(&mut rng, 500, &[3, 7]);
+        let mi = mi_categorical(&ds).unwrap();
+        let h = categorical_entropies(&ds);
+        for v in 0..2 {
+            assert!((mi.get(v, v) - h[v]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn copied_variable_reaches_entropy() {
+        let mut rng = Rng::new(4);
+        let n = 400;
+        let col: Vec<u16> = (0..n).map(|_| rng.gen_range(4) as u16).collect();
+        let mut data = Vec::with_capacity(n * 2);
+        for r in 0..n {
+            data.push(col[r]);
+            data.push(col[r]);
+        }
+        let ds = CategoricalDataset::new(n, 2, data).unwrap();
+        let mi = mi_categorical(&ds).unwrap();
+        assert!((mi.get(0, 1) - mi.get(0, 0)).abs() < 1e-10);
+    }
+
+    #[test]
+    fn independent_uniform_near_zero() {
+        let mut rng = Rng::new(5);
+        let ds = random_cat(&mut rng, 50_000, &[3, 4]);
+        let mi = mi_categorical(&ds).unwrap();
+        assert!(mi.get(0, 1) < 5e-3, "MI {}", mi.get(0, 1));
+    }
+
+    #[test]
+    fn entropy_bits_consistency() {
+        // a balanced binary categorical has H = 1 bit
+        let data: Vec<u16> = (0..100).map(|i| (i % 2) as u16).collect();
+        let ds = CategoricalDataset::new(100, 1, data).unwrap();
+        let h = categorical_entropies(&ds);
+        assert!((h[0] - entropy_bits(0.5)).abs() < 1e-12);
+    }
+}

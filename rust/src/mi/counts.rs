@@ -1,0 +1,150 @@
+//! Scalar core: mutual information (bits) of a 2x2 contingency table.
+//!
+//! Convention (shared with `python/compile/kernels/ref.py`): a zero
+//! joint count contributes exactly 0 — `0 * log(0/e) := 0` — so results
+//! are exact, with no epsilon bias. `log2` identities:
+//! `MI = Σ p_xy * (log2 n_xy + log2 n - log2 n_x - log2 n_y)` evaluated
+//! in f64 from integer counts.
+
+/// MI (bits) from the four joint counts and the total `n = Σ n_xy`.
+///
+/// `n11` counts rows where both are 1, `n10` X=1,Y=0, etc.
+#[inline]
+pub fn mi_from_counts_u64(n11: u64, n10: u64, n01: u64, n00: u64, n: u64) -> f64 {
+    debug_assert_eq!(n11 + n10 + n01 + n00, n);
+    if n == 0 {
+        return 0.0;
+    }
+    let nf = n as f64;
+    let r1 = (n11 + n10) as f64; // X = 1 marginal count
+    let r0 = (n01 + n00) as f64;
+    let c1 = (n11 + n01) as f64; // Y = 1 marginal count
+    let c0 = (n10 + n00) as f64;
+    // term(n_xy, n_x, n_y) = (n_xy/n) * log2(n_xy * n / (n_x * n_y))
+    let term = |nxy: u64, nx: f64, ny: f64| -> f64 {
+        if nxy > 0 {
+            let nxy = nxy as f64;
+            (nxy / nf) * (nxy * nf / (nx * ny)).log2()
+        } else {
+            0.0
+        }
+    };
+    // Summation tree (t11 + t00) + (t10 + t01) is bitwise invariant
+    // under the (i, j) -> (j, i) swap (which exchanges n10 <-> n01):
+    // IEEE addition/multiplication are commutative, so MI(i,j) is
+    // bit-identical to MI(j,i) — the coordinator's mirror-write relies
+    // on this for blockwise == monolithic exactness.
+    (term(n11, r1, c1) + term(n00, r0, c0)) + (term(n10, r1, c0) + term(n01, r0, c1))
+}
+
+/// MI (bits) from *real-valued* counts (used when counts arrive as f32/f64
+/// sums from a Gram matrix; values are integral up to float rounding).
+#[inline]
+pub fn mi_from_counts_f64(n11: f64, n10: f64, n01: f64, n00: f64, n: f64) -> f64 {
+    if n <= 0.0 {
+        return 0.0;
+    }
+    let r1 = n11 + n10;
+    let r0 = n01 + n00;
+    let c1 = n11 + n01;
+    let c0 = n10 + n00;
+    let term = |nxy: f64, nx: f64, ny: f64| -> f64 {
+        if nxy > 0.0 {
+            (nxy / n) * (nxy * n / (nx * ny)).log2()
+        } else {
+            0.0
+        }
+    };
+    // swap-invariant summation tree; see mi_from_counts_u64
+    (term(n11, r1, c1) + term(n00, r0, c0)) + (term(n10, r1, c0) + term(n01, r0, c1))
+}
+
+/// Binary entropy H(p) in bits.
+#[inline]
+pub fn entropy_bits(p: f64) -> f64 {
+    if p <= 0.0 || p >= 1.0 {
+        return 0.0;
+    }
+    -p * p.log2() - (1.0 - p) * (1.0 - p).log2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_n_is_zero() {
+        assert_eq!(mi_from_counts_u64(0, 0, 0, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn identical_variables_give_entropy() {
+        // X == Y with 3 ones of 8: n11=3, n00=5
+        let mi = mi_from_counts_u64(3, 0, 0, 5, 8);
+        assert!((mi - entropy_bits(3.0 / 8.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn complementary_variables_give_entropy() {
+        let mi = mi_from_counts_u64(0, 3, 5, 0, 8);
+        assert!((mi - entropy_bits(3.0 / 8.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_independence_is_zero() {
+        // balanced 2x2: all four cells equal
+        assert!(mi_from_counts_u64(2, 2, 2, 2, 8).abs() < 1e-15);
+        // unbalanced but independent: p(x)=1/2, p(y)=1/4
+        assert!(mi_from_counts_u64(1, 3, 1, 3, 8).abs() < 1e-15);
+    }
+
+    #[test]
+    fn constant_variable_is_zero() {
+        assert_eq!(mi_from_counts_u64(0, 0, 4, 4, 8), 0.0); // X always 0
+        assert_eq!(mi_from_counts_u64(4, 4, 0, 0, 8), 0.0); // X always 1
+    }
+
+    #[test]
+    fn perfect_one_bit() {
+        // X == Y, both balanced: MI = 1 bit
+        assert!((mi_from_counts_u64(4, 0, 0, 4, 8) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f64_matches_u64() {
+        for &(a, b, c, d) in &[(3u64, 2u64, 1u64, 4u64), (0, 5, 5, 0), (7, 0, 1, 2)] {
+            let n = a + b + c + d;
+            let exact = mi_from_counts_u64(a, b, c, d, n);
+            let float =
+                mi_from_counts_f64(a as f64, b as f64, c as f64, d as f64, n as f64);
+            assert!((exact - float).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn nonnegative_exhaustive_small() {
+        // exhaustive over all 2x2 tables with n <= 12
+        for n in 1u64..=12 {
+            for n11 in 0..=n {
+                for n10 in 0..=(n - n11) {
+                    for n01 in 0..=(n - n11 - n10) {
+                        let n00 = n - n11 - n10 - n01;
+                        let mi = mi_from_counts_u64(n11, n10, n01, n00, n);
+                        assert!(mi > -1e-12, "negative MI for {n11},{n10},{n01},{n00}");
+                        // bounded by min marginal entropy
+                        let hx = entropy_bits((n11 + n10) as f64 / n as f64);
+                        let hy = entropy_bits((n11 + n01) as f64 / n as f64);
+                        assert!(mi <= hx.min(hy) + 1e-9);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn entropy_edges() {
+        assert_eq!(entropy_bits(0.0), 0.0);
+        assert_eq!(entropy_bits(1.0), 0.0);
+        assert!((entropy_bits(0.5) - 1.0).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,139 @@
+//! Entropy-based analysis utilities over MI results: marginal/joint
+//! entropies, normalized MI variants, and variation of information —
+//! the quantities feature-selection and clustering applications
+//! (paper §1) derive from the raw MI matrix.
+
+use super::counts::entropy_bits;
+use super::MiMatrix;
+use crate::data::dataset::BinaryDataset;
+
+/// Marginal entropy H(X_c) in bits for every column.
+pub fn column_entropies(ds: &BinaryDataset) -> Vec<f64> {
+    let n = ds.n_rows() as f64;
+    ds.col_counts().iter().map(|&c| entropy_bits(c as f64 / n)).collect()
+}
+
+/// Joint entropy H(X_i, X_j) = H(X_i) + H(X_j) - MI(X_i, X_j).
+pub fn joint_entropy(h: &[f64], mi: &MiMatrix, i: usize, j: usize) -> f64 {
+    h[i] + h[j] - mi.get(i, j)
+}
+
+/// Normalized MI variants.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Normalization {
+    /// MI / min(H(X), H(Y)) — 1 when one variable determines the other.
+    Min,
+    /// MI / max(H(X), H(Y)).
+    Max,
+    /// 2·MI / (H(X) + H(Y)) — symmetric uncertainty.
+    Mean,
+    /// MI / H(X, Y) — the [0,1] "IQR" coefficient.
+    Joint,
+}
+
+/// Normalized MI matrix; cells with a zero denominator (constant
+/// variables) are defined as 0.
+pub fn normalized_mi(ds: &BinaryDataset, mi: &MiMatrix, norm: Normalization) -> MiMatrix {
+    let h = column_entropies(ds);
+    let m = mi.dim();
+    let mut out = crate::linalg::dense::Mat64::zeros(m, m);
+    for i in 0..m {
+        for j in 0..m {
+            let denom = match norm {
+                Normalization::Min => h[i].min(h[j]),
+                Normalization::Max => h[i].max(h[j]),
+                Normalization::Mean => 0.5 * (h[i] + h[j]),
+                Normalization::Joint => joint_entropy(&h, mi, i, j),
+            };
+            let v = if denom > 0.0 { (mi.get(i, j) / denom).clamp(0.0, 1.0) } else { 0.0 };
+            out.set(i, j, v);
+        }
+    }
+    MiMatrix::from_mat(out)
+}
+
+/// Variation of information VI(X,Y) = H(X,Y) - MI(X,Y), a metric.
+pub fn variation_of_information(ds: &BinaryDataset, mi: &MiMatrix) -> crate::linalg::dense::Mat64 {
+    let h = column_entropies(ds);
+    let m = mi.dim();
+    let mut out = crate::linalg::dense::Mat64::zeros(m, m);
+    for i in 0..m {
+        for j in 0..m {
+            out.set(i, j, (h[i] + h[j] - 2.0 * mi.get(i, j)).max(0.0));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::mi::pairwise::mi_pairwise;
+
+    fn setup() -> (BinaryDataset, MiMatrix) {
+        let ds = SynthSpec::new(800, 10).sparsity(0.6).seed(1).plant(0, 1, 0.0).generate();
+        let mi = mi_pairwise(&ds);
+        (ds, mi)
+    }
+
+    #[test]
+    fn entropies_match_diag() {
+        let (ds, mi) = setup();
+        let h = column_entropies(&ds);
+        for c in 0..10 {
+            assert!((h[c] - mi.get(c, c)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn normalized_copy_pair_is_one() {
+        let (ds, mi) = setup();
+        for norm in [
+            Normalization::Min,
+            Normalization::Max,
+            Normalization::Mean,
+            Normalization::Joint,
+        ] {
+            let nmi = normalized_mi(&ds, &mi, norm);
+            assert!((nmi.get(0, 1) - 1.0).abs() < 1e-9, "{norm:?}: {}", nmi.get(0, 1));
+        }
+    }
+
+    #[test]
+    fn normalized_in_unit_interval() {
+        let (ds, mi) = setup();
+        let nmi = normalized_mi(&ds, &mi, Normalization::Min);
+        for &v in nmi.data() {
+            assert!((0.0..=1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn vi_is_metric_like() {
+        let (ds, mi) = setup();
+        let vi = variation_of_information(&ds, &mi);
+        for i in 0..10 {
+            assert!(vi.get(i, i).abs() < 1e-9, "VI(X,X) = 0");
+            for j in 0..10 {
+                assert!(vi.get(i, j) >= 0.0);
+                assert!((vi.get(i, j) - vi.get(j, i)).abs() < 1e-12);
+            }
+        }
+        // copy pair: VI = 0
+        assert!(vi.get(0, 1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn joint_entropy_bounds() {
+        let (ds, mi) = setup();
+        let h = column_entropies(&ds);
+        for i in 0..10 {
+            for j in 0..10 {
+                let hij = joint_entropy(&h, &mi, i, j);
+                assert!(hij <= h[i] + h[j] + 1e-12);
+                assert!(hij >= h[i].max(h[j]) - 1e-9);
+            }
+        }
+    }
+}

@@ -1,0 +1,80 @@
+//! Mutual-information computation: the paper's contribution.
+//!
+//! * [`counts`] — the scalar core: MI (bits) from a 2x2 contingency.
+//! * [`pairwise`] — the sequential per-pair baseline (SKL-pairwise row).
+//! * [`bulk_basic`] — Section 2: four dense Gram matrices (Bas-NN row).
+//! * [`bulk_opt`] — Section 3: one Gram + N/C derivation (Opt-NN row).
+//! * [`bulk_sparse`] — Section 3 on CSR (Opt-SS row).
+//! * [`bulk_bitpack`] — Section 3 on AND+popcount (hardware-optimized).
+//! * [`xla`] — Section 3 through the AOT Pallas/XLA artifacts (Opt-T row).
+//! * [`backend`] — the `MiBackend` trait and dispatch.
+//! * [`entropy`], [`topk`] — analysis utilities on MI matrices.
+
+pub mod backend;
+pub mod bulk_basic;
+pub mod categorical;
+pub mod bulk_bitpack;
+pub mod bulk_opt;
+pub mod bulk_sparse;
+pub mod counts;
+pub mod entropy;
+pub mod pairwise;
+pub mod significance;
+pub mod topk;
+pub mod xla;
+
+use crate::linalg::dense::Mat64;
+
+/// A symmetric m x m mutual-information matrix in bits.
+#[derive(Clone, Debug)]
+pub struct MiMatrix {
+    mat: Mat64,
+}
+
+impl MiMatrix {
+    pub fn from_mat(mat: Mat64) -> Self {
+        debug_assert_eq!(mat.rows(), mat.cols());
+        MiMatrix { mat }
+    }
+
+    /// Number of variables (columns of the source dataset).
+    pub fn dim(&self) -> usize {
+        self.mat.rows()
+    }
+
+    /// MI between variables i and j, in bits.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.mat.get(i, j)
+    }
+
+    pub fn as_mat(&self) -> &Mat64 {
+        &self.mat
+    }
+
+    pub fn data(&self) -> &[f64] {
+        self.mat.data()
+    }
+
+    /// Largest |self - other| cell difference.
+    pub fn max_abs_diff(&self, other: &MiMatrix) -> f64 {
+        self.mat.max_abs_diff(&other.mat)
+    }
+
+    /// Largest asymmetry |M[i][j] - M[j][i]|.
+    pub fn max_asymmetry(&self) -> f64 {
+        let m = self.dim();
+        let mut worst = 0.0f64;
+        for i in 0..m {
+            for j in (i + 1)..m {
+                worst = worst.max((self.get(i, j) - self.get(j, i)).abs());
+            }
+        }
+        worst
+    }
+
+    /// Smallest cell value (MI is non-negative up to rounding).
+    pub fn min_value(&self) -> f64 {
+        self.mat.data().iter().copied().fold(f64::INFINITY, f64::min)
+    }
+}

@@ -1,0 +1,112 @@
+//! The sequential pairwise baseline (the paper's "SKL Pairwise" row):
+//! for every column pair, scan all n rows building the 2x2 contingency,
+//! then apply the scalar MI core. O(m² n) with the full per-pair pass —
+//! exactly the cost model of a scikit-learn `mutual_info_score` loop.
+//!
+//! This is the comparator every bulk backend is validated against and
+//! the denominator of the paper's headline speedup.
+
+use super::counts::mi_from_counts_u64;
+use super::MiMatrix;
+use crate::data::dataset::BinaryDataset;
+use crate::linalg::dense::Mat64;
+
+/// Compute the full m x m MI matrix pair by pair.
+pub fn mi_pairwise(ds: &BinaryDataset) -> MiMatrix {
+    let (n, m) = (ds.n_rows(), ds.n_cols());
+    let mut out = Mat64::zeros(m, m);
+    for i in 0..m {
+        for j in i..m {
+            let mi = mi_pair(ds, i, j, n);
+            out.set(i, j, mi);
+            out.set(j, i, mi);
+        }
+    }
+    MiMatrix::from_mat(out)
+}
+
+/// MI between two columns via a row scan (the per-pair inner loop).
+fn mi_pair(ds: &BinaryDataset, i: usize, j: usize, n: usize) -> f64 {
+    let mut n11 = 0u64;
+    let mut n10 = 0u64;
+    let mut n01 = 0u64;
+    for r in 0..n {
+        let row = ds.row(r);
+        match (row[i], row[j]) {
+            (1, 1) => n11 += 1,
+            (1, 0) => n10 += 1,
+            (0, 1) => n01 += 1,
+            _ => {}
+        }
+    }
+    let n = n as u64;
+    mi_from_counts_u64(n11, n10, n01, n - n11 - n10 - n01, n)
+}
+
+/// MI between two explicit binary vectors (public convenience).
+pub fn mi_between(x: &[u8], y: &[u8]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let mut n11 = 0u64;
+    let mut n10 = 0u64;
+    let mut n01 = 0u64;
+    for (&a, &b) in x.iter().zip(y) {
+        match (a, b) {
+            (1, 1) => n11 += 1,
+            (1, 0) => n10 += 1,
+            (0, 1) => n01 += 1,
+            _ => {}
+        }
+    }
+    let n = x.len() as u64;
+    mi_from_counts_u64(n11, n10, n01, n - n11 - n10 - n01, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::mi::counts::entropy_bits;
+
+    #[test]
+    fn diag_is_entropy() {
+        let ds = SynthSpec::new(500, 8).sparsity(0.7).seed(1).generate();
+        let mi = mi_pairwise(&ds);
+        for c in 0..8 {
+            let p = ds.col_counts()[c] as f64 / 500.0;
+            assert!((mi.get(c, c) - entropy_bits(p)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn symmetric_nonnegative() {
+        let ds = SynthSpec::new(300, 12).sparsity(0.5).seed(2).generate();
+        let mi = mi_pairwise(&ds);
+        assert_eq!(mi.max_asymmetry(), 0.0);
+        assert!(mi.min_value() > -1e-12);
+    }
+
+    #[test]
+    fn planted_copy_has_full_entropy_mi() {
+        let ds = SynthSpec::new(2000, 4).sparsity(0.6).seed(3).plant(0, 3, 0.0).generate();
+        let mi = mi_pairwise(&ds);
+        let h = mi.get(0, 0);
+        assert!((mi.get(0, 3) - h).abs() < 1e-12, "copy pair should reach H(X)");
+    }
+
+    #[test]
+    fn independent_columns_near_zero() {
+        let ds = SynthSpec::new(50_000, 3).sparsity(0.5).seed(4).generate();
+        let mi = mi_pairwise(&ds);
+        assert!(mi.get(0, 1) < 1e-3);
+        assert!(mi.get(1, 2) < 1e-3);
+    }
+
+    #[test]
+    fn mi_between_matches_matrix() {
+        let ds = SynthSpec::new(128, 5).sparsity(0.4).seed(5).generate();
+        let mi = mi_pairwise(&ds);
+        let x: Vec<u8> = (0..128).map(|r| ds.get(r, 1)).collect();
+        let y: Vec<u8> = (0..128).map(|r| ds.get(r, 4)).collect();
+        assert!((mi_between(&x, &y) - mi.get(1, 4)).abs() < 1e-15);
+    }
+}

@@ -1,0 +1,151 @@
+//! Extracting structure from an MI matrix: top-k strongest pairs,
+//! threshold edge lists, and per-variable relevance ranking — the
+//! feature-selection / network-construction consumers from the paper's
+//! introduction.
+
+use super::MiMatrix;
+
+/// An (i, j, mi) pair with i < j.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MiPair {
+    pub i: usize,
+    pub j: usize,
+    pub mi: f64,
+}
+
+/// The k strongest off-diagonal pairs, descending by MI (stable order:
+/// ties broken by (i, j)).
+pub fn top_k_pairs(mi: &MiMatrix, k: usize) -> Vec<MiPair> {
+    let m = mi.dim();
+    let mut pairs = Vec::with_capacity(m * (m.saturating_sub(1)) / 2);
+    for i in 0..m {
+        for j in (i + 1)..m {
+            pairs.push(MiPair { i, j, mi: mi.get(i, j) });
+        }
+    }
+    pairs.sort_by(|a, b| {
+        b.mi.partial_cmp(&a.mi).unwrap().then(a.i.cmp(&b.i)).then(a.j.cmp(&b.j))
+    });
+    pairs.truncate(k);
+    pairs
+}
+
+/// All off-diagonal pairs with MI >= threshold (an "MI network" edge list).
+pub fn edges_above(mi: &MiMatrix, threshold: f64) -> Vec<MiPair> {
+    let m = mi.dim();
+    let mut edges = Vec::new();
+    for i in 0..m {
+        for j in (i + 1)..m {
+            let v = mi.get(i, j);
+            if v >= threshold {
+                edges.push(MiPair { i, j, mi: v });
+            }
+        }
+    }
+    edges
+}
+
+/// Sum of MI to all other variables — a max-relevance score per column.
+pub fn relevance_scores(mi: &MiMatrix) -> Vec<f64> {
+    let m = mi.dim();
+    (0..m)
+        .map(|i| (0..m).filter(|&j| j != i).map(|j| mi.get(i, j)).sum())
+        .collect()
+}
+
+/// Greedy mRMR-style selection: repeatedly pick the variable maximizing
+/// `relevance(target) - mean MI to already-selected` (paper ref [12]).
+/// `target_mi[i]` is MI(X_i; label); returns selected column indices.
+pub fn mrmr_select(mi: &MiMatrix, target_mi: &[f64], k: usize) -> Vec<usize> {
+    let m = mi.dim();
+    assert_eq!(target_mi.len(), m);
+    let mut selected: Vec<usize> = Vec::new();
+    let mut remaining: Vec<usize> = (0..m).collect();
+    while selected.len() < k && !remaining.is_empty() {
+        let (best_pos, _) = remaining
+            .iter()
+            .enumerate()
+            .map(|(pos, &c)| {
+                let redundancy = if selected.is_empty() {
+                    0.0
+                } else {
+                    selected.iter().map(|&s| mi.get(c, s)).sum::<f64>() / selected.len() as f64
+                };
+                (pos, target_mi[c] - redundancy)
+            })
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        selected.push(remaining.swap_remove(best_pos));
+    }
+    selected
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+    use crate::mi::pairwise::mi_pairwise;
+
+    fn planted_mi() -> MiMatrix {
+        let ds = SynthSpec::new(3000, 8)
+            .sparsity(0.5)
+            .seed(1)
+            .plant(0, 1, 0.05)
+            .plant(2, 3, 0.2)
+            .generate();
+        mi_pairwise(&ds)
+    }
+
+    #[test]
+    fn top_k_finds_planted_pairs() {
+        let mi = planted_mi();
+        let top = top_k_pairs(&mi, 2);
+        assert_eq!((top[0].i, top[0].j), (0, 1));
+        assert_eq!((top[1].i, top[1].j), (2, 3));
+        assert!(top[0].mi > top[1].mi);
+    }
+
+    #[test]
+    fn top_k_truncates_and_orders() {
+        let mi = planted_mi();
+        let all = top_k_pairs(&mi, usize::MAX);
+        assert_eq!(all.len(), 8 * 7 / 2);
+        for w in all.windows(2) {
+            assert!(w[0].mi >= w[1].mi);
+        }
+        assert_eq!(top_k_pairs(&mi, 3).len(), 3);
+    }
+
+    #[test]
+    fn edges_above_threshold() {
+        let mi = planted_mi();
+        let strong = edges_above(&mi, 0.5);
+        assert!(strong.iter().any(|e| (e.i, e.j) == (0, 1)));
+        assert!(!strong.iter().any(|e| (e.i, e.j) == (5, 6)));
+        let all = edges_above(&mi, 0.0);
+        assert_eq!(all.len(), 28);
+    }
+
+    #[test]
+    fn relevance_ranks_planted_columns() {
+        let mi = planted_mi();
+        let rel = relevance_scores(&mi);
+        // planted columns participate in a high-MI pair: highest relevance
+        let mut order: Vec<usize> = (0..8).collect();
+        order.sort_by(|&a, &b| rel[b].partial_cmp(&rel[a]).unwrap());
+        assert!(order[..4].contains(&0) && order[..4].contains(&1));
+    }
+
+    #[test]
+    fn mrmr_avoids_redundant_picks() {
+        let mi = planted_mi();
+        // target highly informed by both 0 and 1 (which are near-copies):
+        // after picking one of them, mRMR should prefer a non-redundant
+        // column over the other one.
+        let target = vec![1.0, 0.98, 0.3, 0.3, 0.29, 0.28, 0.27, 0.26];
+        let sel = mrmr_select(&mi, &target, 3);
+        assert_eq!(sel[0], 0);
+        assert_ne!(sel[1], 1, "second pick should avoid the redundant copy");
+        assert_eq!(sel.len(), 3);
+    }
+}

@@ -1,0 +1,125 @@
+//! The XLA/PJRT backend (the paper's "Opt-T" optimized-framework row):
+//! Section-3 bulk MI executed through the AOT artifacts compiled from
+//! the Layer-2 JAX graphs (and, in `Impl::Pallas` mode, through the
+//! Layer-1 Pallas kernels).
+//!
+//! Serving strategy for an arbitrary (n, m):
+//!
+//! 1. **Fused**: if some `mi_{R}x{C}` bucket fits, zero-pad and run it
+//!    (exact: the true n is an input, see DESIGN.md §2).
+//! 2. **Row-chunked**: if n exceeds every bucket, stream row chunks
+//!    through the largest fitting `gram` bucket, accumulate
+//!    `(G11, colsums)` in f64, then combine — through the `combine`
+//!    artifact when one fits, natively otherwise.
+//! 3. **Column-blocked**: if m exceeds every gram bucket, delegate to
+//!    the coordinator's blockwise plan (`crate::coordinator`), which
+//!    handles arbitrary shapes over the `xgram` artifacts.
+
+use super::bulk_opt::combine;
+use super::MiMatrix;
+use crate::data::dataset::BinaryDataset;
+use crate::linalg::dense::Mat64;
+use crate::runtime::{ArtifactKind, Impl, XlaRuntime};
+use crate::util::error::{Error, Result};
+
+/// XLA-backed MI computation.
+pub struct XlaMi {
+    runtime: XlaRuntime,
+    impl_: Impl,
+}
+
+impl XlaMi {
+    pub fn new(runtime: XlaRuntime, impl_: Impl) -> Self {
+        XlaMi { runtime, impl_ }
+    }
+
+    /// Construct over the default artifact directory, XLA-native dots.
+    pub fn load_default() -> Result<Self> {
+        Ok(XlaMi::new(XlaRuntime::load_default()?, Impl::Xla))
+    }
+
+    /// Construct with the interpret-mode Pallas artifacts.
+    pub fn load_default_pallas() -> Result<Self> {
+        Ok(XlaMi::new(XlaRuntime::load_default()?, Impl::Pallas))
+    }
+
+    pub fn runtime(&self) -> &XlaRuntime {
+        &self.runtime
+    }
+
+    /// Compute the full MI matrix for a dataset.
+    pub fn compute(&self, ds: &BinaryDataset) -> Result<MiMatrix> {
+        let (n, m) = (ds.n_rows(), ds.n_cols());
+        let d: Vec<f32> = ds.bytes().iter().map(|&b| b as f32).collect();
+
+        // 1. fused bucket
+        if self.runtime.registry().find_bucket(ArtifactKind::Mi, self.impl_, n, m).is_some() {
+            let flat = self.runtime.run_mi_fused(self.impl_, &d, n, m)?;
+            return Ok(MiMatrix::from_mat(Mat64::from_vec(m, m, flat)?));
+        }
+
+        // 2. row-chunked through gram buckets
+        let chunk_rows = self
+            .runtime
+            .registry()
+            .max_rows_for_cols(ArtifactKind::Gram, self.impl_, m)
+            .ok_or_else(|| {
+                Error::NoArtifact(format!(
+                    "no gram bucket with >= {m} cols; use the coordinator's \
+                     column-blocked plan for this width"
+                ))
+            })?;
+        let (g11, colsums) = self.gram_chunked(&d, n, m, chunk_rows)?;
+        self.combine_counts(&g11, &colsums, &colsums, n as f64, m)
+    }
+
+    /// Accumulate (G11, colsums) over row chunks of size `chunk_rows`.
+    fn gram_chunked(
+        &self,
+        d: &[f32],
+        n: usize,
+        m: usize,
+        chunk_rows: usize,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let mut g_acc = vec![0.0f64; m * m];
+        let mut c_acc = vec![0.0f64; m];
+        let mut start = 0usize;
+        while start < n {
+            let len = chunk_rows.min(n - start);
+            let chunk = &d[start * m..(start + len) * m];
+            let (g, c) = self.runtime.run_gram(self.impl_, chunk, len, m)?;
+            for (acc, v) in g_acc.iter_mut().zip(&g) {
+                *acc += v;
+            }
+            for (acc, v) in c_acc.iter_mut().zip(&c) {
+                *acc += v;
+            }
+            start += len;
+        }
+        Ok((g_acc, c_acc))
+    }
+
+    /// Combine counts into MI — through the artifact if a bucket fits,
+    /// natively otherwise (identical math, see `mi::bulk_opt::combine`).
+    fn combine_counts(
+        &self,
+        g11: &[f64],
+        ca: &[f64],
+        cb: &[f64],
+        n: f64,
+        m: usize,
+    ) -> Result<MiMatrix> {
+        let flat = if self
+            .runtime
+            .registry()
+            .find_bucket(ArtifactKind::Combine, self.impl_, 0, m)
+            .is_some()
+        {
+            self.runtime.run_combine(self.impl_, g11, ca, cb, n, m)?
+        } else {
+            let g = Mat64::from_vec(m, m, g11.to_vec())?;
+            return Ok(MiMatrix::from_mat(combine(&g, ca, cb, n)));
+        };
+        Ok(MiMatrix::from_mat(Mat64::from_vec(m, m, flat)?))
+    }
+}

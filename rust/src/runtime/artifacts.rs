@@ -1,0 +1,276 @@
+//! Artifact registry: discovers the AOT-compiled HLO artifacts through
+//! `artifacts/manifest.txt` and answers "which bucket serves shape
+//! (n, m)?" queries for the runtime and coordinator.
+
+use crate::util::error::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// What computation an artifact implements (see `python/compile/aot.py`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// `(D[R,C], n[1]) -> MI[C,C]` — fused optimized bulk MI.
+    Mi,
+    /// `D[R,C] -> (G11[C,C], colsums[C])` — partial Gram for row chunks.
+    Gram,
+    /// `(Da[R,B], Db[R,B]) -> (G[B,B], ca[B], cb[B])` — cross-block Gram.
+    Xgram,
+    /// `(G11[C,C], ca[C], cb[C], n[1]) -> MI[C,C]` — combine from counts.
+    Combine,
+    /// `D[R,C] -> MI[C,C]` — Section-2 basic algorithm (ablation only).
+    MiBasic,
+}
+
+impl ArtifactKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "mi" => Some(ArtifactKind::Mi),
+            "gram" => Some(ArtifactKind::Gram),
+            "xgram" => Some(ArtifactKind::Xgram),
+            "combine" => Some(ArtifactKind::Combine),
+            "mi_basic" => Some(ArtifactKind::MiBasic),
+            _ => None,
+        }
+    }
+}
+
+/// Which implementation variant the artifact was lowered from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Impl {
+    /// XLA-native dot for the Gram — the request-path default.
+    Xla,
+    /// Interpret-mode Pallas grid — correctness/ablation path.
+    Pallas,
+}
+
+impl Impl {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "xla" => Some(Impl::Xla),
+            "pallas" => Some(Impl::Pallas),
+            _ => None,
+        }
+    }
+}
+
+/// One artifact's metadata from the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub kind: ArtifactKind,
+    /// Bucket rows (0 for `Combine`, which is row-count independent).
+    pub rows: usize,
+    pub cols: usize,
+    pub impl_: Impl,
+    pub path: PathBuf,
+}
+
+/// Registry over a directory of artifacts + manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactRegistry {
+    dir: PathBuf,
+    artifacts: Vec<ArtifactMeta>,
+}
+
+/// Default artifact directory: `$BULKMI_ARTIFACTS` or `artifacts/`
+/// relative to the working directory.
+pub fn default_dir() -> PathBuf {
+    std::env::var("BULKMI_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| {
+        PathBuf::from("artifacts")
+    })
+}
+
+impl ArtifactRegistry {
+    /// Load the manifest from `dir` (missing artifact files are dropped
+    /// with a warning so partially-built trees still work).
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest).map_err(|e| {
+            Error::NoArtifact(format!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                manifest.display()
+            ))
+        })?;
+        let mut artifacts = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            if fields.len() != 6 {
+                return Err(Error::Parse(format!(
+                    "manifest line {}: expected 6 fields, got {}",
+                    lineno + 1,
+                    fields.len()
+                )));
+            }
+            let kind = ArtifactKind::parse(fields[1])
+                .ok_or_else(|| Error::Parse(format!("unknown artifact kind {}", fields[1])))?;
+            let impl_ = Impl::parse(fields[4])
+                .ok_or_else(|| Error::Parse(format!("unknown impl {}", fields[4])))?;
+            let rows: usize = fields[2]
+                .parse()
+                .map_err(|_| Error::Parse(format!("bad rows {}", fields[2])))?;
+            let cols: usize = fields[3]
+                .parse()
+                .map_err(|_| Error::Parse(format!("bad cols {}", fields[3])))?;
+            let path = dir.join(fields[5]);
+            if !path.exists() {
+                crate::warn_!("manifest names missing artifact {}", path.display());
+                continue;
+            }
+            artifacts.push(ArtifactMeta {
+                name: fields[0].to_string(),
+                kind,
+                rows,
+                cols,
+                impl_,
+                path,
+            });
+        }
+        Ok(ArtifactRegistry { dir: dir.to_path_buf(), artifacts })
+    }
+
+    /// Load from the default directory.
+    pub fn load_default() -> Result<Self> {
+        Self::load(&default_dir())
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn all(&self) -> &[ArtifactMeta] {
+        &self.artifacts
+    }
+
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Smallest bucket of `kind`/`impl_` that fits `rows x cols`
+    /// (padding up). "Smallest" minimizes padded cell count.
+    pub fn find_bucket(
+        &self,
+        kind: ArtifactKind,
+        impl_: Impl,
+        rows: usize,
+        cols: usize,
+    ) -> Option<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .filter(|a| {
+                a.kind == kind
+                    && a.impl_ == impl_
+                    && (kind == ArtifactKind::Combine || a.rows >= rows)
+                    && a.cols >= cols
+            })
+            .min_by_key(|a| a.rows.max(1) * a.cols)
+    }
+
+    /// Largest row capacity among `kind`/`impl_` buckets with cols >= `cols`
+    /// (used to size row chunks).
+    pub fn max_rows_for_cols(&self, kind: ArtifactKind, impl_: Impl, cols: usize) -> Option<usize> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.impl_ == impl_ && a.cols >= cols)
+            .map(|a| a.rows)
+            .max()
+    }
+
+    /// Largest column capacity of any bucket of `kind`/`impl_`.
+    pub fn max_cols(&self, kind: ArtifactKind, impl_: Impl) -> Option<usize> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.kind == kind && a.impl_ == impl_)
+            .map(|a| a.cols)
+            .max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), body).unwrap();
+    }
+
+    fn touch(dir: &Path, name: &str) {
+        std::fs::write(dir.join(name), "HloModule fake").unwrap();
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("bulkmi-art-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn parses_manifest_and_selects_buckets() {
+        let dir = tmp("sel");
+        write_manifest(
+            &dir,
+            "# comment\n\
+             mi_xla_1024x128 mi 1024 128 xla mi_xla_1024x128.hlo.txt\n\
+             mi_xla_2048x256 mi 2048 256 xla mi_xla_2048x256.hlo.txt\n\
+             combine_xla_128 combine 0 128 xla combine_xla_128.hlo.txt\n",
+        );
+        touch(&dir, "mi_xla_1024x128.hlo.txt");
+        touch(&dir, "mi_xla_2048x256.hlo.txt");
+        touch(&dir, "combine_xla_128.hlo.txt");
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        assert_eq!(reg.all().len(), 3);
+
+        let b = reg.find_bucket(ArtifactKind::Mi, Impl::Xla, 1000, 100).unwrap();
+        assert_eq!(b.name, "mi_xla_1024x128"); // smallest that fits
+        let b = reg.find_bucket(ArtifactKind::Mi, Impl::Xla, 1025, 100).unwrap();
+        assert_eq!(b.name, "mi_xla_2048x256");
+        assert!(reg.find_bucket(ArtifactKind::Mi, Impl::Xla, 9999, 100).is_none());
+        assert!(reg.find_bucket(ArtifactKind::Mi, Impl::Pallas, 10, 10).is_none());
+
+        // combine buckets ignore rows
+        let c = reg.find_bucket(ArtifactKind::Combine, Impl::Xla, 123_456, 100).unwrap();
+        assert_eq!(c.name, "combine_xla_128");
+    }
+
+    #[test]
+    fn missing_files_are_dropped() {
+        let dir = tmp("drop");
+        write_manifest(&dir, "ghost mi 8 8 xla ghost.hlo.txt\n");
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        assert!(reg.all().is_empty());
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        let dir = tmp("bad");
+        write_manifest(&dir, "too few fields\n");
+        assert!(ArtifactRegistry::load(&dir).is_err());
+        write_manifest(&dir, "x unknownkind 8 8 xla f.hlo.txt\n");
+        assert!(ArtifactRegistry::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_is_noartifact() {
+        let err = ArtifactRegistry::load(&tmp("missing-nothing")).unwrap_err();
+        assert!(matches!(err, Error::NoArtifact(_)));
+    }
+
+    #[test]
+    fn capacity_queries() {
+        let dir = tmp("cap");
+        write_manifest(
+            &dir,
+            "gram_xla_2048x128 gram 2048 128 xla g1.hlo.txt\n\
+             gram_xla_4096x1024 gram 4096 1024 xla g2.hlo.txt\n",
+        );
+        touch(&dir, "g1.hlo.txt");
+        touch(&dir, "g2.hlo.txt");
+        let reg = ArtifactRegistry::load(&dir).unwrap();
+        assert_eq!(reg.max_rows_for_cols(ArtifactKind::Gram, Impl::Xla, 100), Some(4096));
+        assert_eq!(reg.max_rows_for_cols(ArtifactKind::Gram, Impl::Xla, 2000), None);
+        assert_eq!(reg.max_rows_for_cols(ArtifactKind::Gram, Impl::Xla, 1000), Some(4096));
+        assert_eq!(reg.max_cols(ArtifactKind::Gram, Impl::Xla), Some(1024));
+        assert_eq!(reg.max_cols(ArtifactKind::Xgram, Impl::Xla), None);
+    }
+}

@@ -1,0 +1,273 @@
+//! The PJRT client wrapper: compile cache + typed execution entry points
+//! for each artifact kind.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! All artifacts are lowered with `return_tuple=True`, so results are
+//! unwrapped with `to_tuple*`.
+//!
+//! Thread-affinity note: `XlaRuntime` is deliberately not `Sync`; each
+//! coordinator worker that needs XLA owns its own runtime (executables
+//! are cached per runtime). The PJRT CPU client itself multithreads its
+//! compute internally.
+
+use super::artifacts::{ArtifactKind, ArtifactMeta, ArtifactRegistry, Impl};
+use crate::util::error::{Error, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+
+/// Owns the PJRT client, the artifact registry, and a name → compiled
+/// executable cache.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    registry: ArtifactRegistry,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl XlaRuntime {
+    /// Create a CPU runtime over the given artifact registry.
+    pub fn new(registry: ArtifactRegistry) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::Runtime(format!("PjRtClient::cpu: {e}")))?;
+        Ok(XlaRuntime { client, registry, cache: RefCell::new(HashMap::new()) })
+    }
+
+    /// Create over the default artifact directory.
+    pub fn load_default() -> Result<Self> {
+        Self::new(ArtifactRegistry::load_default()?)
+    }
+
+    pub fn registry(&self) -> &ArtifactRegistry {
+        &self.registry
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    fn get_or_compile(&self, meta: &ArtifactMeta) -> Result<()> {
+        if self.cache.borrow().contains_key(&meta.name) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&meta.path)
+            .map_err(|e| Error::Runtime(format!("parse {}: {e}", meta.path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {}: {e}", meta.name)))?;
+        self.cache.borrow_mut().insert(meta.name.clone(), exe);
+        Ok(())
+    }
+
+    /// Execute a cached executable with literal args, returning the
+    /// result tuple as a Vec of literals.
+    fn execute(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let cache = self.cache.borrow();
+        let exe = cache
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("executable {name} not compiled")))?;
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| Error::Runtime(format!("execute {name}: {e}")))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch {name}: {e}")))?;
+        lit.to_tuple().map_err(|e| Error::Runtime(format!("untuple {name}: {e}")))
+    }
+
+    fn matrix_literal(data: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+        xla::Literal::vec1(data)
+            .reshape(&[rows as i64, cols as i64])
+            .map_err(|e| Error::Runtime(format!("reshape literal: {e}")))
+    }
+
+    fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+        lit.to_vec::<f32>().map_err(|e| Error::Runtime(format!("literal to_vec: {e}")))
+    }
+
+    /// Pad a row-major f32 matrix with zeros up to (rp, cp).
+    fn pad(data: &[f32], rows: usize, cols: usize, rp: usize, cp: usize) -> Vec<f32> {
+        if rows == rp && cols == cp {
+            return data.to_vec();
+        }
+        let mut out = vec![0.0f32; rp * cp];
+        for r in 0..rows {
+            out[r * cp..r * cp + cols].copy_from_slice(&data[r * cols..(r + 1) * cols]);
+        }
+        out
+    }
+
+    /// Pick the bucket for (kind, impl, rows, cols) or a descriptive error.
+    pub fn bucket(
+        &self,
+        kind: ArtifactKind,
+        impl_: Impl,
+        rows: usize,
+        cols: usize,
+    ) -> Result<ArtifactMeta> {
+        self.registry.find_bucket(kind, impl_, rows, cols).cloned().ok_or_else(|| {
+            Error::NoArtifact(format!(
+                "no {kind:?}/{impl_:?} bucket fits {rows}x{cols} (max cols {:?})",
+                self.registry.max_cols(kind, impl_)
+            ))
+        })
+    }
+
+    /// Fused MI: pad `d` (row-major n x m) into the chosen bucket, pass
+    /// the true `n`, slice the m x m result out of the padded output.
+    pub fn run_mi_fused(
+        &self,
+        impl_: Impl,
+        d: &[f32],
+        n: usize,
+        m: usize,
+    ) -> Result<Vec<f64>> {
+        let meta = self.bucket(ArtifactKind::Mi, impl_, n, m)?;
+        self.get_or_compile(&meta)?;
+        let padded = Self::pad(d, n, m, meta.rows, meta.cols);
+        let d_lit = Self::matrix_literal(&padded, meta.rows, meta.cols)?;
+        let n_lit = xla::Literal::vec1(&[n as f32]);
+        let out = self.execute(&meta.name, &[d_lit, n_lit])?;
+        let flat = Self::to_vec_f32(&out[0])?;
+        // slice top-left m x m out of cols x cols
+        let c = meta.cols;
+        let mut mi = vec![0.0f64; m * m];
+        for i in 0..m {
+            for j in 0..m {
+                mi[i * m + j] = flat[i * c + j] as f64;
+            }
+        }
+        Ok(mi)
+    }
+
+    /// Partial Gram of one row chunk: returns (g11 [m x m], colsums [m])
+    /// sliced to the true column count.
+    pub fn run_gram(
+        &self,
+        impl_: Impl,
+        d: &[f32],
+        n: usize,
+        m: usize,
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let meta = self.bucket(ArtifactKind::Gram, impl_, n, m)?;
+        self.get_or_compile(&meta)?;
+        let padded = Self::pad(d, n, m, meta.rows, meta.cols);
+        let d_lit = Self::matrix_literal(&padded, meta.rows, meta.cols)?;
+        let out = self.execute(&meta.name, &[d_lit])?;
+        let g_flat = Self::to_vec_f32(&out[0])?;
+        let c_flat = Self::to_vec_f32(&out[1])?;
+        let c = meta.cols;
+        let mut g = vec![0.0f64; m * m];
+        for i in 0..m {
+            for j in 0..m {
+                g[i * m + j] = g_flat[i * c + j] as f64;
+            }
+        }
+        let colsums = c_flat[..m].iter().map(|&v| v as f64).collect();
+        Ok((g, colsums))
+    }
+
+    /// Cross-block partial Gram: (g [ma x mb], ca [ma], cb [mb]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_xgram(
+        &self,
+        impl_: Impl,
+        da: &[f32],
+        db: &[f32],
+        n: usize,
+        ma: usize,
+        mb: usize,
+    ) -> Result<(Vec<f64>, Vec<f64>, Vec<f64>)> {
+        let meta = self.bucket(ArtifactKind::Xgram, impl_, n, ma.max(mb))?;
+        self.get_or_compile(&meta)?;
+        let pa = Self::pad(da, n, ma, meta.rows, meta.cols);
+        let pb = Self::pad(db, n, mb, meta.rows, meta.cols);
+        let a_lit = Self::matrix_literal(&pa, meta.rows, meta.cols)?;
+        let b_lit = Self::matrix_literal(&pb, meta.rows, meta.cols)?;
+        let out = self.execute(&meta.name, &[a_lit, b_lit])?;
+        let g_flat = Self::to_vec_f32(&out[0])?;
+        let ca_flat = Self::to_vec_f32(&out[1])?;
+        let cb_flat = Self::to_vec_f32(&out[2])?;
+        let c = meta.cols;
+        let mut g = vec![0.0f64; ma * mb];
+        for i in 0..ma {
+            for j in 0..mb {
+                g[i * mb + j] = g_flat[i * c + j] as f64;
+            }
+        }
+        Ok((
+            g,
+            ca_flat[..ma].iter().map(|&v| v as f64).collect(),
+            cb_flat[..mb].iter().map(|&v| v as f64).collect(),
+        ))
+    }
+
+    /// MI combine from accumulated counts: (g11 [m x m], ca, cb, n) → MI.
+    pub fn run_combine(
+        &self,
+        impl_: Impl,
+        g11: &[f64],
+        ca: &[f64],
+        cb: &[f64],
+        n: f64,
+        m: usize,
+    ) -> Result<Vec<f64>> {
+        let meta = self.bucket(ArtifactKind::Combine, impl_, 0, m)?;
+        self.get_or_compile(&meta)?;
+        let c = meta.cols;
+        let g32: Vec<f32> = g11.iter().map(|&v| v as f32).collect();
+        let g_pad = Self::pad(&g32, m, m, c, c);
+        let mut ca_pad = vec![0.0f32; c];
+        let mut cb_pad = vec![0.0f32; c];
+        for i in 0..m {
+            ca_pad[i] = ca[i] as f32;
+            cb_pad[i] = cb[i] as f32;
+        }
+        let out = self.execute(
+            &meta.name,
+            &[
+                Self::matrix_literal(&g_pad, c, c)?,
+                xla::Literal::vec1(&ca_pad),
+                xla::Literal::vec1(&cb_pad),
+                xla::Literal::vec1(&[n as f32]),
+            ],
+        )?;
+        let flat = Self::to_vec_f32(&out[0])?;
+        let mut mi = vec![0.0f64; m * m];
+        for i in 0..m {
+            for j in 0..m {
+                mi[i * m + j] = flat[i * c + j] as f64;
+            }
+        }
+        Ok(mi)
+    }
+
+    /// Section-2 basic MI (ablation): no row-count arg; n must equal the
+    /// bucket rows for exact results, so callers should only use this on
+    /// exact bucket shapes.
+    pub fn run_mi_basic(&self, d: &[f32], n: usize, m: usize) -> Result<Vec<f64>> {
+        let meta = self.bucket(ArtifactKind::MiBasic, Impl::Xla, n, m)?;
+        if meta.rows != n {
+            return Err(Error::Shape(format!(
+                "mi_basic artifact requires exact rows {} (got {n}); \
+                 zero-padded rows are NOT exact for the Section-2 form",
+                meta.rows
+            )));
+        }
+        self.get_or_compile(&meta)?;
+        let padded = Self::pad(d, n, m, meta.rows, meta.cols);
+        let d_lit = Self::matrix_literal(&padded, meta.rows, meta.cols)?;
+        let out = self.execute(&meta.name, &[d_lit])?;
+        let flat = Self::to_vec_f32(&out[0])?;
+        let c = meta.cols;
+        let mut mi = vec![0.0f64; m * m];
+        for i in 0..m {
+            for j in 0..m {
+                mi[i * m + j] = flat[i * c + j] as f64;
+            }
+        }
+        Ok(mi)
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client via
+//! the `xla` crate. This is the only place the compiled Layer-1/Layer-2
+//! code is touched at request time — Python never runs here.
+//!
+//! * [`artifacts`] — manifest parsing and shape-bucket selection.
+//! * [`client`] — the client wrapper with a compile cache and typed
+//!   entry points for each artifact kind.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactKind, ArtifactMeta, ArtifactRegistry, Impl};
+pub use client::XlaRuntime;

@@ -1,0 +1,185 @@
+//! Shared bench harness (criterion is unavailable offline; every
+//! `rust/benches/*.rs` target is `harness = false` and uses this).
+//!
+//! Conventions:
+//! * Each bench prints a human table mirroring the paper's rows/series
+//!   AND one machine-readable `JSON:` line per cell.
+//! * `BULKMI_BENCH_FULL=1` runs the paper-exact sizes; the default
+//!   applies documented caps so a full `cargo bench` stays tractable on
+//!   this single-vCPU container (see EXPERIMENTS.md).
+//! * Cells skipped by a cap print `--` and a `"skipped"` JSON marker.
+//! * The pairwise baseline beyond its cap is *estimated* from a column
+//!   subsample (cost is exactly quadratic in columns), marked `est`.
+
+use crate::data::dataset::BinaryDataset;
+use crate::mi::pairwise::mi_pairwise;
+use std::time::Instant;
+
+/// True when the paper-exact sizes were requested.
+pub fn full_mode() -> bool {
+    std::env::var("BULKMI_BENCH_FULL").map(|v| v == "1" || v == "true").unwrap_or(false)
+}
+
+/// Optional global scale factor on dataset rows (default 1.0).
+pub fn row_scale() -> f64 {
+    std::env::var("BULKMI_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1.0)
+}
+
+/// Apply the row scale.
+pub fn scaled_rows(rows: usize) -> usize {
+    ((rows as f64 * row_scale()) as usize).max(64)
+}
+
+/// Measure one invocation (datasets here are big enough that a single
+/// shot is stable; small cells are repeated until >= 100 ms or 5 reps
+/// and the minimum is reported).
+pub fn measure<T>(mut f: impl FnMut() -> T) -> f64 {
+    let t0 = Instant::now();
+    let _keep = f();
+    let first = t0.elapsed().as_secs_f64();
+    if first >= 0.1 {
+        return first;
+    }
+    let mut best = first;
+    for _ in 0..4 {
+        let t0 = Instant::now();
+        let _keep = f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Time a single fallible invocation: `Secs` on success, `Skipped` (with
+/// a stderr note) on error. Used for the XLA cells, which are expensive
+/// enough that one shot is stable and a pre-flight check would double
+/// the bench wall time.
+pub fn measure_result<T, E: std::fmt::Display>(
+    label: &str,
+    f: impl FnOnce() -> Result<T, E>,
+) -> Cell {
+    let t0 = Instant::now();
+    match f() {
+        Ok(_) => Cell::Secs(t0.elapsed().as_secs_f64()),
+        Err(e) => {
+            eprintln!("{label} unavailable: {e}");
+            Cell::Skipped
+        }
+    }
+}
+
+/// A measured (or skipped/estimated) cell.
+#[derive(Clone, Copy, Debug)]
+pub enum Cell {
+    Secs(f64),
+    Estimated(f64),
+    Skipped,
+}
+
+impl Cell {
+    pub fn text(&self) -> String {
+        match self {
+            Cell::Secs(s) => format!("{s:.3}"),
+            Cell::Estimated(s) => format!("{s:.1}*"),
+            Cell::Skipped => "--".to_string(),
+        }
+    }
+
+    pub fn json_value(&self) -> String {
+        match self {
+            Cell::Secs(s) => format!("{s:.6}"),
+            Cell::Estimated(s) => format!("{s:.6}"),
+            Cell::Skipped => "null".to_string(),
+        }
+    }
+
+    pub fn marker(&self) -> &'static str {
+        match self {
+            Cell::Secs(_) => "measured",
+            Cell::Estimated(_) => "estimated",
+            Cell::Skipped => "skipped",
+        }
+    }
+}
+
+/// Emit the machine-readable line for one cell.
+pub fn emit_json(bench: &str, labels: &[(&str, String)], cell: &Cell) {
+    let mut body = format!("\"bench\":\"{bench}\"");
+    for (k, v) in labels {
+        let quoted = v.parse::<f64>().map(|_| v.clone()).unwrap_or(format!("\"{v}\""));
+        body.push_str(&format!(",\"{k}\":{quoted}"));
+    }
+    body.push_str(&format!(
+        ",\"secs\":{},\"status\":\"{}\"",
+        cell.json_value(),
+        cell.marker()
+    ));
+    println!("JSON: {{{body}}}");
+}
+
+/// Estimate the full pairwise time from a `sample_cols`-column subsample
+/// (pair count scales quadratically, per-pair cost is constant).
+pub fn estimate_pairwise(ds: &BinaryDataset, sample_cols: usize) -> f64 {
+    let m = ds.n_cols();
+    let k = sample_cols.min(m);
+    let sub = ds.col_block(0, k).expect("subsample in range");
+    let secs = measure(|| mi_pairwise(&sub));
+    let pairs_full = (m * (m + 1)) as f64 / 2.0;
+    let pairs_sub = (k * (k + 1)) as f64 / 2.0;
+    secs * pairs_full / pairs_sub
+}
+
+/// Print a header row: first column label + per-impl column names.
+pub fn print_header(first: &str, cols: &[&str]) {
+    print!("{first:<18}");
+    for c in cols {
+        print!(" {c:>14}");
+    }
+    println!();
+    println!("{}", "-".repeat(18 + cols.len() * 15));
+}
+
+/// Print one row of cells.
+pub fn print_row(label: &str, cells: &[Cell]) {
+    print!("{label:<18}");
+    for c in cells {
+        print!(" {:>14}", c.text());
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    #[test]
+    fn measure_returns_positive() {
+        let secs = measure(|| std::hint::black_box((0..1000).sum::<usize>()));
+        assert!(secs > 0.0);
+    }
+
+    #[test]
+    fn cell_formatting() {
+        assert_eq!(Cell::Skipped.text(), "--");
+        assert!(Cell::Secs(1.25).text().starts_with("1.250"));
+        assert!(Cell::Estimated(3.0).text().ends_with('*'));
+        assert_eq!(Cell::Skipped.json_value(), "null");
+    }
+
+    #[test]
+    fn pairwise_estimate_close_on_small_data() {
+        let ds = SynthSpec::new(2000, 30).sparsity(0.8).seed(1).generate();
+        let est = estimate_pairwise(&ds, 15);
+        let real = measure(|| mi_pairwise(&ds));
+        let ratio = est / real;
+        assert!(
+            (0.3..3.0).contains(&ratio),
+            "estimate {est} vs real {real} (ratio {ratio})"
+        );
+    }
+
+    #[test]
+    fn scaled_rows_applies_floor() {
+        assert!(scaled_rows(10) >= 64);
+    }
+}

@@ -1,0 +1,67 @@
+//! Crate-wide error type. Kept dependency-free (no `thiserror` macro
+//! expansion needed for a handful of variants).
+
+use std::fmt;
+
+/// Errors produced by the bulkmi library.
+#[derive(Debug)]
+pub enum Error {
+    /// Input shapes/sizes are inconsistent or unsupported.
+    Shape(String),
+    /// Dataset parsing / IO failures.
+    Io(std::io::Error),
+    /// Malformed file contents (CSV, .bmat, manifest, config).
+    Parse(String),
+    /// XLA / PJRT runtime failures.
+    Runtime(String),
+    /// No artifact bucket can serve the requested shape.
+    NoArtifact(String),
+    /// Coordinator-level failures (cancelled jobs, worker panics...).
+    Coordinator(String),
+    /// Configuration errors.
+    Config(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(s) => write!(f, "shape error: {s}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Parse(s) => write!(f, "parse error: {s}"),
+            Error::Runtime(s) => write!(f, "runtime error: {s}"),
+            Error::NoArtifact(s) => write!(f, "no artifact: {s}"),
+            Error::Coordinator(s) => write!(f, "coordinator error: {s}"),
+            Error::Config(s) => write!(f, "config error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_formats() {
+        assert!(Error::Shape("bad".into()).to_string().contains("shape"));
+        assert!(Error::Parse("x".into()).to_string().contains("parse"));
+        assert!(Error::Runtime("x".into()).to_string().contains("runtime"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = io.into();
+        assert!(matches!(e, Error::Io(_)));
+    }
+}

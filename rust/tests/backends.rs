@@ -1,0 +1,202 @@
+//! Cross-backend integration + property tests: every implementation of
+//! the paper's algorithm must agree with the textbook pairwise baseline
+//! on arbitrary inputs, and the MI matrix must satisfy its information-
+//! theoretic invariants. Uses the in-crate property-testing framework
+//! (`bulkmi::util::prop`) — the offline registry has no proptest.
+
+use bulkmi::data::dataset::BinaryDataset;
+use bulkmi::data::synth::SynthSpec;
+use bulkmi::mi::backend::{compute_mi, compute_mi_with, Backend};
+use bulkmi::mi::counts::entropy_bits;
+use bulkmi::mi::entropy::column_entropies;
+use bulkmi::util::prop::{gen, prop_check, Config};
+
+fn ds_from(n: usize, m: usize, bytes: Vec<u8>) -> BinaryDataset {
+    BinaryDataset::new(n, m, bytes).unwrap()
+}
+
+#[test]
+fn prop_all_native_backends_agree_with_pairwise() {
+    prop_check(
+        "native backends == pairwise",
+        Config::with_cases(24),
+        |rng| gen::binary_matrix(rng, 120, 24),
+        |(n, m, bytes)| {
+            let ds = ds_from(*n, *m, bytes.clone());
+            let reference = compute_mi(&ds, Backend::Pairwise).unwrap();
+            for b in [Backend::BulkBasic, Backend::BulkOpt, Backend::BulkSparse, Backend::BulkBitpack]
+            {
+                let got = compute_mi(&ds, b).unwrap();
+                let diff = got.max_abs_diff(&reference);
+                if diff >= 1e-10 {
+                    return Err(format!("{b}: diff {diff}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mi_matrix_invariants() {
+    prop_check(
+        "MI invariants (symmetry, nonneg, diag=H, bound)",
+        Config::with_cases(24),
+        |rng| gen::binary_matrix(rng, 150, 16),
+        |(n, m, bytes)| {
+            let ds = ds_from(*n, *m, bytes.clone());
+            let mi = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+            if mi.max_asymmetry() > 1e-12 {
+                return Err(format!("asymmetry {}", mi.max_asymmetry()));
+            }
+            if mi.min_value() < -1e-12 {
+                return Err(format!("negative MI {}", mi.min_value()));
+            }
+            let h = column_entropies(&ds);
+            for i in 0..*m {
+                if (mi.get(i, i) - h[i]).abs() > 1e-9 {
+                    return Err(format!("diag[{i}] {} != H {}", mi.get(i, i), h[i]));
+                }
+                for j in 0..*m {
+                    if mi.get(i, j) > h[i].min(h[j]) + 1e-9 {
+                        return Err(format!("MI({i},{j}) exceeds min entropy"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mi_invariant_under_row_permutation() {
+    prop_check(
+        "row order does not change MI",
+        Config::with_cases(12),
+        |rng| {
+            let (n, m, bytes) = gen::binary_matrix(rng, 80, 10);
+            let mut perm: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut perm);
+            (n, m, bytes, perm)
+        },
+        |(n, m, bytes, perm)| {
+            let ds = ds_from(*n, *m, bytes.clone());
+            let mut shuffled = vec![0u8; n * m];
+            for (dst, &src) in perm.iter().enumerate() {
+                shuffled[dst * m..(dst + 1) * m].copy_from_slice(
+                    &bytes[src * m..(src + 1) * m],
+                );
+            }
+            let ds2 = ds_from(*n, *m, shuffled);
+            let a = compute_mi(&ds, Backend::BulkOpt).unwrap();
+            let b = compute_mi(&ds2, Backend::BulkOpt).unwrap();
+            let diff = a.max_abs_diff(&b);
+            if diff > 1e-12 {
+                return Err(format!("diff {diff}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_mi_invariant_under_column_complement() {
+    // MI(X, Y) = MI(¬X, Y): flipping a column's bits preserves MI
+    prop_check(
+        "column complement preserves MI",
+        Config::with_cases(12),
+        |rng| gen::binary_matrix(rng, 100, 8),
+        |(n, m, bytes)| {
+            let ds = ds_from(*n, *m, bytes.clone());
+            let mut flipped = bytes.clone();
+            for r in 0..*n {
+                flipped[r * m] ^= 1; // complement column 0
+            }
+            let ds2 = ds_from(*n, *m, flipped);
+            let a = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+            let b = compute_mi(&ds2, Backend::BulkBitpack).unwrap();
+            for i in 0..*m {
+                for j in 0..*m {
+                    if (a.get(i, j) - b.get(i, j)).abs() > 1e-9 {
+                        return Err(format!(
+                            "MI({i},{j}) changed: {} -> {}",
+                            a.get(i, j),
+                            b.get(i, j)
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_duplicating_rows_preserves_mi() {
+    // probabilities are unchanged when every row appears twice
+    prop_check(
+        "row duplication preserves MI",
+        Config::with_cases(12),
+        |rng| gen::binary_matrix(rng, 60, 8),
+        |(n, m, bytes)| {
+            let ds = ds_from(*n, *m, bytes.clone());
+            let mut doubled = bytes.clone();
+            doubled.extend_from_slice(bytes);
+            let ds2 = ds_from(n * 2, *m, doubled);
+            let a = compute_mi(&ds, Backend::BulkOpt).unwrap();
+            let b = compute_mi(&ds2, Backend::BulkOpt).unwrap();
+            let diff = a.max_abs_diff(&b);
+            if diff > 1e-9 {
+                return Err(format!("diff {diff}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn workers_do_not_change_results() {
+    let ds = SynthSpec::new(500, 33).sparsity(0.7).seed(5).generate();
+    let one = compute_mi_with(&ds, Backend::BulkBitpack, 1).unwrap();
+    for w in [2, 3, 8] {
+        let many = compute_mi_with(&ds, Backend::BulkBitpack, w).unwrap();
+        assert_eq!(one.max_abs_diff(&many), 0.0, "workers={w}");
+    }
+}
+
+#[test]
+fn perfect_copy_reaches_entropy_bound() {
+    let ds = SynthSpec::new(4000, 6).sparsity(0.65).seed(8).plant(1, 4, 0.0).generate();
+    let mi = compute_mi(&ds, Backend::BulkOpt).unwrap();
+    let p = ds.col_counts()[1] as f64 / 4000.0;
+    assert!((mi.get(1, 4) - entropy_bits(p)).abs() < 1e-9);
+}
+
+#[test]
+fn extreme_shapes() {
+    // single column
+    let ds = SynthSpec::new(100, 1).sparsity(0.5).seed(1).generate();
+    let mi = compute_mi(&ds, Backend::BulkOpt).unwrap();
+    assert_eq!(mi.dim(), 1);
+    // wide and short
+    let ds = SynthSpec::new(2, 300).sparsity(0.5).seed(2).generate();
+    let reference = compute_mi(&ds, Backend::Pairwise).unwrap();
+    for b in [Backend::BulkBasic, Backend::BulkOpt, Backend::BulkSparse, Backend::BulkBitpack] {
+        assert!(compute_mi(&ds, b).unwrap().max_abs_diff(&reference) < 1e-10, "{b}");
+    }
+}
+
+#[test]
+fn all_zero_and_all_one_datasets() {
+    for fill in [0u8, 1u8] {
+        let ds = BinaryDataset::new(50, 8, vec![fill; 400]).unwrap();
+        for b in [Backend::Pairwise, Backend::BulkBasic, Backend::BulkOpt, Backend::BulkSparse, Backend::BulkBitpack]
+        {
+            let mi = compute_mi(&ds, b).unwrap();
+            assert!(
+                mi.data().iter().all(|&v| v == 0.0),
+                "{b}: constant data must give all-zero MI"
+            );
+        }
+    }
+}

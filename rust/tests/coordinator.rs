@@ -1,0 +1,209 @@
+//! Coordinator integration + property tests: plan coverage invariants,
+//! blockwise == monolithic exactness, service lifecycle under load,
+//! failure injection, and budget compliance.
+
+use bulkmi::coordinator::executor::NativeKind;
+use bulkmi::coordinator::planner::{block_for_budget, plan_blocks, task_bytes};
+use bulkmi::coordinator::progress::Progress;
+use bulkmi::coordinator::scheduler::{order_tasks, Schedule};
+use bulkmi::coordinator::service::{JobService, JobSpec, JobStatus};
+use bulkmi::coordinator::{execute_plan, GramProvider, NativeProvider};
+use bulkmi::data::synth::SynthSpec;
+use bulkmi::linalg::dense::Mat64;
+use bulkmi::mi::backend::{compute_mi, Backend};
+use bulkmi::util::error::Error;
+use bulkmi::util::prop::{gen, prop_check, Config};
+
+#[test]
+fn prop_plan_covers_every_pair_exactly_once() {
+    prop_check(
+        "plan coverage",
+        Config::with_cases(50),
+        |rng| {
+            let m = gen::int_in(rng, 1, 200);
+            let b = gen::int_in(rng, 1, 64);
+            (m, b)
+        },
+        |&(m, b)| {
+            let plan = plan_blocks(m, b).map_err(|e| e.to_string())?;
+            if plan.total_cells() != m * m {
+                return Err(format!("total cells {} != {}", plan.total_cells(), m * m));
+            }
+            let mut covered = vec![0u8; m * m];
+            for t in &plan.tasks {
+                for i in t.a_start..t.a_start + t.a_len {
+                    for j in t.b_start..t.b_start + t.b_len {
+                        covered[i * m + j] += 1;
+                        if !t.is_diagonal() {
+                            covered[j * m + i] += 1;
+                        }
+                    }
+                }
+            }
+            if covered.iter().any(|&c| c != 1) {
+                return Err("some cell not covered exactly once".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_blockwise_equals_monolithic_bit_for_bit() {
+    prop_check(
+        "blockwise == monolithic",
+        Config::with_cases(10),
+        |rng| {
+            let (n, m, bytes) = gen::binary_matrix(rng, 100, 30);
+            let block = gen::int_in(rng, 1, 32);
+            let workers = gen::int_in(rng, 1, 4);
+            (n, m, bytes, block, workers)
+        },
+        |(n, m, bytes, block, workers)| {
+            let ds = bulkmi::data::dataset::BinaryDataset::new(*n, *m, bytes.clone())
+                .map_err(|e| e.to_string())?;
+            let mono = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+            let plan = plan_blocks(*m, *block).unwrap();
+            let provider = NativeProvider::new(&ds, NativeKind::Bitpack);
+            let progress = Progress::new(plan.tasks.len());
+            let got = execute_plan(&ds, &plan, &provider, *workers, &progress)
+                .map_err(|e| e.to_string())?;
+            if got.max_abs_diff(&mono) != 0.0 {
+                return Err(format!("diff {}", got.max_abs_diff(&mono)));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_budget_respected_and_maximal() {
+    prop_check(
+        "budget block sizing",
+        Config::with_cases(40),
+        |rng| {
+            let n = gen::int_in(rng, 100, 1_000_000);
+            let m = gen::int_in(rng, 2, 20_000);
+            let budget = gen::int_in(rng, 1 << 16, 1 << 30);
+            (n, m, budget)
+        },
+        |&(n, m, budget)| {
+            let b = block_for_budget(n, m, budget);
+            if b == 0 || b > m {
+                return Err(format!("block {b} out of range"));
+            }
+            if b > 1 && task_bytes(n, b) > budget {
+                return Err(format!("block {b} exceeds budget"));
+            }
+            if b < m && task_bytes(n, b + 1) <= budget {
+                return Err(format!("block {b} not maximal"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn schedules_do_not_change_results() {
+    let ds = SynthSpec::new(300, 40).sparsity(0.8).seed(3).generate();
+    let provider = NativeProvider::new(&ds, NativeKind::Bitpack);
+    let mono = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+    for policy in [Schedule::Sequential, Schedule::LargestFirst, Schedule::DiagonalFirst] {
+        let mut plan = plan_blocks(40, 7).unwrap();
+        order_tasks(&mut plan.tasks, policy);
+        let progress = Progress::new(plan.tasks.len());
+        let got = execute_plan(&ds, &plan, &provider, 2, &progress).unwrap();
+        assert_eq!(got.max_abs_diff(&mono), 0.0, "{policy:?}");
+    }
+}
+
+/// Failure injection: a provider that errors on one specific task.
+struct FailingProvider {
+    inner: NativeProvider,
+    fail_at: usize,
+    calls: std::sync::atomic::AtomicUsize,
+}
+
+impl GramProvider for FailingProvider {
+    fn name(&self) -> &'static str {
+        "failing"
+    }
+
+    fn block_gram(
+        &self,
+        t: &bulkmi::coordinator::planner::BlockTask,
+    ) -> bulkmi::util::error::Result<Mat64> {
+        let k = self.calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        if k == self.fail_at {
+            return Err(Error::Runtime("injected failure".into()));
+        }
+        self.inner.block_gram(t)
+    }
+}
+
+#[test]
+fn executor_surfaces_provider_errors() {
+    let ds = SynthSpec::new(80, 20).sparsity(0.5).seed(4).generate();
+    let provider = FailingProvider {
+        inner: NativeProvider::new(&ds, NativeKind::Bitpack),
+        fail_at: 3,
+        calls: Default::default(),
+    };
+    let plan = plan_blocks(20, 5).unwrap();
+    let progress = Progress::new(plan.tasks.len());
+    let err = execute_plan(&ds, &plan, &provider, 2, &progress).unwrap_err();
+    assert!(matches!(err, Error::Runtime(_)), "got {err}");
+}
+
+#[test]
+fn service_survives_many_small_jobs() {
+    let svc = JobService::new(2, 32);
+    let mut handles = Vec::new();
+    for seed in 0..20 {
+        let ds = SynthSpec::new(40, 6).sparsity(0.5).seed(seed).generate();
+        handles.push((seed, svc.submit(ds, JobSpec { block_cols: 2, ..Default::default() }).unwrap()));
+    }
+    for (seed, h) in handles {
+        let status = svc.wait(h).unwrap();
+        assert!(matches!(status, JobStatus::Done(_)), "job {seed}: {status:?}");
+        let ds = SynthSpec::new(40, 6).sparsity(0.5).seed(seed).generate();
+        let want = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+        let got = svc.take(h).unwrap().unwrap();
+        assert_eq!(got.max_abs_diff(&want), 0.0, "job {seed}");
+    }
+    assert_eq!(svc.metrics().counter("jobs_done").get(), 20);
+}
+
+#[test]
+fn service_progress_is_monotonic() {
+    let svc = JobService::new(1, 2);
+    let ds = SynthSpec::new(3000, 100).sparsity(0.7).seed(6).generate();
+    let h = svc.submit(ds, JobSpec { block_cols: 10, ..Default::default() }).unwrap();
+    let mut last = 0.0f64;
+    loop {
+        match svc.poll(h).unwrap() {
+            JobStatus::Running(p) => {
+                assert!(p >= last, "progress went backwards: {last} -> {p}");
+                last = p;
+            }
+            s if s.is_terminal() => break,
+            _ => {}
+        }
+        std::thread::sleep(std::time::Duration::from_millis(1));
+    }
+    assert!(matches!(svc.wait(h).unwrap(), JobStatus::Done(_)));
+}
+
+#[test]
+fn cancelled_queued_job_never_runs() {
+    // one worker busy with a big job; the queued one is cancelled
+    let svc = JobService::new(1, 8);
+    let big = SynthSpec::new(8000, 128).sparsity(0.5).seed(7).generate();
+    let h1 = svc.submit(big, JobSpec { block_cols: 16, ..Default::default() }).unwrap();
+    let small = SynthSpec::new(50, 5).seed(8).generate();
+    let h2 = svc.submit(small, JobSpec::default()).unwrap();
+    svc.cancel(h2).unwrap();
+    let s2 = svc.wait(h2).unwrap();
+    assert!(matches!(s2, JobStatus::Cancelled), "got {s2:?}");
+    assert!(matches!(svc.wait(h1).unwrap(), JobStatus::Done(_)));
+}

@@ -1,0 +1,139 @@
+//! End-to-end integration: CLI surface, IO round trips through real
+//! files, config-driven runs, and the full generate → store → load →
+//! compute → analyze chain on each application-domain generator.
+
+use bulkmi::cli;
+use bulkmi::config::{RawConfig, RunConfig};
+use bulkmi::data::genomics::GenomicsSpec;
+use bulkmi::data::graph::SbmSpec;
+use bulkmi::data::io;
+use bulkmi::data::text::{binarize, builtin_corpus};
+use bulkmi::mi::backend::{compute_mi, Backend};
+use bulkmi::mi::topk::top_k_pairs;
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("bulkmi-e2e-{}-{name}", std::process::id()))
+}
+
+fn sv(xs: &[&str]) -> Vec<String> {
+    xs.iter().map(|s| s.to_string()).collect()
+}
+
+#[test]
+fn cli_full_workflow() {
+    let data = tmp("wf.bmat");
+    let out = tmp("wf-mi.csv");
+    assert_eq!(
+        cli::run(&sv(&[
+            "generate", "--rows", "500", "--cols", "24", "--sparsity", "0.85",
+            "--seed", "3", "--plant", "1:20:0.05", "--out", data.to_str().unwrap(),
+        ])),
+        0
+    );
+    assert_eq!(
+        cli::run(&sv(&[
+            "compute", "--input", data.to_str().unwrap(), "--backend", "bulk-bitpack",
+            "--block-cols", "8", "--top", "5", "--out", out.to_str().unwrap(),
+        ])),
+        0
+    );
+    // strongest pair in the written matrix is the planted one
+    let text = std::fs::read_to_string(&out).unwrap();
+    assert_eq!(text.lines().count(), 25);
+    assert_eq!(cli::run(&sv(&["help"])), 0);
+    assert_eq!(cli::run(&sv(&["info"])), 0);
+    assert_eq!(cli::run(&sv(&["selftest", "--rows", "80", "--cols", "8"])), 0);
+    assert_ne!(cli::run(&sv(&["frobnicate"])), 0);
+    assert_ne!(cli::run(&sv(&["compute", "--input", "/nonexistent.csv"])), 0);
+}
+
+#[test]
+fn cli_serve_demo() {
+    assert_eq!(
+        cli::run(&sv(&[
+            "serve", "--workers", "2", "--max-queued", "2", "--jobs", "4",
+            "--block-cols", "32",
+        ])),
+        0
+    );
+}
+
+#[test]
+fn config_driven_compute() {
+    let cfg_path = tmp("run.toml");
+    std::fs::write(
+        &cfg_path,
+        "[run]\nbackend = \"bulk-opt\"\nworkers = 2\nblock_cols = 6\n",
+    )
+    .unwrap();
+    let cfg = RunConfig::load(&cfg_path).unwrap();
+    assert_eq!(cfg.backend, Backend::BulkOpt);
+    let data = tmp("cfg.csv");
+    assert_eq!(
+        cli::run(&sv(&["generate", "--rows", "200", "--cols", "10", "--out", data.to_str().unwrap()])),
+        0
+    );
+    assert_eq!(
+        cli::run(&sv(&[
+            "compute", "--input", data.to_str().unwrap(), "--config",
+            cfg_path.to_str().unwrap(), "--top", "2",
+        ])),
+        0
+    );
+}
+
+#[test]
+fn config_rejects_typos() {
+    let raw = RawConfig::parse("[run]\nbackend = \"bulk-opt\"\nworker = 2\n").unwrap();
+    assert!(RunConfig::from_raw(&raw).is_err());
+}
+
+#[test]
+fn genomics_chain_recovers_ld() {
+    let panel = GenomicsSpec { n_samples: 1500, n_markers: 120, seed: 31, ..Default::default() }
+        .generate();
+    let path = tmp("panel.bmat");
+    io::write_bmat(&panel.dataset, &path).unwrap();
+    let ds = io::read_bmat(&path).unwrap();
+    let mi = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+    let top = top_k_pairs(&mi, panel.ld_pairs.len());
+    let truth: std::collections::HashSet<(usize, usize)> =
+        panel.ld_pairs.iter().copied().collect();
+    let sibling = |i: usize, j: usize| {
+        panel.ld_pairs.iter().any(|&(c, l)| l == i || c == i)
+            && panel.ld_pairs.iter().any(|&(c, l)| l == j || c == j)
+    };
+    let hits =
+        top.iter().filter(|p| truth.contains(&(p.i, p.j)) || sibling(p.i, p.j)).count();
+    assert!(
+        hits as f64 / panel.ld_pairs.len() as f64 >= 0.7,
+        "only {hits}/{} LD pairs recovered",
+        panel.ld_pairs.len()
+    );
+}
+
+#[test]
+fn graph_chain_finds_communities() {
+    let graph = SbmSpec { n_nodes: 90, k: 3, p_in: 0.45, p_out: 0.02, seed: 5 }.generate();
+    let mi = compute_mi(&graph.adjacency, Backend::BulkSparse).unwrap();
+    let top = top_k_pairs(&mi, 50);
+    let same = top
+        .iter()
+        .filter(|p| graph.community[p.i] == graph.community[p.j])
+        .count();
+    assert!(same >= 45, "only {same}/50 same-community");
+}
+
+#[test]
+fn text_chain_round_trips_csv() {
+    let docs = builtin_corpus();
+    let ds = binarize(&docs, 2, 64);
+    let path = tmp("text.csv");
+    io::write_csv(&ds, &path, true).unwrap();
+    let back = io::read_csv(&path).unwrap();
+    assert_eq!(back.bytes(), ds.bytes());
+    assert_eq!(back.names().unwrap(), ds.names().unwrap());
+    let mi = compute_mi(&back, Backend::BulkOpt).unwrap();
+    assert!(mi.min_value() > -1e-12);
+}

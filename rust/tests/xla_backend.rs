@@ -1,0 +1,182 @@
+//! Integration tests for the PJRT runtime + XLA MI backend against the
+//! real AOT artifacts. Requires `make artifacts` to have run (skips,
+//! loudly, when the artifact directory is absent — e.g. in a tree where
+//! only cargo ran).
+
+use bulkmi::data::synth::SynthSpec;
+use bulkmi::mi::backend::{compute_mi, Backend};
+use bulkmi::mi::xla::XlaMi;
+use bulkmi::runtime::{ArtifactKind, ArtifactRegistry, Impl, XlaRuntime};
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = std::env::var("BULKMI_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!(
+            "SKIPPING xla integration tests: no artifacts at {} (run `make artifacts`)",
+            dir.display()
+        );
+        None
+    }
+}
+
+fn registry() -> Option<ArtifactRegistry> {
+    artifacts_dir().map(|d| ArtifactRegistry::load(&d).expect("manifest parses"))
+}
+
+#[test]
+fn manifest_has_all_kinds() {
+    let Some(reg) = registry() else { return };
+    for kind in [
+        ArtifactKind::Mi,
+        ArtifactKind::Gram,
+        ArtifactKind::Xgram,
+        ArtifactKind::Combine,
+        ArtifactKind::MiBasic,
+    ] {
+        assert!(
+            reg.all().iter().any(|a| a.kind == kind),
+            "no artifact of kind {kind:?} in manifest"
+        );
+    }
+    // both impls present
+    assert!(reg.all().iter().any(|a| a.impl_ == Impl::Pallas));
+    assert!(reg.all().iter().any(|a| a.impl_ == Impl::Xla));
+}
+
+#[test]
+fn fused_mi_matches_pairwise_small() {
+    let Some(reg) = registry() else { return };
+    let rt = XlaRuntime::new(reg).unwrap();
+    let ds = SynthSpec::new(300, 40).sparsity(0.9).seed(1).generate();
+    let d: Vec<f32> = ds.bytes().iter().map(|&b| b as f32).collect();
+    let flat = rt.run_mi_fused(Impl::Xla, &d, 300, 40).unwrap();
+    let want = compute_mi(&ds, Backend::Pairwise).unwrap();
+    for i in 0..40 {
+        for j in 0..40 {
+            let diff = (flat[i * 40 + j] - want.get(i, j)).abs();
+            assert!(diff < 1e-4, "({i},{j}): {} vs {}", flat[i * 40 + j], want.get(i, j));
+        }
+    }
+}
+
+#[test]
+fn pallas_impl_matches_xla_impl() {
+    let Some(reg) = registry() else { return };
+    let rt = XlaRuntime::new(reg).unwrap();
+    let ds = SynthSpec::new(500, 60).sparsity(0.8).seed(2).generate();
+    let d: Vec<f32> = ds.bytes().iter().map(|&b| b as f32).collect();
+    let a = rt.run_mi_fused(Impl::Xla, &d, 500, 60).unwrap();
+    let b = rt.run_mi_fused(Impl::Pallas, &d, 500, 60).unwrap();
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn gram_partials_accumulate_exactly() {
+    let Some(reg) = registry() else { return };
+    let rt = XlaRuntime::new(reg).unwrap();
+    let ds = SynthSpec::new(5000, 50).sparsity(0.9).seed(3).generate();
+    let d: Vec<f32> = ds.bytes().iter().map(|&b| b as f32).collect();
+    // chunked accumulation
+    let mut g = vec![0.0f64; 50 * 50];
+    let mut c = vec![0.0f64; 50];
+    for chunk in [(0usize, 2048usize), (2048, 2048), (4096, 904)] {
+        let (lo, len) = chunk;
+        let (gp, cp) = rt.run_gram(Impl::Xla, &d[lo * 50..(lo + len) * 50], len, 50).unwrap();
+        for (a, v) in g.iter_mut().zip(&gp) {
+            *a += v;
+        }
+        for (a, v) in c.iter_mut().zip(&cp) {
+            *a += v;
+        }
+    }
+    // exact integer counts expected
+    let bit = ds.to_bitmatrix();
+    for i in 0..50 {
+        for j in 0..50 {
+            assert_eq!(g[i * 50 + j], bit.and_count(i, j) as f64, "G11[{i}][{j}]");
+        }
+    }
+    let counts = ds.col_counts();
+    for j in 0..50 {
+        assert_eq!(c[j], counts[j] as f64);
+    }
+    // combine through the artifact
+    let mi = rt.run_combine(Impl::Xla, &g, &c, &c, 5000.0, 50).unwrap();
+    let want = compute_mi(&ds, Backend::Pairwise).unwrap();
+    for i in 0..50 {
+        for j in 0..50 {
+            assert!((mi[i * 50 + j] - want.get(i, j)).abs() < 1e-4);
+        }
+    }
+}
+
+#[test]
+fn xgram_cross_block_matches() {
+    let Some(reg) = registry() else { return };
+    let rt = XlaRuntime::new(reg).unwrap();
+    let ds = SynthSpec::new(400, 30).sparsity(0.7).seed(4).generate();
+    let a = ds.col_block(0, 12).unwrap();
+    let b = ds.col_block(12, 18).unwrap();
+    let da: Vec<f32> = a.bytes().iter().map(|&v| v as f32).collect();
+    let db: Vec<f32> = b.bytes().iter().map(|&v| v as f32).collect();
+    let (g, ca, cb) = rt.run_xgram(Impl::Xla, &da, &db, 400, 12, 18).unwrap();
+    let bma = a.to_bitmatrix();
+    let bmb = b.to_bitmatrix();
+    let want = bma.gram_cross(&bmb).unwrap();
+    for i in 0..12 {
+        for j in 0..18 {
+            assert_eq!(g[i * 18 + j], want.get(i, j));
+        }
+    }
+    assert_eq!(ca.len(), 12);
+    assert_eq!(cb.len(), 18);
+}
+
+#[test]
+fn xla_backend_end_to_end_fused_path() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::load(&dir).unwrap();
+    let backend = XlaMi::new(XlaRuntime::new(reg).unwrap(), Impl::Xla);
+    let ds = SynthSpec::new(900, 90).sparsity(0.9).seed(5).generate();
+    let got = backend.compute(&ds).unwrap();
+    let want = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+    assert!(got.max_abs_diff(&want) < 1e-4, "diff {}", got.max_abs_diff(&want));
+    assert!(got.max_asymmetry() < 1e-5);
+}
+
+#[test]
+fn xla_backend_row_chunked_path() {
+    // rows beyond every fused bucket force the gram+combine path
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::load(&dir).unwrap();
+    let backend = XlaMi::new(XlaRuntime::new(reg).unwrap(), Impl::Xla);
+    let ds = SynthSpec::new(20_000, 64).sparsity(0.95).seed(6).generate();
+    let got = backend.compute(&ds).unwrap();
+    let want = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+    assert!(got.max_abs_diff(&want) < 1e-4, "diff {}", got.max_abs_diff(&want));
+}
+
+#[test]
+fn mi_basic_artifact_matches_on_exact_bucket() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::load(&dir).unwrap();
+    let rt = XlaRuntime::new(reg).unwrap();
+    let ds = SynthSpec::new(1024, 100).sparsity(0.9).seed(7).generate();
+    let d: Vec<f32> = ds.bytes().iter().map(|&b| b as f32).collect();
+    let got = rt.run_mi_basic(&d, 1024, 100).unwrap();
+    let want = compute_mi(&ds, Backend::Pairwise).unwrap();
+    for i in 0..100 {
+        for j in 0..100 {
+            assert!((got[i * 100 + j] - want.get(i, j)).abs() < 1e-4);
+        }
+    }
+    // non-exact rows are rejected (padding is not exact for Section 2)
+    assert!(rt.run_mi_basic(&d[..1000 * 100], 1000, 100).is_err());
+}
