@@ -140,9 +140,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         JobSpec { kind: NativeKind::Bitpack, block_cols: block, ..Default::default() },
     )?;
     let status = svc.wait(h)?;
-    let JobStatus::Done(service_mi) = status else {
+    let JobStatus::Done(out) = status else {
         panic!("service job failed: {status:?}");
     };
+    let service_mi = out.into_dense().expect("dense-sink job returns a matrix");
     assert_eq!(service_mi.max_abs_diff(&bitpack_mi), 0.0);
     println!("  job service round-trip OK\n{}", svc.metrics().report());
 

@@ -5,11 +5,12 @@
 //! and the memory savings are reported alongside.
 
 use bulkmi::coordinator::executor::NativeKind;
-use bulkmi::coordinator::planner::{plan_blocks, task_bytes};
+use bulkmi::coordinator::planner::{dense_output_bytes, plan_blocks, task_bytes};
 use bulkmi::coordinator::progress::Progress;
-use bulkmi::coordinator::{execute_plan, NativeProvider};
+use bulkmi::coordinator::{execute_plan, execute_plan_sink, NativeProvider};
 use bulkmi::data::synth::SynthSpec;
 use bulkmi::mi::backend::{compute_mi_with, Backend};
+use bulkmi::mi::sink::{MiSink, SinkSpec};
 use bulkmi::util::bench::{emit_json, full_mode, measure, print_header, print_row, Cell};
 
 fn main() {
@@ -53,4 +54,46 @@ fn main() {
     }
     println!("\nexpected: overhead near 1.0x for blocks >= 128; working-set");
     println!("memory shrinks quadratically with block size.");
+
+    // ---- sink ablation: what storing costs, vs what computing costs ----
+    // Same engine, same blocks; only the sink changes. Peak result
+    // state: dense = m^2 x 8 B; topk/threshold = O(k)/O(nnz) pairs.
+    println!("\n=== sink ablation (block 256, bitpack) ===\n");
+    print_header("m / sink", &["time (s)", "result MiB"]);
+    let sink_specs = ["dense", "topk:1000", "threshold:0.01"];
+    for &cols2 in &[1_000usize, 4_000] {
+        let rows2 = 5_000;
+        let ds2 = SynthSpec::new(rows2, cols2).sparsity(0.9).seed(12).generate();
+        let provider2 = NativeProvider::new(&ds2, NativeKind::Bitpack);
+        let plan2 = plan_blocks(cols2, 256).unwrap();
+        for spec_str in sink_specs {
+            let spec = SinkSpec::parse(spec_str).unwrap();
+            let mut result_bytes = 0usize;
+            let secs = measure(|| {
+                let mut sink: Box<dyn MiSink> = spec.build(cols2, rows2).unwrap();
+                let progress = Progress::new(plan2.tasks.len());
+                execute_plan_sink(&ds2, &plan2, &provider2, 1, &progress, sink.as_mut())
+                    .unwrap();
+                result_bytes = sink.finish().unwrap().state_bytes();
+            });
+            let mib = result_bytes as f64 / (1 << 20) as f64;
+            let label = format!("{cols2}/{spec_str}");
+            emit_json(
+                "ablation_sinks",
+                &[
+                    ("cols", cols2.to_string()),
+                    ("sink", spec_str.to_string()),
+                    ("result_mib", format!("{mib:.3}")),
+                ],
+                &Cell::Secs(secs),
+            );
+            print_row(&label, &[Cell::Secs(secs), Cell::Secs(mib)]);
+        }
+        println!(
+            "  (dense output for m={cols2}: {:.1} MiB; matrix-free sinks hold pairs only)",
+            dense_output_bytes(cols2) as f64 / (1 << 20) as f64
+        );
+    }
+    println!("\nexpected: near-identical time across sinks (compute dominates);");
+    println!("result memory collapses from O(m^2) to O(k) for topk/threshold.");
 }

@@ -2,17 +2,17 @@
 
 use super::args::Args;
 use crate::config::RunConfig;
-use crate::coordinator::executor::NativeKind;
-use crate::coordinator::planner::{plan_with_config, PlannerConfig};
+use crate::coordinator::planner::{matrix_free_block, plan_blocks, plan_with_config, PlannerConfig};
 use crate::coordinator::progress::Progress;
 use crate::coordinator::service::{JobService, JobSpec, JobStatus};
-use crate::coordinator::{execute_plan, NativeProvider};
+use crate::coordinator::{execute_plan, execute_plan_sink, NativeProvider};
 use crate::data::dataset::BinaryDataset;
 use crate::data::io;
 use crate::data::synth::SynthSpec;
 use crate::mi::backend::{compute_mi_with, Backend};
 use crate::mi::entropy::{normalized_mi, Normalization};
-use crate::mi::topk::top_k_pairs;
+use crate::mi::sink::{SinkOutput, SinkSpec};
+use crate::mi::topk::{top_k_pairs, MiPair};
 use crate::mi::MiMatrix;
 use crate::runtime::ArtifactRegistry;
 use crate::util::error::{Error, Result};
@@ -69,6 +69,7 @@ pub fn compute(argv: &[String]) -> Result<()> {
     let top = args.get_usize("top", 10)?;
     let normalize = args.get("normalize").map(|s| s.to_string());
     let out = args.get("out").map(PathBuf::from);
+    let sink = SinkSpec::parse(args.get("sink").unwrap_or("dense"))?;
     args.reject_unknown()?;
 
     let ds = io::load(&input)?;
@@ -79,6 +80,14 @@ pub fn compute(argv: &[String]) -> Result<()> {
         ds.sparsity(),
         input.display()
     );
+
+    if !sink.is_dense() {
+        // matrix-free / out-of-core path: never builds the m x m matrix
+        if normalize.is_some() {
+            return Err(Error::Parse("--normalize requires --sink dense".into()));
+        }
+        return compute_into_sink(&ds, &cfg, &sink, top, out.as_deref());
+    }
 
     let (mi, secs) = compute_with_plan(&ds, &cfg)?;
     println!(
@@ -131,11 +140,7 @@ pub fn compute_with_plan(ds: &BinaryDataset, cfg: &RunConfig) -> Result<(MiMatri
     };
     let needs_plan = cfg.block_cols > 0 || cfg.memory_budget > 0;
     if needs_plan && cfg.backend.is_native() {
-        let kind = match cfg.backend {
-            Backend::BulkSparse => NativeKind::Sparse,
-            Backend::BulkBasic | Backend::BulkOpt => NativeKind::Dense,
-            _ => NativeKind::Bitpack,
-        };
+        let kind = cfg.backend.native_kind();
         let plan = plan_with_config(ds.n_cols(), &planner)?;
         crate::info!(
             "blockwise plan: {} tasks, block {} cols",
@@ -152,6 +157,120 @@ pub fn compute_with_plan(ds: &BinaryDataset, cfg: &RunConfig) -> Result<(MiMatri
         let mi = compute_mi_with(ds, cfg.backend, cfg.workers)?;
         Ok((mi, t0.elapsed().as_secs_f64()))
     }
+}
+
+/// Matrix-free `compute`: blockwise plan + any non-dense sink. The
+/// block size defaults to the planner's matrix-free budget rule, so
+/// memory stays bounded no matter how many columns the dataset has.
+fn compute_into_sink(
+    ds: &BinaryDataset,
+    cfg: &RunConfig,
+    spec: &SinkSpec,
+    top: usize,
+    out: Option<&Path>,
+) -> Result<()> {
+    if !cfg.backend.is_native() {
+        return Err(Error::Parse(format!(
+            "--sink needs a native backend, not '{}'",
+            cfg.backend
+        )));
+    }
+    if matches!(spec, SinkSpec::Spill { .. }) && out.is_some() {
+        return Err(Error::Parse(
+            "--out is not supported with --sink spill (tiles + manifest.csv go to DIR)".into(),
+        ));
+    }
+    let block = if cfg.block_cols > 0 {
+        cfg.block_cols
+    } else {
+        matrix_free_block(ds.n_rows(), ds.n_cols(), cfg.memory_budget)
+    };
+    let plan = plan_blocks(ds.n_cols(), block)?;
+    crate::info!(
+        "matrix-free plan: {} tasks, block {} cols",
+        plan.tasks.len(),
+        plan.block
+    );
+    let mut sink = spec.build(ds.n_cols(), ds.n_rows())?;
+    let provider = NativeProvider::new(ds, cfg.backend.native_kind());
+    let progress = Progress::new(plan.tasks.len());
+    let t0 = std::time::Instant::now();
+    execute_plan_sink(ds, &plan, &provider, cfg.workers, &progress, sink.as_mut())?;
+    let output = sink.finish()?;
+    println!(
+        "computed {} over {} columns with {} in {}",
+        output.summary(),
+        ds.n_cols(),
+        cfg.backend,
+        fmt_secs(t0.elapsed().as_secs_f64())
+    );
+
+    let print_pairs = |pairs: &[MiPair], limit: usize| {
+        for p in pairs.iter().take(limit) {
+            println!("  {:<20} {:<20} {:.6}", ds.col_name(p.i), ds.col_name(p.j), p.mi);
+        }
+    };
+    match &output {
+        SinkOutput::TopK(pairs) => {
+            print_pairs(pairs, top);
+            if let Some(path) = out {
+                write_pairs_csv(pairs, ds, path)?;
+                crate::info!("wrote {} pairs to {}", pairs.len(), path.display());
+            }
+        }
+        SinkOutput::TopKPerColumn(cols) => {
+            for (c, pairs) in cols.iter().enumerate().take(top.max(1)) {
+                if let Some(best) = pairs.first() {
+                    let partner = if best.i == c { best.j } else { best.i };
+                    println!(
+                        "  {:<20} best partner {:<20} {:.6}",
+                        ds.col_name(c),
+                        ds.col_name(partner),
+                        best.mi
+                    );
+                }
+            }
+            if let Some(path) = out {
+                let flat: Vec<MiPair> = cols.iter().flatten().copied().collect();
+                write_pairs_csv(&flat, ds, path)?;
+                crate::info!("wrote {} pairs to {}", flat.len(), path.display());
+            }
+        }
+        SinkOutput::Sparse(sp) => {
+            println!(
+                "{} pairs at or above MI {:.6}{}",
+                sp.nnz(),
+                sp.threshold,
+                sp.pvalue.map(|p| format!(" (p <= {p})")).unwrap_or_default()
+            );
+            print_pairs(&sp.pairs, top);
+            if let Some(path) = out {
+                write_pairs_csv(&sp.pairs, ds, path)?;
+                crate::info!("wrote {} edges to {}", sp.nnz(), path.display());
+            }
+        }
+        SinkOutput::Spilled(info) => {
+            println!(
+                "spilled {} tiles ({} bytes) for m = {} to {}",
+                info.tiles,
+                info.bytes,
+                info.m,
+                info.dir.display()
+            );
+        }
+        SinkOutput::Dense(_) => unreachable!("dense handled by compute_with_plan"),
+    }
+    Ok(())
+}
+
+fn write_pairs_csv(pairs: &[MiPair], ds: &BinaryDataset, path: &Path) -> Result<()> {
+    use std::io::Write;
+    let mut w = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(w, "source,target,mi")?;
+    for p in pairs {
+        writeln!(w, "{},{},{:.8}", ds.col_name(p.i), ds.col_name(p.j), p.mi)?;
+    }
+    Ok(())
 }
 
 pub fn analyze(argv: &[String]) -> Result<()> {
@@ -302,6 +421,7 @@ pub fn serve(argv: &[String]) -> Result<()> {
     let max_queued = args.get_usize("max-queued", 4)?;
     let jobs = args.get_usize("jobs", 8)?;
     let block_cols = args.get_usize("block-cols", 64)?;
+    let sink = SinkSpec::parse(args.get("sink").unwrap_or("dense"))?;
     args.reject_unknown()?;
 
     let svc = JobService::new(workers, max_queued);
@@ -313,7 +433,13 @@ pub fn serve(argv: &[String]) -> Result<()> {
             .sparsity(0.9)
             .seed(k as u64)
             .generate();
-        let spec = JobSpec { block_cols, ..Default::default() };
+        // spill jobs each get their own subdirectory — concurrent jobs
+        // writing tiles into one shared dir would corrupt each other
+        let job_sink = match &sink {
+            SinkSpec::Spill { dir } => SinkSpec::Spill { dir: dir.join(format!("job{k}")) },
+            other => other.clone(),
+        };
+        let spec = JobSpec { block_cols, sink: job_sink, ..Default::default() };
         loop {
             match svc.submit(ds.clone(), spec.clone()) {
                 Ok(h) => {
@@ -330,7 +456,7 @@ pub fn serve(argv: &[String]) -> Result<()> {
     }
     for (k, h) in handles.iter().enumerate() {
         match svc.wait(*h)? {
-            JobStatus::Done(mi) => println!("job {k}: done, dim {}", mi.dim()),
+            JobStatus::Done(out) => println!("job {k}: done, {}", out.summary()),
             other => println!("job {k}: {other:?}"),
         }
     }
@@ -406,6 +532,70 @@ mod tests {
             "--block-cols", "4", "--top", "0",
         ]))
         .unwrap();
+    }
+
+    #[test]
+    fn compute_sink_paths_end_to_end() {
+        let data = tmp("sink.bmat");
+        generate(&sv(&[
+            "--rows", "300", "--cols", "10", "--sparsity", "0.7", "--seed", "3",
+            "--plant", "1:7:0.02", "--out", data.to_str().unwrap(),
+        ]))
+        .unwrap();
+
+        // topk sink writes a pair CSV
+        let pairs = tmp("sink-topk.csv");
+        compute(&sv(&[
+            "--input", data.to_str().unwrap(), "--sink", "topk:3",
+            "--block-cols", "4", "--out", pairs.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let text = std::fs::read_to_string(&pairs).unwrap();
+        assert_eq!(text.lines().count(), 4, "header + 3 pairs: {text}");
+        assert!(text.starts_with("source,target,mi"));
+
+        // per-column topk
+        compute(&sv(&[
+            "--input", data.to_str().unwrap(), "--sink", "topk-per-col:2", "--top", "3",
+        ]))
+        .unwrap();
+
+        // threshold + pvalue sinks
+        compute(&sv(&[
+            "--input", data.to_str().unwrap(), "--sink", "threshold:0.1",
+        ]))
+        .unwrap();
+        compute(&sv(&[
+            "--input", data.to_str().unwrap(), "--sink", "pvalue:0.001",
+        ]))
+        .unwrap();
+
+        // spill sink produces tiles + manifest that reassemble exactly
+        let spill = tmp("sink-spill-dir");
+        let _ = std::fs::remove_dir_all(&spill);
+        compute(&sv(&[
+            "--input", data.to_str().unwrap(), "--sink",
+            &format!("spill:{}", spill.display()), "--block-cols", "4",
+        ]))
+        .unwrap();
+        assert!(spill.join("manifest.csv").exists());
+        let assembled = crate::mi::sink::assemble_spilled(&spill).unwrap();
+        assert_eq!(assembled.dim(), 10);
+        let _ = std::fs::remove_dir_all(&spill);
+
+        // invalid combinations are rejected
+        assert!(compute(&sv(&[
+            "--input", data.to_str().unwrap(), "--sink", "topk:3", "--normalize", "min",
+        ]))
+        .is_err());
+        assert!(compute(&sv(&[
+            "--input", data.to_str().unwrap(), "--sink", "warp:1",
+        ]))
+        .is_err());
+        assert!(compute(&sv(&[
+            "--input", data.to_str().unwrap(), "--sink", "topk:3", "--backend", "xla",
+        ]))
+        .is_err());
     }
 
     #[test]

@@ -19,11 +19,14 @@ COMMANDS:
     generate    Generate a synthetic binary dataset
         --rows N --cols M [--sparsity S=0.9] [--seed K=0]
         [--plant A:B:NOISE ...] --out FILE.{csv,bmat}
-    compute     Compute the full MI matrix of a dataset
+    compute     Compute MI for a dataset (full matrix or a streaming sink)
         --input FILE.{csv,bmat} [--backend NAME=bulk-bitpack]
         [--workers N] [--block-cols B=0] [--memory-budget BYTES=0]
+        [--sink dense|topk:K|topk-per-col:K|threshold:T|pvalue:P|spill:DIR]
         [--top K=10] [--normalize min|max|mean|joint] [--out FILE.csv]
         [--config FILE.toml]
+        non-dense sinks run matrix-free: memory stays O(block^2) no
+        matter how many columns the dataset has
     analyze     MI with statistical post-processing + edge-list export
         --input FILE [--backend NAME] [--top K=10]
         [--bias-correction miller-madow] [--permutations P=0]
@@ -34,6 +37,7 @@ COMMANDS:
         [--rows N=500] [--cols M=40] [--with-xla]
     serve       Run the job service on a stream of generated jobs (demo)
         [--workers N] [--max-queued Q=4] [--jobs J=8] [--block-cols B]
+        [--sink dense|topk:K|topk-per-col:K|threshold:T|pvalue:P|spill:DIR]
     help        Show this message
 
 BACKENDS:

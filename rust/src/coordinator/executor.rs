@@ -1,22 +1,28 @@
 //! Plan execution: run block tasks on a Gram provider, combine each
-//! block's counts into MI, and assemble the full matrix.
+//! block's counts into MI, and stream the combined blocks into a
+//! [`MiSink`] — the crate's *single* execution engine. The monolithic
+//! backends are one-block plans over the same code path, so a blockwise
+//! run is bit-identical to a monolithic one by construction.
 //!
-//! Providers abstract the Gram substrate; the combine is always the
-//! shared exact implementation (`mi::bulk_opt::combine`), so a blockwise
-//! run is bit-identical to the monolithic one.
+//! Parallel runs have no shared output lock: workers send finished
+//! blocks over a channel and one collector thread feeds the sink, so
+//! high worker counts never contend on a global `Mutex<Mat64>`.
 
-use super::planner::{BlockPlan, BlockTask};
+use super::planner::{plan_blocks, BlockPlan, BlockTask};
 use super::progress::Progress;
 use crate::data::dataset::BinaryDataset;
 use crate::linalg::bitmat::BitMatrix;
 use crate::linalg::csr::CsrMatrix;
-use crate::linalg::dense::Mat64;
+use crate::linalg::dense::{Mat32, Mat64};
 use crate::mi::bulk_opt::combine;
+use crate::mi::sink::{DenseSink, MiSink, SinkOutput};
 use crate::mi::xla::XlaMi;
 use crate::mi::MiMatrix;
 use crate::runtime::Impl;
 use crate::util::error::{Error, Result};
 use crate::util::threadpool::parallel_for;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::sync_channel;
 use std::sync::Mutex;
 
 /// Computes the ones-co-occurrence Gram block for a column-block pair.
@@ -34,21 +40,36 @@ pub enum NativeKind {
     Sparse,
 }
 
-/// Gram provider over the in-process substrates. Cheap block extraction:
-/// the bit-packed/CSR forms are built once up front.
+/// Gram provider over the in-process substrates. Owns exactly one
+/// substrate (bit-packed, CSR, or dense f32), built once up front so
+/// per-task block extraction is cheap — no dataset clone, no repeated
+/// format conversion.
 pub struct NativeProvider {
     kind: NativeKind,
-    ds: BinaryDataset,
     bit: Option<BitMatrix>,
     csr: Option<CsrMatrix>,
+    dense: Option<Mat32>,
 }
 
 impl NativeProvider {
     pub fn new(ds: &BinaryDataset, kind: NativeKind) -> Self {
         let bit = matches!(kind, NativeKind::Bitpack).then(|| ds.to_bitmatrix());
         let csr = matches!(kind, NativeKind::Sparse).then(|| ds.to_csr());
-        NativeProvider { kind, ds: ds.clone(), bit, csr }
+        let dense = matches!(kind, NativeKind::Dense).then(|| ds.to_mat32());
+        NativeProvider { kind, bit, csr, dense }
     }
+}
+
+/// Copy columns `[start, start + len)` of a row-major matrix into a
+/// contiguous block (the dense substrate's per-task extraction).
+fn mat32_col_block(d: &Mat32, start: usize, len: usize) -> Mat32 {
+    let n = d.rows();
+    let mut out = Mat32::zeros(n, len);
+    for r in 0..n {
+        let src = &d.row(r)[start..start + len];
+        out.data_mut()[r * len..(r + 1) * len].copy_from_slice(src);
+    }
+    out
 }
 
 impl GramProvider for NativeProvider {
@@ -73,11 +94,18 @@ impl GramProvider for NativeProvider {
                 }
             }
             NativeKind::Dense => {
-                let a = self.ds.col_block(t.a_start, t.a_len)?.to_mat32();
+                let d = self.dense.as_ref().expect("built in new");
+                if t.a_start + t.a_len > d.cols() || t.b_start + t.b_len > d.cols() {
+                    return Err(Error::Shape(format!(
+                        "task {t:?} out of bounds for {} columns",
+                        d.cols()
+                    )));
+                }
+                let a = mat32_col_block(d, t.a_start, t.a_len);
                 if t.is_diagonal() {
                     Ok(crate::linalg::blas::gram(&a))
                 } else {
-                    let b = self.ds.col_block(t.b_start, t.b_len)?.to_mat32();
+                    let b = mat32_col_block(d, t.b_start, t.b_len);
                     crate::linalg::blas::gemm_at_b(&a, &b)
                 }
             }
@@ -97,7 +125,7 @@ impl GramProvider for NativeProvider {
 
 /// Gram provider over the AOT XLA artifacts (`xgram` buckets). Not
 /// `Sync` (PJRT executable cache is thread-affine): use
-/// [`execute_plan_serial`].
+/// [`execute_plan_sink_serial`] / [`execute_plan_serial`].
 pub struct XlaProvider {
     xla: XlaMi,
     impl_: Impl,
@@ -170,9 +198,101 @@ impl GramProvider for XlaProvider {
     }
 }
 
-/// Execute a plan in parallel over `workers` threads (provider must be
-/// shareable). Returns the assembled MI matrix; respects cancellation
-/// through `progress`.
+/// Execute a plan in parallel, streaming combined MI blocks into
+/// `sink`. Workers compute Gram + combine per task and send the result
+/// over a channel; the calling thread is the single consumer feeding
+/// the sink (no global output lock, and sinks need no `Sync`).
+///
+/// Respects cancellation through `progress`; the first provider or
+/// sink error aborts the remaining tasks and is returned.
+pub fn execute_plan_sink<P: GramProvider + Sync>(
+    ds: &BinaryDataset,
+    plan: &BlockPlan,
+    provider: &P,
+    workers: usize,
+    progress: &Progress,
+    sink: &mut dyn MiSink,
+) -> Result<()> {
+    let (n, colsums) = plan_inputs(ds, plan)?;
+    let n_tasks = plan.tasks.len();
+    let abort = AtomicBool::new(false);
+    // Bounded channel: workers block when the collector falls behind,
+    // so at most ~2 blocks per worker are ever in flight — the engine's
+    // peak memory stays O(workers * block²) by construction. The sender
+    // sits behind a Mutex so the shared `Fn` closure can send; the lock
+    // covers one send per *task*, not per cell.
+    let (tx, rx) = sync_channel::<(usize, Result<Mat64>)>(workers.max(1) * 2);
+    let tx = Mutex::new(tx);
+    let first_err = std::thread::scope(|scope| {
+        let tasks = &plan.tasks;
+        let abort = &abort;
+        let consumer = scope.spawn(move || {
+            let mut first_err: Option<Error> = None;
+            for (idx, res) in rx.iter() {
+                match res {
+                    Ok(block) if first_err.is_none() => {
+                        match sink.consume_block(&tasks[idx], &block) {
+                            Ok(()) => progress.task_done(),
+                            Err(e) => {
+                                first_err = Some(e);
+                                abort.store(true, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                    Ok(_) => {}
+                    Err(e) => {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                        abort.store(true, Ordering::Relaxed);
+                    }
+                }
+            }
+            first_err
+        });
+        parallel_for(n_tasks, workers, |idx| {
+            if progress.is_cancelled() || abort.load(Ordering::Relaxed) {
+                return;
+            }
+            let res = compute_block(provider, &plan.tasks[idx], &colsums, n);
+            // a send can only fail if the consumer died; nothing to do
+            let _ = tx.lock().unwrap().send((idx, res));
+        });
+        drop(tx); // close the channel so the consumer drains and exits
+        consumer.join().expect("sink consumer thread panicked")
+    });
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    if progress.is_cancelled() {
+        return Err(Error::Coordinator("job cancelled".into()));
+    }
+    Ok(())
+}
+
+/// Serial variant of [`execute_plan_sink`] for providers that are not
+/// `Sync` (e.g. [`XlaProvider`]).
+pub fn execute_plan_sink_serial<P: GramProvider>(
+    ds: &BinaryDataset,
+    plan: &BlockPlan,
+    provider: &P,
+    progress: &Progress,
+    sink: &mut dyn MiSink,
+) -> Result<()> {
+    let (n, colsums) = plan_inputs(ds, plan)?;
+    for t in &plan.tasks {
+        if progress.is_cancelled() {
+            return Err(Error::Coordinator("job cancelled".into()));
+        }
+        let block = compute_block(provider, t, &colsums, n)?;
+        sink.consume_block(t, &block)?;
+        progress.task_done();
+    }
+    Ok(())
+}
+
+/// Execute a plan into a full dense matrix (a [`DenseSink`] run) —
+/// the historical API, now a thin wrapper over the sink engine.
 pub fn execute_plan<P: GramProvider + Sync>(
     ds: &BinaryDataset,
     plan: &BlockPlan,
@@ -180,76 +300,61 @@ pub fn execute_plan<P: GramProvider + Sync>(
     workers: usize,
     progress: &Progress,
 ) -> Result<MiMatrix> {
-    run_tasks(ds, plan, provider, workers, progress)
+    let mut sink = DenseSink::new(plan.m);
+    execute_plan_sink(ds, plan, provider, workers, progress, &mut sink)?;
+    dense_result(&mut sink)
 }
 
-/// Execute a plan serially (for providers that are not `Sync`, e.g.
-/// [`XlaProvider`]).
+/// Serial dense-matrix execution (for providers that are not `Sync`).
 pub fn execute_plan_serial<P: GramProvider>(
     ds: &BinaryDataset,
     plan: &BlockPlan,
     provider: &P,
     progress: &Progress,
 ) -> Result<MiMatrix> {
-    let m = plan.m;
-    let n = ds.n_rows() as f64;
-    let colsums: Vec<f64> = ds.col_counts().iter().map(|&v| v as f64).collect();
-    let mut out = Mat64::zeros(m, m);
-    for t in &plan.tasks {
-        if progress.is_cancelled() {
-            return Err(Error::Coordinator("job cancelled".into()));
-        }
-        let block = compute_block(provider, t, &colsums, n)?;
-        write_block(&mut out, t, &block, m);
-        progress.task_done();
-    }
-    Ok(MiMatrix::from_mat(out))
+    let mut sink = DenseSink::new(plan.m);
+    execute_plan_sink_serial(ds, plan, provider, progress, &mut sink)?;
+    dense_result(&mut sink)
 }
 
-fn run_tasks<P: GramProvider + Sync>(
-    ds: &BinaryDataset,
-    plan: &BlockPlan,
-    provider: &P,
-    workers: usize,
-    progress: &Progress,
-) -> Result<MiMatrix> {
-    let m = plan.m;
-    if ds.n_cols() != m {
+/// Monolithic native computation through the blockwise engine: a
+/// one-block plan for serial runs, or enough blocks to keep `workers`
+/// busy. This is what `mi::backend::compute_mi_with` dispatches the
+/// `bulk-opt` / `bulk-sparse` / `bulk-bitpack` backends to — one
+/// Gram -> combine core for every substrate.
+pub fn compute_native(ds: &BinaryDataset, kind: NativeKind, workers: usize) -> Result<MiMatrix> {
+    let m = ds.n_cols();
+    // over-decompose 4x per worker so work-stealing balances the
+    // triangle's uneven task sizes; block 0 = monolithic single task
+    let block = if workers <= 1 { 0 } else { m.div_ceil(workers * 4).max(1) };
+    let plan = plan_blocks(m, block)?;
+    let provider = NativeProvider::new(ds, kind);
+    let progress = Progress::new(plan.tasks.len());
+    execute_plan(ds, &plan, &provider, workers, &progress)
+}
+
+fn dense_result(sink: &mut DenseSink) -> Result<MiMatrix> {
+    match sink.finish()? {
+        SinkOutput::Dense(mi) => Ok(mi),
+        other => Err(Error::Coordinator(format!(
+            "dense sink returned {} output",
+            other.kind_name()
+        ))),
+    }
+}
+
+/// Shared validation + sufficient statistics for a plan execution.
+fn plan_inputs(ds: &BinaryDataset, plan: &BlockPlan) -> Result<(f64, Vec<f64>)> {
+    if ds.n_cols() != plan.m {
         return Err(Error::Shape(format!(
-            "plan is over {m} columns but dataset has {}",
+            "plan is over {} columns but dataset has {}",
+            plan.m,
             ds.n_cols()
         )));
     }
     let n = ds.n_rows() as f64;
-    let colsums: Vec<f64> = ds.col_counts().iter().map(|&v| v as f64).collect();
-    let out = Mutex::new(Mat64::zeros(m, m));
-    let first_err: Mutex<Option<Error>> = Mutex::new(None);
-    parallel_for(plan.tasks.len(), workers, |idx| {
-        if progress.is_cancelled() || first_err.lock().unwrap().is_some() {
-            return;
-        }
-        let t = &plan.tasks[idx];
-        match compute_block(provider, t, &colsums, n) {
-            Ok(block) => {
-                let mut guard = out.lock().unwrap();
-                write_block(&mut guard, t, &block, m);
-                progress.task_done();
-            }
-            Err(e) => {
-                let mut guard = first_err.lock().unwrap();
-                if guard.is_none() {
-                    *guard = Some(e);
-                }
-            }
-        }
-    });
-    if let Some(e) = first_err.into_inner().unwrap() {
-        return Err(e);
-    }
-    if progress.is_cancelled() {
-        return Err(Error::Coordinator("job cancelled".into()));
-    }
-    Ok(MiMatrix::from_mat(out.into_inner().unwrap()))
+    let colsums = ds.col_counts().iter().map(|&v| v as f64).collect();
+    Ok((n, colsums))
 }
 
 /// Gram + combine for one task.
@@ -273,26 +378,13 @@ fn compute_block<P: GramProvider + ?Sized>(
     Ok(combine(&g, ca, cb, n))
 }
 
-/// Write a combined block (and its mirror for off-diagonal tasks).
-fn write_block(out: &mut Mat64, t: &BlockTask, block: &Mat64, m: usize) {
-    let _ = m;
-    for i in 0..t.a_len {
-        for j in 0..t.b_len {
-            let v = block.get(i, j);
-            out.set(t.a_start + i, t.b_start + j, v);
-            if !t.is_diagonal() {
-                out.set(t.b_start + j, t.a_start + i, v);
-            }
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::planner::plan_blocks;
     use crate::data::synth::SynthSpec;
     use crate::mi::backend::{compute_mi, Backend};
+    use crate::mi::sink::TopKSink;
 
     fn check_blockwise_matches(kind: NativeKind, workers: usize) {
         let ds = SynthSpec::new(200, 23).sparsity(0.8).seed(kind as u64).generate();
@@ -341,6 +433,18 @@ mod tests {
     }
 
     #[test]
+    fn compute_native_matches_across_workers() {
+        let ds = SynthSpec::new(300, 29).sparsity(0.7).seed(11).generate();
+        let serial = compute_native(&ds, NativeKind::Bitpack, 1).unwrap();
+        for workers in [2, 4, 7] {
+            for kind in [NativeKind::Bitpack, NativeKind::Dense, NativeKind::Sparse] {
+                let got = compute_native(&ds, kind, workers).unwrap();
+                assert_eq!(got.max_abs_diff(&serial), 0.0, "{kind:?} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
     fn cancellation_aborts() {
         let ds = SynthSpec::new(50, 12).sparsity(0.5).seed(1).generate();
         let provider = NativeProvider::new(&ds, NativeKind::Bitpack);
@@ -357,5 +461,57 @@ mod tests {
         let provider = NativeProvider::new(&ds, NativeKind::Bitpack);
         let plan = plan_blocks(13, 4).unwrap();
         assert!(execute_plan(&ds, &plan, &provider, 1, &Progress::new(1)).is_err());
+    }
+
+    /// A sink that errors on its nth block: the executor must surface
+    /// the error and stop issuing work.
+    struct FailingSink {
+        after: usize,
+        seen: usize,
+    }
+
+    impl MiSink for FailingSink {
+        fn consume_block(&mut self, _t: &BlockTask, _block: &Mat64) -> Result<()> {
+            self.seen += 1;
+            if self.seen > self.after {
+                return Err(Error::Coordinator("sink full".into()));
+            }
+            Ok(())
+        }
+
+        fn finish(&mut self) -> Result<SinkOutput> {
+            Ok(SinkOutput::TopK(Vec::new()))
+        }
+    }
+
+    #[test]
+    fn sink_errors_abort_the_run() {
+        let ds = SynthSpec::new(60, 20).sparsity(0.5).seed(3).generate();
+        let provider = NativeProvider::new(&ds, NativeKind::Bitpack);
+        let plan = plan_blocks(20, 4).unwrap();
+        let mut sink = FailingSink { after: 2, seen: 0 };
+        let progress = Progress::new(plan.tasks.len());
+        let err = execute_plan_sink(&ds, &plan, &provider, 2, &progress, &mut sink)
+            .unwrap_err();
+        assert!(matches!(err, Error::Coordinator(_)), "got {err}");
+    }
+
+    #[test]
+    fn topk_sink_through_parallel_engine() {
+        let ds = SynthSpec::new(500, 18).sparsity(0.6).seed(5).plant(2, 9, 0.02).generate();
+        let full = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+        let want = crate::mi::topk::top_k_pairs(&full, 4);
+        let provider = NativeProvider::new(&ds, NativeKind::Bitpack);
+        let plan = plan_blocks(18, 5).unwrap();
+        let mut sink = TopKSink::global(4);
+        let progress = Progress::new(plan.tasks.len());
+        execute_plan_sink(&ds, &plan, &provider, 3, &progress, &mut sink).unwrap();
+        let SinkOutput::TopK(got) = sink.finish().unwrap() else { panic!() };
+        assert_eq!(got.len(), 4);
+        assert_eq!((got[0].i, got[0].j), (2, 9));
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!((g.i, g.j), (w.i, w.j));
+            assert_eq!(g.mi, w.mi);
+        }
     }
 }

@@ -9,14 +9,18 @@
 //!   tasks under a memory budget.
 //! 2. [`scheduler`] — order tasks and track their lifecycle.
 //! 3. [`executor`] — run tasks on any Gram provider (bit-packed, dense,
-//!   sparse, or the XLA/PJRT artifacts) and assemble the full matrix.
+//!   sparse, or the XLA/PJRT artifacts) and stream the combined MI
+//!   blocks into a [`crate::mi::sink::MiSink`] (dense matrix, top-k,
+//!   threshold COO, or disk spill). This is the *single* execution
+//!   engine: the monolithic backends are one-block plans over it.
 //! 4. [`service`] — a long-lived job API (submit / poll / cancel)
 //!   with worker pool, progress reporting and admission control
 //!   ([`backpressure`]).
 //!
-//! The key exactness property (tested in `rust/tests/coordinator.rs`):
-//! a blockwise run equals the monolithic computation *bit for bit*,
-//! because every block combines the same integer counts.
+//! The key exactness property (tested in `rust/tests/coordinator.rs`
+//! and `rust/tests/sinks.rs`): a blockwise run equals the monolithic
+//! computation *bit for bit*, because every block combines the same
+//! integer counts.
 
 pub mod backpressure;
 pub mod executor;
@@ -27,7 +31,8 @@ pub mod service;
 pub mod streaming;
 
 pub use executor::{
-    execute_plan, execute_plan_serial, GramProvider, NativeProvider, XlaProvider,
+    compute_native, execute_plan, execute_plan_serial, execute_plan_sink,
+    execute_plan_sink_serial, GramProvider, NativeProvider, XlaProvider,
 };
 pub use planner::{plan_blocks, BlockPlan, BlockTask, PlannerConfig};
 pub use service::{JobHandle, JobService, JobStatus};

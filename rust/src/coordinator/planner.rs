@@ -56,7 +56,7 @@ impl BlockPlan {
 }
 
 /// Planner inputs.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, Default)]
 pub struct PlannerConfig {
     /// Requested block size in columns; 0 = derive from `memory_budget`
     /// (or monolithic when that is also 0).
@@ -66,12 +66,6 @@ pub struct PlannerConfig {
     /// Bytes per matrix cell of the Gram substrate (8 for f64 output
     /// blocks; used in the budget model).
     pub n_rows: usize,
-}
-
-impl Default for PlannerConfig {
-    fn default() -> Self {
-        PlannerConfig { block_cols: 0, memory_budget: 0, n_rows: 0 }
-    }
 }
 
 /// Build a plan for `m` columns with explicit block size.
@@ -118,6 +112,22 @@ pub fn block_for_budget(n: usize, m: usize, budget: usize) -> usize {
         }
     }
     lo
+}
+
+/// Bytes of the dense m x m f64 output a `DenseSink` materializes —
+/// the term matrix-free sinks delete from the memory model.
+pub fn dense_output_bytes(m: usize) -> usize {
+    m * m * 8
+}
+
+/// Block size for matrix-free sink runs (top-k / threshold / spill)
+/// when none is requested: the largest block whose *task* working set
+/// fits `budget` bytes (default 256 MiB when 0). Unlike the dense
+/// path there is no m x m term, so this stays bounded for any m —
+/// the out-of-core sizing rule documented in ROADMAP.md.
+pub fn matrix_free_block(n: usize, m: usize, budget: usize) -> usize {
+    let budget = if budget == 0 { 256 << 20 } else { budget };
+    block_for_budget(n, m, budget)
 }
 
 /// Plan from a [`PlannerConfig`] (block size override wins over budget).
@@ -192,6 +202,18 @@ mod tests {
                 assert!(task_bytes(100_000, b + 1) > budget);
             }
         }
+    }
+
+    #[test]
+    fn matrix_free_block_is_bounded_for_huge_m() {
+        // 1M columns: the dense output would need 8 TB...
+        assert_eq!(dense_output_bytes(1_000_000), 8_000_000_000_000);
+        // ...but the matrix-free task working set stays under budget
+        let b = matrix_free_block(100_000, 1_000_000, 0);
+        assert!(b >= 1);
+        assert!(task_bytes(100_000, b) <= 256 << 20 || b == 1);
+        // small m still planned monolithically under a huge budget
+        assert_eq!(matrix_free_block(100, 50, usize::MAX), 50);
     }
 
     #[test]

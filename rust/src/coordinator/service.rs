@@ -4,13 +4,13 @@
 //! the `bulkmi serve` CLI mode and the e2e example.
 
 use super::backpressure::Semaphore;
-use super::executor::{execute_plan, NativeKind, NativeProvider};
+use super::executor::{execute_plan_sink, NativeKind, NativeProvider};
 use super::planner::{plan_blocks, BlockPlan};
 use super::progress::Progress;
 use super::scheduler::{order_tasks, Schedule};
 use crate::data::dataset::BinaryDataset;
 use crate::metrics::Metrics;
-use crate::mi::MiMatrix;
+use crate::mi::sink::{SinkOutput, SinkSpec};
 use crate::util::error::{Error, Result};
 use crate::util::threadpool::WorkerPool;
 use std::collections::HashMap;
@@ -24,7 +24,10 @@ pub enum JobStatus {
     Queued,
     /// Fraction of block tasks completed.
     Running(f64),
-    Done(MiMatrix),
+    /// Whatever the job's sink retained (a dense matrix for the default
+    /// [`SinkSpec::Dense`]; top-k pairs, sparse COO, or spill info for
+    /// the matrix-free sinks).
+    Done(SinkOutput),
     Failed(String),
     Cancelled,
 }
@@ -48,6 +51,8 @@ pub struct JobSpec {
     /// Worker threads *within* the job's plan execution.
     pub inner_workers: usize,
     pub schedule: Schedule,
+    /// Where the combined MI blocks go (dense matrix by default).
+    pub sink: SinkSpec,
 }
 
 impl Default for JobSpec {
@@ -57,6 +62,7 @@ impl Default for JobSpec {
             block_cols: 0,
             inner_workers: 1,
             schedule: Schedule::LargestFirst,
+            sink: SinkSpec::Dense,
         }
     }
 }
@@ -123,13 +129,23 @@ impl JobService {
                 }
                 jobs.lock().unwrap().get_mut(&id).unwrap().status = JobStatus::Running(0.0);
                 let provider = NativeProvider::new(&ds, spec.kind);
-                let result = metrics.time("job_secs", || {
-                    execute_plan(&ds, &plan, &provider, spec.inner_workers, &progress)
+                let result = spec.sink.build(ds.n_cols(), ds.n_rows()).and_then(|mut sink| {
+                    metrics.time("job_secs", || {
+                        execute_plan_sink(
+                            &ds,
+                            &plan,
+                            &provider,
+                            spec.inner_workers,
+                            &progress,
+                            sink.as_mut(),
+                        )
+                    })?;
+                    sink.finish()
                 });
                 let status = match result {
-                    Ok(mi) => {
+                    Ok(out) => {
                         metrics.counter("jobs_done").inc();
-                        JobStatus::Done(mi)
+                        JobStatus::Done(out)
                     }
                     Err(_) if progress.is_cancelled() => {
                         metrics.counter("jobs_cancelled").inc();
@@ -182,8 +198,9 @@ impl JobService {
         }
     }
 
-    /// Remove a terminal job, returning its result when it succeeded.
-    pub fn take(&self, handle: JobHandle) -> Result<Option<MiMatrix>> {
+    /// Remove a terminal job, returning its sink output when it
+    /// succeeded.
+    pub fn take(&self, handle: JobHandle) -> Result<Option<SinkOutput>> {
         let mut jobs = self.jobs.lock().unwrap();
         match jobs.get(&handle.0) {
             None => Err(Error::Coordinator(format!("unknown job {}", handle.0))),
@@ -191,7 +208,7 @@ impl JobService {
                 Err(Error::Coordinator("job still in flight".into()))
             }
             Some(_) => Ok(match jobs.remove(&handle.0).unwrap().status {
-                JobStatus::Done(mi) => Some(mi),
+                JobStatus::Done(out) => Some(out),
                 _ => None,
             }),
         }
@@ -219,9 +236,33 @@ mod tests {
         let JobStatus::Done(_) = status else {
             panic!("expected Done, got {status:?}")
         };
-        let mi = svc.take(h).unwrap().unwrap();
+        let mi = svc.take(h).unwrap().unwrap().into_dense().unwrap();
         assert!(mi.max_abs_diff(&want) < 1e-12);
         assert_eq!(svc.job_count(), 0);
+    }
+
+    #[test]
+    fn topk_sink_job_round_trip() {
+        let svc = JobService::new(2, 4);
+        let ds = SynthSpec::new(400, 12).sparsity(0.6).seed(9).plant(0, 3, 0.02).generate();
+        let full = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+        let want = crate::mi::topk::top_k_pairs(&full, 5);
+        let spec = JobSpec {
+            block_cols: 5,
+            sink: SinkSpec::TopK { k: 5, per_column: false },
+            ..Default::default()
+        };
+        let h = svc.submit(ds, spec).unwrap();
+        let status = svc.wait(h).unwrap();
+        let JobStatus::Done(SinkOutput::TopK(pairs)) = status else {
+            panic!("expected top-k output, got {status:?}")
+        };
+        assert_eq!(pairs.len(), 5);
+        assert_eq!((pairs[0].i, pairs[0].j), (0, 3));
+        for (got, exp) in pairs.iter().zip(&want) {
+            assert_eq!((got.i, got.j), (exp.i, exp.j));
+            assert_eq!(got.mi, exp.mi);
+        }
     }
 
     #[test]

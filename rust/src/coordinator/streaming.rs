@@ -8,9 +8,11 @@
 //! Peak memory is one chunk + the m x m accumulator, independent of the
 //! total row count.
 
+use super::planner::plan_blocks;
 use crate::data::dataset::BinaryDataset;
 use crate::linalg::dense::Mat64;
 use crate::mi::bulk_opt::combine;
+use crate::mi::sink::MiSink;
 use crate::mi::MiMatrix;
 use crate::util::error::{Error, Result};
 
@@ -106,6 +108,35 @@ impl StreamingAccumulator {
     pub fn finalize(self) -> Result<MiMatrix> {
         self.snapshot()
     }
+
+    /// Stream the accumulated statistics through a [`MiSink`] in
+    /// `block_cols`-sized tiles (0 = one block) *without* materializing
+    /// the m x m MI matrix: each tile is combined from the `(G11,
+    /// colsums, n)` sufficient statistics and handed to the sink — so a
+    /// stream can end in a top-k list or a sparse edge set directly.
+    /// Bit-identical to extracting from [`Self::snapshot`].
+    ///
+    /// The caller still invokes `sink.finish()` (sinks may be fed from
+    /// several accumulators before finishing).
+    pub fn drain_into(&self, sink: &mut dyn MiSink, block_cols: usize) -> Result<()> {
+        if self.n_rows == 0 {
+            return Err(Error::Shape("no rows ingested".into()));
+        }
+        let plan = plan_blocks(self.m, block_cols)?;
+        let n = self.n_rows as f64;
+        for t in &plan.tasks {
+            let mut g = Mat64::zeros(t.a_len, t.b_len);
+            for i in 0..t.a_len {
+                for j in 0..t.b_len {
+                    g.set(i, j, self.g11.get(t.a_start + i, t.b_start + j));
+                }
+            }
+            let ca = &self.colsums[t.a_start..t.a_start + t.a_len];
+            let cb = &self.colsums[t.b_start..t.b_start + t.b_len];
+            sink.consume_block(t, &combine(&g, ca, cb, n))?;
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -156,6 +187,37 @@ mod tests {
         // final equals monolithic
         let want = compute_mi(&ds, Backend::BulkBitpack).unwrap();
         assert_eq!(late.max_abs_diff(&want), 0.0);
+    }
+
+    #[test]
+    fn drain_into_sinks_matches_snapshot() {
+        use crate::mi::sink::{MiSink, SinkOutput, TopKSink, ThresholdSink};
+        use crate::mi::topk::{edges_above, top_k_pairs};
+
+        let ds = SynthSpec::new(600, 14).sparsity(0.7).seed(5).plant(1, 8, 0.05).generate();
+        let mut acc = StreamingAccumulator::new(14, ChunkGram::Bitpack).unwrap();
+        for start in (0..600).step_by(101) {
+            let len = 101.min(600 - start);
+            acc.push_chunk(&ds.row_chunk(start, len).unwrap()).unwrap();
+        }
+        let full = acc.snapshot().unwrap();
+
+        let mut topk = TopKSink::global(3);
+        acc.drain_into(&mut topk, 4).unwrap();
+        let SinkOutput::TopK(pairs) = topk.finish().unwrap() else { panic!() };
+        for (got, exp) in pairs.iter().zip(&top_k_pairs(&full, 3)) {
+            assert_eq!((got.i, got.j), (exp.i, exp.j));
+            assert_eq!(got.mi, exp.mi);
+        }
+
+        let mut thresh = ThresholdSink::by_mi(0.1);
+        acc.drain_into(&mut thresh, 5).unwrap();
+        let SinkOutput::Sparse(sp) = thresh.finish().unwrap() else { panic!() };
+        let want = edges_above(&full, 0.1);
+        assert_eq!(sp.pairs.len(), want.len());
+        for (got, exp) in sp.pairs.iter().zip(&want) {
+            assert_eq!((got.i, got.j, got.mi), (exp.i, exp.j, exp.mi));
+        }
     }
 
     #[test]

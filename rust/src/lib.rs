@@ -39,6 +39,10 @@
 //! See `examples/` for end-to-end drivers and `rust/benches/` for the
 //! reproduction of every table and figure in the paper.
 
+// The numeric kernels deliberately index by (row, col) to mirror the
+// paper's pseudocode; iterator rewrites would obscure the math.
+#![allow(clippy::needless_range_loop)]
+
 pub mod cli;
 pub mod config;
 pub mod coordinator;

@@ -4,12 +4,10 @@
 //! `compute_mi` entry point.
 
 use super::bulk_basic::mi_bulk_basic;
-use super::bulk_bitpack::mi_bulk_bitpack_threads;
-use super::bulk_opt::mi_bulk_opt;
-use super::bulk_sparse::mi_bulk_sparse;
 use super::pairwise::mi_pairwise;
 use super::xla::XlaMi;
 use super::MiMatrix;
+use crate::coordinator::executor::{compute_native, NativeKind};
 use crate::data::dataset::BinaryDataset;
 use crate::util::error::{Error, Result};
 
@@ -78,6 +76,18 @@ impl Backend {
     pub fn is_native(self) -> bool {
         !matches!(self, Backend::Xla | Backend::XlaPallas)
     }
+
+    /// The blockwise-engine Gram substrate this backend maps to (the
+    /// coordinator / sink paths use it for blockwise plans). `Pairwise`
+    /// and `BulkBasic` have no block provider of their own and map to
+    /// the substrate that matches their cost profile best.
+    pub fn native_kind(self) -> NativeKind {
+        match self {
+            Backend::BulkSparse => NativeKind::Sparse,
+            Backend::BulkBasic | Backend::BulkOpt => NativeKind::Dense,
+            _ => NativeKind::Bitpack,
+        }
+    }
 }
 
 impl std::fmt::Display for Backend {
@@ -102,10 +112,12 @@ pub fn compute_mi_with(ds: &BinaryDataset, backend: Backend, workers: usize) -> 
     }
     match backend {
         Backend::Pairwise => Ok(mi_pairwise(ds)),
+        // the deliberate Section-2 ablation baseline (4 Gram matmuls)
         Backend::BulkBasic => Ok(mi_bulk_basic(ds)),
-        Backend::BulkOpt => Ok(mi_bulk_opt(ds)),
-        Backend::BulkSparse => Ok(mi_bulk_sparse(ds)),
-        Backend::BulkBitpack => Ok(mi_bulk_bitpack_threads(ds, workers)),
+        // all optimized native backends are one engine, three substrates
+        Backend::BulkOpt => compute_native(ds, NativeKind::Dense, workers),
+        Backend::BulkSparse => compute_native(ds, NativeKind::Sparse, workers),
+        Backend::BulkBitpack => compute_native(ds, NativeKind::Bitpack, workers),
         Backend::Xla => XlaMi::load_default()?.compute(ds),
         Backend::XlaPallas => XlaMi::load_default_pallas()?.compute(ds),
     }

@@ -1,59 +1,47 @@
-//! Section-2 basic bulk algorithm (the paper's "Bas-NN" row), implemented
-//! *literally*: materialize the complementary matrix ¬D, compute all four
-//! Gram matrices with dense matmuls, form joint/marginal probability
-//! matrices and the independence expectations, and sum the four masked
-//! `P log2(P/E)` terms. Deliberately unoptimized relative to
-//! [`super::bulk_opt`] — the pair is the paper's basic-vs-optimized
-//! ablation (expected ~3-4x gap from the 4-vs-1 matmul count).
+//! Section-2 basic bulk algorithm (the paper's "Bas-NN" row): materialize
+//! the complementary matrix ¬D and compute all four Gram matrices with
+//! dense matmuls — deliberately 4x the matmul work of [`super::bulk_opt`];
+//! the pair is the paper's basic-vs-optimized ablation. The element-wise
+//! MI combine is the one shared exact core ([`super::bulk_opt::combine`]):
+//! the Section-3 identities guarantee `(G11, colsums)` determine the other
+//! three Grams, which the debug assertions below cross-check cell by cell.
 
+use super::bulk_opt::combine;
 use super::MiMatrix;
 use crate::data::dataset::BinaryDataset;
 use crate::linalg::blas;
-use crate::linalg::dense::Mat64;
 
-/// `p * log2(p / e)` with the `0 log 0 := 0` convention.
-#[inline]
-fn term(p: f64, e: f64) -> f64 {
-    if p > 0.0 {
-        p * (p / e).log2()
-    } else {
-        0.0
-    }
-}
-
-/// Full basic bulk MI (paper Section 2, verbatim).
+/// Full basic bulk MI (paper Section 2: four Gram matmuls).
 pub fn mi_bulk_basic(ds: &BinaryDataset) -> MiMatrix {
     let n = ds.n_rows() as f64;
     let m = ds.n_cols();
     let d = ds.to_mat32();
     let nd = d.complement(); // the dense ¬D the optimized path avoids
 
-    // Step 2: the four Gram matrices (joint counts).
+    // Step 2: the four Gram matrices (joint counts) — the ablation's cost.
     let g11 = blas::gram(&d);
     let g00 = blas::gram(&nd);
     let g01 = blas::gemm_at_b(&nd, &d).expect("same rows");
     let g10 = blas::gemm_at_b(&d, &nd).expect("same rows");
 
-    // Step 3: marginals from the diagonals.
-    let p1: Vec<f64> = g11.diag().iter().map(|&v| v / n).collect();
-    let p0: Vec<f64> = g00.diag().iter().map(|&v| v / n).collect();
+    // Step 3: marginal counts from the G11 diagonal.
+    let c = g11.diag();
 
-    // Steps 4-5: expectations via outer products + the eq. (3) combine.
-    let mut out = Mat64::zeros(m, m);
+    // The literal Grams must satisfy the Section-3 identities the shared
+    // combine relies on (G01 = C - G11 etc.) — checked in debug builds.
     for i in 0..m {
         for j in 0..m {
-            let p11 = g11.get(i, j) / n;
-            let p00 = g00.get(i, j) / n;
-            let p01 = g01.get(i, j) / n; // X_i = 0, X_j = 1
-            let p10 = g10.get(i, j) / n;
-            let mi = term(p11, p1[i] * p1[j])
-                + term(p10, p1[i] * p0[j])
-                + term(p01, p0[i] * p1[j])
-                + term(p00, p0[i] * p0[j]);
-            out.set(i, j, mi);
+            debug_assert!((g01.get(i, j) - (c[j] - g11.get(i, j))).abs() < 1e-6, "G01({i},{j})");
+            debug_assert!((g10.get(i, j) - (c[i] - g11.get(i, j))).abs() < 1e-6, "G10({i},{j})");
+            debug_assert!(
+                (g00.get(i, j) - (n - c[i] - c[j] + g11.get(i, j))).abs() < 1e-6,
+                "G00({i},{j})"
+            );
         }
     }
-    MiMatrix::from_mat(out)
+
+    // Steps 4-5: the shared exact eq. (3) combine on (G11, colsums, n).
+    MiMatrix::from_mat(combine(&g11, &c, &c, n))
 }
 
 #[cfg(test)]

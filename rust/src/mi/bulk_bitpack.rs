@@ -4,70 +4,30 @@
 //! `popcount(a & b)` over 64-bit words: 64 multiply-adds per instruction,
 //! integer-exact, cache-friendly column-major layout.
 //!
-//! Optionally parallel across output row-blocks via
-//! [`crate::util::threadpool::parallel_for`].
+//! Both entry points are thin wrappers over the blockwise engine
+//! ([`crate::coordinator::executor::compute_native`]): serial runs are a
+//! one-block plan, parallel runs over-decompose into block tasks whose
+//! results are channeled to a single collector — there is no shared
+//! output lock anywhere on this path.
 
-use super::bulk_opt::combine;
 use super::MiMatrix;
+use crate::coordinator::executor::{compute_native, NativeKind};
 use crate::data::dataset::BinaryDataset;
-use crate::linalg::bitmat::BitMatrix;
 use crate::linalg::dense::Mat64;
-use crate::util::threadpool::parallel_for;
-use std::sync::Mutex;
 
 /// Full optimized bulk MI on the bit-packed Gram, single-threaded.
 pub fn mi_bulk_bitpack(ds: &BinaryDataset) -> MiMatrix {
     mi_bulk_bitpack_threads(ds, 1)
 }
 
-/// Same, with the Gram parallelized over `workers` threads (row blocks
-/// of the output are independent).
+/// Same, parallelized over `workers` threads (independent column-block
+/// tasks through the blockwise engine; bit-identical to serial).
 pub fn mi_bulk_bitpack_threads(ds: &BinaryDataset, workers: usize) -> MiMatrix {
-    let bm = ds.to_bitmatrix();
-    let n = ds.n_rows() as f64;
-    let c: Vec<f64> = bm.col_counts().iter().map(|&v| v as f64).collect();
-    let g11 = if workers <= 1 { bm.gram() } else { gram_parallel(&bm, workers) };
-    MiMatrix::from_mat(combine(&g11, &c, &c, n))
-}
-
-/// Parallel symmetric Gram: split output rows into bands; each band's
-/// upper-triangle cells are computed independently, then mirrored.
-fn gram_parallel(bm: &BitMatrix, workers: usize) -> Mat64 {
-    let m = bm.cols();
-    let out = Mutex::new(Mat64::zeros(m, m));
-    // Band tasks sized so later (shorter) rows of the triangle balance:
-    // use more tasks than workers and let work-stealing even it out.
-    let bands = (workers * 8).min(m.max(1));
-    let band_size = m.div_ceil(bands.max(1)).max(1);
-    let n_tasks = m.div_ceil(band_size);
-    parallel_for(n_tasks, workers, |t| {
-        let lo = t * band_size;
-        let hi = ((t + 1) * band_size).min(m);
-        // compute locally, then write under the lock once per band
-        let mut local: Vec<(usize, Vec<f64>)> = Vec::with_capacity(hi - lo);
-        for i in lo..hi {
-            let ci = bm.col(i);
-            let mut row = vec![0.0f64; m - i];
-            for j in i..m {
-                row[j - i] = dot(ci, bm.col(j)) as f64;
-            }
-            local.push((i, row));
-        }
-        let mut guard = out.lock().unwrap();
-        for (i, row) in local {
-            for (off, v) in row.into_iter().enumerate() {
-                let j = i + off;
-                guard.set(i, j, v);
-                guard.set(j, i, v);
-            }
-        }
-    });
-    out.into_inner().unwrap()
-}
-
-#[inline]
-fn dot(a: &[u64], b: &[u64]) -> u64 {
-    a.iter().zip(b).map(|(&x, &y)| (x & y).count_ones() as u64).sum()
+    if ds.n_cols() == 0 {
+        return MiMatrix::from_mat(Mat64::zeros(0, 0));
+    }
+    compute_native(ds, NativeKind::Bitpack, workers)
+        .expect("block plan on non-empty columns")
 }
 
 #[cfg(test)]

@@ -8,12 +8,15 @@
 //!
 //! so the element-wise combine needs only `(G11, colsums, n)`. The
 //! combine here is the shared implementation reused by the sparse,
-//! bit-packed and coordinator paths.
+//! bit-packed and coordinator paths; the entry point itself is a
+//! one-block plan through the blockwise engine
+//! ([`crate::coordinator::executor::compute_native`]), so the
+//! monolithic and blockwise paths are literally the same code.
 
 use super::counts::mi_from_counts_f64;
 use super::MiMatrix;
+use crate::coordinator::executor::{compute_native, NativeKind};
 use crate::data::dataset::BinaryDataset;
-use crate::linalg::blas;
 use crate::linalg::dense::Mat64;
 
 /// Element-wise eq. (3) from `(G11, colsums_a, colsums_b, n)`.
@@ -40,13 +43,13 @@ pub fn combine(g11: &Mat64, ca: &[f64], cb: &[f64], n: f64) -> Mat64 {
     out
 }
 
-/// Full optimized bulk MI for a dataset (dense f32 Gram substrate).
+/// Full optimized bulk MI for a dataset (dense f32 Gram substrate),
+/// routed through the blockwise engine as a one-block plan.
 pub fn mi_bulk_opt(ds: &BinaryDataset) -> MiMatrix {
-    let d = ds.to_mat32();
-    let g11 = blas::gram(&d);
-    let c = d.col_sums();
-    let n = ds.n_rows() as f64;
-    MiMatrix::from_mat(combine(&g11, &c, &c, n))
+    if ds.n_cols() == 0 {
+        return MiMatrix::from_mat(Mat64::zeros(0, 0));
+    }
+    compute_native(ds, NativeKind::Dense, 1).expect("one-block plan on non-empty columns")
 }
 
 #[cfg(test)]

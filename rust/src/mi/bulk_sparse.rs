@@ -6,17 +6,18 @@
 //! is Σ_r nnz(r)², which loses to dense at ~90% sparsity and wins
 //! decisively at ≥99% (reproduced by `benches/fig3_sparsity.rs`).
 
-use super::bulk_opt::combine;
 use super::MiMatrix;
+use crate::coordinator::executor::{compute_native, NativeKind};
 use crate::data::dataset::BinaryDataset;
+use crate::linalg::dense::Mat64;
 
-/// Full optimized bulk MI with a sparse (CSR row-pair expansion) Gram.
+/// Full optimized bulk MI with a sparse (CSR row-pair expansion) Gram,
+/// routed through the blockwise engine as a one-block plan.
 pub fn mi_bulk_sparse(ds: &BinaryDataset) -> MiMatrix {
-    let csr = ds.to_csr();
-    let g11 = csr.gram();
-    let c: Vec<f64> = csr.col_counts().iter().map(|&v| v as f64).collect();
-    let n = ds.n_rows() as f64;
-    MiMatrix::from_mat(combine(&g11, &c, &c, n))
+    if ds.n_cols() == 0 {
+        return MiMatrix::from_mat(Mat64::zeros(0, 0));
+    }
+    compute_native(ds, NativeKind::Sparse, 1).expect("one-block plan on non-empty columns")
 }
 
 #[cfg(test)]

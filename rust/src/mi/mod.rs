@@ -8,6 +8,9 @@
 //! * [`bulk_bitpack`] — Section 3 on AND+popcount (hardware-optimized).
 //! * [`xla`] — Section 3 through the AOT Pallas/XLA artifacts (Opt-T row).
 //! * [`backend`] — the `MiBackend` trait and dispatch.
+//! * [`sink`] — streaming consumers of MI blocks (dense / top-k /
+//!   threshold / disk-spill); what decouples computing all pairs from
+//!   storing all pairs.
 //! * [`entropy`], [`topk`] — analysis utilities on MI matrices.
 
 pub mod backend;
@@ -20,6 +23,7 @@ pub mod counts;
 pub mod entropy;
 pub mod pairwise;
 pub mod significance;
+pub mod sink;
 pub mod topk;
 pub mod xla;
 

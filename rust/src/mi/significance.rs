@@ -7,6 +7,7 @@ use super::counts::mi_from_counts_u64;
 use super::MiMatrix;
 use crate::data::dataset::BinaryDataset;
 use crate::linalg::dense::Mat64;
+use crate::util::error::Error;
 use crate::util::rng::Rng;
 
 /// Miller–Madow bias-corrected MI matrix.
@@ -86,6 +87,68 @@ pub fn top_pairs_significance(
         .collect()
 }
 
+/// Complementary error function (Abramowitz & Stegun 7.1.26 rational
+/// approximation; |error| <= 1.5e-7 — ample for screening cutoffs).
+fn erfc(x: f64) -> f64 {
+    if x < 0.0 {
+        return 2.0 - erfc(-x);
+    }
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    poly * (-x * x).exp()
+}
+
+/// Survival function of the chi-square distribution with 1 degree of
+/// freedom: `P(X >= x) = erfc(sqrt(x / 2))`.
+pub fn chi2_sf_1df(x: f64) -> f64 {
+    if x <= 0.0 {
+        1.0
+    } else {
+        erfc((x / 2.0).sqrt())
+    }
+}
+
+/// Asymptotic independence p-value for an observed MI (bits) over
+/// `n_rows` observations: under H0, the G statistic
+/// `2 n ln(2) MI_bits` is chi-square with 1 dof for binary variables
+/// (the standard G-test / MI asymptotics behind p-value screening).
+pub fn mi_pvalue_asymptotic(mi_bits: f64, n_rows: usize) -> f64 {
+    chi2_sf_1df(2.0 * n_rows as f64 * std::f64::consts::LN_2 * mi_bits)
+}
+
+/// Smallest MI (bits) whose asymptotic p-value is `<= pvalue` for
+/// `n_rows` observations — the conversion [`crate::mi::sink::ThresholdSink`]
+/// uses so `--sink pvalue:P` can screen pairs without per-pair
+/// permutation tests.
+pub fn mi_threshold_for_pvalue(pvalue: f64, n_rows: usize) -> Result<f64, Error> {
+    if !(pvalue > 0.0 && pvalue < 1.0) {
+        return Err(Error::Parse(format!("p-value cutoff {pvalue} not in (0, 1)")));
+    }
+    if n_rows == 0 {
+        return Err(Error::Shape("p-value threshold needs n_rows >= 1".into()));
+    }
+    // invert the (monotone decreasing) chi-square survival by bisection
+    let mut hi = 1.0f64;
+    while chi2_sf_1df(hi) > pvalue {
+        hi *= 2.0;
+        if hi > 1e9 {
+            break;
+        }
+    }
+    let mut lo = 0.0f64;
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if chi2_sf_1df(mid) > pvalue {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Ok(hi / (2.0 * n_rows as f64 * std::f64::consts::LN_2))
+}
+
 fn pair_mi(x: &[u8], y: &[u8]) -> f64 {
     let mut n11 = 0u64;
     let mut n10 = 0u64;
@@ -156,6 +219,45 @@ mod tests {
         assert_eq!(sig.len(), 3);
         assert_eq!((sig[0].0, sig[0].1), (0, 1));
         assert!(sig[0].3 < 0.05);
+    }
+
+    #[test]
+    fn chi2_survival_matches_known_quantiles() {
+        assert_eq!(chi2_sf_1df(0.0), 1.0);
+        // classical 1-dof critical values
+        assert!((chi2_sf_1df(3.841) - 0.05).abs() < 2e-3);
+        assert!((chi2_sf_1df(6.635) - 0.01).abs() < 1e-3);
+        // monotone decreasing
+        assert!(chi2_sf_1df(1.0) > chi2_sf_1df(2.0));
+    }
+
+    #[test]
+    fn pvalue_threshold_round_trips() {
+        for &(p, n) in &[(0.05f64, 1000usize), (0.01, 500), (1e-6, 20_000)] {
+            let t = mi_threshold_for_pvalue(p, n).unwrap();
+            assert!(t > 0.0);
+            let back = mi_pvalue_asymptotic(t, n);
+            assert!((back - p).abs() <= p * 0.05 + 1e-7, "p={p} back={back}");
+        }
+        // larger n -> smaller MI needed for the same significance
+        let t_small = mi_threshold_for_pvalue(0.01, 100).unwrap();
+        let t_big = mi_threshold_for_pvalue(0.01, 10_000).unwrap();
+        assert!(t_big < t_small);
+        assert!(mi_threshold_for_pvalue(0.0, 100).is_err());
+        assert!(mi_threshold_for_pvalue(1.5, 100).is_err());
+        assert!(mi_threshold_for_pvalue(0.05, 0).is_err());
+    }
+
+    #[test]
+    fn asymptotic_pvalue_tracks_permutation() {
+        // the planted strong pair is significant under both tests
+        let ds = planted();
+        let mi = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+        let p_asym = mi_pvalue_asymptotic(mi.get(0, 1), ds.n_rows());
+        assert!(p_asym < 1e-6, "planted pair asymptotic p = {p_asym}");
+        // an independent pair is not
+        let p_indep = mi_pvalue_asymptotic(mi.get(5, 6), ds.n_rows());
+        assert!(p_indep > 1e-4, "independent pair asymptotic p = {p_indep}");
     }
 
     #[test]

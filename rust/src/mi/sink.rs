@@ -1,0 +1,803 @@
+//! Streaming MI sinks: where combined MI blocks go.
+//!
+//! The blockwise engine ([`crate::coordinator::executor`]) produces the
+//! exact MI values of one column-block pair at a time. A [`MiSink`]
+//! decides what to *keep* from that stream, which decouples the cost of
+//! computing all-pairs MI (cheap, the paper's contribution) from the
+//! cost of storing all pairs (the m x m dense matrix that caps m on
+//! real hardware: m = 100k already needs ~80 GB).
+//!
+//! Shipped sinks:
+//!
+//! | sink | keeps | memory | use case |
+//! |------|-------|--------|----------|
+//! | [`DenseSink`] | every cell | m² x 8 B | full matrix (legacy behaviour) |
+//! | [`TopKSink`] | k strongest pairs | O(k) | feature selection, screening |
+//! | [`ThresholdSink`] | pairs ≥ cutoff | O(nnz) | MI networks, p-value screens |
+//! | [`TileSpillSink`] | every cell, on disk | O(block²) | out-of-core m |
+//!
+//! `DenseSink` is bit-identical to the historical `MiMatrix` assembly;
+//! `TopKSink`/`ThresholdSink` agree exactly with post-hoc extraction
+//! from the full matrix (property-tested in `rust/tests/sinks.rs`).
+
+use super::topk::MiPair;
+use super::MiMatrix;
+use crate::coordinator::planner::BlockTask;
+use crate::linalg::dense::Mat64;
+use crate::util::error::{Error, Result};
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::path::{Path, PathBuf};
+
+/// A consumer of combined MI blocks.
+///
+/// `consume_block` receives the exact MI values for the task's
+/// `(a, b)` column-block pair; for off-diagonal tasks the mirrored
+/// `(b, a)` region is implied and must be materialized by the sink if
+/// it keeps dense state. Blocks arrive in arbitrary order (the parallel
+/// executor consumes them on a single collector thread, so `&mut self`
+/// is safe), and every (i, j) cell is delivered exactly once per run —
+/// the planner's coverage invariant.
+///
+/// `finish` is called once, after every block was consumed.
+pub trait MiSink: Send {
+    /// Short identifier for logs and bench output.
+    fn name(&self) -> &'static str {
+        "sink"
+    }
+
+    /// Consume the combined MI block for `task` (shape `a_len x b_len`).
+    fn consume_block(&mut self, task: &BlockTask, block: &Mat64) -> Result<()>;
+
+    /// Finalize and return whatever the sink retained.
+    fn finish(&mut self) -> Result<SinkOutput>;
+}
+
+/// What a sink retained, returned by [`MiSink::finish`].
+#[derive(Clone, Debug)]
+pub enum SinkOutput {
+    /// The full dense matrix.
+    Dense(MiMatrix),
+    /// The k strongest pairs, best first.
+    TopK(Vec<MiPair>),
+    /// Per-column strongest pairs, best first within each column.
+    TopKPerColumn(Vec<Vec<MiPair>>),
+    /// Sparse COO of above-threshold pairs.
+    Sparse(SparsePairs),
+    /// Tiles written to disk.
+    Spilled(SpillInfo),
+}
+
+impl SinkOutput {
+    /// Stable identifier of the output shape.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            SinkOutput::Dense(_) => "dense",
+            SinkOutput::TopK(_) => "topk",
+            SinkOutput::TopKPerColumn(_) => "topk-per-col",
+            SinkOutput::Sparse(_) => "sparse",
+            SinkOutput::Spilled(_) => "spill",
+        }
+    }
+
+    /// The dense matrix, when this output holds one.
+    pub fn into_dense(self) -> Option<MiMatrix> {
+        match self {
+            SinkOutput::Dense(mi) => Some(mi),
+            _ => None,
+        }
+    }
+
+    /// Bytes of in-memory result state this output holds (disk bytes of
+    /// a spilled run are reported in its [`SpillInfo`] instead).
+    pub fn state_bytes(&self) -> usize {
+        const PAIR: usize = std::mem::size_of::<MiPair>();
+        match self {
+            SinkOutput::Dense(mi) => mi.dim() * mi.dim() * 8,
+            SinkOutput::TopK(pairs) => pairs.len() * PAIR,
+            SinkOutput::TopKPerColumn(cols) => {
+                cols.iter().map(|c| c.len() * PAIR).sum()
+            }
+            SinkOutput::Sparse(sp) => sp.pairs.len() * PAIR,
+            SinkOutput::Spilled(_) => 0,
+        }
+    }
+
+    /// One-line human summary (job service / CLI reporting).
+    pub fn summary(&self) -> String {
+        match self {
+            SinkOutput::Dense(mi) => format!("dense {0} x {0} matrix", mi.dim()),
+            SinkOutput::TopK(pairs) => format!("top-{} pairs", pairs.len()),
+            SinkOutput::TopKPerColumn(cols) => {
+                format!("per-column top pairs over {} columns", cols.len())
+            }
+            SinkOutput::Sparse(sp) => {
+                format!("{} pairs >= MI {:.6}", sp.pairs.len(), sp.threshold)
+            }
+            SinkOutput::Spilled(info) => format!(
+                "{} tiles / {} bytes spilled to {}",
+                info.tiles,
+                info.bytes,
+                info.dir.display()
+            ),
+        }
+    }
+}
+
+/// Sparse COO view of the retained pairs (each with `i < j`), sorted by
+/// `(i, j)` — the same order `mi::topk::edges_above` produces.
+#[derive(Clone, Debug)]
+pub struct SparsePairs {
+    /// The MI cutoff that was applied.
+    pub threshold: f64,
+    /// The p-value the cutoff was derived from, when any.
+    pub pvalue: Option<f64>,
+    pub pairs: Vec<MiPair>,
+}
+
+impl SparsePairs {
+    pub fn nnz(&self) -> usize {
+        self.pairs.len()
+    }
+}
+
+/// Where and how much a [`TileSpillSink`] wrote.
+#[derive(Clone, Debug)]
+pub struct SpillInfo {
+    pub dir: PathBuf,
+    /// Number of variables (manifest `m`).
+    pub m: usize,
+    /// Tiles written.
+    pub tiles: usize,
+    /// Total tile bytes on disk (manifest excluded).
+    pub bytes: u64,
+}
+
+// ---------------------------------------------------------------------
+// shared helpers
+// ---------------------------------------------------------------------
+
+/// Visit every strict-upper-triangle cell `(i, j, mi)` with global
+/// `i < j` that this block contributes.
+fn for_each_upper(t: &BlockTask, block: &Mat64, mut f: impl FnMut(usize, usize, f64)) {
+    for bi in 0..t.a_len {
+        let i = t.a_start + bi;
+        for bj in 0..t.b_len {
+            let j = t.b_start + bj;
+            if j > i {
+                f(i, j, block.get(bi, bj));
+            }
+        }
+    }
+}
+
+fn check_block_shape(t: &BlockTask, block: &Mat64) -> Result<()> {
+    if (block.rows(), block.cols()) != (t.a_len, t.b_len) {
+        return Err(Error::Shape(format!(
+            "sink received {}x{} block for task {t:?}",
+            block.rows(),
+            block.cols()
+        )));
+    }
+    Ok(())
+}
+
+/// Total order on pairs: higher MI ranks first, ties broken by `(i, j)`
+/// ascending — exactly the order `mi::topk::top_k_pairs` sorts by.
+/// `Greater` means `a` outranks `b`.
+fn rank_cmp(a: &MiPair, b: &MiPair) -> Ordering {
+    a.mi
+        .partial_cmp(&b.mi)
+        .unwrap_or(Ordering::Equal)
+        .then_with(|| (b.i, b.j).cmp(&(a.i, a.j)))
+}
+
+/// Heap entry ordered so the *worst-ranked* pair is at the top, turning
+/// `BinaryHeap` (a max-heap) into the bounded min-heap top-k needs.
+#[derive(Clone, Copy, Debug)]
+struct WorstFirst(MiPair);
+
+impl PartialEq for WorstFirst {
+    fn eq(&self, other: &Self) -> bool {
+        rank_cmp(&self.0, &other.0) == Ordering::Equal
+    }
+}
+
+impl Eq for WorstFirst {}
+
+impl PartialOrd for WorstFirst {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for WorstFirst {
+    fn cmp(&self, other: &Self) -> Ordering {
+        rank_cmp(&other.0, &self.0)
+    }
+}
+
+/// A bounded "keep the k best" heap: O(k) memory, O(log k) per offer.
+#[derive(Debug, Default)]
+struct BoundedRank {
+    k: usize,
+    heap: BinaryHeap<WorstFirst>,
+}
+
+impl BoundedRank {
+    fn new(k: usize) -> Self {
+        BoundedRank { k, heap: BinaryHeap::with_capacity(k.min(1 << 20) + 1) }
+    }
+
+    #[inline]
+    fn offer(&mut self, p: MiPair) {
+        if self.k == 0 {
+            return;
+        }
+        if self.heap.len() < self.k {
+            self.heap.push(WorstFirst(p));
+        } else if let Some(worst) = self.heap.peek() {
+            if rank_cmp(&p, &worst.0) == Ordering::Greater {
+                self.heap.pop();
+                self.heap.push(WorstFirst(p));
+            }
+        }
+    }
+
+    /// Drain into a best-first sorted vec.
+    fn into_sorted(self) -> Vec<MiPair> {
+        let mut pairs: Vec<MiPair> = self.heap.into_iter().map(|w| w.0).collect();
+        pairs.sort_by(|a, b| rank_cmp(b, a));
+        pairs
+    }
+}
+
+// ---------------------------------------------------------------------
+// DenseSink
+// ---------------------------------------------------------------------
+
+/// Materializes the full m x m matrix — bit-identical to the historical
+/// monolithic assembly (same combine, same mirror writes).
+#[derive(Debug)]
+pub struct DenseSink {
+    m: usize,
+    mat: Option<Mat64>,
+}
+
+impl DenseSink {
+    pub fn new(m: usize) -> Self {
+        DenseSink { m, mat: Some(Mat64::zeros(m, m)) }
+    }
+}
+
+impl MiSink for DenseSink {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn consume_block(&mut self, t: &BlockTask, block: &Mat64) -> Result<()> {
+        check_block_shape(t, block)?;
+        if t.a_start + t.a_len > self.m || t.b_start + t.b_len > self.m {
+            return Err(Error::Shape(format!(
+                "task {t:?} out of bounds for m = {}",
+                self.m
+            )));
+        }
+        let mat = self
+            .mat
+            .as_mut()
+            .ok_or_else(|| Error::Coordinator("DenseSink already finished".into()))?;
+        for i in 0..t.a_len {
+            for j in 0..t.b_len {
+                let v = block.get(i, j);
+                mat.set(t.a_start + i, t.b_start + j, v);
+                if !t.is_diagonal() {
+                    mat.set(t.b_start + j, t.a_start + i, v);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<SinkOutput> {
+        let mat = self
+            .mat
+            .take()
+            .ok_or_else(|| Error::Coordinator("DenseSink already finished".into()))?;
+        Ok(SinkOutput::Dense(MiMatrix::from_mat(mat)))
+    }
+}
+
+// ---------------------------------------------------------------------
+// TopKSink
+// ---------------------------------------------------------------------
+
+enum TopKState {
+    Global(BoundedRank),
+    PerColumn(Vec<BoundedRank>),
+}
+
+/// Keeps the k largest off-diagonal pairs — globally, or per column —
+/// in bounded heaps. Never allocates anything proportional to m²: the
+/// matrix-free path for screening workloads.
+pub struct TopKSink {
+    state: TopKState,
+}
+
+impl TopKSink {
+    /// Global top-k over all pairs `(i < j)`.
+    pub fn global(k: usize) -> Self {
+        TopKSink { state: TopKState::Global(BoundedRank::new(k)) }
+    }
+
+    /// The k strongest partners of *each* of the `m` columns.
+    pub fn per_column(m: usize, k: usize) -> Self {
+        TopKSink {
+            state: TopKState::PerColumn((0..m).map(|_| BoundedRank::new(k)).collect()),
+        }
+    }
+}
+
+impl MiSink for TopKSink {
+    fn name(&self) -> &'static str {
+        match self.state {
+            TopKState::Global(_) => "topk",
+            TopKState::PerColumn(_) => "topk-per-col",
+        }
+    }
+
+    fn consume_block(&mut self, t: &BlockTask, block: &Mat64) -> Result<()> {
+        check_block_shape(t, block)?;
+        match &mut self.state {
+            TopKState::Global(heap) => {
+                for_each_upper(t, block, |i, j, mi| heap.offer(MiPair { i, j, mi }));
+            }
+            TopKState::PerColumn(heaps) => {
+                let m = heaps.len();
+                if t.a_start + t.a_len > m || t.b_start + t.b_len > m {
+                    return Err(Error::Shape(format!(
+                        "task {t:?} out of bounds for m = {m}"
+                    )));
+                }
+                for bi in 0..t.a_len {
+                    let i = t.a_start + bi;
+                    for bj in 0..t.b_len {
+                        let j = t.b_start + bj;
+                        if j > i {
+                            let p = MiPair { i, j, mi: block.get(bi, bj) };
+                            heaps[i].offer(p);
+                            heaps[j].offer(p);
+                        }
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<SinkOutput> {
+        match std::mem::replace(&mut self.state, TopKState::Global(BoundedRank::new(0))) {
+            TopKState::Global(heap) => Ok(SinkOutput::TopK(heap.into_sorted())),
+            TopKState::PerColumn(heaps) => Ok(SinkOutput::TopKPerColumn(
+                heaps.into_iter().map(|h| h.into_sorted()).collect(),
+            )),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// ThresholdSink
+// ---------------------------------------------------------------------
+
+/// Keeps every pair with MI at or above a cutoff as sparse COO. The
+/// cutoff may be given directly in bits, or derived from an asymptotic
+/// p-value (the G-test chi-square tail; see
+/// [`crate::mi::significance::mi_threshold_for_pvalue`]).
+pub struct ThresholdSink {
+    threshold: f64,
+    pvalue: Option<f64>,
+    pairs: Vec<MiPair>,
+}
+
+impl ThresholdSink {
+    /// Keep pairs with `MI >= threshold` (bits).
+    pub fn by_mi(threshold: f64) -> Self {
+        ThresholdSink { threshold, pvalue: None, pairs: Vec::new() }
+    }
+
+    /// Keep pairs whose asymptotic independence p-value is `<= pvalue`
+    /// for a dataset with `n_rows` observations.
+    pub fn by_pvalue(pvalue: f64, n_rows: usize) -> Result<Self> {
+        let threshold = super::significance::mi_threshold_for_pvalue(pvalue, n_rows)?;
+        Ok(ThresholdSink { threshold, pvalue: Some(pvalue), pairs: Vec::new() })
+    }
+
+    /// The effective MI cutoff in bits.
+    pub fn threshold(&self) -> f64 {
+        self.threshold
+    }
+}
+
+impl MiSink for ThresholdSink {
+    fn name(&self) -> &'static str {
+        "threshold"
+    }
+
+    fn consume_block(&mut self, t: &BlockTask, block: &Mat64) -> Result<()> {
+        check_block_shape(t, block)?;
+        let threshold = self.threshold;
+        let pairs = &mut self.pairs;
+        for_each_upper(t, block, |i, j, mi| {
+            if mi >= threshold {
+                pairs.push(MiPair { i, j, mi });
+            }
+        });
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<SinkOutput> {
+        let mut pairs = std::mem::take(&mut self.pairs);
+        pairs.sort_by_key(|p| (p.i, p.j));
+        Ok(SinkOutput::Sparse(SparsePairs {
+            threshold: self.threshold,
+            pvalue: self.pvalue,
+            pairs,
+        }))
+    }
+}
+
+// ---------------------------------------------------------------------
+// TileSpillSink
+// ---------------------------------------------------------------------
+
+/// Writes each combined block to disk as a raw little-endian f64 tile
+/// plus a `manifest.csv`, keeping only O(block²) bytes in memory — the
+/// out-of-core path for m far beyond RAM. Reassemble (for m that fits)
+/// with [`assemble_spilled`].
+pub struct TileSpillSink {
+    dir: PathBuf,
+    m: usize,
+    tiles: Vec<(BlockTask, String)>,
+    bytes: u64,
+}
+
+impl TileSpillSink {
+    pub fn new(dir: impl Into<PathBuf>, m: usize) -> Result<Self> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        Ok(TileSpillSink { dir, m, tiles: Vec::new(), bytes: 0 })
+    }
+}
+
+impl MiSink for TileSpillSink {
+    fn name(&self) -> &'static str {
+        "spill"
+    }
+
+    fn consume_block(&mut self, t: &BlockTask, block: &Mat64) -> Result<()> {
+        check_block_shape(t, block)?;
+        let file = format!("tile_{}_{}.f64", t.a_start, t.b_start);
+        let mut buf = Vec::with_capacity(block.data().len() * 8);
+        for v in block.data() {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(self.dir.join(&file), &buf)?;
+        self.bytes += buf.len() as u64;
+        self.tiles.push((*t, file));
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<SinkOutput> {
+        use std::io::Write;
+        let tiles = std::mem::take(&mut self.tiles);
+        let mut w = std::io::BufWriter::new(std::fs::File::create(
+            self.dir.join("manifest.csv"),
+        )?);
+        writeln!(w, "m,{}", self.m)?;
+        writeln!(w, "a_start,a_len,b_start,b_len,file")?;
+        for (t, file) in &tiles {
+            writeln!(w, "{},{},{},{},{file}", t.a_start, t.a_len, t.b_start, t.b_len)?;
+        }
+        w.flush()?;
+        Ok(SinkOutput::Spilled(SpillInfo {
+            dir: self.dir.clone(),
+            m: self.m,
+            tiles: tiles.len(),
+            bytes: self.bytes,
+        }))
+    }
+}
+
+/// Load a spilled run back into a dense matrix (requires m² x 8 bytes
+/// of RAM — intended for tests and for tiles small enough to revisit).
+pub fn assemble_spilled(dir: &Path) -> Result<MiMatrix> {
+    let manifest = std::fs::read_to_string(dir.join("manifest.csv"))?;
+    let mut lines = manifest.lines();
+    let m: usize = lines
+        .next()
+        .and_then(|l| l.strip_prefix("m,"))
+        .and_then(|v| v.parse().ok())
+        .ok_or_else(|| Error::Parse("manifest.csv: missing m header".into()))?;
+    let header = lines.next().unwrap_or("");
+    if header != "a_start,a_len,b_start,b_len,file" {
+        return Err(Error::Parse(format!("manifest.csv: bad header '{header}'")));
+    }
+    let mut mat = Mat64::zeros(m, m);
+    for line in lines {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = line.split(',').collect();
+        if parts.len() != 5 {
+            return Err(Error::Parse(format!("manifest.csv: bad row '{line}'")));
+        }
+        let nums: Vec<usize> = parts[..4]
+            .iter()
+            .map(|s| s.parse().map_err(|_| Error::Parse(format!("bad number in '{line}'"))))
+            .collect::<Result<_>>()?;
+        let (a_start, a_len, b_start, b_len) = (nums[0], nums[1], nums[2], nums[3]);
+        if a_start + a_len > m || b_start + b_len > m {
+            return Err(Error::Parse(format!("manifest.csv: tile out of bounds '{line}'")));
+        }
+        let raw = std::fs::read(dir.join(parts[4]))?;
+        if raw.len() != a_len * b_len * 8 {
+            return Err(Error::Parse(format!(
+                "tile {}: {} bytes, expected {}",
+                parts[4],
+                raw.len(),
+                a_len * b_len * 8
+            )));
+        }
+        let diagonal = a_start == b_start && a_len == b_len;
+        for (idx, chunk) in raw.chunks_exact(8).enumerate() {
+            let v = f64::from_le_bytes(chunk.try_into().expect("8-byte chunk"));
+            let (i, j) = (a_start + idx / b_len, b_start + idx % b_len);
+            mat.set(i, j, v);
+            if !diagonal {
+                mat.set(j, i, v);
+            }
+        }
+    }
+    Ok(MiMatrix::from_mat(mat))
+}
+
+// ---------------------------------------------------------------------
+// SinkSpec: parse / build (CLI, config, job service)
+// ---------------------------------------------------------------------
+
+/// Declarative sink choice, parseable from `--sink` syntax:
+/// `dense | topk:K | topk-per-col:K | threshold:T | pvalue:P | spill:DIR`.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub enum SinkSpec {
+    #[default]
+    Dense,
+    TopK { k: usize, per_column: bool },
+    ThresholdMi { threshold: f64 },
+    ThresholdPvalue { pvalue: f64 },
+    Spill { dir: PathBuf },
+}
+
+impl SinkSpec {
+    pub fn parse(s: &str) -> Result<SinkSpec> {
+        if s == "dense" {
+            return Ok(SinkSpec::Dense);
+        }
+        let (kind, arg) = s.split_once(':').ok_or_else(|| {
+            Error::Parse(format!(
+                "bad sink '{s}' (expected dense | topk:K | topk-per-col:K | \
+                 threshold:T | pvalue:P | spill:DIR)"
+            ))
+        })?;
+        match kind {
+            "topk" | "topk-per-col" => {
+                let k = arg
+                    .parse()
+                    .map_err(|_| Error::Parse(format!("sink {kind}: bad k '{arg}'")))?;
+                Ok(SinkSpec::TopK { k, per_column: kind == "topk-per-col" })
+            }
+            "threshold" => {
+                let threshold = arg
+                    .parse()
+                    .map_err(|_| Error::Parse(format!("sink threshold: bad value '{arg}'")))?;
+                Ok(SinkSpec::ThresholdMi { threshold })
+            }
+            "pvalue" => {
+                let pvalue: f64 = arg
+                    .parse()
+                    .map_err(|_| Error::Parse(format!("sink pvalue: bad value '{arg}'")))?;
+                Ok(SinkSpec::ThresholdPvalue { pvalue })
+            }
+            "spill" => Ok(SinkSpec::Spill { dir: PathBuf::from(arg) }),
+            other => Err(Error::Parse(format!("unknown sink kind '{other}'"))),
+        }
+    }
+
+    pub fn is_dense(&self) -> bool {
+        matches!(self, SinkSpec::Dense)
+    }
+
+    /// Instantiate for a dataset with `m` columns and `n_rows` rows.
+    pub fn build(&self, m: usize, n_rows: usize) -> Result<Box<dyn MiSink>> {
+        Ok(match self {
+            SinkSpec::Dense => Box::new(DenseSink::new(m)),
+            SinkSpec::TopK { k, per_column: false } => Box::new(TopKSink::global(*k)),
+            SinkSpec::TopK { k, per_column: true } => Box::new(TopKSink::per_column(m, *k)),
+            SinkSpec::ThresholdMi { threshold } => Box::new(ThresholdSink::by_mi(*threshold)),
+            SinkSpec::ThresholdPvalue { pvalue } => {
+                Box::new(ThresholdSink::by_pvalue(*pvalue, n_rows)?)
+            }
+            SinkSpec::Spill { dir } => Box::new(TileSpillSink::new(dir.clone(), m)?),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn block(t: &BlockTask, f: impl Fn(usize, usize) -> f64) -> Mat64 {
+        let mut out = Mat64::zeros(t.a_len, t.b_len);
+        for i in 0..t.a_len {
+            for j in 0..t.b_len {
+                out.set(i, j, f(t.a_start + i, t.b_start + j));
+            }
+        }
+        out
+    }
+
+    /// 4 columns tiled as 2x2 blocks; cell value = i * 10 + j (i <= j).
+    fn feed(sink: &mut dyn MiSink) {
+        let tasks = [
+            BlockTask { a_start: 0, a_len: 2, b_start: 0, b_len: 2 },
+            BlockTask { a_start: 0, a_len: 2, b_start: 2, b_len: 2 },
+            BlockTask { a_start: 2, a_len: 2, b_start: 2, b_len: 2 },
+        ];
+        for t in &tasks {
+            let b = block(t, |i, j| (i.min(j) * 10 + i.max(j)) as f64);
+            sink.consume_block(t, &b).unwrap();
+        }
+    }
+
+    #[test]
+    fn dense_sink_mirrors_off_diagonal() {
+        let mut sink = DenseSink::new(4);
+        feed(&mut sink);
+        let SinkOutput::Dense(mi) = sink.finish().unwrap() else { panic!() };
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(mi.get(i, j), (i.min(j) * 10 + i.max(j)) as f64, "({i},{j})");
+            }
+        }
+        assert!(sink.finish().is_err(), "double finish must error");
+    }
+
+    #[test]
+    fn topk_keeps_the_best_pairs() {
+        let mut sink = TopKSink::global(2);
+        feed(&mut sink);
+        let SinkOutput::TopK(pairs) = sink.finish().unwrap() else { panic!() };
+        // values: (0,1)=1 (0,2)=2 (0,3)=3 (1,2)=12 (1,3)=13 (2,3)=23
+        assert_eq!(pairs.len(), 2);
+        assert_eq!((pairs[0].i, pairs[0].j, pairs[0].mi), (2, 3, 23.0));
+        assert_eq!((pairs[1].i, pairs[1].j, pairs[1].mi), (1, 3, 13.0));
+    }
+
+    #[test]
+    fn topk_zero_and_oversized_k() {
+        let mut empty = TopKSink::global(0);
+        feed(&mut empty);
+        let SinkOutput::TopK(pairs) = empty.finish().unwrap() else { panic!() };
+        assert!(pairs.is_empty());
+
+        let mut all = TopKSink::global(100);
+        feed(&mut all);
+        let SinkOutput::TopK(pairs) = all.finish().unwrap() else { panic!() };
+        assert_eq!(pairs.len(), 6); // only 6 pairs exist
+        for w in pairs.windows(2) {
+            assert!(w[0].mi >= w[1].mi);
+        }
+    }
+
+    #[test]
+    fn topk_ties_break_by_index_like_posthoc() {
+        let t = BlockTask { a_start: 0, a_len: 3, b_start: 0, b_len: 3 };
+        let b = block(&t, |_, _| 1.0); // all pairs tie
+        let mut sink = TopKSink::global(2);
+        sink.consume_block(&t, &b).unwrap();
+        let SinkOutput::TopK(pairs) = sink.finish().unwrap() else { panic!() };
+        assert_eq!((pairs[0].i, pairs[0].j), (0, 1));
+        assert_eq!((pairs[1].i, pairs[1].j), (0, 2));
+    }
+
+    #[test]
+    fn per_column_topk_covers_both_endpoints() {
+        let mut sink = TopKSink::per_column(4, 1);
+        feed(&mut sink);
+        let SinkOutput::TopKPerColumn(cols) = sink.finish().unwrap() else { panic!() };
+        assert_eq!(cols.len(), 4);
+        // column 0's best partner is 3 (value 3), column 3's is 2 (23)
+        assert_eq!((cols[0][0].i, cols[0][0].j), (0, 3));
+        assert_eq!((cols[3][0].i, cols[3][0].j), (2, 3));
+        for c in &cols {
+            assert_eq!(c.len(), 1);
+        }
+    }
+
+    #[test]
+    fn threshold_sink_filters_and_sorts() {
+        let mut sink = ThresholdSink::by_mi(12.0);
+        feed(&mut sink);
+        let SinkOutput::Sparse(sp) = sink.finish().unwrap() else { panic!() };
+        let got: Vec<(usize, usize)> = sp.pairs.iter().map(|p| (p.i, p.j)).collect();
+        assert_eq!(got, vec![(1, 2), (1, 3), (2, 3)]);
+        assert_eq!(sp.nnz(), 3);
+        assert_eq!(sp.pvalue, None);
+    }
+
+    #[test]
+    fn spill_sink_round_trips() {
+        let dir = std::env::temp_dir()
+            .join(format!("bulkmi-spill-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut sink = TileSpillSink::new(&dir, 4).unwrap();
+        feed(&mut sink);
+        let SinkOutput::Spilled(info) = sink.finish().unwrap() else { panic!() };
+        assert_eq!(info.tiles, 3);
+        assert_eq!(info.bytes, 3 * 4 * 8);
+        let mi = assemble_spilled(&dir).unwrap();
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(mi.get(i, j), (i.min(j) * 10 + i.max(j)) as f64);
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let t = BlockTask { a_start: 0, a_len: 2, b_start: 0, b_len: 2 };
+        let wrong = Mat64::zeros(3, 2);
+        assert!(DenseSink::new(4).consume_block(&t, &wrong).is_err());
+        assert!(TopKSink::global(3).consume_block(&t, &wrong).is_err());
+        assert!(ThresholdSink::by_mi(0.0).consume_block(&t, &wrong).is_err());
+    }
+
+    #[test]
+    fn spec_parse_round_trip() {
+        assert_eq!(SinkSpec::parse("dense").unwrap(), SinkSpec::Dense);
+        assert_eq!(
+            SinkSpec::parse("topk:100").unwrap(),
+            SinkSpec::TopK { k: 100, per_column: false }
+        );
+        assert_eq!(
+            SinkSpec::parse("topk-per-col:5").unwrap(),
+            SinkSpec::TopK { k: 5, per_column: true }
+        );
+        assert_eq!(
+            SinkSpec::parse("threshold:0.25").unwrap(),
+            SinkSpec::ThresholdMi { threshold: 0.25 }
+        );
+        assert_eq!(
+            SinkSpec::parse("pvalue:0.01").unwrap(),
+            SinkSpec::ThresholdPvalue { pvalue: 0.01 }
+        );
+        assert_eq!(
+            SinkSpec::parse("spill:/tmp/x").unwrap(),
+            SinkSpec::Spill { dir: PathBuf::from("/tmp/x") }
+        );
+        assert!(SinkSpec::parse("topk").is_err());
+        assert!(SinkSpec::parse("topk:ten").is_err());
+        assert!(SinkSpec::parse("bogus:1").is_err());
+    }
+
+    #[test]
+    fn spec_builds_every_sink() {
+        for s in ["dense", "topk:3", "topk-per-col:2", "threshold:0.1", "pvalue:0.05"] {
+            let spec = SinkSpec::parse(s).unwrap();
+            let mut sink = spec.build(4, 100).unwrap();
+            feed(sink.as_mut());
+            sink.finish().unwrap();
+        }
+        assert!(SinkSpec::parse("pvalue:2.0").unwrap().build(4, 100).is_err());
+    }
+}

@@ -168,7 +168,7 @@ fn service_survives_many_small_jobs() {
         assert!(matches!(status, JobStatus::Done(_)), "job {seed}: {status:?}");
         let ds = SynthSpec::new(40, 6).sparsity(0.5).seed(seed).generate();
         let want = compute_mi(&ds, Backend::BulkBitpack).unwrap();
-        let got = svc.take(h).unwrap().unwrap();
+        let got = svc.take(h).unwrap().unwrap().into_dense().unwrap();
         assert_eq!(got.max_abs_diff(&want), 0.0, "job {seed}");
     }
     assert_eq!(svc.metrics().counter("jobs_done").get(), 20);

@@ -1,0 +1,270 @@
+//! Sink-engine property + acceptance tests:
+//!
+//! * blockwise + `DenseSink` is bit-identical to the monolithic
+//!   `compute_mi` result for every native backend, across random data,
+//!   block sizes and worker counts;
+//! * `TopKSink` / `ThresholdSink` agree exactly with post-hoc
+//!   extraction (`top_k_pairs` / `edges_above`) from the full matrix;
+//! * `TileSpillSink` round-trips through disk bit for bit;
+//! * a 20k-column top-k run never touches anything m x m sized
+//!   (the matrix-free guarantee that motivates the whole sink layer).
+
+use bulkmi::coordinator::executor::NativeKind;
+use bulkmi::coordinator::planner::{dense_output_bytes, matrix_free_block, plan_blocks, BlockTask};
+use bulkmi::coordinator::progress::Progress;
+use bulkmi::coordinator::{execute_plan_sink, NativeProvider};
+use bulkmi::data::dataset::BinaryDataset;
+use bulkmi::data::synth::SynthSpec;
+use bulkmi::linalg::dense::Mat64;
+use bulkmi::mi::backend::{compute_mi, Backend};
+use bulkmi::mi::sink::{
+    assemble_spilled, DenseSink, MiSink, SinkOutput, ThresholdSink, TileSpillSink, TopKSink,
+};
+use bulkmi::mi::significance::mi_threshold_for_pvalue;
+use bulkmi::mi::topk::{edges_above, top_k_pairs, MiPair};
+use bulkmi::util::error::Result as BResult;
+use bulkmi::util::prop::{gen, prop_check, Config};
+
+fn run_sink(
+    ds: &BinaryDataset,
+    kind: NativeKind,
+    block: usize,
+    workers: usize,
+    sink: &mut dyn MiSink,
+) -> BResult<SinkOutput> {
+    let plan = plan_blocks(ds.n_cols(), block)?;
+    let provider = NativeProvider::new(ds, kind);
+    let progress = Progress::new(plan.tasks.len());
+    execute_plan_sink(ds, &plan, &provider, workers, &progress, sink)?;
+    sink.finish()
+}
+
+/// Acceptance: blockwise `DenseSink` == monolithic `compute_mi`, bit
+/// for bit, for every native backend.
+#[test]
+fn prop_dense_sink_bit_identical_to_monolithic() {
+    let backends = [
+        (Backend::Pairwise, NativeKind::Bitpack),
+        (Backend::BulkBasic, NativeKind::Dense),
+        (Backend::BulkOpt, NativeKind::Dense),
+        (Backend::BulkSparse, NativeKind::Sparse),
+        (Backend::BulkBitpack, NativeKind::Bitpack),
+    ];
+    prop_check(
+        "blockwise DenseSink == monolithic compute_mi",
+        Config::with_cases(8),
+        |rng| {
+            let (n, m, bytes) = gen::binary_matrix(rng, 90, 24);
+            let block = gen::int_in(rng, 1, 26);
+            let workers = gen::int_in(rng, 1, 4);
+            (n, m, bytes, block, workers)
+        },
+        |(n, m, bytes, block, workers)| {
+            let ds = BinaryDataset::new(*n, *m, bytes.clone()).map_err(|e| e.to_string())?;
+            for (backend, kind) in backends {
+                let mono = compute_mi(&ds, backend).map_err(|e| e.to_string())?;
+                let mut sink = DenseSink::new(*m);
+                let out = run_sink(&ds, kind, *block, *workers, &mut sink)
+                    .map_err(|e| e.to_string())?;
+                let SinkOutput::Dense(got) = out else {
+                    return Err("dense sink returned non-dense output".into());
+                };
+                let diff = got.max_abs_diff(&mono);
+                if diff != 0.0 {
+                    return Err(format!(
+                        "{backend} block={block} workers={workers}: diff {diff}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_topk_sink_matches_posthoc_extraction() {
+    prop_check(
+        "TopKSink == top_k_pairs(full)",
+        Config::with_cases(12),
+        |rng| {
+            let (n, m, bytes) = gen::binary_matrix(rng, 100, 20);
+            let block = gen::int_in(rng, 1, 21);
+            let k = gen::int_in(rng, 1, 40);
+            (n, m, bytes, block, k)
+        },
+        |(n, m, bytes, block, k)| {
+            let ds = BinaryDataset::new(*n, *m, bytes.clone()).map_err(|e| e.to_string())?;
+            let full = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+            let want = top_k_pairs(&full, *k);
+            let mut sink = TopKSink::global(*k);
+            let out = run_sink(&ds, NativeKind::Bitpack, *block, 2, &mut sink)
+                .map_err(|e| e.to_string())?;
+            let SinkOutput::TopK(got) = out else {
+                return Err("wrong output kind".into());
+            };
+            if got.len() != want.len() {
+                return Err(format!("{} pairs, wanted {}", got.len(), want.len()));
+            }
+            for (g, w) in got.iter().zip(&want) {
+                if (g.i, g.j) != (w.i, w.j) || g.mi != w.mi {
+                    return Err(format!("got {g:?}, wanted {w:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_threshold_sink_matches_edges_above() {
+    prop_check(
+        "ThresholdSink == edges_above(full)",
+        Config::with_cases(12),
+        |rng| {
+            let (n, m, bytes) = gen::binary_matrix(rng, 100, 18);
+            let block = gen::int_in(rng, 1, 19);
+            (n, m, bytes, block)
+        },
+        |(n, m, bytes, block)| {
+            let ds = BinaryDataset::new(*n, *m, bytes.clone()).map_err(|e| e.to_string())?;
+            let full = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+            for threshold in [0.0, 0.01, 0.1, 0.5] {
+                let want = edges_above(&full, threshold);
+                let mut sink = ThresholdSink::by_mi(threshold);
+                let out = run_sink(&ds, NativeKind::Bitpack, *block, 2, &mut sink)
+                    .map_err(|e| e.to_string())?;
+                let SinkOutput::Sparse(sp) = out else {
+                    return Err("wrong output kind".into());
+                };
+                if sp.pairs.len() != want.len() {
+                    return Err(format!(
+                        "t={threshold}: {} edges, wanted {}",
+                        sp.pairs.len(),
+                        want.len()
+                    ));
+                }
+                for (g, w) in sp.pairs.iter().zip(&want) {
+                    if (g.i, g.j) != (w.i, w.j) || g.mi != w.mi {
+                        return Err(format!("t={threshold}: got {g:?}, wanted {w:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn per_column_topk_matches_posthoc() {
+    let ds = SynthSpec::new(400, 15).sparsity(0.6).seed(3).plant(2, 11, 0.05).generate();
+    let full = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+    let k = 4;
+    let mut sink = TopKSink::per_column(15, k);
+    let out = run_sink(&ds, NativeKind::Bitpack, 4, 2, &mut sink).unwrap();
+    let SinkOutput::TopKPerColumn(cols) = out else { panic!("wrong output kind") };
+    assert_eq!(cols.len(), 15);
+    for c in 0..15 {
+        // post-hoc: all pairs involving c, ranked like top_k_pairs
+        let mut want: Vec<MiPair> = top_k_pairs(&full, usize::MAX)
+            .into_iter()
+            .filter(|p| p.i == c || p.j == c)
+            .collect();
+        want.truncate(k);
+        assert_eq!(cols[c].len(), want.len(), "column {c}");
+        for (g, w) in cols[c].iter().zip(&want) {
+            assert_eq!((g.i, g.j), (w.i, w.j), "column {c}");
+            assert_eq!(g.mi, w.mi, "column {c}");
+        }
+    }
+}
+
+#[test]
+fn pvalue_threshold_sink_matches_derived_cutoff() {
+    let ds = SynthSpec::new(800, 12).sparsity(0.6).seed(7).plant(0, 5, 0.02).generate();
+    let full = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+    let p = 1e-4;
+    let cutoff = mi_threshold_for_pvalue(p, 800).unwrap();
+    let want = edges_above(&full, cutoff);
+    let mut sink = ThresholdSink::by_pvalue(p, 800).unwrap();
+    assert_eq!(sink.threshold(), cutoff);
+    let out = run_sink(&ds, NativeKind::Bitpack, 5, 2, &mut sink).unwrap();
+    let SinkOutput::Sparse(sp) = out else { panic!("wrong output kind") };
+    assert_eq!(sp.pvalue, Some(p));
+    assert_eq!(sp.pairs.len(), want.len());
+    // the planted pair survives the significance screen
+    assert!(sp.pairs.iter().any(|e| (e.i, e.j) == (0, 5)));
+}
+
+#[test]
+fn spill_sink_round_trips_through_disk() {
+    let dir = std::env::temp_dir().join(format!("bulkmi-sinks-spill-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let ds = SynthSpec::new(300, 17).sparsity(0.8).seed(11).generate();
+    let full = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+    let mut sink = TileSpillSink::new(&dir, 17).unwrap();
+    let out = run_sink(&ds, NativeKind::Bitpack, 5, 3, &mut sink).unwrap();
+    let SinkOutput::Spilled(info) = out else { panic!("wrong output kind") };
+    let plan = plan_blocks(17, 5).unwrap();
+    assert_eq!(info.tiles, plan.tasks.len());
+    let assembled = assemble_spilled(&dir).unwrap();
+    assert_eq!(assembled.max_abs_diff(&full), 0.0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Records the largest block that ever reaches the sink — the proof
+/// that the result path is matrix-free.
+struct BlockAudit<S> {
+    inner: S,
+    max_cells: usize,
+    blocks: usize,
+}
+
+impl<S: MiSink> MiSink for BlockAudit<S> {
+    fn consume_block(&mut self, t: &BlockTask, block: &Mat64) -> BResult<()> {
+        self.max_cells = self.max_cells.max(block.rows() * block.cols());
+        self.blocks += 1;
+        self.inner.consume_block(t, block)
+    }
+
+    fn finish(&mut self) -> BResult<SinkOutput> {
+        self.inner.finish()
+    }
+}
+
+/// Acceptance: top-1000 pairs of a 20k-column dataset without ever
+/// allocating the m x m dense matrix. The dense output would be
+/// 20_000^2 * 8 B = 3.2 GB; the audit proves the result path only ever
+/// held one block (<= block^2 cells) plus the O(k) heap.
+#[test]
+fn topk_20k_columns_without_dense_matrix() {
+    let m = 20_000;
+    let n = 256;
+    let ds = SynthSpec::new(n, m).sparsity(0.95).seed(21).plant(17, 15_011, 0.0).generate();
+    let block = matrix_free_block(n, m, 64 << 20);
+    assert!(block < m, "20k columns must be planned blockwise");
+    let plan = plan_blocks(m, block).unwrap();
+    assert!(plan.tasks.len() > 1);
+
+    let provider = NativeProvider::new(&ds, NativeKind::Bitpack);
+    let mut audit = BlockAudit { inner: TopKSink::global(1000), max_cells: 0, blocks: 0 };
+    let progress = Progress::new(plan.tasks.len());
+    execute_plan_sink(&ds, &plan, &provider, 4, &progress, &mut audit).unwrap();
+
+    // matrix-free: nothing m x m sized ever existed on the result path
+    assert_eq!(audit.blocks, plan.tasks.len());
+    assert!(audit.max_cells <= block * block);
+    assert!(
+        audit.max_cells * 8 * 50 < dense_output_bytes(m),
+        "largest block ({} cells) must be far below the dense matrix",
+        audit.max_cells
+    );
+
+    let SinkOutput::TopK(pairs) = audit.finish().unwrap() else { panic!("wrong output") };
+    assert_eq!(pairs.len(), 1000);
+    assert_eq!(
+        (pairs[0].i, pairs[0].j),
+        (17, 15_011),
+        "the planted exact copy must rank first"
+    );
+    assert!(pairs[0].mi > pairs[1].mi * 2.0, "planted pair should dominate noise");
+}
