@@ -10,6 +10,10 @@
 //! cargo run --release --example categorical_survey
 //! ```
 
+// The numeric checks deliberately index by (row, col) to mirror the
+// paper's pseudocode (same rationale as the crate-level allow in lib.rs).
+#![allow(clippy::needless_range_loop)]
+
 use bulkmi::mi::categorical::{
     categorical_entropies, mi_categorical, mi_pair_categorical, CategoricalDataset,
 };

@@ -137,7 +137,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let svc = JobService::new(2, 4);
     let h = svc.submit(
         ds.clone(),
-        JobSpec { kind: NativeKind::Bitpack, block_cols: block, ..Default::default() },
+        JobSpec { backend: Backend::BulkBitpack, block_cols: block, ..Default::default() },
     )?;
     let status = svc.wait(h)?;
     let JobStatus::Done(out) = status else {

@@ -8,6 +8,10 @@
 //! cargo run --release --example network_link_prediction
 //! ```
 
+// The numeric checks deliberately index by (row, col) to mirror the
+// paper's pseudocode (same rationale as the crate-level allow in lib.rs).
+#![allow(clippy::needless_range_loop)]
+
 use bulkmi::data::graph::SbmSpec;
 use bulkmi::mi::backend::{compute_mi, Backend};
 use bulkmi::mi::topk::top_k_pairs;

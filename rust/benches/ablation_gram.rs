@@ -1,10 +1,13 @@
 //! Ablation A (ours): Gram-computation strategy. The whole paper rests
 //! on "one Gram matmul is the entire cost" — this bench isolates that
 //! operation across the four substrates plus the naive triple loop, so
-//! the backend-level differences in Table 1 can be attributed.
+//! the backend-level differences in Table 1 can be attributed. The
+//! bit-packed substrate additionally gets one row per dispatchable
+//! AND-popcount kernel, attributing the kernel-layer win separately
+//! from the packing win (the dispatcher's own pick is `bitpack`).
 
 use bulkmi::data::synth::SynthSpec;
-use bulkmi::linalg::blas;
+use bulkmi::linalg::{blas, kernels};
 use bulkmi::util::bench::{emit_json, full_mode, measure, print_header, print_row, Cell};
 
 fn main() {
@@ -14,12 +17,25 @@ fn main() {
         &[(10_000, 250), (20_000, 500), (50_000, 1_000)]
     };
     // bitpack-ref = pre-unroll popcount Gram (one output at a time);
-    // bitpack = the 4-wide output-column unroll. The pair is the
-    // before/after record for the accumulator-unroll optimization.
-    let impls = ["naive", "blocked-f32", "bitpack-ref", "bitpack", "csr"];
+    // bitpack = the 4-wide unroll on the dispatched kernel; bitpack/<k>
+    // = the same loop pinned to each kernel. The ref/unroll pair is the
+    // before/after record for the accumulator-unroll optimization, the
+    // kernel rows for the hardware-adaptive kernel layer.
+    let mut impls: Vec<String> = vec![
+        "naive".into(),
+        "blocked-f32".into(),
+        "bitpack-ref".into(),
+        "bitpack".into(),
+    ];
+    for k in kernels::available() {
+        impls.push(format!("bitpack/{}", k.name()));
+    }
+    impls.push("csr".into());
+    let impl_names: Vec<&str> = impls.iter().map(|s| s.as_str()).collect();
 
-    println!("=== Ablation A: Gram strategies, time (s), 90% sparse ===\n");
-    print_header("rows x cols", &impls);
+    println!("=== Ablation A: Gram strategies, time (s), 90% sparse ===");
+    println!("{}\n", kernels::KernelDispatch::global().summary());
+    print_header("rows x cols", &impl_names);
 
     for &(rows, cols) in shapes {
         let ds = SynthSpec::new(rows, cols).sparsity(0.9).seed(7).generate();
@@ -27,8 +43,8 @@ fn main() {
         let bits = ds.to_bitmatrix();
         let csr = ds.to_csr();
         let mut cells = Vec::new();
-        for &name in &impls {
-            let cell = match name {
+        for name in &impl_names {
+            let cell = match *name {
                 // naive is O(m² n) with no blocking: cap to small shapes
                 "naive" => {
                     if rows * cols * cols <= 10_000 * 250 * 250 * 4 {
@@ -41,7 +57,13 @@ fn main() {
                 "bitpack-ref" => Cell::Secs(measure(|| bits.gram_reference())),
                 "bitpack" => Cell::Secs(measure(|| bits.gram())),
                 "csr" => Cell::Secs(measure(|| csr.gram())),
-                _ => unreachable!(),
+                pinned => {
+                    let kernel = pinned
+                        .strip_prefix("bitpack/")
+                        .and_then(kernels::by_name)
+                        .expect("kernel row");
+                    Cell::Secs(measure(|| bits.gram_with(kernel)))
+                }
             };
             emit_json(
                 "ablation_gram",
@@ -58,5 +80,6 @@ fn main() {
     }
     println!("\nexpected: blocked >> naive; bitpack fastest dense-substrate;");
     println!("bitpack vs bitpack-ref shows the 4-wide popcount unroll win;");
+    println!("bitpack/<kernel> rows attribute the kernel-dispatch win;");
     println!("csr competitive only because 90% sparse keeps nnz² small.");
 }

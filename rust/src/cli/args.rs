@@ -14,7 +14,7 @@ pub struct Args {
 }
 
 /// Names that take no value (everything else with `--` expects one).
-const FLAG_NAMES: &[&str] = &["with-xla", "header", "verbose", "quiet"];
+const FLAG_NAMES: &[&str] = &["with-xla", "header", "verbose", "quiet", "quick"];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Self> {

@@ -11,7 +11,7 @@ use crate::data::io;
 use crate::data::synth::SynthSpec;
 use crate::mi::backend::{compute_mi_with, Backend};
 use crate::mi::entropy::{normalized_mi, Normalization};
-use crate::mi::sink::{SinkOutput, SinkSpec};
+use crate::mi::sink::{SinkData, SinkSpec};
 use crate::mi::topk::{top_k_pairs, MiPair};
 use crate::mi::MiMatrix;
 use crate::runtime::ArtifactRegistry;
@@ -140,7 +140,11 @@ pub fn compute_with_plan(ds: &BinaryDataset, cfg: &RunConfig) -> Result<(MiMatri
     };
     let needs_plan = cfg.block_cols > 0 || cfg.memory_budget > 0;
     if needs_plan && cfg.backend.is_native() {
-        let kind = cfg.backend.native_kind();
+        let (backend, probe) = cfg.backend.resolve(ds)?;
+        if let Some(report) = &probe {
+            crate::info!("{}", report.summary());
+        }
+        let kind = backend.native_kind();
         let plan = plan_with_config(ds.n_cols(), &planner)?;
         crate::info!(
             "blockwise plan: {} tasks, block {} cols",
@@ -191,17 +195,24 @@ fn compute_into_sink(
         plan.tasks.len(),
         plan.block
     );
+    let (backend, probe) = cfg.backend.resolve(ds)?;
+    if let Some(report) = &probe {
+        crate::info!("{}", report.summary());
+    }
     let mut sink = spec.build(ds.n_cols(), ds.n_rows())?;
-    let provider = NativeProvider::new(ds, cfg.backend.native_kind());
+    let provider = NativeProvider::new(ds, backend.native_kind());
     let progress = Progress::new(plan.tasks.len());
     let t0 = std::time::Instant::now();
     execute_plan_sink(ds, &plan, &provider, cfg.workers, &progress, sink.as_mut())?;
-    let output = sink.finish()?;
+    let mut output = sink.finish()?;
+    output.meta.backend = Some(backend.name().to_string());
+    output.meta.requested_backend = Some(cfg.backend.name().to_string());
+    output.meta.kernel = Some(crate::linalg::kernels::active().name().to_string());
+    output.meta.probe = probe;
     println!(
-        "computed {} over {} columns with {} in {}",
+        "computed {} over {} columns in {}",
         output.summary(),
         ds.n_cols(),
-        cfg.backend,
         fmt_secs(t0.elapsed().as_secs_f64())
     );
 
@@ -210,15 +221,15 @@ fn compute_into_sink(
             println!("  {:<20} {:<20} {:.6}", ds.col_name(p.i), ds.col_name(p.j), p.mi);
         }
     };
-    match &output {
-        SinkOutput::TopK(pairs) => {
+    match &output.data {
+        SinkData::TopK(pairs) => {
             print_pairs(pairs, top);
             if let Some(path) = out {
                 write_pairs_csv(pairs, ds, path)?;
                 crate::info!("wrote {} pairs to {}", pairs.len(), path.display());
             }
         }
-        SinkOutput::TopKPerColumn(cols) => {
+        SinkData::TopKPerColumn(cols) => {
             for (c, pairs) in cols.iter().enumerate().take(top.max(1)) {
                 if let Some(best) = pairs.first() {
                     let partner = if best.i == c { best.j } else { best.i };
@@ -236,7 +247,7 @@ fn compute_into_sink(
                 crate::info!("wrote {} pairs to {}", flat.len(), path.display());
             }
         }
-        SinkOutput::Sparse(sp) => {
+        SinkData::Sparse(sp) => {
             println!(
                 "{} pairs at or above MI {:.6}{}",
                 sp.nnz(),
@@ -249,7 +260,7 @@ fn compute_into_sink(
                 crate::info!("wrote {} edges to {}", sp.nnz(), path.display());
             }
         }
-        SinkOutput::Spilled(info) => {
+        SinkData::Spilled(info) => {
             println!(
                 "spilled {} tiles ({} bytes) for m = {} to {}",
                 info.tiles,
@@ -258,7 +269,7 @@ fn compute_into_sink(
                 info.dir.display()
             );
         }
-        SinkOutput::Dense(_) => unreachable!("dense handled by compute_with_plan"),
+        SinkData::Dense(_) => unreachable!("dense handled by compute_with_plan"),
     }
     Ok(())
 }
@@ -356,6 +367,7 @@ pub fn info(argv: &[String]) -> Result<()> {
         .unwrap_or_else(crate::runtime::artifacts::default_dir);
     args.reject_unknown()?;
     println!("bulkmi {}", env!("CARGO_PKG_VERSION"));
+    println!("{}", crate::linalg::kernels::KernelDispatch::global().summary());
     println!("native backends: always available");
     for b in Backend::ALL.iter().filter(|b| b.is_native()) {
         println!("  {:<14} {}", b.name(), b.paper_label());
@@ -422,6 +434,12 @@ pub fn serve(argv: &[String]) -> Result<()> {
     let jobs = args.get_usize("jobs", 8)?;
     let block_cols = args.get_usize("block-cols", 64)?;
     let sink = SinkSpec::parse(args.get("sink").unwrap_or("dense"))?;
+    let backend = match args.get("backend") {
+        Some(b) => Backend::parse(b)
+            .filter(|b| b.is_native())
+            .ok_or_else(|| Error::Parse(format!("unknown native backend '{b}'")))?,
+        None => Backend::BulkBitpack,
+    };
     args.reject_unknown()?;
 
     let svc = JobService::new(workers, max_queued);
@@ -439,7 +457,7 @@ pub fn serve(argv: &[String]) -> Result<()> {
             SinkSpec::Spill { dir } => SinkSpec::Spill { dir: dir.join(format!("job{k}")) },
             other => other.clone(),
         };
-        let spec = JobSpec { block_cols, sink: job_sink, ..Default::default() };
+        let spec = JobSpec { backend, block_cols, sink: job_sink, ..Default::default() };
         loop {
             match svc.submit(ds.clone(), spec.clone()) {
                 Ok(h) => {

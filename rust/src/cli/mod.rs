@@ -4,6 +4,7 @@
 //! Run `bulkmi help` for usage.
 
 pub mod args;
+pub mod benchcmd;
 pub mod commands;
 
 use crate::util::error::Result;
@@ -26,7 +27,8 @@ COMMANDS:
         [--top K=10] [--normalize min|max|mean|joint] [--out FILE.csv]
         [--config FILE.toml]
         non-dense sinks run matrix-free: memory stays O(block^2) no
-        matter how many columns the dataset has
+        matter how many columns the dataset has; --backend auto
+        micro-probes the native substrates and commits to the fastest
     analyze     MI with statistical post-processing + edge-list export
         --input FILE [--backend NAME] [--top K=10]
         [--bias-correction miller-madow] [--permutations P=0]
@@ -37,15 +39,25 @@ COMMANDS:
         [--rows N=500] [--cols M=40] [--with-xla]
     serve       Run the job service on a stream of generated jobs (demo)
         [--workers N] [--max-queued Q=4] [--jobs J=8] [--block-cols B]
+        [--backend NAME=bulk-bitpack]
         [--sink dense|topk:K|topk-per-col:K|threshold:T|pvalue:P|spill:DIR]
+    bench       Deterministic Gram/kernel perf suite (alias: pallas-bench)
+        [--quick] [--seed K=42] [--reps R] [--out FILE.json]
+        [--baseline FILE.json] [--tolerance F=0.30]
+        writes BENCH_<host>.json; with --baseline, fails when any Gram
+        entry's scalar-normalized throughput regresses past tolerance
     help        Show this message
 
 BACKENDS:
-    pairwise bulk-basic bulk-opt bulk-sparse bulk-bitpack xla xla-pallas
+    pairwise bulk-basic bulk-opt bulk-sparse bulk-bitpack auto xla xla-pallas
+    (auto = probe bulk-opt / bulk-sparse / bulk-bitpack on a sampled
+    block, then run everything on the winner)
 
 ENVIRONMENT:
     BULKMI_LOG=error|warn|info|debug|trace    log level (default info)
     BULKMI_ARTIFACTS=DIR                      artifact directory
+    BULKMI_KERNEL=scalar|portable|avx2        force the Gram kernel
+    BULKMI_BENCH_HOST=NAME                    override bench host tag
 ";
 
 /// CLI entry point; returns the process exit code.
@@ -72,6 +84,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "info" => commands::info(rest),
         "selftest" => commands::selftest(rest),
         "serve" => commands::serve(rest),
+        "bench" | "pallas-bench" => benchcmd::bench(rest),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
             Ok(())

@@ -15,7 +15,7 @@ use crate::linalg::bitmat::BitMatrix;
 use crate::linalg::csr::CsrMatrix;
 use crate::linalg::dense::{Mat32, Mat64};
 use crate::mi::bulk_opt::combine;
-use crate::mi::sink::{DenseSink, MiSink, SinkOutput};
+use crate::mi::sink::{DenseSink, MiSink, SinkData};
 use crate::mi::xla::XlaMi;
 use crate::mi::MiMatrix;
 use crate::runtime::Impl;
@@ -334,8 +334,8 @@ pub fn compute_native(ds: &BinaryDataset, kind: NativeKind, workers: usize) -> R
 }
 
 fn dense_result(sink: &mut DenseSink) -> Result<MiMatrix> {
-    match sink.finish()? {
-        SinkOutput::Dense(mi) => Ok(mi),
+    match sink.finish()?.data {
+        SinkData::Dense(mi) => Ok(mi),
         other => Err(Error::Coordinator(format!(
             "dense sink returned {} output",
             other.kind_name()
@@ -384,7 +384,7 @@ mod tests {
     use crate::coordinator::planner::plan_blocks;
     use crate::data::synth::SynthSpec;
     use crate::mi::backend::{compute_mi, Backend};
-    use crate::mi::sink::TopKSink;
+    use crate::mi::sink::{SinkOutput, TopKSink};
 
     fn check_blockwise_matches(kind: NativeKind, workers: usize) {
         let ds = SynthSpec::new(200, 23).sparsity(0.8).seed(kind as u64).generate();
@@ -480,7 +480,7 @@ mod tests {
         }
 
         fn finish(&mut self) -> Result<SinkOutput> {
-            Ok(SinkOutput::TopK(Vec::new()))
+            Ok(SinkData::TopK(Vec::new()).into())
         }
     }
 
@@ -506,7 +506,7 @@ mod tests {
         let mut sink = TopKSink::global(4);
         let progress = Progress::new(plan.tasks.len());
         execute_plan_sink(&ds, &plan, &provider, 3, &progress, &mut sink).unwrap();
-        let SinkOutput::TopK(got) = sink.finish().unwrap() else { panic!() };
+        let SinkData::TopK(got) = sink.finish().unwrap().data else { panic!() };
         assert_eq!(got.len(), 4);
         assert_eq!((got[0].i, got[0].j), (2, 9));
         for (g, w) in got.iter().zip(&want) {

@@ -4,12 +4,13 @@
 //! the `bulkmi serve` CLI mode and the e2e example.
 
 use super::backpressure::Semaphore;
-use super::executor::{execute_plan_sink, NativeKind, NativeProvider};
+use super::executor::{execute_plan_sink, NativeProvider};
 use super::planner::{plan_blocks, BlockPlan};
 use super::progress::Progress;
 use super::scheduler::{order_tasks, Schedule};
 use crate::data::dataset::BinaryDataset;
 use crate::metrics::Metrics;
+use crate::mi::backend::Backend;
 use crate::mi::sink::{SinkOutput, SinkSpec};
 use crate::util::error::{Error, Result};
 use crate::util::threadpool::WorkerPool;
@@ -45,7 +46,10 @@ pub struct JobHandle(u64);
 /// Job specification.
 #[derive(Clone, Debug)]
 pub struct JobSpec {
-    pub kind: NativeKind,
+    /// Which native backend computes the Gram blocks. [`Backend::Auto`]
+    /// micro-probes the dataset at job start and commits to the winner
+    /// (recorded in the output's [`crate::mi::sink::SinkMeta`]).
+    pub backend: Backend,
     /// Column-block size (0 = monolithic).
     pub block_cols: usize,
     /// Worker threads *within* the job's plan execution.
@@ -58,7 +62,7 @@ pub struct JobSpec {
 impl Default for JobSpec {
     fn default() -> Self {
         JobSpec {
-            kind: NativeKind::Bitpack,
+            backend: Backend::BulkBitpack,
             block_cols: 0,
             inner_workers: 1,
             schedule: Schedule::LargestFirst,
@@ -101,6 +105,12 @@ impl JobService {
     /// Submit a job; fails fast with `Error::Coordinator` when the
     /// admission queue is full (callers should retry with backoff).
     pub fn submit(&self, ds: BinaryDataset, spec: JobSpec) -> Result<JobHandle> {
+        if !spec.backend.is_native() {
+            return Err(Error::Coordinator(format!(
+                "job backend must be native, not '{}'",
+                spec.backend
+            )));
+        }
         let Some(permit) = self.admission.try_acquire() else {
             self.metrics.counter("jobs_rejected").inc();
             return Err(Error::Coordinator(format!(
@@ -128,8 +138,9 @@ impl JobService {
                     return;
                 }
                 jobs.lock().unwrap().get_mut(&id).unwrap().status = JobStatus::Running(0.0);
-                let provider = NativeProvider::new(&ds, spec.kind);
-                let result = spec.sink.build(ds.n_cols(), ds.n_rows()).and_then(|mut sink| {
+                let result = spec.backend.resolve(&ds).and_then(|(resolved, probe)| {
+                    let provider = NativeProvider::new(&ds, resolved.native_kind());
+                    let mut sink = spec.sink.build(ds.n_cols(), ds.n_rows())?;
                     metrics.time("job_secs", || {
                         execute_plan_sink(
                             &ds,
@@ -140,7 +151,13 @@ impl JobService {
                             sink.as_mut(),
                         )
                     })?;
-                    sink.finish()
+                    let mut out = sink.finish()?;
+                    out.meta.backend = Some(resolved.name().to_string());
+                    out.meta.requested_backend = Some(spec.backend.name().to_string());
+                    out.meta.kernel =
+                        Some(crate::linalg::kernels::active().name().to_string());
+                    out.meta.probe = probe;
+                    Ok(out)
                 });
                 let status = match result {
                     Ok(out) => {
@@ -254,8 +271,12 @@ mod tests {
         };
         let h = svc.submit(ds, spec).unwrap();
         let status = svc.wait(h).unwrap();
-        let JobStatus::Done(SinkOutput::TopK(pairs)) = status else {
+        let JobStatus::Done(out) = status else {
             panic!("expected top-k output, got {status:?}")
+        };
+        assert_eq!(out.meta.backend.as_deref(), Some("bulk-bitpack"));
+        let crate::mi::sink::SinkData::TopK(pairs) = out.data else {
+            panic!("expected top-k output")
         };
         assert_eq!(pairs.len(), 5);
         assert_eq!((pairs[0].i, pairs[0].j), (0, 3));

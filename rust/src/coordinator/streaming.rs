@@ -191,7 +191,7 @@ mod tests {
 
     #[test]
     fn drain_into_sinks_matches_snapshot() {
-        use crate::mi::sink::{MiSink, SinkOutput, TopKSink, ThresholdSink};
+        use crate::mi::sink::{MiSink, SinkData, ThresholdSink, TopKSink};
         use crate::mi::topk::{edges_above, top_k_pairs};
 
         let ds = SynthSpec::new(600, 14).sparsity(0.7).seed(5).plant(1, 8, 0.05).generate();
@@ -204,7 +204,7 @@ mod tests {
 
         let mut topk = TopKSink::global(3);
         acc.drain_into(&mut topk, 4).unwrap();
-        let SinkOutput::TopK(pairs) = topk.finish().unwrap() else { panic!() };
+        let SinkData::TopK(pairs) = topk.finish().unwrap().data else { panic!() };
         for (got, exp) in pairs.iter().zip(&top_k_pairs(&full, 3)) {
             assert_eq!((got.i, got.j), (exp.i, exp.j));
             assert_eq!(got.mi, exp.mi);
@@ -212,7 +212,7 @@ mod tests {
 
         let mut thresh = ThresholdSink::by_mi(0.1);
         acc.drain_into(&mut thresh, 5).unwrap();
-        let SinkOutput::Sparse(sp) = thresh.finish().unwrap() else { panic!() };
+        let SinkData::Sparse(sp) = thresh.finish().unwrap().data else { panic!() };
         let want = edges_above(&full, 0.1);
         assert_eq!(sp.pairs.len(), want.len());
         for (got, exp) in sp.pairs.iter().zip(&want) {

@@ -138,6 +138,29 @@ impl BinaryDataset {
         Ok(BinaryDataset { n_rows: self.n_rows, n_cols: len, data, names })
     }
 
+    /// Gather of arbitrary columns (in `idx` order) as a new dataset
+    /// (column subsetting for feature selection and sampling; the
+    /// backend autotuner's probe uses the same stride-gather, fused
+    /// with its row cap).
+    pub fn select_cols(&self, idx: &[usize]) -> Result<BinaryDataset> {
+        if let Some(&bad) = idx.iter().find(|&&c| c >= self.n_cols) {
+            return Err(Error::Shape(format!(
+                "select_cols: column {bad} out of {} cols",
+                self.n_cols
+            )));
+        }
+        let mut data = Vec::with_capacity(self.n_rows * idx.len());
+        for r in 0..self.n_rows {
+            let row = self.row(r);
+            data.extend(idx.iter().map(|&c| row[c]));
+        }
+        let names = self
+            .names
+            .as_ref()
+            .map(|ns| idx.iter().map(|&c| ns[c].clone()).collect());
+        Ok(BinaryDataset { n_rows: self.n_rows, n_cols: idx.len(), data, names })
+    }
+
     /// Contiguous row chunk `[start, start+len)` as a new dataset
     /// (used by the streaming/row-chunked ingestion path).
     pub fn row_chunk(&self, start: usize, len: usize) -> Result<BinaryDataset> {
@@ -218,5 +241,21 @@ mod tests {
         assert_eq!(chunk.row(0), ds.row(2));
         assert!(ds.col_block(2, 2).is_err());
         assert!(ds.row_chunk(3, 2).is_err());
+    }
+
+    #[test]
+    fn select_cols_gathers_and_validates() {
+        let ds = BinaryDataset::new(3, 4, vec![1, 0, 0, 1, 0, 1, 0, 0, 1, 1, 1, 0])
+            .unwrap()
+            .with_names(vec!["a".into(), "b".into(), "c".into(), "d".into()])
+            .unwrap();
+        let sub = ds.select_cols(&[3, 1]).unwrap();
+        assert_eq!(sub.n_cols(), 2);
+        assert_eq!(sub.names(), Some(&["d".to_string(), "b".to_string()][..]));
+        for r in 0..3 {
+            assert_eq!(sub.get(r, 0), ds.get(r, 3));
+            assert_eq!(sub.get(r, 1), ds.get(r, 1));
+        }
+        assert!(ds.select_cols(&[0, 4]).is_err());
     }
 }

@@ -3,8 +3,15 @@
 //! elements per instruction. This is the crate's "hardware-optimized
 //! framework" analog of the paper's PyTorch row (Opt-T): same algorithm,
 //! substrate tuned to the machine.
+//!
+//! The popcount primitive itself is pluggable: `gram`/`gram_cross`
+//! dispatch through [`crate::linalg::kernels`], which picks the fastest
+//! AND-popcount kernel for this CPU (scalar unroll, Harley–Seal CSA, or
+//! AVX2 nibble-lookup) once per process. Every kernel is bit-identical,
+//! so the choice never changes a result.
 
 use super::dense::Mat64;
+use super::kernels::{self, Kernel};
 use crate::util::error::{Error, Result};
 
 /// Column-major packed bit matrix.
@@ -72,24 +79,30 @@ impl BitMatrix {
     /// Co-occurrence count of ones between two of *this* matrix's columns.
     #[inline]
     pub fn and_count(&self, i: usize, j: usize) -> u64 {
-        dot_popcount(self.col(i), self.col(j))
+        kernels::active().dot(self.col(i), self.col(j))
     }
 
-    /// Symmetric Gram `D^T D` via AND+popcount (upper triangle mirrored).
+    /// Symmetric Gram `D^T D` via AND+popcount (upper triangle
+    /// mirrored), on the process-wide fastest kernel.
     ///
     /// The inner loop is 4-wide across *output columns*: each word of
     /// column `i` is loaded once and ANDed against four `j` columns with
-    /// four independent `count_ones` accumulator chains in flight —
-    /// about 1.5-2x over the one-output-at-a-time reference
+    /// four independent accumulator chains in flight — about 1.5-2x
+    /// over the one-output-at-a-time reference
     /// ([`Self::gram_reference`], kept for the ablation bench).
     pub fn gram(&self) -> Mat64 {
+        self.gram_with(kernels::active())
+    }
+
+    /// [`Self::gram`] on an explicit kernel (bench / equivalence tests).
+    pub fn gram_with(&self, kernel: &Kernel) -> Mat64 {
         let m = self.cols;
         let mut out = Mat64::zeros(m, m);
         for i in 0..m {
             let ci = self.col(i);
             let mut j = i;
             while j + 4 <= m {
-                let v = dot_popcount_x4(
+                let v = kernel.dot_x4(
                     ci,
                     self.col(j),
                     self.col(j + 1),
@@ -103,7 +116,7 @@ impl BitMatrix {
                 j += 4;
             }
             while j < m {
-                let v = dot_popcount(ci, self.col(j)) as f64;
+                let v = kernel.dot(ci, self.col(j)) as f64;
                 out.set(i, j, v);
                 out.set(j, i, v);
                 j += 1;
@@ -112,16 +125,19 @@ impl BitMatrix {
         out
     }
 
-    /// Pre-unroll reference Gram (one output cell at a time). Kept so
-    /// `benches/ablation_gram.rs` can report the before/after of the
-    /// 4-wide accumulator unroll; not used on any compute path.
+    /// Pre-unroll reference Gram (one output cell at a time, scalar
+    /// kernel). Kept so `benches/ablation_gram.rs` can report the
+    /// before/after of the 4-wide accumulator unroll and so the kernel
+    /// equivalence tests have a fixed baseline; not used on any compute
+    /// path.
     pub fn gram_reference(&self) -> Mat64 {
+        let kernel = kernels::reference();
         let m = self.cols;
         let mut out = Mat64::zeros(m, m);
         for i in 0..m {
             let ci = self.col(i);
             for j in i..m {
-                let v = dot_popcount(ci, self.col(j)) as f64;
+                let v = kernel.dot(ci, self.col(j)) as f64;
                 out.set(i, j, v);
                 out.set(j, i, v);
             }
@@ -132,6 +148,11 @@ impl BitMatrix {
     /// Cross Gram `A^T B` against another bit matrix with the same rows
     /// (same 4-wide output-column unroll as [`Self::gram`]).
     pub fn gram_cross(&self, other: &BitMatrix) -> Result<Mat64> {
+        self.gram_cross_with(other, kernels::active())
+    }
+
+    /// [`Self::gram_cross`] on an explicit kernel.
+    pub fn gram_cross_with(&self, other: &BitMatrix, kernel: &Kernel) -> Result<Mat64> {
         if self.rows != other.rows {
             return Err(Error::Shape(format!(
                 "gram_cross: row mismatch {} vs {}",
@@ -144,7 +165,7 @@ impl BitMatrix {
             let ci = self.col(i);
             let mut j = 0;
             while j + 4 <= mb {
-                let v = dot_popcount_x4(
+                let v = kernel.dot_x4(
                     ci,
                     other.col(j),
                     other.col(j + 1),
@@ -157,7 +178,7 @@ impl BitMatrix {
                 j += 4;
             }
             while j < mb {
-                out.set(i, j, dot_popcount(ci, other.col(j)) as f64);
+                out.set(i, j, kernel.dot(ci, other.col(j)) as f64);
                 j += 1;
             }
         }
@@ -178,48 +199,6 @@ impl BitMatrix {
             self.data[start * self.words_per_col..(start + len) * self.words_per_col].to_vec();
         Ok(BitMatrix { rows: self.rows, cols: len, words_per_col: self.words_per_col, data })
     }
-}
-
-/// Four popcount dot products of one packed column against four others
-/// in a single pass: `a` is loaded once per word, and the four
-/// `count_ones` accumulators are independent dependency chains, so
-/// superscalar cores keep several popcnt units busy.
-#[inline]
-fn dot_popcount_x4(a: &[u64], b0: &[u64], b1: &[u64], b2: &[u64], b3: &[u64]) -> [u64; 4] {
-    debug_assert!(
-        a.len() == b0.len() && a.len() == b1.len() && a.len() == b2.len() && a.len() == b3.len()
-    );
-    let mut acc = [0u64; 4];
-    for (k, &w) in a.iter().enumerate() {
-        acc[0] += (w & b0[k]).count_ones() as u64;
-        acc[1] += (w & b1[k]).count_ones() as u64;
-        acc[2] += (w & b2[k]).count_ones() as u64;
-        acc[3] += (w & b3[k]).count_ones() as u64;
-    }
-    acc
-}
-
-/// popcount dot product of two packed columns.
-#[inline]
-fn dot_popcount(a: &[u64], b: &[u64]) -> u64 {
-    debug_assert_eq!(a.len(), b.len());
-    // 4-way unrolled: keeps several popcnt chains in flight
-    let mut acc0 = 0u64;
-    let mut acc1 = 0u64;
-    let mut acc2 = 0u64;
-    let mut acc3 = 0u64;
-    let chunks = a.len() / 4;
-    for k in 0..chunks {
-        let i = k * 4;
-        acc0 += (a[i] & b[i]).count_ones() as u64;
-        acc1 += (a[i + 1] & b[i + 1]).count_ones() as u64;
-        acc2 += (a[i + 2] & b[i + 2]).count_ones() as u64;
-        acc3 += (a[i + 3] & b[i + 3]).count_ones() as u64;
-    }
-    for i in chunks * 4..a.len() {
-        acc0 += (a[i] & b[i]).count_ones() as u64;
-    }
-    acc0 + acc1 + acc2 + acc3
 }
 
 #[cfg(test)]
@@ -286,6 +265,19 @@ mod tests {
             let bytes = random_bytes(&mut rng, n, m, 0.4);
             let bm = BitMatrix::from_row_major(n, m, &bytes).unwrap();
             assert_eq!(bm.gram().max_abs_diff(&bm.gram_reference()), 0.0, "m={m}");
+        }
+    }
+
+    #[test]
+    fn gram_with_every_kernel_matches_reference() {
+        let mut rng = Rng::new(9);
+        for &(n, m) in &[(65usize, 6usize), (130, 9), (257, 13)] {
+            let bytes = random_bytes(&mut rng, n, m, 0.35);
+            let bm = BitMatrix::from_row_major(n, m, &bytes).unwrap();
+            let want = bm.gram_reference();
+            for k in kernels::available() {
+                assert_eq!(bm.gram_with(k).max_abs_diff(&want), 0.0, "{}", k.name());
+            }
         }
     }
 

@@ -1,0 +1,158 @@
+//! AVX2 AND-popcount kernel (x86-64 only, runtime-detected).
+//!
+//! AVX2 has no vector popcount, so this uses the Muła nibble-lookup:
+//! `vpshufb` maps each nibble of the ANDed 256-bit lane to its bit
+//! count through a 16-entry table, and `vpsadbw` horizontally folds the
+//! per-byte counts into four u64 lanes — 4 words per iteration with no
+//! scalar popcount at all. Selected by the dispatch table only after
+//! `is_x86_feature_detected!("avx2")` succeeds; everything else falls
+//! back to the portable kernels.
+
+use core::arch::x86_64::*;
+
+/// Safe wrapper. The dispatch table is the only constructor of a
+/// [`super::Kernel`] pointing here, and it includes this kernel only
+/// when AVX2 was detected at startup, so the `target_feature` call is
+/// sound on every path that can reach it.
+pub(crate) fn dot(a: &[u64], b: &[u64]) -> u64 {
+    debug_assert!(std::arch::is_x86_feature_detected!("avx2"));
+    unsafe { dot_impl(a, b) }
+}
+
+/// Safe wrapper; same soundness argument as [`dot`].
+pub(crate) fn dot_x4(a: &[u64], b0: &[u64], b1: &[u64], b2: &[u64], b3: &[u64]) -> [u64; 4] {
+    debug_assert!(std::arch::is_x86_feature_detected!("avx2"));
+    unsafe { dot_x4_impl(a, b0, b1, b2, b3) }
+}
+
+/// Bit counts of the 16 possible nibbles, twice (one per 128-bit half).
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn nibble_table() -> __m256i {
+    _mm256_setr_epi8(
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4, //
+        0, 1, 1, 2, 1, 2, 2, 3, 1, 2, 2, 3, 2, 3, 3, 4,
+    )
+}
+
+/// Per-byte popcount of `v` via two table lookups.
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn byte_counts(v: __m256i, table: __m256i, low_mask: __m256i) -> __m256i {
+    let lo = _mm256_and_si256(v, low_mask);
+    let hi = _mm256_and_si256(_mm256_srli_epi64::<4>(v), low_mask);
+    _mm256_add_epi8(
+        _mm256_shuffle_epi8(table, lo),
+        _mm256_shuffle_epi8(table, hi),
+    )
+}
+
+#[inline]
+#[target_feature(enable = "avx2")]
+unsafe fn hsum_epi64(acc: __m256i) -> u64 {
+    let mut lanes = [0u64; 4];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, acc);
+    lanes[0] + lanes[1] + lanes[2] + lanes[3]
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn dot_impl(a: &[u64], b: &[u64]) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let table = nibble_table();
+    let low_mask = _mm256_set1_epi8(0x0f);
+    let zero = _mm256_setzero_si256();
+    let mut acc = zero;
+    for k in 0..chunks {
+        let va = _mm256_loadu_si256(a.as_ptr().add(k * 4) as *const __m256i);
+        let vb = _mm256_loadu_si256(b.as_ptr().add(k * 4) as *const __m256i);
+        let cnt = byte_counts(_mm256_and_si256(va, vb), table, low_mask);
+        // per-byte counts are <= 8, so one vpsadbw per iteration can
+        // never overflow anything
+        acc = _mm256_add_epi64(acc, _mm256_sad_epu8(cnt, zero));
+    }
+    let mut total = hsum_epi64(acc);
+    for i in chunks * 4..n {
+        total += (a[i] & b[i]).count_ones() as u64;
+    }
+    total
+}
+
+#[target_feature(enable = "avx2")]
+unsafe fn dot_x4_impl(
+    a: &[u64],
+    b0: &[u64],
+    b1: &[u64],
+    b2: &[u64],
+    b3: &[u64],
+) -> [u64; 4] {
+    debug_assert!(
+        a.len() == b0.len() && a.len() == b1.len() && a.len() == b2.len() && a.len() == b3.len()
+    );
+    let n = a.len();
+    let chunks = n / 4;
+    let table = nibble_table();
+    let low_mask = _mm256_set1_epi8(0x0f);
+    let zero = _mm256_setzero_si256();
+    let mut acc0 = zero;
+    let mut acc1 = zero;
+    let mut acc2 = zero;
+    let mut acc3 = zero;
+    for k in 0..chunks {
+        // `a` is loaded once and ANDed against four columns — the same
+        // reuse pattern as the scalar 4-wide unroll, in 256-bit lanes
+        let va = _mm256_loadu_si256(a.as_ptr().add(k * 4) as *const __m256i);
+        let v0 = _mm256_and_si256(va, _mm256_loadu_si256(b0.as_ptr().add(k * 4) as *const __m256i));
+        let v1 = _mm256_and_si256(va, _mm256_loadu_si256(b1.as_ptr().add(k * 4) as *const __m256i));
+        let v2 = _mm256_and_si256(va, _mm256_loadu_si256(b2.as_ptr().add(k * 4) as *const __m256i));
+        let v3 = _mm256_and_si256(va, _mm256_loadu_si256(b3.as_ptr().add(k * 4) as *const __m256i));
+        acc0 = _mm256_add_epi64(acc0, _mm256_sad_epu8(byte_counts(v0, table, low_mask), zero));
+        acc1 = _mm256_add_epi64(acc1, _mm256_sad_epu8(byte_counts(v1, table, low_mask), zero));
+        acc2 = _mm256_add_epi64(acc2, _mm256_sad_epu8(byte_counts(v2, table, low_mask), zero));
+        acc3 = _mm256_add_epi64(acc3, _mm256_sad_epu8(byte_counts(v3, table, low_mask), zero));
+    }
+    let mut out = [
+        hsum_epi64(acc0),
+        hsum_epi64(acc1),
+        hsum_epi64(acc2),
+        hsum_epi64(acc3),
+    ];
+    for i in chunks * 4..n {
+        let w = a[i];
+        out[0] += (w & b0[i]).count_ones() as u64;
+        out[1] += (w & b1[i]).count_ones() as u64;
+        out[2] += (w & b2[i]).count_ones() as u64;
+        out[3] += (w & b3[i]).count_ones() as u64;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::kernels::scalar;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_scalar_when_available() {
+        if !std::arch::is_x86_feature_detected!("avx2") {
+            eprintln!("avx2 unavailable; kernel untested on this host");
+            return;
+        }
+        let mut rng = Rng::new(0xA2);
+        for len in 0usize..=20 {
+            let a: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            let b: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            let c: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            let d: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            let e: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            assert_eq!(dot(&a, &b), scalar::dot(&a, &b), "len={len}");
+            assert_eq!(
+                dot_x4(&a, &b, &c, &d, &e),
+                scalar::dot_x4(&a, &b, &c, &d, &e),
+                "len={len}"
+            );
+        }
+    }
+}

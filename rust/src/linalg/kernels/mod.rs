@@ -1,0 +1,254 @@
+//! Hardware-adaptive AND-popcount Gram kernels.
+//!
+//! The bit-packed Gram ([`crate::linalg::bitmat::BitMatrix`]) spends
+//! essentially all of its time in one primitive: the popcount dot
+//! product of two packed columns. This module ships several
+//! implementations of that primitive —
+//!
+//! * `scalar` — `u64::count_ones` with a 4-wide accumulator unroll
+//!   (works everywhere; the correctness reference);
+//! * `portable` — Harley–Seal carry-save adders, amortizing the
+//!   popcount to 1/8 per word (fast where `count_ones` is emulated);
+//! * `avx2` — Muła nibble-lookup via `vpshufb`/`vpsadbw` (x86-64,
+//!   runtime-detected with `is_x86_feature_detected!`);
+//!
+//! — and a [`KernelDispatch`] table that picks one **once per process**:
+//! an explicit `BULKMI_KERNEL` env override wins, otherwise every
+//! kernel eligible on this CPU is micro-probed on a small resident
+//! buffer and the fastest is committed. All kernels return bit-identical
+//! counts (property-tested in `rust/tests/kernels.rs`), so selection is
+//! purely a throughput decision and never a correctness one.
+
+pub(crate) mod scalar;
+
+pub(crate) mod portable;
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx2;
+
+use crate::util::rng::Rng;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// One AND-popcount kernel: a name plus the two dot-product entry
+/// points the Gram loops need. Instances are `'static` and only ever
+/// constructed by this module, so holding a `&'static Kernel` from
+/// [`available`] / [`active`] guarantees the kernel is safe to call on
+/// this CPU (the AVX2 entry is listed only after feature detection).
+pub struct Kernel {
+    name: &'static str,
+    dot: fn(&[u64], &[u64]) -> u64,
+    dot_x4: fn(&[u64], &[u64], &[u64], &[u64], &[u64]) -> [u64; 4],
+}
+
+impl Kernel {
+    /// Stable identifier (`scalar` / `portable` / `avx2`) used by
+    /// `BULKMI_KERNEL`, bench output and sink metadata.
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// popcount(a & b) over two equal-length packed columns.
+    #[inline]
+    pub fn dot(&self, a: &[u64], b: &[u64]) -> u64 {
+        (self.dot)(a, b)
+    }
+
+    /// Four dots of `a` against `b0..b3` in one pass.
+    #[inline]
+    pub fn dot_x4(&self, a: &[u64], b0: &[u64], b1: &[u64], b2: &[u64], b3: &[u64]) -> [u64; 4] {
+        (self.dot_x4)(a, b0, b1, b2, b3)
+    }
+}
+
+impl std::fmt::Debug for Kernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Kernel").field("name", &self.name).finish()
+    }
+}
+
+static SCALAR: Kernel = Kernel { name: "scalar", dot: scalar::dot, dot_x4: scalar::dot_x4 };
+
+static PORTABLE: Kernel =
+    Kernel { name: "portable", dot: portable::dot, dot_x4: portable::dot_x4 };
+
+#[cfg(target_arch = "x86_64")]
+static AVX2: Kernel = Kernel { name: "avx2", dot: avx2::dot, dot_x4: avx2::dot_x4 };
+
+/// The scalar reference kernel (always present; what
+/// [`crate::linalg::bitmat::BitMatrix::gram_reference`] runs on).
+pub fn reference() -> &'static Kernel {
+    &SCALAR
+}
+
+/// Every kernel that is safe to call on this CPU, reference first.
+pub fn available() -> Vec<&'static Kernel> {
+    #[allow(unused_mut)]
+    let mut kernels = vec![&SCALAR, &PORTABLE];
+    #[cfg(target_arch = "x86_64")]
+    if std::arch::is_x86_feature_detected!("avx2") {
+        kernels.push(&AVX2);
+    }
+    kernels
+}
+
+/// Look up an available kernel by its stable name.
+pub fn by_name(name: &str) -> Option<&'static Kernel> {
+    available().into_iter().find(|k| k.name == name)
+}
+
+/// The per-process kernel choice: which kernels were eligible, how each
+/// probed, and which one every `BitMatrix::gram*` call now dispatches
+/// to.
+#[derive(Debug)]
+pub struct KernelDispatch {
+    active: &'static Kernel,
+    /// `(kernel, probe_secs)` per eligible kernel; secs is 0.0 when the
+    /// probe was skipped because `BULKMI_KERNEL` forced the choice.
+    probes: Vec<(&'static Kernel, f64)>,
+    forced: bool,
+}
+
+impl KernelDispatch {
+    /// The process-wide table, built on first use and cached.
+    pub fn global() -> &'static KernelDispatch {
+        static TABLE: OnceLock<KernelDispatch> = OnceLock::new();
+        TABLE.get_or_init(KernelDispatch::select)
+    }
+
+    /// The committed kernel.
+    pub fn active(&self) -> &'static Kernel {
+        self.active
+    }
+
+    /// Was the choice forced by `BULKMI_KERNEL` (vs. micro-probed)?
+    pub fn forced(&self) -> bool {
+        self.forced
+    }
+
+    /// Probe timings, fastest first (empty when the choice was forced
+    /// by `BULKMI_KERNEL`, so nothing was probed).
+    pub fn probes(&self) -> &[(&'static Kernel, f64)] {
+        &self.probes
+    }
+
+    /// One-line report for logs / `bulkmi info`.
+    pub fn summary(&self) -> String {
+        let mut s = format!("gram kernel: {}", self.active.name);
+        if self.forced {
+            s.push_str(" (BULKMI_KERNEL override)");
+        } else {
+            let detail: Vec<String> = self
+                .probes
+                .iter()
+                .map(|(k, t)| format!("{} {:.1}us", k.name, t * 1e6))
+                .collect();
+            s.push_str(&format!(" (probed: {})", detail.join(", ")));
+        }
+        s
+    }
+
+    fn select() -> KernelDispatch {
+        if let Ok(name) = std::env::var("BULKMI_KERNEL") {
+            if let Some(k) = by_name(&name) {
+                return KernelDispatch { active: k, probes: Vec::new(), forced: true };
+            }
+            crate::warn_!(
+                "BULKMI_KERNEL='{name}' is not an available kernel; probing instead"
+            );
+        }
+        let mut probes: Vec<(&'static Kernel, f64)> = available()
+            .into_iter()
+            .map(|k| (k, probe_secs(k)))
+            .collect();
+        probes.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
+        KernelDispatch { active: probes[0].0, probes, forced: false }
+    }
+}
+
+/// The kernel every `BitMatrix::gram*` call dispatches to.
+#[inline]
+pub fn active() -> &'static Kernel {
+    KernelDispatch::global().active()
+}
+
+/// Micro-probe one kernel: best-of-5 `dot_x4` sweeps over small
+/// L1-resident buffers (deterministic contents; ~a few hundred
+/// microseconds per kernel, paid once per process).
+fn probe_secs(kernel: &Kernel) -> f64 {
+    const WORDS: usize = 2048; // 16 KiB per column: resident, realistic
+    let mut rng = Rng::new(0xBEEF);
+    let col = |rng: &mut Rng| -> Vec<u64> { (0..WORDS).map(|_| rng.next_u64()).collect() };
+    let a = col(&mut rng);
+    let b: Vec<Vec<u64>> = (0..4).map(|_| col(&mut rng)).collect();
+    let mut best = f64::INFINITY;
+    let mut checksum = 0u64;
+    // iteration 0 is the warmup; 5 timed reps after it
+    for rep in 0..6 {
+        let t0 = Instant::now();
+        let v = kernel.dot_x4(&a, &b[0], &b[1], &b[2], &b[3]);
+        let secs = t0.elapsed().as_secs_f64();
+        checksum = checksum.wrapping_add(v[0] + v[1] + v[2] + v[3]);
+        if rep > 0 {
+            best = best.min(secs);
+        }
+    }
+    std::hint::black_box(checksum);
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_and_portable_always_available() {
+        let names: Vec<&str> = available().iter().map(|k| k.name()).collect();
+        assert!(names.contains(&"scalar"));
+        assert!(names.contains(&"portable"));
+        assert_eq!(names[0], "scalar", "reference kernel listed first");
+    }
+
+    #[test]
+    fn by_name_round_trips() {
+        for k in available() {
+            assert_eq!(by_name(k.name()).unwrap().name(), k.name());
+        }
+        assert!(by_name("warp-drive").is_none());
+    }
+
+    #[test]
+    fn dispatch_commits_an_available_kernel() {
+        let table = KernelDispatch::global();
+        assert!(available().iter().any(|k| k.name() == table.active().name()));
+        assert!(!table.summary().is_empty());
+        if !table.forced() {
+            // probed: the committed kernel is the fastest-probing one
+            assert_eq!(table.probes()[0].0.name(), table.active().name());
+            for w in table.probes().windows(2) {
+                assert!(w[0].1 <= w[1].1);
+            }
+        }
+    }
+
+    #[test]
+    fn all_kernels_agree_on_dots() {
+        let mut rng = Rng::new(7);
+        for len in [0usize, 1, 3, 4, 7, 8, 9, 31, 64, 65] {
+            let a: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            let bs: Vec<Vec<u64>> =
+                (0..4).map(|_| (0..len).map(|_| rng.next_u64()).collect()).collect();
+            let want = reference().dot(&a, &bs[0]);
+            let want4 = reference().dot_x4(&a, &bs[0], &bs[1], &bs[2], &bs[3]);
+            for k in available() {
+                assert_eq!(k.dot(&a, &bs[0]), want, "{} len={len}", k.name());
+                assert_eq!(
+                    k.dot_x4(&a, &bs[0], &bs[1], &bs[2], &bs[3]),
+                    want4,
+                    "{} len={len}",
+                    k.name()
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! Scalar AND-popcount kernel: plain `u64::count_ones` with a 4-wide
+//! accumulator unroll. Portable to every target and the dispatch
+//! table's last-resort fallback; also the reference the other kernels
+//! are property-tested against (`rust/tests/kernels.rs`).
+
+/// popcount dot product of two packed columns.
+pub(crate) fn dot(a: &[u64], b: &[u64]) -> u64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled: keeps several popcnt chains in flight
+    let mut acc0 = 0u64;
+    let mut acc1 = 0u64;
+    let mut acc2 = 0u64;
+    let mut acc3 = 0u64;
+    let chunks = a.len() / 4;
+    for k in 0..chunks {
+        let i = k * 4;
+        acc0 += (a[i] & b[i]).count_ones() as u64;
+        acc1 += (a[i + 1] & b[i + 1]).count_ones() as u64;
+        acc2 += (a[i + 2] & b[i + 2]).count_ones() as u64;
+        acc3 += (a[i + 3] & b[i + 3]).count_ones() as u64;
+    }
+    for i in chunks * 4..a.len() {
+        acc0 += (a[i] & b[i]).count_ones() as u64;
+    }
+    acc0 + acc1 + acc2 + acc3
+}
+
+/// Four popcount dot products of one packed column against four others
+/// in a single pass: `a` is loaded once per word, and the four
+/// `count_ones` accumulators are independent dependency chains, so
+/// superscalar cores keep several popcnt units busy.
+pub(crate) fn dot_x4(a: &[u64], b0: &[u64], b1: &[u64], b2: &[u64], b3: &[u64]) -> [u64; 4] {
+    debug_assert!(
+        a.len() == b0.len() && a.len() == b1.len() && a.len() == b2.len() && a.len() == b3.len()
+    );
+    let mut acc = [0u64; 4];
+    for (k, &w) in a.iter().enumerate() {
+        acc[0] += (w & b0[k]).count_ones() as u64;
+        acc[1] += (w & b1[k]).count_ones() as u64;
+        acc[2] += (w & b2[k]).count_ones() as u64;
+        acc[3] += (w & b3[k]).count_ones() as u64;
+    }
+    acc
+}

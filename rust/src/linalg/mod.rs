@@ -7,6 +7,9 @@
 //!   cache-blocked `syrk`-style Gram (the NumPy/Numba analog).
 //! * [`bitmat`] — bit-packed columns, Gram via `AND` + `popcount`
 //!   (64 elements per word; the "hardware-optimized framework" analog).
+//!   Its popcount primitive dispatches through [`kernels`], which picks
+//!   the fastest hardware-adaptive kernel (scalar / Harley–Seal CSA /
+//!   AVX2) once per process.
 //! * [`csr`] — compressed sparse rows, Gram via row-pair expansion
 //!   (the SciPy-sparse analog; cost ∝ Σ nnz(row)²).
 //! * the XLA/PJRT path lives in [`crate::runtime`] and [`crate::mi::xla`].
@@ -15,3 +18,4 @@ pub mod bitmat;
 pub mod blas;
 pub mod csr;
 pub mod dense;
+pub mod kernels;

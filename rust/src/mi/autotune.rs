@@ -1,0 +1,227 @@
+//! Backend autotuner: the `--backend auto` implementation.
+//!
+//! The three optimized native backends (`bulk-opt` / `bulk-sparse` /
+//! `bulk-bitpack`) are one algorithm on three Gram substrates, so the
+//! right choice is purely a hardware + data-shape question: bitpack wins
+//! almost everywhere, CSR wins at extreme sparsity, dense f32 can win
+//! on tiny row counts where packing overhead dominates. Rather than
+//! encode fragile closed-form rules, the autotuner **micro-probes**: it
+//! carves a small deterministic probe block out of the dataset (evenly
+//! strided columns so planted structure or column ordering cannot skew
+//! it, a bounded row prefix), measures each eligible backend's Gram
+//! throughput on that block with warmup + best-of-k, records the
+//! density estimate alongside, and commits the whole block plan to the
+//! winner. The probed winner is by construction never slower *on the
+//! probe block* than any fixed choice — the acceptance invariant
+//! checked in `rust/tests/autotune.rs`.
+//!
+//! All native backends are exact and bit-identical, so an imperfect
+//! probe can only ever cost time, never correctness.
+
+use super::backend::Backend;
+use crate::coordinator::executor::NativeKind;
+use crate::data::dataset::BinaryDataset;
+use crate::util::error::{Error, Result};
+use std::time::Instant;
+
+/// Columns in the probe block (fewer when the dataset is narrower).
+pub const PROBE_MAX_COLS: usize = 48;
+/// Rows in the probe block (fewer when the dataset is shorter).
+pub const PROBE_MAX_ROWS: usize = 8192;
+/// Timed repetitions per candidate (after one warmup rep).
+const PROBE_REPS: usize = 3;
+
+/// One candidate's probe result.
+#[derive(Clone, Debug)]
+pub struct ProbeMeasurement {
+    pub backend: Backend,
+    /// Best-of-k seconds for one Gram of the probe block.
+    pub secs: f64,
+    /// Gram throughput on the probe block: output cells × rows / secs
+    /// (comparable across candidates because the block is shared).
+    pub throughput: f64,
+}
+
+/// What the autotuner saw and decided; recorded in
+/// [`crate::mi::sink::SinkMeta`] so every auto run is auditable.
+#[derive(Clone, Debug)]
+pub struct ProbeReport {
+    /// The winning fixed backend the run was committed to.
+    pub chosen: Backend,
+    /// Fraction of ones in the probe block (1 - sparsity).
+    pub density: f64,
+    pub probe_rows: usize,
+    pub probe_cols: usize,
+    /// All candidates, in probe order.
+    pub candidates: Vec<ProbeMeasurement>,
+}
+
+impl ProbeReport {
+    /// One-line human summary for logs and the CLI.
+    pub fn summary(&self) -> String {
+        let detail: Vec<String> = self
+            .candidates
+            .iter()
+            .map(|c| format!("{} {:.2}ms", c.backend, c.secs * 1e3))
+            .collect();
+        format!(
+            "auto probe ({}x{} block, density {:.4}): chose {} ({})",
+            self.probe_rows,
+            self.probe_cols,
+            self.density,
+            self.chosen,
+            detail.join(", ")
+        )
+    }
+}
+
+/// The backends `--backend auto` chooses between: the optimized native
+/// substrates with a block Gram provider. (`pairwise` and `bulk-basic`
+/// are deliberate ablation baselines, `xla*` needs artifacts — none is
+/// ever auto-selected.)
+pub fn eligible() -> [Backend; 3] {
+    [Backend::BulkBitpack, Backend::BulkOpt, Backend::BulkSparse]
+}
+
+/// Probe every eligible backend on a sampled block of `ds` and return
+/// the full report. Deterministic in everything except the timings
+/// themselves.
+pub fn autotune(ds: &BinaryDataset) -> Result<ProbeReport> {
+    if ds.n_rows() == 0 || ds.n_cols() == 0 {
+        return Err(Error::Shape("cannot autotune an empty dataset".into()));
+    }
+    let probe = probe_block(ds)?;
+    let density = 1.0 - probe.sparsity();
+    let cells = (probe.n_cols() * probe.n_cols()) as f64 * probe.n_rows() as f64;
+    let mut candidates = Vec::with_capacity(3);
+    for backend in eligible() {
+        let secs = gram_secs(&probe, backend.native_kind());
+        candidates.push(ProbeMeasurement {
+            backend,
+            secs,
+            throughput: cells / secs.max(1e-12),
+        });
+    }
+    let chosen = candidates
+        .iter()
+        .max_by(|a, b| {
+            a.throughput
+                .partial_cmp(&b.throughput)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+        .expect("three candidates")
+        .backend;
+    Ok(ProbeReport {
+        chosen,
+        density,
+        probe_rows: probe.n_rows(),
+        probe_cols: probe.n_cols(),
+        candidates,
+    })
+}
+
+/// The deterministic probe block: up to [`PROBE_MAX_COLS`] evenly
+/// strided columns over the first [`PROBE_MAX_ROWS`] rows, gathered
+/// directly so the copy is O(probe_rows × probe_cols) — never a
+/// row-height or column-width pass over the full dataset.
+fn probe_block(ds: &BinaryDataset) -> Result<BinaryDataset> {
+    let m = ds.n_cols();
+    let rows = ds.n_rows().min(PROBE_MAX_ROWS);
+    if m <= PROBE_MAX_COLS {
+        return ds.row_chunk(0, rows);
+    }
+    let idx: Vec<usize> = (0..PROBE_MAX_COLS).map(|k| k * m / PROBE_MAX_COLS).collect();
+    let mut data = Vec::with_capacity(rows * idx.len());
+    for r in 0..rows {
+        let row = ds.row(r);
+        data.extend(idx.iter().map(|&c| row[c]));
+    }
+    BinaryDataset::new(rows, idx.len(), data)
+}
+
+/// Best-of-k Gram time of one substrate on the probe block. Substrate
+/// construction (packing / CSR conversion / f32 widening) is excluded:
+/// on a real run it is paid once while the Gram dominates, and the
+/// acceptance criterion is specifically about *Gram* throughput.
+fn gram_secs(probe: &BinaryDataset, kind: NativeKind) -> f64 {
+    match kind {
+        NativeKind::Bitpack => {
+            let bits = probe.to_bitmatrix();
+            best_of(|| {
+                std::hint::black_box(bits.gram());
+            })
+        }
+        NativeKind::Dense => {
+            let dense = probe.to_mat32();
+            best_of(|| {
+                std::hint::black_box(crate::linalg::blas::gram(&dense));
+            })
+        }
+        NativeKind::Sparse => {
+            let csr = probe.to_csr();
+            best_of(|| {
+                std::hint::black_box(csr.gram());
+            })
+        }
+    }
+}
+
+fn best_of(mut f: impl FnMut()) -> f64 {
+    f(); // warmup
+    let mut best = f64::INFINITY;
+    for _ in 0..PROBE_REPS {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    #[test]
+    fn probe_block_is_bounded_and_deterministic() {
+        let ds = SynthSpec::new(20_000, 300).sparsity(0.9).seed(3).generate();
+        let a = probe_block(&ds).unwrap();
+        let b = probe_block(&ds).unwrap();
+        assert_eq!(a.n_rows(), PROBE_MAX_ROWS);
+        assert_eq!(a.n_cols(), PROBE_MAX_COLS);
+        assert_eq!(a.bytes(), b.bytes(), "probe sampling must be deterministic");
+    }
+
+    #[test]
+    fn small_datasets_probe_whole() {
+        let ds = SynthSpec::new(50, 7).sparsity(0.5).seed(1).generate();
+        let p = probe_block(&ds).unwrap();
+        assert_eq!((p.n_rows(), p.n_cols()), (50, 7));
+    }
+
+    #[test]
+    fn report_chooses_the_fastest_candidate() {
+        let ds = SynthSpec::new(2000, 40).sparsity(0.9).seed(5).generate();
+        let report = autotune(&ds).unwrap();
+        assert!(eligible().contains(&report.chosen));
+        let best = report
+            .candidates
+            .iter()
+            .map(|c| c.throughput)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let chosen = report
+            .candidates
+            .iter()
+            .find(|c| c.backend == report.chosen)
+            .unwrap();
+        assert_eq!(chosen.throughput, best, "{}", report.summary());
+        assert!((0.0..=1.0).contains(&report.density));
+        assert!(!report.summary().is_empty());
+    }
+
+    #[test]
+    fn empty_dataset_rejected() {
+        let ds = BinaryDataset::new(0, 0, vec![]).unwrap();
+        assert!(autotune(&ds).is_err());
+    }
+}

@@ -3,6 +3,7 @@
 //! bit-packed extra), a parser for CLI/config use, and a uniform
 //! `compute_mi` entry point.
 
+use super::autotune::{autotune, ProbeReport};
 use super::bulk_basic::mi_bulk_basic;
 use super::pairwise::mi_pairwise;
 use super::xla::XlaMi;
@@ -24,6 +25,9 @@ pub enum Backend {
     BulkSparse,
     /// Section-3 on bit-packed popcount (hardware-optimized native).
     BulkBitpack,
+    /// Micro-probe the optimized native substrates on a sampled block
+    /// and commit to the fastest ([`crate::mi::autotune`]).
+    Auto,
     /// Section-3 through AOT XLA artifacts (paper: "Opt-T").
     Xla,
     /// Same, routed through the interpret-mode Pallas kernels.
@@ -32,12 +36,13 @@ pub enum Backend {
 
 impl Backend {
     /// All backends, in the paper's Table-1 column order (+ extras).
-    pub const ALL: [Backend; 7] = [
+    pub const ALL: [Backend; 8] = [
         Backend::Pairwise,
         Backend::BulkBasic,
         Backend::BulkOpt,
         Backend::BulkSparse,
         Backend::BulkBitpack,
+        Backend::Auto,
         Backend::Xla,
         Backend::XlaPallas,
     ];
@@ -50,6 +55,7 @@ impl Backend {
             Backend::BulkOpt => "bulk-opt",
             Backend::BulkSparse => "bulk-sparse",
             Backend::BulkBitpack => "bulk-bitpack",
+            Backend::Auto => "auto",
             Backend::Xla => "xla",
             Backend::XlaPallas => "xla-pallas",
         }
@@ -63,6 +69,7 @@ impl Backend {
             Backend::BulkOpt => "Opt-NN",
             Backend::BulkSparse => "Opt-SS",
             Backend::BulkBitpack => "Opt-bitpack (ours)",
+            Backend::Auto => "Opt-auto (probed)",
             Backend::Xla => "Opt-T",
             Backend::XlaPallas => "Opt-T (pallas)",
         }
@@ -80,12 +87,27 @@ impl Backend {
     /// The blockwise-engine Gram substrate this backend maps to (the
     /// coordinator / sink paths use it for blockwise plans). `Pairwise`
     /// and `BulkBasic` have no block provider of their own and map to
-    /// the substrate that matches their cost profile best.
+    /// the substrate that matches their cost profile best. `Auto` must
+    /// be [`Self::resolve`]d first; unresolved it maps to the bitpack
+    /// default.
     pub fn native_kind(self) -> NativeKind {
         match self {
             Backend::BulkSparse => NativeKind::Sparse,
             Backend::BulkBasic | Backend::BulkOpt => NativeKind::Dense,
             _ => NativeKind::Bitpack,
+        }
+    }
+
+    /// Resolve `Auto` to a concrete fixed backend by micro-probing the
+    /// dataset ([`crate::mi::autotune`]); every other backend resolves
+    /// to itself with no probe.
+    pub fn resolve(self, ds: &BinaryDataset) -> Result<(Backend, Option<ProbeReport>)> {
+        match self {
+            Backend::Auto => {
+                let report = autotune(ds)?;
+                Ok((report.chosen, Some(report)))
+            }
+            fixed => Ok((fixed, None)),
         }
     }
 }
@@ -118,6 +140,13 @@ pub fn compute_mi_with(ds: &BinaryDataset, backend: Backend, workers: usize) -> 
         Backend::BulkOpt => compute_native(ds, NativeKind::Dense, workers),
         Backend::BulkSparse => compute_native(ds, NativeKind::Sparse, workers),
         Backend::BulkBitpack => compute_native(ds, NativeKind::Bitpack, workers),
+        Backend::Auto => {
+            let (chosen, report) = backend.resolve(ds)?;
+            if let Some(r) = &report {
+                crate::info!("{}", r.summary());
+            }
+            compute_native(ds, chosen.native_kind(), workers)
+        }
         Backend::Xla => XlaMi::load_default()?.compute(ds),
         Backend::XlaPallas => XlaMi::load_default_pallas()?.compute(ds),
     }

@@ -8,11 +8,14 @@
 //! * [`bulk_bitpack`] — Section 3 on AND+popcount (hardware-optimized).
 //! * [`xla`] — Section 3 through the AOT Pallas/XLA artifacts (Opt-T row).
 //! * [`backend`] — the `MiBackend` trait and dispatch.
+//! * [`autotune`] — the `--backend auto` micro-prober: picks the
+//!   fastest native substrate for this machine and dataset.
 //! * [`sink`] — streaming consumers of MI blocks (dense / top-k /
 //!   threshold / disk-spill); what decouples computing all pairs from
 //!   storing all pairs.
 //! * [`entropy`], [`topk`] — analysis utilities on MI matrices.
 
+pub mod autotune;
 pub mod backend;
 pub mod bulk_basic;
 pub mod categorical;

@@ -53,9 +53,9 @@ pub trait MiSink: Send {
     fn finish(&mut self) -> Result<SinkOutput>;
 }
 
-/// What a sink retained, returned by [`MiSink::finish`].
+/// What a sink retained (the payload half of a [`SinkOutput`]).
 #[derive(Clone, Debug)]
-pub enum SinkOutput {
+pub enum SinkData {
     /// The full dense matrix.
     Dense(MiMatrix),
     /// The k strongest pairs, best first.
@@ -68,22 +68,22 @@ pub enum SinkOutput {
     Spilled(SpillInfo),
 }
 
-impl SinkOutput {
+impl SinkData {
     /// Stable identifier of the output shape.
     pub fn kind_name(&self) -> &'static str {
         match self {
-            SinkOutput::Dense(_) => "dense",
-            SinkOutput::TopK(_) => "topk",
-            SinkOutput::TopKPerColumn(_) => "topk-per-col",
-            SinkOutput::Sparse(_) => "sparse",
-            SinkOutput::Spilled(_) => "spill",
+            SinkData::Dense(_) => "dense",
+            SinkData::TopK(_) => "topk",
+            SinkData::TopKPerColumn(_) => "topk-per-col",
+            SinkData::Sparse(_) => "sparse",
+            SinkData::Spilled(_) => "spill",
         }
     }
 
     /// The dense matrix, when this output holds one.
     pub fn into_dense(self) -> Option<MiMatrix> {
         match self {
-            SinkOutput::Dense(mi) => Some(mi),
+            SinkData::Dense(mi) => Some(mi),
             _ => None,
         }
     }
@@ -93,33 +93,91 @@ impl SinkOutput {
     pub fn state_bytes(&self) -> usize {
         const PAIR: usize = std::mem::size_of::<MiPair>();
         match self {
-            SinkOutput::Dense(mi) => mi.dim() * mi.dim() * 8,
-            SinkOutput::TopK(pairs) => pairs.len() * PAIR,
-            SinkOutput::TopKPerColumn(cols) => {
+            SinkData::Dense(mi) => mi.dim() * mi.dim() * 8,
+            SinkData::TopK(pairs) => pairs.len() * PAIR,
+            SinkData::TopKPerColumn(cols) => {
                 cols.iter().map(|c| c.len() * PAIR).sum()
             }
-            SinkOutput::Sparse(sp) => sp.pairs.len() * PAIR,
-            SinkOutput::Spilled(_) => 0,
+            SinkData::Sparse(sp) => sp.pairs.len() * PAIR,
+            SinkData::Spilled(_) => 0,
         }
     }
 
     /// One-line human summary (job service / CLI reporting).
     pub fn summary(&self) -> String {
         match self {
-            SinkOutput::Dense(mi) => format!("dense {0} x {0} matrix", mi.dim()),
-            SinkOutput::TopK(pairs) => format!("top-{} pairs", pairs.len()),
-            SinkOutput::TopKPerColumn(cols) => {
+            SinkData::Dense(mi) => format!("dense {0} x {0} matrix", mi.dim()),
+            SinkData::TopK(pairs) => format!("top-{} pairs", pairs.len()),
+            SinkData::TopKPerColumn(cols) => {
                 format!("per-column top pairs over {} columns", cols.len())
             }
-            SinkOutput::Sparse(sp) => {
+            SinkData::Sparse(sp) => {
                 format!("{} pairs >= MI {:.6}", sp.pairs.len(), sp.threshold)
             }
-            SinkOutput::Spilled(info) => format!(
+            SinkData::Spilled(info) => format!(
                 "{} tiles / {} bytes spilled to {}",
                 info.tiles,
                 info.bytes,
                 info.dir.display()
             ),
+        }
+    }
+}
+
+/// How a run was executed: filled in by whoever drives the engine (the
+/// job service, the CLI sink path) after `finish()`. Sinks themselves
+/// know nothing about backends, so a bare `SinkOutput` built from
+/// [`SinkData`] carries an empty meta.
+#[derive(Clone, Debug, Default)]
+pub struct SinkMeta {
+    /// Backend the Gram blocks were actually computed with.
+    pub backend: Option<String>,
+    /// Backend the caller asked for (`"auto"` when the autotuner chose
+    /// [`Self::backend`]).
+    pub requested_backend: Option<String>,
+    /// The process-wide AND-popcount kernel
+    /// ([`crate::linalg::kernels::active`]).
+    pub kernel: Option<String>,
+    /// The autotuner's probe report, when the run was `--backend auto`.
+    pub probe: Option<crate::mi::autotune::ProbeReport>,
+}
+
+/// What a sink retained plus how the run was executed, returned by
+/// [`MiSink::finish`].
+#[derive(Clone, Debug)]
+pub struct SinkOutput {
+    pub data: SinkData,
+    pub meta: SinkMeta,
+}
+
+impl From<SinkData> for SinkOutput {
+    fn from(data: SinkData) -> Self {
+        SinkOutput { data, meta: SinkMeta::default() }
+    }
+}
+
+impl SinkOutput {
+    /// Stable identifier of the output shape.
+    pub fn kind_name(&self) -> &'static str {
+        self.data.kind_name()
+    }
+
+    /// The dense matrix, when this output holds one.
+    pub fn into_dense(self) -> Option<MiMatrix> {
+        self.data.into_dense()
+    }
+
+    /// Bytes of in-memory result state this output holds.
+    pub fn state_bytes(&self) -> usize {
+        self.data.state_bytes()
+    }
+
+    /// One-line human summary; names the backend when the meta knows it
+    /// (e.g. `"top-10 pairs (via bulk-bitpack)"`).
+    pub fn summary(&self) -> String {
+        match &self.meta.backend {
+            Some(b) => format!("{} (via {b})", self.data.summary()),
+            None => self.data.summary(),
         }
     }
 }
@@ -304,7 +362,7 @@ impl MiSink for DenseSink {
             .mat
             .take()
             .ok_or_else(|| Error::Coordinator("DenseSink already finished".into()))?;
-        Ok(SinkOutput::Dense(MiMatrix::from_mat(mat)))
+        Ok(SinkData::Dense(MiMatrix::from_mat(mat)).into())
     }
 }
 
@@ -377,10 +435,11 @@ impl MiSink for TopKSink {
 
     fn finish(&mut self) -> Result<SinkOutput> {
         match std::mem::replace(&mut self.state, TopKState::Global(BoundedRank::new(0))) {
-            TopKState::Global(heap) => Ok(SinkOutput::TopK(heap.into_sorted())),
-            TopKState::PerColumn(heaps) => Ok(SinkOutput::TopKPerColumn(
+            TopKState::Global(heap) => Ok(SinkData::TopK(heap.into_sorted()).into()),
+            TopKState::PerColumn(heaps) => Ok(SinkData::TopKPerColumn(
                 heaps.into_iter().map(|h| h.into_sorted()).collect(),
-            )),
+            )
+            .into()),
         }
     }
 }
@@ -438,11 +497,12 @@ impl MiSink for ThresholdSink {
     fn finish(&mut self) -> Result<SinkOutput> {
         let mut pairs = std::mem::take(&mut self.pairs);
         pairs.sort_by_key(|p| (p.i, p.j));
-        Ok(SinkOutput::Sparse(SparsePairs {
+        Ok(SinkData::Sparse(SparsePairs {
             threshold: self.threshold,
             pvalue: self.pvalue,
             pairs,
-        }))
+        })
+        .into())
     }
 }
 
@@ -499,12 +559,13 @@ impl MiSink for TileSpillSink {
             writeln!(w, "{},{},{},{},{file}", t.a_start, t.a_len, t.b_start, t.b_len)?;
         }
         w.flush()?;
-        Ok(SinkOutput::Spilled(SpillInfo {
+        Ok(SinkData::Spilled(SpillInfo {
             dir: self.dir.clone(),
             m: self.m,
             tiles: tiles.len(),
             bytes: self.bytes,
-        }))
+        })
+        .into())
     }
 }
 
@@ -662,7 +723,7 @@ mod tests {
     fn dense_sink_mirrors_off_diagonal() {
         let mut sink = DenseSink::new(4);
         feed(&mut sink);
-        let SinkOutput::Dense(mi) = sink.finish().unwrap() else { panic!() };
+        let SinkData::Dense(mi) = sink.finish().unwrap().data else { panic!() };
         for i in 0..4 {
             for j in 0..4 {
                 assert_eq!(mi.get(i, j), (i.min(j) * 10 + i.max(j)) as f64, "({i},{j})");
@@ -675,7 +736,7 @@ mod tests {
     fn topk_keeps_the_best_pairs() {
         let mut sink = TopKSink::global(2);
         feed(&mut sink);
-        let SinkOutput::TopK(pairs) = sink.finish().unwrap() else { panic!() };
+        let SinkData::TopK(pairs) = sink.finish().unwrap().data else { panic!() };
         // values: (0,1)=1 (0,2)=2 (0,3)=3 (1,2)=12 (1,3)=13 (2,3)=23
         assert_eq!(pairs.len(), 2);
         assert_eq!((pairs[0].i, pairs[0].j, pairs[0].mi), (2, 3, 23.0));
@@ -686,12 +747,12 @@ mod tests {
     fn topk_zero_and_oversized_k() {
         let mut empty = TopKSink::global(0);
         feed(&mut empty);
-        let SinkOutput::TopK(pairs) = empty.finish().unwrap() else { panic!() };
+        let SinkData::TopK(pairs) = empty.finish().unwrap().data else { panic!() };
         assert!(pairs.is_empty());
 
         let mut all = TopKSink::global(100);
         feed(&mut all);
-        let SinkOutput::TopK(pairs) = all.finish().unwrap() else { panic!() };
+        let SinkData::TopK(pairs) = all.finish().unwrap().data else { panic!() };
         assert_eq!(pairs.len(), 6); // only 6 pairs exist
         for w in pairs.windows(2) {
             assert!(w[0].mi >= w[1].mi);
@@ -704,7 +765,7 @@ mod tests {
         let b = block(&t, |_, _| 1.0); // all pairs tie
         let mut sink = TopKSink::global(2);
         sink.consume_block(&t, &b).unwrap();
-        let SinkOutput::TopK(pairs) = sink.finish().unwrap() else { panic!() };
+        let SinkData::TopK(pairs) = sink.finish().unwrap().data else { panic!() };
         assert_eq!((pairs[0].i, pairs[0].j), (0, 1));
         assert_eq!((pairs[1].i, pairs[1].j), (0, 2));
     }
@@ -713,7 +774,7 @@ mod tests {
     fn per_column_topk_covers_both_endpoints() {
         let mut sink = TopKSink::per_column(4, 1);
         feed(&mut sink);
-        let SinkOutput::TopKPerColumn(cols) = sink.finish().unwrap() else { panic!() };
+        let SinkData::TopKPerColumn(cols) = sink.finish().unwrap().data else { panic!() };
         assert_eq!(cols.len(), 4);
         // column 0's best partner is 3 (value 3), column 3's is 2 (23)
         assert_eq!((cols[0][0].i, cols[0][0].j), (0, 3));
@@ -727,7 +788,7 @@ mod tests {
     fn threshold_sink_filters_and_sorts() {
         let mut sink = ThresholdSink::by_mi(12.0);
         feed(&mut sink);
-        let SinkOutput::Sparse(sp) = sink.finish().unwrap() else { panic!() };
+        let SinkData::Sparse(sp) = sink.finish().unwrap().data else { panic!() };
         let got: Vec<(usize, usize)> = sp.pairs.iter().map(|p| (p.i, p.j)).collect();
         assert_eq!(got, vec![(1, 2), (1, 3), (2, 3)]);
         assert_eq!(sp.nnz(), 3);
@@ -741,7 +802,7 @@ mod tests {
         let _ = std::fs::remove_dir_all(&dir);
         let mut sink = TileSpillSink::new(&dir, 4).unwrap();
         feed(&mut sink);
-        let SinkOutput::Spilled(info) = sink.finish().unwrap() else { panic!() };
+        let SinkData::Spilled(info) = sink.finish().unwrap().data else { panic!() };
         assert_eq!(info.tiles, 3);
         assert_eq!(info.bytes, 3 * 4 * 8);
         let mi = assemble_spilled(&dir).unwrap();

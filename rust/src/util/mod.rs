@@ -5,6 +5,7 @@
 
 pub mod bench;
 pub mod error;
+pub mod json;
 pub mod logging;
 pub mod prop;
 pub mod rng;

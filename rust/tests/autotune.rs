@@ -1,0 +1,113 @@
+//! `--backend auto` acceptance tests:
+//!
+//! * auto returns **bit-identical** MI to every fixed native backend on
+//!   both dense and 1%-sparse data (all native backends combine the
+//!   same integer counts, so equality is exact, not approximate);
+//! * the autotuner never commits to a backend whose probed Gram
+//!   throughput is below the best fixed choice on the probe block;
+//! * an auto job through the service records what it chose in the
+//!   output's `SinkMeta`.
+
+use bulkmi::coordinator::service::{JobService, JobSpec, JobStatus};
+use bulkmi::data::synth::SynthSpec;
+use bulkmi::mi::autotune::{autotune, eligible};
+use bulkmi::mi::backend::{compute_mi, compute_mi_with, Backend};
+use bulkmi::mi::sink::{SinkData, SinkSpec};
+
+#[test]
+fn auto_bit_identical_to_every_fixed_backend() {
+    // dense (50% ones) and 1%-sparse synth data
+    for &(sparsity, seed) in &[(0.5f64, 11u64), (0.99, 12)] {
+        let ds = SynthSpec::new(600, 30).sparsity(sparsity).seed(seed).generate();
+        let auto = compute_mi(&ds, Backend::Auto).unwrap();
+        for fixed in eligible() {
+            let want = compute_mi(&ds, fixed).unwrap();
+            assert_eq!(
+                auto.max_abs_diff(&want),
+                0.0,
+                "sparsity={sparsity}: auto != {fixed}"
+            );
+        }
+        // and workers don't change the auto result either
+        let auto4 = compute_mi_with(&ds, Backend::Auto, 4).unwrap();
+        assert_eq!(auto.max_abs_diff(&auto4), 0.0);
+    }
+}
+
+#[test]
+fn probe_winner_is_never_below_best_fixed_throughput() {
+    for &(sparsity, seed) in &[(0.5f64, 21u64), (0.99, 22)] {
+        let ds = SynthSpec::new(2000, 48).sparsity(sparsity).seed(seed).generate();
+        let report = autotune(&ds).unwrap();
+        let chosen = report
+            .candidates
+            .iter()
+            .find(|c| c.backend == report.chosen)
+            .expect("chosen backend was probed");
+        for candidate in &report.candidates {
+            assert!(
+                chosen.throughput >= candidate.throughput,
+                "auto chose {} ({:.3e} cells/s) below {} ({:.3e}): {}",
+                report.chosen,
+                chosen.throughput,
+                candidate.backend,
+                candidate.throughput,
+                report.summary()
+            );
+        }
+        assert_eq!(report.candidates.len(), eligible().len());
+        assert!((0.0..=1.0).contains(&report.density));
+    }
+}
+
+#[test]
+fn auto_job_records_choice_in_sink_meta() {
+    let svc = JobService::new(2, 4);
+    let ds = SynthSpec::new(500, 24).sparsity(0.9).seed(33).plant(1, 7, 0.02).generate();
+    let full = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+    let spec = JobSpec {
+        backend: Backend::Auto,
+        block_cols: 8,
+        sink: SinkSpec::TopK { k: 3, per_column: false },
+        ..Default::default()
+    };
+    let h = svc.submit(ds, spec).unwrap();
+    let JobStatus::Done(out) = svc.wait(h).unwrap() else {
+        panic!("auto job failed")
+    };
+    // metadata: what ran, what was asked, what the probe saw
+    assert_eq!(out.meta.requested_backend.as_deref(), Some("auto"));
+    let chosen = out.meta.backend.as_deref().expect("resolved backend recorded");
+    assert!(
+        eligible().iter().any(|b| b.name() == chosen),
+        "auto resolved to unexpected backend '{chosen}'"
+    );
+    assert!(out.meta.kernel.is_some(), "gram kernel recorded");
+    let probe = out.meta.probe.as_ref().expect("probe report attached");
+    assert_eq!(probe.chosen.name(), chosen);
+    assert!(out.summary().contains(chosen), "summary names the backend");
+    // ... and the result is still exact
+    let SinkData::TopK(pairs) = out.data else { panic!("wrong output kind") };
+    let want = bulkmi::mi::topk::top_k_pairs(&full, 3);
+    assert_eq!((pairs[0].i, pairs[0].j), (want[0].i, want[0].j));
+    assert_eq!(pairs[0].mi, want[0].mi);
+}
+
+#[test]
+fn fixed_backend_jobs_record_plain_meta() {
+    let svc = JobService::new(1, 2);
+    let ds = SynthSpec::new(120, 10).sparsity(0.7).seed(5).generate();
+    let h = svc.submit(ds, JobSpec::default()).unwrap();
+    let JobStatus::Done(out) = svc.wait(h).unwrap() else { panic!() };
+    assert_eq!(out.meta.backend.as_deref(), Some("bulk-bitpack"));
+    assert_eq!(out.meta.requested_backend.as_deref(), Some("bulk-bitpack"));
+    assert!(out.meta.probe.is_none(), "fixed backends don't probe");
+}
+
+#[test]
+fn xla_jobs_are_rejected_at_submit() {
+    let svc = JobService::new(1, 2);
+    let ds = SynthSpec::new(20, 4).seed(1).generate();
+    let err = svc.submit(ds, JobSpec { backend: Backend::Xla, ..Default::default() });
+    assert!(err.is_err());
+}

@@ -4,6 +4,10 @@
 //! theoretic invariants. Uses the in-crate property-testing framework
 //! (`bulkmi::util::prop`) — the offline registry has no proptest.
 
+// The numeric checks deliberately index by (row, col) to mirror the
+// paper's pseudocode (same rationale as the crate-level allow in lib.rs).
+#![allow(clippy::needless_range_loop)]
+
 use bulkmi::data::dataset::BinaryDataset;
 use bulkmi::data::synth::SynthSpec;
 use bulkmi::mi::backend::{compute_mi, compute_mi_with, Backend};

@@ -1,0 +1,121 @@
+//! Kernel-equivalence property tests: every AND-popcount kernel the
+//! dispatch table can commit to (scalar, portable Harley–Seal CSA, and
+//! AVX2 where the CPU has it) must produce **bit-identical** `gram` /
+//! `gram_cross` results on arbitrary ragged shapes — including row
+//! counts that are not multiples of 64 (partial tail word), word counts
+//! hitting every unroll remainder, and degenerate 1-column matrices.
+//! Selection is a throughput decision only; these tests are what makes
+//! that claim safe.
+
+use bulkmi::data::dataset::BinaryDataset;
+use bulkmi::linalg::bitmat::BitMatrix;
+use bulkmi::linalg::kernels;
+use bulkmi::util::prop::{gen, prop_check, Config};
+
+fn bitmatrix(n: usize, m: usize, bytes: &[u8]) -> BitMatrix {
+    BitMatrix::from_row_major(n, m, bytes).unwrap()
+}
+
+#[test]
+fn prop_every_kernel_gram_bit_identical_to_reference() {
+    prop_check(
+        "gram_with(kernel) == gram_reference",
+        Config::with_cases(32),
+        // up to 300 rows: exercises 1..5 words per column, most with a
+        // ragged tail word; up to 13 cols: every 4-wide unroll remainder
+        |rng| gen::binary_matrix(rng, 300, 13),
+        |(n, m, bytes)| {
+            let bm = bitmatrix(*n, *m, bytes);
+            let want = bm.gram_reference();
+            for kernel in kernels::available() {
+                let got = bm.gram_with(kernel);
+                let diff = got.max_abs_diff(&want);
+                if diff != 0.0 {
+                    return Err(format!("{} n={n} m={m}: diff {diff}", kernel.name()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_every_kernel_gram_cross_bit_identical() {
+    prop_check(
+        "gram_cross_with(kernel) == reference cross",
+        Config::with_cases(32),
+        |rng| {
+            let (n, ma, bytes_a) = gen::binary_matrix(rng, 260, 9);
+            let mb = gen::int_in(rng, 1, 9);
+            let bytes_b: Vec<u8> = (0..n * mb)
+                .map(|_| if rng.bernoulli(0.4) { 1 } else { 0 })
+                .collect();
+            (n, ma, bytes_a, mb, bytes_b)
+        },
+        |(n, ma, bytes_a, mb, bytes_b)| {
+            let a = bitmatrix(*n, *ma, bytes_a);
+            let b = bitmatrix(*n, *mb, bytes_b);
+            let want = a.gram_cross_with(&b, kernels::reference()).unwrap();
+            for kernel in kernels::available() {
+                let got = a.gram_cross_with(&b, kernel).unwrap();
+                let diff = got.max_abs_diff(&want);
+                if diff != 0.0 {
+                    return Err(format!(
+                        "{} n={n} {ma}x{mb}: diff {diff}",
+                        kernel.name()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The tail-word path specifically: row counts straddling word
+/// boundaries (63/64/65...) with all-ones data, where a kernel that
+/// read past the packed tail would overcount deterministically.
+#[test]
+fn tail_word_boundaries_exact() {
+    for n in [1usize, 63, 64, 65, 127, 128, 129, 191, 256, 257] {
+        let m = 5;
+        let bytes = vec![1u8; n * m];
+        let bm = bitmatrix(n, m, &bytes);
+        for kernel in kernels::available() {
+            let g = bm.gram_with(kernel);
+            for i in 0..m {
+                for j in 0..m {
+                    assert_eq!(
+                        g.get(i, j),
+                        n as f64,
+                        "{} n={n} ({i},{j})",
+                        kernel.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The committed (dispatched) kernel is one of the available ones and
+/// the full MI pipeline through it matches the textbook baseline.
+#[test]
+fn dispatched_kernel_end_to_end_matches_pairwise() {
+    use bulkmi::mi::backend::{compute_mi, Backend};
+
+    let table = kernels::KernelDispatch::global();
+    assert!(kernels::available()
+        .iter()
+        .any(|k| k.name() == table.active().name()));
+
+    let (n, m) = (257, 12);
+    let bytes: Vec<u8> = (0..n * m).map(|i| ((i * 2654435761) >> 7) as u8 & 1).collect();
+    let ds = BinaryDataset::new(n, m, bytes).unwrap();
+    let want = compute_mi(&ds, Backend::Pairwise).unwrap();
+    let got = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+    assert!(
+        got.max_abs_diff(&want) < 1e-10,
+        "kernel {}: diff {}",
+        table.active().name(),
+        got.max_abs_diff(&want)
+    );
+}

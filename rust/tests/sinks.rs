@@ -9,6 +9,10 @@
 //! * a 20k-column top-k run never touches anything m x m sized
 //!   (the matrix-free guarantee that motivates the whole sink layer).
 
+// The numeric checks deliberately index by (row, col) to mirror the
+// paper's pseudocode (same rationale as the crate-level allow in lib.rs).
+#![allow(clippy::needless_range_loop)]
+
 use bulkmi::coordinator::executor::NativeKind;
 use bulkmi::coordinator::planner::{dense_output_bytes, matrix_free_block, plan_blocks, BlockTask};
 use bulkmi::coordinator::progress::Progress;
@@ -18,7 +22,8 @@ use bulkmi::data::synth::SynthSpec;
 use bulkmi::linalg::dense::Mat64;
 use bulkmi::mi::backend::{compute_mi, Backend};
 use bulkmi::mi::sink::{
-    assemble_spilled, DenseSink, MiSink, SinkOutput, ThresholdSink, TileSpillSink, TopKSink,
+    assemble_spilled, DenseSink, MiSink, SinkData, SinkOutput, ThresholdSink, TileSpillSink,
+    TopKSink,
 };
 use bulkmi::mi::significance::mi_threshold_for_pvalue;
 use bulkmi::mi::topk::{edges_above, top_k_pairs, MiPair};
@@ -66,7 +71,7 @@ fn prop_dense_sink_bit_identical_to_monolithic() {
                 let mut sink = DenseSink::new(*m);
                 let out = run_sink(&ds, kind, *block, *workers, &mut sink)
                     .map_err(|e| e.to_string())?;
-                let SinkOutput::Dense(got) = out else {
+                let SinkData::Dense(got) = out.data else {
                     return Err("dense sink returned non-dense output".into());
                 };
                 let diff = got.max_abs_diff(&mono);
@@ -99,7 +104,7 @@ fn prop_topk_sink_matches_posthoc_extraction() {
             let mut sink = TopKSink::global(*k);
             let out = run_sink(&ds, NativeKind::Bitpack, *block, 2, &mut sink)
                 .map_err(|e| e.to_string())?;
-            let SinkOutput::TopK(got) = out else {
+            let SinkData::TopK(got) = out.data else {
                 return Err("wrong output kind".into());
             };
             if got.len() != want.len() {
@@ -133,7 +138,7 @@ fn prop_threshold_sink_matches_edges_above() {
                 let mut sink = ThresholdSink::by_mi(threshold);
                 let out = run_sink(&ds, NativeKind::Bitpack, *block, 2, &mut sink)
                     .map_err(|e| e.to_string())?;
-                let SinkOutput::Sparse(sp) = out else {
+                let SinkData::Sparse(sp) = out.data else {
                     return Err("wrong output kind".into());
                 };
                 if sp.pairs.len() != want.len() {
@@ -161,7 +166,7 @@ fn per_column_topk_matches_posthoc() {
     let k = 4;
     let mut sink = TopKSink::per_column(15, k);
     let out = run_sink(&ds, NativeKind::Bitpack, 4, 2, &mut sink).unwrap();
-    let SinkOutput::TopKPerColumn(cols) = out else { panic!("wrong output kind") };
+    let SinkData::TopKPerColumn(cols) = out.data else { panic!("wrong output kind") };
     assert_eq!(cols.len(), 15);
     for c in 0..15 {
         // post-hoc: all pairs involving c, ranked like top_k_pairs
@@ -188,7 +193,7 @@ fn pvalue_threshold_sink_matches_derived_cutoff() {
     let mut sink = ThresholdSink::by_pvalue(p, 800).unwrap();
     assert_eq!(sink.threshold(), cutoff);
     let out = run_sink(&ds, NativeKind::Bitpack, 5, 2, &mut sink).unwrap();
-    let SinkOutput::Sparse(sp) = out else { panic!("wrong output kind") };
+    let SinkData::Sparse(sp) = out.data else { panic!("wrong output kind") };
     assert_eq!(sp.pvalue, Some(p));
     assert_eq!(sp.pairs.len(), want.len());
     // the planted pair survives the significance screen
@@ -203,7 +208,7 @@ fn spill_sink_round_trips_through_disk() {
     let full = compute_mi(&ds, Backend::BulkBitpack).unwrap();
     let mut sink = TileSpillSink::new(&dir, 17).unwrap();
     let out = run_sink(&ds, NativeKind::Bitpack, 5, 3, &mut sink).unwrap();
-    let SinkOutput::Spilled(info) = out else { panic!("wrong output kind") };
+    let SinkData::Spilled(info) = out.data else { panic!("wrong output kind") };
     let plan = plan_blocks(17, 5).unwrap();
     assert_eq!(info.tiles, plan.tasks.len());
     let assembled = assemble_spilled(&dir).unwrap();
@@ -259,7 +264,7 @@ fn topk_20k_columns_without_dense_matrix() {
         audit.max_cells
     );
 
-    let SinkOutput::TopK(pairs) = audit.finish().unwrap() else { panic!("wrong output") };
+    let SinkData::TopK(pairs) = audit.finish().unwrap().data else { panic!("wrong output") };
     assert_eq!(pairs.len(), 1000);
     assert_eq!(
         (pairs[0].i, pairs[0].j),

@@ -3,6 +3,10 @@
 //! loudly, when the artifact directory is absent — e.g. in a tree where
 //! only cargo ran).
 
+// The numeric checks deliberately index by (row, col) to mirror the
+// paper's pseudocode (same rationale as the crate-level allow in lib.rs).
+#![allow(clippy::needless_range_loop)]
+
 use bulkmi::data::synth::SynthSpec;
 use bulkmi::mi::backend::{compute_mi, Backend};
 use bulkmi::mi::xla::XlaMi;
