@@ -2,7 +2,9 @@
 
 use super::args::Args;
 use crate::config::RunConfig;
-use crate::coordinator::planner::{matrix_free_block, plan_blocks, plan_with_config, PlannerConfig};
+use crate::coordinator::planner::{
+    block_policy, matrix_free_block, plan_blocks, plan_with_config, PlannerConfig,
+};
 use crate::coordinator::progress::Progress;
 use crate::coordinator::service::{JobService, JobSpec, JobStatus};
 use crate::coordinator::{execute_plan, execute_plan_sink, NativeProvider};
@@ -11,7 +13,7 @@ use crate::data::io;
 use crate::data::synth::SynthSpec;
 use crate::mi::backend::{compute_mi_with, Backend};
 use crate::mi::entropy::{normalized_mi, Normalization};
-use crate::mi::sink::{SinkData, SinkSpec};
+use crate::mi::sink::{BlockSizing, SinkData, SinkSpec};
 use crate::mi::topk::{top_k_pairs, MiPair};
 use crate::mi::MiMatrix;
 use crate::runtime::ArtifactRegistry;
@@ -184,21 +186,28 @@ fn compute_into_sink(
             "--out is not supported with --sink spill (tiles + manifest.csv go to DIR)".into(),
         ));
     }
-    let block = if cfg.block_cols > 0 {
-        cfg.block_cols
-    } else {
-        matrix_free_block(ds.n_rows(), ds.n_cols(), cfg.memory_budget)
-    };
-    let plan = plan_blocks(ds.n_cols(), block)?;
-    crate::info!(
-        "matrix-free plan: {} tasks, block {} cols",
-        plan.tasks.len(),
-        plan.block
-    );
     let (backend, probe) = cfg.backend.resolve(ds)?;
     if let Some(report) = &probe {
         crate::info!("{}", report.summary());
     }
+    // Explicit block size wins; otherwise an auto run folds the
+    // probe's throughput into the width (faster substrates afford
+    // larger blocks under the same latency target) and fixed backends
+    // use the memory-budget rule.
+    let (block, sizing_source) = block_policy(
+        cfg.block_cols,
+        probe.as_ref().map(|r| r.chosen_throughput()),
+        ds.n_rows(),
+        ds.n_cols(),
+        cfg.memory_budget,
+        (matrix_free_block(ds.n_rows(), ds.n_cols(), cfg.memory_budget), "budget"),
+    );
+    let plan = plan_blocks(ds.n_cols(), block)?;
+    crate::info!(
+        "matrix-free plan: {} tasks, block {} cols ({sizing_source})",
+        plan.tasks.len(),
+        plan.block
+    );
     let mut sink = spec.build(ds.n_cols(), ds.n_rows())?;
     let provider = NativeProvider::new(ds, backend.native_kind());
     let progress = Progress::new(plan.tasks.len());
@@ -209,6 +218,7 @@ fn compute_into_sink(
     output.meta.requested_backend = Some(cfg.backend.name().to_string());
     output.meta.kernel = Some(crate::linalg::kernels::active().name().to_string());
     output.meta.probe = probe;
+    output.meta.sizing = Some(BlockSizing { block_cols: plan.block, source: sizing_source });
     println!(
         "computed {} over {} columns in {}",
         output.summary(),

@@ -56,7 +56,10 @@ BACKENDS:
 ENVIRONMENT:
     BULKMI_LOG=error|warn|info|debug|trace    log level (default info)
     BULKMI_ARTIFACTS=DIR                      artifact directory
-    BULKMI_KERNEL=scalar|portable|avx2        force the Gram kernel
+    BULKMI_KERNEL=scalar|portable|avx2|avx512|neon
+                                              force the Gram kernel (a name
+                                              not eligible on this CPU is a
+                                              hard error)
     BULKMI_BENCH_HOST=NAME                    override bench host tag
 ";
 
@@ -76,6 +79,9 @@ fn dispatch(argv: &[String]) -> Result<()> {
         println!("{USAGE}");
         return Ok(());
     };
+    // fail fast on a bad BULKMI_KERNEL before any work starts, with a
+    // clean CLI error instead of the dispatch table's late hard error
+    crate::linalg::kernels::validate_env_override()?;
     let rest = &argv[1..];
     match cmd.as_str() {
         "generate" => commands::generate(rest),

@@ -130,6 +130,69 @@ pub fn matrix_free_block(n: usize, m: usize, budget: usize) -> usize {
     block_for_budget(n, m, budget)
 }
 
+/// Default per-task Gram latency target for
+/// [`throughput_block`]: long enough that per-task overheads
+/// (block extraction, channel send) stay negligible, short enough that
+/// progress reporting and cancellation stay responsive.
+pub const DEFAULT_TASK_LATENCY_SECS: f64 = 2.0;
+
+/// Fold probed Gram throughput into block sizing: the largest block
+/// whose estimated single-task Gram latency stays under `target_secs`,
+/// additionally capped by the [`matrix_free_block`] memory rule for
+/// `budget` (0 = its 256 MiB default).
+///
+/// `cell_rows_per_sec` is the autotuner's throughput measure
+/// ([`crate::mi::autotune::ProbeReport::chosen_throughput`]): Gram
+/// output cells x rows per second. A diagonal block task computes
+/// ~`b² · n` cell-rows, so the latency cap is
+/// `b = sqrt(throughput · target / n)` — **faster substrates get
+/// larger blocks under the same latency budget**, which amortizes
+/// per-task overhead exactly where the hardware can afford it. A
+/// non-finite or non-positive throughput falls back to the memory rule
+/// alone.
+pub fn throughput_block(
+    n: usize,
+    m: usize,
+    budget: usize,
+    cell_rows_per_sec: f64,
+    target_secs: f64,
+) -> usize {
+    let mem_cap = matrix_free_block(n, m, budget);
+    if !cell_rows_per_sec.is_finite() || cell_rows_per_sec <= 0.0 || target_secs <= 0.0 {
+        return mem_cap;
+    }
+    let cell_rows = cell_rows_per_sec * target_secs / n.max(1) as f64;
+    let latency_cap = cell_rows.sqrt().floor() as usize;
+    latency_cap.clamp(1, m.max(1)).min(mem_cap)
+}
+
+/// The block-width policy shared by the job service and the CLI sink
+/// path: an explicit caller width always wins, then a probed
+/// throughput (via [`throughput_block`] under
+/// [`DEFAULT_TASK_LATENCY_SECS`]), then the caller's `fallback` rule —
+/// the service's monolithic plan, or the CLI's memory-budget rule.
+/// Returns the width together with its `BlockSizing::source` tag
+/// (`"explicit"` / `"probe-throughput"` / the fallback's own tag).
+pub fn block_policy(
+    explicit_cols: usize,
+    probe_cell_rows_per_sec: Option<f64>,
+    n: usize,
+    m: usize,
+    budget: usize,
+    fallback: (usize, &'static str),
+) -> (usize, &'static str) {
+    if explicit_cols > 0 {
+        return (explicit_cols, "explicit");
+    }
+    if let Some(tput) = probe_cell_rows_per_sec {
+        return (
+            throughput_block(n, m, budget, tput, DEFAULT_TASK_LATENCY_SECS),
+            "probe-throughput",
+        );
+    }
+    fallback
+}
+
 /// Plan from a [`PlannerConfig`] (block size override wins over budget).
 pub fn plan_with_config(m: usize, cfg: &PlannerConfig) -> Result<BlockPlan> {
     let block = if cfg.block_cols > 0 {
@@ -214,6 +277,49 @@ mod tests {
         assert!(task_bytes(100_000, b) <= 256 << 20 || b == 1);
         // small m still planned monolithically under a huge budget
         assert_eq!(matrix_free_block(100, 50, usize::MAX), 50);
+    }
+
+    #[test]
+    fn throughput_block_scales_with_substrate_speed() {
+        let (n, m) = (10_000usize, 5_000usize);
+        // faster probed substrates get blocks at least as large
+        let slow = throughput_block(n, m, 0, 1e6, DEFAULT_TASK_LATENCY_SECS);
+        let fast = throughput_block(n, m, 0, 1e9, DEFAULT_TASK_LATENCY_SECS);
+        assert!(fast >= slow, "fast {fast} < slow {slow}");
+        assert!(slow >= 1);
+        // the latency model itself: b^2 * n / throughput <= target
+        // (when the latency cap, not the memory cap, binds)
+        let b = throughput_block(n, m, usize::MAX, 1e8, 1.0);
+        if b < m {
+            assert!((b * b) as f64 * n as f64 / 1e8 <= 1.0 + 1e-9, "b={b}");
+            assert!(((b + 1) * (b + 1)) as f64 * n as f64 / 1e8 > 1.0, "b={b} not maximal");
+        }
+        // the memory rule still caps an arbitrarily fast substrate
+        let capped = throughput_block(100_000, 1_000_000, 0, f64::MAX, 1e9);
+        assert!(task_bytes(100_000, capped) <= 256 << 20 || capped == 1);
+        // degenerate throughput falls back to the memory rule
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            assert_eq!(
+                throughput_block(n, m, 0, bad, DEFAULT_TASK_LATENCY_SECS),
+                matrix_free_block(n, m, 0),
+                "throughput={bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn block_policy_precedence() {
+        // explicit width wins over everything
+        assert_eq!(
+            block_policy(7, Some(1e9), 1000, 100, 0, (3, "budget")),
+            (7, "explicit")
+        );
+        // probed throughput next
+        let (b, src) = block_policy(0, Some(1e9), 1000, 100, 0, (3, "budget"));
+        assert_eq!(src, "probe-throughput");
+        assert_eq!(b, throughput_block(1000, 100, 0, 1e9, DEFAULT_TASK_LATENCY_SECS));
+        // the caller's fallback last
+        assert_eq!(block_policy(0, None, 1000, 100, 0, (3, "budget")), (3, "budget"));
     }
 
     #[test]

@@ -35,6 +35,14 @@ impl Progress {
         self.inner.total.load(Ordering::Relaxed)
     }
 
+    /// Reset the task total once the real plan is known. The job
+    /// service plans *inside* the worker when block sizing depends on
+    /// the autotuner's probe, so the handle starts with a placeholder
+    /// total; cancellation state is untouched.
+    pub fn set_total(&self, total: usize) {
+        self.inner.total.store(total, Ordering::Relaxed);
+    }
+
     /// Completion in [0, 1] (1.0 for empty plans).
     pub fn fraction(&self) -> f64 {
         let total = self.total();

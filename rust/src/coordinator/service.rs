@@ -5,13 +5,14 @@
 
 use super::backpressure::Semaphore;
 use super::executor::{execute_plan_sink, NativeProvider};
-use super::planner::{plan_blocks, BlockPlan};
+use super::planner::{block_policy, plan_blocks, BlockPlan};
 use super::progress::Progress;
 use super::scheduler::{order_tasks, Schedule};
 use crate::data::dataset::BinaryDataset;
 use crate::metrics::Metrics;
+use crate::mi::autotune::ProbeReport;
 use crate::mi::backend::Backend;
-use crate::mi::sink::{SinkOutput, SinkSpec};
+use crate::mi::sink::{BlockSizing, SinkOutput, SinkSpec};
 use crate::util::error::{Error, Result};
 use crate::util::threadpool::WorkerPool;
 use std::collections::HashMap;
@@ -47,10 +48,16 @@ pub struct JobHandle(u64);
 #[derive(Clone, Debug)]
 pub struct JobSpec {
     /// Which native backend computes the Gram blocks. [`Backend::Auto`]
-    /// micro-probes the dataset at job start and commits to the winner
-    /// (recorded in the output's [`crate::mi::sink::SinkMeta`]).
+    /// micro-probes the dataset at job start (hitting the process-wide
+    /// probe cache when an identically-shaped job already probed) and
+    /// commits to the winner (recorded in the output's
+    /// [`crate::mi::sink::SinkMeta`]).
     pub backend: Backend,
-    /// Column-block size (0 = monolithic).
+    /// Column-block size. 0 = let the service decide: monolithic for
+    /// fixed backends, probe-throughput sized for [`Backend::Auto`]
+    /// (faster substrates get larger blocks under the same latency
+    /// target — see
+    /// [`crate::coordinator::planner::throughput_block`]).
     pub block_cols: usize,
     /// Worker threads *within* the job's plan execution.
     pub inner_workers: usize,
@@ -76,7 +83,44 @@ struct JobEntry {
     progress: Progress,
 }
 
+/// Plan a job's block structure. An explicit `block_cols` wins;
+/// otherwise an auto job folds the probe's throughput into the block
+/// width (faster substrates get larger blocks under the same latency
+/// target) and fixed backends keep the historical monolithic plan.
+/// The returned [`BlockSizing`] is recorded in the job's
+/// [`crate::mi::sink::SinkMeta`].
+fn plan_for_job(
+    ds: &BinaryDataset,
+    spec: &JobSpec,
+    probe: Option<&ProbeReport>,
+) -> Result<(BlockPlan, BlockSizing)> {
+    let m = ds.n_cols();
+    let (block, source) = block_policy(
+        spec.block_cols,
+        probe.map(ProbeReport::chosen_throughput),
+        ds.n_rows(),
+        m,
+        0,
+        (0, "monolithic"), // block 0 = the historical single-task plan
+    );
+    let plan = plan_blocks(m, block)?;
+    Ok((plan, BlockSizing { block_cols: plan.block, source }))
+}
+
 /// The service. Dropping it drains in-flight jobs.
+///
+/// ```
+/// use bulkmi::coordinator::service::{JobService, JobSpec, JobStatus};
+/// use bulkmi::data::synth::SynthSpec;
+///
+/// let svc = JobService::new(1, 2);
+/// let ds = SynthSpec::new(64, 6).sparsity(0.5).seed(1).generate();
+/// let handle = svc.submit(ds, JobSpec::default()).unwrap();
+/// let JobStatus::Done(out) = svc.wait(handle).unwrap() else {
+///     panic!("job failed");
+/// };
+/// assert!(out.into_dense().is_some()); // default sink keeps the matrix
+/// ```
 pub struct JobService {
     pool: WorkerPool,
     jobs: Arc<Mutex<HashMap<u64, JobEntry>>>,
@@ -111,6 +155,9 @@ impl JobService {
                 spec.backend
             )));
         }
+        // a bad BULKMI_KERNEL would otherwise panic the first worker
+        // that touches the dispatch table, leaving the job non-terminal
+        crate::linalg::kernels::validate_env_override()?;
         let Some(permit) = self.admission.try_acquire() else {
             self.metrics.counter("jobs_rejected").inc();
             return Err(Error::Coordinator(format!(
@@ -118,10 +165,16 @@ impl JobService {
                 self.admission.capacity()
             )));
         };
+        if ds.n_cols() == 0 {
+            return Err(Error::Shape("cannot plan over zero columns".into()));
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let mut plan: BlockPlan = plan_blocks(ds.n_cols(), spec.block_cols)?;
-        order_tasks(&mut plan.tasks, spec.schedule);
-        let progress = Progress::new(plan.tasks.len());
+        // Planning happens *inside* the worker: an auto job's block
+        // size depends on the probe's throughput verdict, which is not
+        // known until the job starts. The placeholder total keeps
+        // `fraction()` at 0.0 until the real plan lands via
+        // `Progress::set_total`.
+        let progress = Progress::new(1);
         self.jobs
             .lock()
             .unwrap()
@@ -139,6 +192,9 @@ impl JobService {
                 }
                 jobs.lock().unwrap().get_mut(&id).unwrap().status = JobStatus::Running(0.0);
                 let result = spec.backend.resolve(&ds).and_then(|(resolved, probe)| {
+                    let (mut plan, sizing) = plan_for_job(&ds, &spec, probe.as_ref())?;
+                    order_tasks(&mut plan.tasks, spec.schedule);
+                    progress.set_total(plan.tasks.len());
                     let provider = NativeProvider::new(&ds, resolved.native_kind());
                     let mut sink = spec.sink.build(ds.n_cols(), ds.n_rows())?;
                     metrics.time("job_secs", || {
@@ -157,6 +213,7 @@ impl JobService {
                     out.meta.kernel =
                         Some(crate::linalg::kernels::active().name().to_string());
                     out.meta.probe = probe;
+                    out.meta.sizing = Some(sizing);
                     Ok(out)
                 });
                 let status = match result {
@@ -287,6 +344,39 @@ mod tests {
     }
 
     #[test]
+    fn sizing_decision_recorded_in_meta() {
+        let svc = JobService::new(2, 4);
+        let ds = SynthSpec::new(300, 16).sparsity(0.8).seed(21).generate();
+
+        // explicit block size
+        let h = svc
+            .submit(ds.clone(), JobSpec { block_cols: 4, ..Default::default() })
+            .unwrap();
+        let JobStatus::Done(out) = svc.wait(h).unwrap() else { panic!() };
+        assert_eq!(
+            out.meta.sizing,
+            Some(BlockSizing { block_cols: 4, source: "explicit" })
+        );
+
+        // fixed backend without a block size: the historical monolithic plan
+        let h = svc.submit(ds.clone(), JobSpec::default()).unwrap();
+        let JobStatus::Done(out) = svc.wait(h).unwrap() else { panic!() };
+        let sizing = out.meta.sizing.expect("sizing recorded");
+        assert_eq!(sizing.source, "monolithic");
+        assert_eq!(sizing.block_cols, 16);
+
+        // auto without a block size: probe throughput drives the width
+        let h = svc
+            .submit(ds, JobSpec { backend: Backend::Auto, ..Default::default() })
+            .unwrap();
+        let JobStatus::Done(out) = svc.wait(h).unwrap() else { panic!() };
+        let sizing = out.meta.sizing.expect("sizing recorded");
+        assert_eq!(sizing.source, "probe-throughput");
+        assert!(sizing.block_cols >= 1 && sizing.block_cols <= 16);
+        assert!(out.meta.probe.is_some(), "auto jobs carry the probe report");
+    }
+
+    #[test]
     fn multiple_jobs_complete() {
         let svc = JobService::new(3, 16);
         let mut handles = Vec::new();
@@ -327,6 +417,13 @@ mod tests {
             matches!(status, JobStatus::Cancelled) || matches!(status, JobStatus::Done(_)),
             "cancelled or already finished, got {status:?}"
         );
+    }
+
+    #[test]
+    fn zero_column_submit_rejected() {
+        let svc = JobService::new(1, 2);
+        let ds = BinaryDataset::new(5, 0, vec![]).unwrap();
+        assert!(svc.submit(ds, JobSpec::default()).is_err());
     }
 
     #[test]

@@ -6,9 +6,10 @@
 //!
 //! The popcount primitive itself is pluggable: `gram`/`gram_cross`
 //! dispatch through [`crate::linalg::kernels`], which picks the fastest
-//! AND-popcount kernel for this CPU (scalar unroll, Harley–Seal CSA, or
-//! AVX2 nibble-lookup) once per process. Every kernel is bit-identical,
-//! so the choice never changes a result.
+//! AND-popcount kernel for this CPU (scalar unroll, Harley–Seal CSA,
+//! AVX2 nibble-lookup, AVX-512 `VPOPCNTQ`, or NEON `vcntq_u8`) once per
+//! process. Every kernel is bit-identical, so the choice never changes
+//! a result.
 
 use super::dense::Mat64;
 use super::kernels::{self, Kernel};
@@ -90,6 +91,18 @@ impl BitMatrix {
     /// four independent accumulator chains in flight — about 1.5-2x
     /// over the one-output-at-a-time reference
     /// ([`Self::gram_reference`], kept for the ablation bench).
+    ///
+    /// ```
+    /// use bulkmi::linalg::bitmat::BitMatrix;
+    ///
+    /// // 3 rows x 2 cols, row-major 0/1 bytes: the columns have two
+    /// // ones each and co-occur in exactly one row.
+    /// let bm = BitMatrix::from_row_major(3, 2, &[1, 1, 1, 0, 0, 1]).unwrap();
+    /// let g = bm.gram();
+    /// assert_eq!(g.get(0, 0), 2.0); // ones in column 0
+    /// assert_eq!(g.get(1, 1), 2.0); // ones in column 1
+    /// assert_eq!(g.get(0, 1), 1.0); // co-occurrences
+    /// ```
     pub fn gram(&self) -> Mat64 {
         self.gram_with(kernels::active())
     }

@@ -11,13 +11,20 @@
 //!   popcount to 1/8 per word (fast where `count_ones` is emulated);
 //! * `avx2` — Muła nibble-lookup via `vpshufb`/`vpsadbw` (x86-64,
 //!   runtime-detected with `is_x86_feature_detected!`);
+//! * `avx512` — native 512-bit `VPOPCNTQ` (x86-64, runtime-detected
+//!   behind `avx512f` + `avx512vpopcntdq`; Ice Lake and newer);
+//! * `neon` — `vcntq_u8` + widening pairwise adds (aarch64; the
+//!   default winner on Apple Silicon / Graviton hosts);
 //!
 //! — and a [`KernelDispatch`] table that picks one **once per process**:
-//! an explicit `BULKMI_KERNEL` env override wins, otherwise every
-//! kernel eligible on this CPU is micro-probed on a small resident
-//! buffer and the fastest is committed. All kernels return bit-identical
-//! counts (property-tested in `rust/tests/kernels.rs`), so selection is
-//! purely a throughput decision and never a correctness one.
+//! an explicit `BULKMI_KERNEL` env override wins (an override naming a
+//! kernel that is not eligible on this CPU is a hard error listing the
+//! eligible set — a silent fallback would quietly invalidate perf
+//! runs), otherwise every kernel eligible on this CPU is micro-probed
+//! on a small resident buffer and the fastest is committed. All kernels
+//! return bit-identical counts (property-tested in
+//! `rust/tests/kernels.rs`), so selection is purely a throughput
+//! decision and never a correctness one.
 
 pub(crate) mod scalar;
 
@@ -26,6 +33,13 @@ pub(crate) mod portable;
 #[cfg(target_arch = "x86_64")]
 pub(crate) mod avx2;
 
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod avx512;
+
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon;
+
+use crate::util::error::{Error, Result};
 use crate::util::rng::Rng;
 use std::sync::OnceLock;
 use std::time::Instant;
@@ -34,7 +48,8 @@ use std::time::Instant;
 /// points the Gram loops need. Instances are `'static` and only ever
 /// constructed by this module, so holding a `&'static Kernel` from
 /// [`available`] / [`active`] guarantees the kernel is safe to call on
-/// this CPU (the AVX2 entry is listed only after feature detection).
+/// this CPU (the ISA entries — AVX2, AVX-512, NEON — are listed only
+/// after their runtime feature detection succeeds).
 pub struct Kernel {
     name: &'static str,
     dot: fn(&[u64], &[u64]) -> u64,
@@ -42,8 +57,8 @@ pub struct Kernel {
 }
 
 impl Kernel {
-    /// Stable identifier (`scalar` / `portable` / `avx2`) used by
-    /// `BULKMI_KERNEL`, bench output and sink metadata.
+    /// Stable identifier (`scalar` / `portable` / `avx2` / `avx512` /
+    /// `neon`) used by `BULKMI_KERNEL`, bench output and sink metadata.
     pub fn name(&self) -> &'static str {
         self.name
     }
@@ -75,6 +90,12 @@ static PORTABLE: Kernel =
 #[cfg(target_arch = "x86_64")]
 static AVX2: Kernel = Kernel { name: "avx2", dot: avx2::dot, dot_x4: avx2::dot_x4 };
 
+#[cfg(target_arch = "x86_64")]
+static AVX512: Kernel = Kernel { name: "avx512", dot: avx512::dot, dot_x4: avx512::dot_x4 };
+
+#[cfg(target_arch = "aarch64")]
+static NEON: Kernel = Kernel { name: "neon", dot: neon::dot, dot_x4: neon::dot_x4 };
+
 /// The scalar reference kernel (always present; what
 /// [`crate::linalg::bitmat::BitMatrix::gram_reference`] runs on).
 pub fn reference() -> &'static Kernel {
@@ -86,10 +107,26 @@ pub fn available() -> Vec<&'static Kernel> {
     #[allow(unused_mut)]
     let mut kernels = vec![&SCALAR, &PORTABLE];
     #[cfg(target_arch = "x86_64")]
-    if std::arch::is_x86_feature_detected!("avx2") {
-        kernels.push(&AVX2);
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            kernels.push(&AVX2);
+        }
+        if avx512::detected() {
+            kernels.push(&AVX512);
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    if std::arch::is_aarch64_feature_detected!("neon") {
+        kernels.push(&NEON);
     }
     kernels
+}
+
+/// Every kernel name the crate ships on *any* architecture (whether or
+/// not it is eligible on this host) — what the bench baseline gate uses
+/// to tell "kernel not present on this host" from a stale entry.
+pub fn known_names() -> &'static [&'static str] {
+    &["scalar", "portable", "avx2", "avx512", "neon"]
 }
 
 /// Look up an available kernel by its stable name.
@@ -149,20 +186,33 @@ impl KernelDispatch {
     }
 
     fn select() -> KernelDispatch {
-        if let Ok(name) = std::env::var("BULKMI_KERNEL") {
-            if let Some(k) = by_name(&name) {
-                return KernelDispatch { active: k, probes: Vec::new(), forced: true };
-            }
-            crate::warn_!(
-                "BULKMI_KERNEL='{name}' is not an available kernel; probing instead"
-            );
+        let override_name = std::env::var("BULKMI_KERNEL").ok();
+        match KernelDispatch::try_select(override_name.as_deref()) {
+            Ok(table) => table,
+            // A mistyped override silently falling back to auto-dispatch
+            // would invalidate every perf number taken under it; the
+            // process must not continue on the wrong kernel.
+            Err(e) => panic!("{e}"),
+        }
+    }
+
+    /// Build a dispatch table, honoring an explicit kernel-name
+    /// override when one is given (what `BULKMI_KERNEL` feeds in).
+    /// An override that does not name a kernel eligible on this CPU is
+    /// an error listing the eligible set.
+    pub fn try_select(override_name: Option<&str>) -> Result<KernelDispatch> {
+        if let Some(name) = override_name {
+            let Some(k) = by_name(name) else {
+                return Err(override_error(name));
+            };
+            return Ok(KernelDispatch { active: k, probes: Vec::new(), forced: true });
         }
         let mut probes: Vec<(&'static Kernel, f64)> = available()
             .into_iter()
             .map(|k| (k, probe_secs(k)))
             .collect();
         probes.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal));
-        KernelDispatch { active: probes[0].0, probes, forced: false }
+        Ok(KernelDispatch { active: probes[0].0, probes, forced: false })
     }
 }
 
@@ -170,6 +220,28 @@ impl KernelDispatch {
 #[inline]
 pub fn active() -> &'static Kernel {
     KernelDispatch::global().active()
+}
+
+fn override_error(name: &str) -> Error {
+    let eligible: Vec<&str> = available().iter().map(|k| k.name()).collect();
+    Error::Config(format!(
+        "BULKMI_KERNEL='{name}' is not an eligible kernel on this CPU \
+         (eligible: {})",
+        eligible.join(", ")
+    ))
+}
+
+/// Check `BULKMI_KERNEL` against this CPU *without* committing the
+/// dispatch table: `Ok` when unset or naming an eligible kernel. Entry
+/// points that own an error channel (the CLI dispatcher, the job
+/// service's `submit`) call this up front so a bad override surfaces
+/// as a clean error to the caller instead of the dispatch-table panic
+/// firing later inside a worker thread.
+pub fn validate_env_override() -> Result<()> {
+    match std::env::var("BULKMI_KERNEL") {
+        Ok(name) if by_name(&name).is_none() => Err(override_error(&name)),
+        _ => Ok(()),
+    }
 }
 
 /// Micro-probe one kernel: best-of-5 `dot_x4` sweeps over small
@@ -215,6 +287,43 @@ mod tests {
             assert_eq!(by_name(k.name()).unwrap().name(), k.name());
         }
         assert!(by_name("warp-drive").is_none());
+    }
+
+    #[test]
+    fn every_available_kernel_is_a_known_name() {
+        for k in available() {
+            assert!(known_names().contains(&k.name()), "{} not in known_names", k.name());
+        }
+    }
+
+    #[test]
+    fn unknown_kernel_override_is_a_hard_error() {
+        let err = KernelDispatch::try_select(Some("warp-drive")).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("warp-drive"), "names the bad override: {msg}");
+        for k in available() {
+            assert!(msg.contains(k.name()), "lists eligible kernel {}: {msg}", k.name());
+        }
+        // a kernel the crate ships but this CPU lacks is equally rejected
+        for name in known_names() {
+            if by_name(name).is_none() {
+                assert!(KernelDispatch::try_select(Some(name)).is_err(), "{name}");
+            }
+        }
+        // a valid name is still honored without probing
+        let table = KernelDispatch::try_select(Some("portable")).unwrap();
+        assert!(table.forced());
+        assert!(table.probes().is_empty());
+        assert_eq!(table.active().name(), "portable");
+    }
+
+    #[test]
+    fn env_override_validation_passes_when_unset_or_valid() {
+        // CI runs without BULKMI_KERNEL (or with a valid one); the
+        // invalid-name path is covered via try_select above, since
+        // mutating the process env would race the parallel test
+        // threads that build the global dispatch table.
+        assert!(validate_env_override().is_ok());
     }
 
     #[test]

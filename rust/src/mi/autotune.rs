@@ -17,11 +17,24 @@
 //!
 //! All native backends are exact and bit-identical, so an imperfect
 //! probe can only ever cost time, never correctness.
+//!
+//! **Probe cache.** A probe verdict is a property of the hardware and
+//! the dataset's *shape* — the same machine probing another dataset of
+//! the same `(n_rows, n_cols, density bucket)` will reach the same
+//! conclusion, so `serve` workloads that submit many identically-shaped
+//! jobs should not pay the probe (a few milliseconds of warmup + timing
+//! per job) more than once. [`autotune`] therefore consults a
+//! process-wide cache keyed by [`ProbeKey`]; a hit returns the stored
+//! report with [`ProbeReport::cached`] set and skips all timing.
+//! [`autotune_uncached`] bypasses the cache (the bench harness uses it
+//! so `backend-auto` entries always time a real probe).
 
 use super::backend::Backend;
 use crate::coordinator::executor::NativeKind;
 use crate::data::dataset::BinaryDataset;
 use crate::util::error::{Error, Result};
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
 /// Columns in the probe block (fewer when the dataset is narrower).
@@ -54,6 +67,10 @@ pub struct ProbeReport {
     pub probe_cols: usize,
     /// All candidates, in probe order.
     pub candidates: Vec<ProbeMeasurement>,
+    /// Did this report come from the process-wide probe cache (true)
+    /// or from freshly timed measurements (false)? Cached reports carry
+    /// the *original* run's timings.
+    pub cached: bool,
 }
 
 impl ProbeReport {
@@ -65,7 +82,8 @@ impl ProbeReport {
             .map(|c| format!("{} {:.2}ms", c.backend, c.secs * 1e3))
             .collect();
         format!(
-            "auto probe ({}x{} block, density {:.4}): chose {} ({})",
+            "auto probe{} ({}x{} block, density {:.4}): chose {} ({})",
+            if self.cached { " [cached]" } else { "" },
             self.probe_rows,
             self.probe_cols,
             self.density,
@@ -73,6 +91,53 @@ impl ProbeReport {
             detail.join(", ")
         )
     }
+
+    /// Probed Gram throughput (cell-rows/sec) of the chosen backend —
+    /// what the planner folds into block sizing.
+    pub fn chosen_throughput(&self) -> f64 {
+        self.candidates
+            .iter()
+            .find(|c| c.backend == self.chosen)
+            .map(|c| c.throughput)
+            .unwrap_or(0.0)
+    }
+}
+
+/// Cache key for a probe verdict: dataset shape plus a coarse density
+/// bucket. Shape is exact; density is bucketed because the probe's own
+/// density estimate is what is available, and the backend choice only
+/// flips across coarse density regimes (CSR wins at extreme sparsity,
+/// bitpack nearly everywhere else).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ProbeKey {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub density_bucket: u16,
+}
+
+/// Bucket a density estimate for [`ProbeKey`]: 0.001-wide buckets below
+/// 5% ones (where the sparse substrate's viability changes quickly),
+/// 0.05-wide buckets above (where the choice is insensitive). The two
+/// ranges cannot collide: the fine range tops out at bucket 50 and the
+/// coarse range starts at 51.
+pub fn density_bucket(density: f64) -> u16 {
+    let d = density.clamp(0.0, 1.0);
+    if d < 0.05 {
+        (d * 1000.0).round() as u16
+    } else {
+        50 + (d * 20.0).round() as u16
+    }
+}
+
+fn probe_cache() -> &'static Mutex<HashMap<ProbeKey, ProbeReport>> {
+    static CACHE: OnceLock<Mutex<HashMap<ProbeKey, ProbeReport>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Drop every cached probe verdict (tests; long-lived services that
+/// want to re-probe after, say, CPU-affinity changes).
+pub fn clear_probe_cache() {
+    probe_cache().lock().unwrap().clear();
 }
 
 /// The backends `--backend auto` chooses between: the optimized native
@@ -84,18 +149,50 @@ pub fn eligible() -> [Backend; 3] {
 }
 
 /// Probe every eligible backend on a sampled block of `ds` and return
-/// the full report. Deterministic in everything except the timings
-/// themselves.
+/// the full report, consulting the process-wide probe cache first: a
+/// dataset matching a previously probed `(n_rows, n_cols, density
+/// bucket)` gets the stored verdict back (with
+/// [`ProbeReport::cached`] = true) without re-timing anything.
+/// Deterministic in everything except the timings themselves.
 pub fn autotune(ds: &BinaryDataset) -> Result<ProbeReport> {
     if ds.n_rows() == 0 || ds.n_cols() == 0 {
         return Err(Error::Shape("cannot autotune an empty dataset".into()));
     }
     let probe = probe_block(ds)?;
     let density = 1.0 - probe.sparsity();
+    let key = ProbeKey {
+        n_rows: ds.n_rows(),
+        n_cols: ds.n_cols(),
+        density_bucket: density_bucket(density),
+    };
+    if let Some(hit) = probe_cache().lock().unwrap().get(&key) {
+        let mut report = hit.clone();
+        report.cached = true;
+        return Ok(report);
+    }
+    let report = probe_candidates(&probe, density)?;
+    probe_cache().lock().unwrap().insert(key, report.clone());
+    Ok(report)
+}
+
+/// [`autotune`] bypassing the probe cache: always times a fresh probe
+/// and never stores the result. The bench harness uses this so its
+/// `backend-auto` entries measure the probe itself, not a cache hit.
+pub fn autotune_uncached(ds: &BinaryDataset) -> Result<ProbeReport> {
+    if ds.n_rows() == 0 || ds.n_cols() == 0 {
+        return Err(Error::Shape("cannot autotune an empty dataset".into()));
+    }
+    let probe = probe_block(ds)?;
+    let density = 1.0 - probe.sparsity();
+    probe_candidates(&probe, density)
+}
+
+/// Time every eligible backend on the prepared probe block.
+fn probe_candidates(probe: &BinaryDataset, density: f64) -> Result<ProbeReport> {
     let cells = (probe.n_cols() * probe.n_cols()) as f64 * probe.n_rows() as f64;
     let mut candidates = Vec::with_capacity(3);
     for backend in eligible() {
-        let secs = gram_secs(&probe, backend.native_kind());
+        let secs = gram_secs(probe, backend.native_kind());
         candidates.push(ProbeMeasurement {
             backend,
             secs,
@@ -117,6 +214,7 @@ pub fn autotune(ds: &BinaryDataset) -> Result<ProbeReport> {
         probe_rows: probe.n_rows(),
         probe_cols: probe.n_cols(),
         candidates,
+        cached: false,
     })
 }
 
@@ -223,5 +321,60 @@ mod tests {
     fn empty_dataset_rejected() {
         let ds = BinaryDataset::new(0, 0, vec![]).unwrap();
         assert!(autotune(&ds).is_err());
+        assert!(autotune_uncached(&ds).is_err());
+    }
+
+    #[test]
+    fn density_buckets_are_disjoint_and_monotone_regimes() {
+        // fine range (< 5% ones) never collides with the coarse range
+        let fine_max = density_bucket(0.0499999);
+        let coarse_min = density_bucket(0.05);
+        assert!(fine_max < coarse_min, "{fine_max} vs {coarse_min}");
+        // neighbours in different regimes land in different buckets
+        assert_ne!(density_bucket(0.001), density_bucket(0.002));
+        assert_ne!(density_bucket(0.1), density_bucket(0.5));
+        // same regime, same bucket
+        assert_eq!(density_bucket(0.50), density_bucket(0.51));
+        // clamped at the extremes
+        assert_eq!(density_bucket(-1.0), density_bucket(0.0));
+        assert_eq!(density_bucket(2.0), density_bucket(1.0));
+    }
+
+    #[test]
+    fn probe_cache_hits_on_matching_shape_and_density() {
+        // unique shape so parallel tests cannot collide on the key
+        let ds = SynthSpec::new(1501, 37).sparsity(0.7).seed(101).generate();
+        clear_probe_cache();
+        let first = autotune(&ds).unwrap();
+        assert!(!first.cached, "first probe must be fresh");
+        let second = autotune(&ds).unwrap();
+        assert!(second.cached, "second probe must hit the cache");
+        assert_eq!(second.chosen, first.chosen);
+        // bit-identical stored timings prove nothing was re-timed
+        for (a, b) in first.candidates.iter().zip(&second.candidates) {
+            assert_eq!(a.backend, b.backend);
+            assert_eq!(a.secs, b.secs);
+            assert_eq!(a.throughput, b.throughput);
+        }
+        assert!(second.summary().contains("[cached]"));
+        // a different shape misses
+        let other = SynthSpec::new(1502, 37).sparsity(0.7).seed(101).generate();
+        assert!(!autotune(&other).unwrap().cached);
+        // uncached always re-times and never populates from the hit path
+        assert!(!autotune_uncached(&ds).unwrap().cached);
+    }
+
+    #[test]
+    fn chosen_throughput_matches_winner() {
+        let ds = SynthSpec::new(900, 20).sparsity(0.6).seed(8).generate();
+        let report = autotune_uncached(&ds).unwrap();
+        let want = report
+            .candidates
+            .iter()
+            .find(|c| c.backend == report.chosen)
+            .unwrap()
+            .throughput;
+        assert_eq!(report.chosen_throughput(), want);
+        assert!(report.chosen_throughput() > 0.0);
     }
 }

@@ -99,8 +99,28 @@ impl Backend {
     }
 
     /// Resolve `Auto` to a concrete fixed backend by micro-probing the
-    /// dataset ([`crate::mi::autotune`]); every other backend resolves
+    /// dataset ([`crate::mi::autotune`]; identically-shaped datasets
+    /// hit the process-wide probe cache); every other backend resolves
     /// to itself with no probe.
+    ///
+    /// ```
+    /// use bulkmi::data::synth::SynthSpec;
+    /// use bulkmi::mi::backend::Backend;
+    ///
+    /// let ds = SynthSpec::new(256, 16).sparsity(0.8).seed(1).generate();
+    ///
+    /// // Auto probes and commits to one of the optimized substrates
+    /// let (fixed, probe) = Backend::Auto.resolve(&ds).unwrap();
+    /// assert_ne!(fixed, Backend::Auto);
+    /// assert!(fixed.is_native());
+    /// let report = probe.expect("auto always attaches its probe report");
+    /// assert_eq!(report.chosen, fixed);
+    ///
+    /// // fixed backends resolve to themselves without probing
+    /// let (same, none) = Backend::BulkOpt.resolve(&ds).unwrap();
+    /// assert_eq!(same, Backend::BulkOpt);
+    /// assert!(none.is_none());
+    /// ```
     pub fn resolve(self, ds: &BinaryDataset) -> Result<(Backend, Option<ProbeReport>)> {
         match self {
             Backend::Auto => {

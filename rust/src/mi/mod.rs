@@ -9,11 +9,20 @@
 //! * [`xla`] — Section 3 through the AOT Pallas/XLA artifacts (Opt-T row).
 //! * [`backend`] — the `MiBackend` trait and dispatch.
 //! * [`autotune`] — the `--backend auto` micro-prober: picks the
-//!   fastest native substrate for this machine and dataset.
+//!   fastest native substrate for this machine and dataset, caching
+//!   verdicts per dataset shape within the process.
 //! * [`sink`] — streaming consumers of MI blocks (dense / top-k /
 //!   threshold / disk-spill); what decouples computing all pairs from
 //!   storing all pairs.
+//! * [`significance`] — bias correction, permutation tests, and the
+//!   G-test χ²₁ asymptotics converting p-value cutoffs to MI
+//!   thresholds.
 //! * [`entropy`], [`topk`] — analysis utilities on MI matrices.
+//!
+//! A contributor-level walkthrough of how these fit together — from
+//! CSV/stream ingestion through packing, kernel dispatch, the
+//! blockwise engine, and the sinks — lives in `docs/ARCHITECTURE.md`
+//! at the repository root.
 
 pub mod autotune;
 pub mod backend;

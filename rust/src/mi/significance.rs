@@ -1,7 +1,70 @@
 //! Statistical post-processing of MI estimates: small-sample bias
-//! correction and permutation significance — what downstream feature
-//! selection (paper refs [12], [17]) needs before trusting a raw MI
-//! value from finite data.
+//! correction, permutation significance, and the asymptotic
+//! p-value ↔ MI conversion behind the `pvalue:P` sink — what
+//! downstream feature selection (paper refs [12], [17]) needs before
+//! trusting a raw MI value from finite data.
+//!
+//! # The G-test χ²₁ derivation behind `--sink pvalue:P`
+//!
+//! For two binary variables observed over `n` rows, the log-likelihood
+//! ratio (G-test) statistic against the independence null is
+//!
+//! ```text
+//! G = 2 Σ_{x,y ∈ {0,1}} n_xy · ln( n_xy / e_xy )
+//! ```
+//!
+//! where `n_xy` are the 2x2 contingency counts and
+//! `e_xy = n_x· n_·y / n` the counts expected under independence. That
+//! sum is exactly `2 n` times the plug-in mutual information *in nats*;
+//! this crate reports MI in bits, so
+//!
+//! ```text
+//! G = 2 · n · ln(2) · MI_bits
+//! ```
+//!
+//! By Wilks' theorem, `G` is asymptotically chi-square distributed
+//! under the null with degrees of freedom
+//! `(|X| - 1)(|Y| - 1) = 1` for binary variables. The p-value of an
+//! observed MI is therefore the χ²₁ survival function at `G`
+//! ([`mi_pvalue_asymptotic`], using
+//! `P(χ²₁ ≥ x) = erfc(√(x/2))`), and inverting the (monotone) survival
+//! turns a p-value cutoff into an MI threshold
+//! ([`mi_threshold_for_pvalue`]) — which is what lets
+//! [`crate::mi::sink::ThresholdSink::by_pvalue`] screen all pairs in
+//! one streaming pass with zero per-pair permutation tests.
+//!
+//! **Validity regime** (the Mori–Kawamura asymptotics,
+//! arXiv:2308.14735): Wilks' theorem is an `n → ∞` statement taken at
+//! *fixed* distribution, so the χ²₁ tail is trustworthy when every
+//! expected cell count `e_xy` is large (the usual rule of thumb:
+//! ≥ ~5). For very sparse columns (marginal probability ~`1/n`) or
+//! p-values so extreme that `G` sits far in the tail, the χ²
+//! approximation degrades and the conversion is conservative at best —
+//! confirm borderline survivors with [`permutation_test`], which is
+//! exact under the permutation null at any `n`. Conversely, at large
+//! `n` the threshold shrinks like `1/n` (fixed evidence quantile), so
+//! significance does **not** imply effect size: an MI passing
+//! `pvalue:0.01` at `n = 10^6` can be far too small to matter for
+//! feature selection.
+//!
+//! Converting a screening p-value into an MI cutoff:
+//!
+//! ```
+//! use bulkmi::mi::significance::{mi_pvalue_asymptotic, mi_threshold_for_pvalue};
+//!
+//! // P = 0.01 over n = 10_000 rows -> the smallest MI (bits) that is
+//! // significant at the 1% level...
+//! let threshold = mi_threshold_for_pvalue(0.01, 10_000).unwrap();
+//!
+//! // ...which is exactly the chi-square 1% critical value 6.635
+//! // mapped back through G = 2 n ln(2) MI:
+//! let g = 2.0 * 10_000.0 * std::f64::consts::LN_2 * threshold;
+//! assert!((g - 6.635).abs() < 0.01);
+//!
+//! // and the forward conversion round-trips the p-value
+//! let p = mi_pvalue_asymptotic(threshold, 10_000);
+//! assert!((p - 0.01).abs() < 1e-3);
+//! ```
 
 use super::counts::mi_from_counts_u64;
 use super::MiMatrix;

@@ -138,8 +138,27 @@ pub struct SinkMeta {
     /// The process-wide AND-popcount kernel
     /// ([`crate::linalg::kernels::active`]).
     pub kernel: Option<String>,
-    /// The autotuner's probe report, when the run was `--backend auto`.
+    /// The autotuner's probe report, when the run was `--backend auto`
+    /// (its [`cached`](crate::mi::autotune::ProbeReport::cached) flag
+    /// records whether the verdict came from the probe cache).
     pub probe: Option<crate::mi::autotune::ProbeReport>,
+    /// How the executed plan's column-block width was decided, when the
+    /// driving layer planned blockwise.
+    pub sizing: Option<BlockSizing>,
+}
+
+/// The planner's block-sizing decision for one run, recorded in
+/// [`SinkMeta`] so auto runs are auditable end to end.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BlockSizing {
+    /// Column-block width of the executed plan.
+    pub block_cols: usize,
+    /// What determined it: `"explicit"` (caller-fixed block size),
+    /// `"monolithic"` (no block size requested, single-task plan),
+    /// `"budget"` (memory-budget rule), or `"probe-throughput"`
+    /// (autotuner cells/sec folded into the latency target via
+    /// [`crate::coordinator::planner::throughput_block`]).
+    pub source: &'static str,
 }
 
 /// What a sink retained plus how the run was executed, returned by
@@ -628,6 +647,22 @@ pub fn assemble_spilled(dir: &Path) -> Result<MiMatrix> {
 
 /// Declarative sink choice, parseable from `--sink` syntax:
 /// `dense | topk:K | topk-per-col:K | threshold:T | pvalue:P | spill:DIR`.
+///
+/// ```
+/// use bulkmi::mi::sink::SinkSpec;
+///
+/// let spec = SinkSpec::parse("topk:8").unwrap();
+/// assert_eq!(spec, SinkSpec::TopK { k: 8, per_column: false });
+/// assert!(!spec.is_dense());
+///
+/// // build() instantiates the sink for an m-column, n-row dataset
+/// let sink = spec.build(100, 5_000).unwrap();
+/// assert_eq!(sink.name(), "topk");
+///
+/// // malformed specs are parse errors, not fallbacks
+/// assert!(SinkSpec::parse("topk").is_err());
+/// assert!(SinkSpec::parse("warp:1").is_err());
+/// ```
 #[derive(Clone, Debug, PartialEq, Default)]
 pub enum SinkSpec {
     #[default]

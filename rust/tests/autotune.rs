@@ -83,6 +83,8 @@ fn auto_job_records_choice_in_sink_meta() {
         "auto resolved to unexpected backend '{chosen}'"
     );
     assert!(out.meta.kernel.is_some(), "gram kernel recorded");
+    let sizing = out.meta.sizing.as_ref().expect("block sizing recorded");
+    assert_eq!((sizing.block_cols, sizing.source), (8, "explicit"));
     let probe = out.meta.probe.as_ref().expect("probe report attached");
     assert_eq!(probe.chosen.name(), chosen);
     assert!(out.summary().contains(chosen), "summary names the backend");
@@ -91,6 +93,43 @@ fn auto_job_records_choice_in_sink_meta() {
     let want = bulkmi::mi::topk::top_k_pairs(&full, 3);
     assert_eq!((pairs[0].i, pairs[0].j), (want[0].i, want[0].j));
     assert_eq!(pairs[0].mi, want[0].mi);
+}
+
+/// The serve-workload acceptance case for the probe cache: the second
+/// identically-shaped auto job reuses the first job's probe verdict
+/// (same choice, the *original* timings, `cached` set) instead of
+/// re-timing, and both jobs record a probe-throughput block sizing.
+#[test]
+fn probe_cache_reused_across_jobs() {
+    let svc = JobService::new(1, 4);
+    // shape unique to this test so parallel tests cannot pre-seed the key
+    let ds = SynthSpec::new(777, 26).sparsity(0.8).seed(55).generate();
+    let spec = JobSpec {
+        backend: Backend::Auto,
+        sink: SinkSpec::TopK { k: 2, per_column: false },
+        ..Default::default()
+    };
+    let h1 = svc.submit(ds.clone(), spec.clone()).unwrap();
+    let JobStatus::Done(first) = svc.wait(h1).unwrap() else { panic!() };
+    let h2 = svc.submit(ds, spec).unwrap();
+    let JobStatus::Done(second) = svc.wait(h2).unwrap() else { panic!() };
+
+    let p1 = first.meta.probe.as_ref().expect("first probe recorded");
+    let p2 = second.meta.probe.as_ref().expect("second probe recorded");
+    assert!(!p1.cached, "first job of this shape times a fresh probe");
+    assert!(p2.cached, "second identically-shaped job reuses the verdict");
+    assert_eq!(p2.chosen, p1.chosen);
+    assert_eq!(p1.candidates.len(), p2.candidates.len());
+    for (a, b) in p1.candidates.iter().zip(&p2.candidates) {
+        assert_eq!(a.backend, b.backend);
+        assert_eq!(a.secs, b.secs, "cached report carries the original timings");
+        assert_eq!(a.throughput, b.throughput);
+    }
+    for out in [&first, &second] {
+        let sizing = out.meta.sizing.as_ref().expect("sizing recorded");
+        assert_eq!(sizing.source, "probe-throughput");
+        assert!(sizing.block_cols >= 1 && sizing.block_cols <= 26);
+    }
 }
 
 #[test]

@@ -1,9 +1,12 @@
 //! Kernel-equivalence property tests: every AND-popcount kernel the
 //! dispatch table can commit to (scalar, portable Harley–Seal CSA, and
-//! AVX2 where the CPU has it) must produce **bit-identical** `gram` /
+//! the runtime-detected ISA kernels — AVX2 and AVX-512 `VPOPCNTQ` on
+//! x86-64, NEON on aarch64) must produce **bit-identical** `gram` /
 //! `gram_cross` results on arbitrary ragged shapes — including row
 //! counts that are not multiples of 64 (partial tail word), word counts
 //! hitting every unroll remainder, and degenerate 1-column matrices.
+//! The property loops run over `kernels::available()`, so a kernel is
+//! covered automatically on every host whose CPU can dispatch it.
 //! Selection is a throughput decision only; these tests are what makes
 //! that claim safe.
 
@@ -93,6 +96,36 @@ fn tail_word_boundaries_exact() {
                 }
             }
         }
+    }
+}
+
+/// ISA kernels appear in the eligible set exactly when this CPU has the
+/// feature, and never on a foreign architecture — the "cleanly absent"
+/// half of the acceptance criteria.
+#[test]
+fn isa_kernels_present_only_when_detected() {
+    let names: Vec<&str> = kernels::available().iter().map(|k| k.name()).collect();
+    #[cfg(target_arch = "x86_64")]
+    {
+        assert_eq!(
+            names.contains(&"avx2"),
+            std::arch::is_x86_feature_detected!("avx2")
+        );
+        assert_eq!(
+            names.contains(&"avx512"),
+            std::arch::is_x86_feature_detected!("avx512f")
+                && std::arch::is_x86_feature_detected!("avx512vpopcntdq")
+        );
+        assert!(!names.contains(&"neon"));
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        assert!(names.contains(&"neon"), "NEON is baseline on aarch64");
+        assert!(!names.contains(&"avx2"));
+        assert!(!names.contains(&"avx512"));
+    }
+    for name in &names {
+        assert!(kernels::known_names().contains(name), "{name} unknown");
     }
 }
 
