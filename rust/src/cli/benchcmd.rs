@@ -8,21 +8,28 @@
 //!   AND-popcount kernel ([`crate::linalg::kernels`]);
 //! * `backend-gram/<backend>@dX` — the three native Gram substrates the
 //!   autotuner chooses between;
+//! * `combine/<measure>@dX` — the element-wise combine stage per
+//!   association measure ([`crate::mi::measure::CombineKind`]); the
+//!   measure is part of the entry id so per-measure rows can never
+//!   alias each other in the baseline gate;
 //! * `backend-auto@dX` — the autotuner probe itself (wall time + what
 //!   it chose).
 //!
 //! Every entry carries both absolute throughput (`cells_per_sec`, Gram
 //! output cells per second) and `rel`, the throughput normalized by the
-//! same-dataset scalar-kernel run. `rel` is what `--baseline` gates on:
-//! machine speed cancels out of the ratio, so a checked-in baseline
-//! catches code regressions ("bitpack got 2x slower than scalar")
-//! without being flaky across runner generations. Absolute numbers stay
-//! in the JSON for trend tracking.
+//! same-dataset scalar-kernel run (combine rows normalize by the
+//! same-dataset *mi* combine instead — the natural denominator for the
+//! combine stage). `rel` is what `--baseline` gates on: machine speed
+//! cancels out of the ratio, so a checked-in baseline catches code
+//! regressions ("bitpack got 2x slower than scalar") without being
+//! flaky across runner generations. Absolute numbers stay in the JSON
+//! for trend tracking.
 
 use super::args::Args;
 use crate::data::synth::SynthSpec;
 use crate::linalg::kernels;
 use crate::mi::autotune;
+use crate::mi::measure::{combine_block, CombineKind};
 use crate::util::error::{Error, Result};
 use crate::util::json::{escape, Json};
 use std::path::{Path, PathBuf};
@@ -51,7 +58,19 @@ pub fn bench(argv: &[String]) -> Result<()> {
     let tolerance = args.get_f64("tolerance", 0.30)?;
     let seed = args.get_u64("seed", 42)?;
     let reps = args.get_usize("reps", if quick { 3 } else { 5 })?;
+    let measure_args = args.get_all("measure");
     args.reject_unknown()?;
+    let measures: Vec<CombineKind> = if measure_args.is_empty() {
+        CombineKind::ALL.to_vec()
+    } else {
+        measure_args
+            .iter()
+            .map(|m| {
+                CombineKind::parse(m)
+                    .ok_or_else(|| Error::Parse(format!("unknown measure '{m}'")))
+            })
+            .collect::<Result<_>>()?
+    };
     if !(0.0..1.0).contains(&tolerance) {
         return Err(Error::Parse(format!(
             "--tolerance must be in [0, 1), got {tolerance}"
@@ -123,6 +142,38 @@ pub fn bench(argv: &[String]) -> Result<()> {
                 secs,
                 cells_per_sec: cps,
                 rel: Some(cps / scalar_cps),
+                chosen: None,
+            });
+        }
+
+        // --- per-measure combine stage ----------------------------------
+        // all measures map the same Gram; `rel` normalizes by the
+        // same-dataset mi combine (always timed, even when --measure
+        // narrows the emitted rows) so machine speed cancels out
+        let g11 = bits.gram();
+        let colsums: Vec<f64> = ds.col_counts().iter().map(|&v| v as f64).collect();
+        let nf = rows as f64;
+        let mi_secs = timed_median(reps, || {
+            std::hint::black_box(combine_block(CombineKind::Mi, &g11, &colsums, &colsums, nf));
+        });
+        let mi_cps = cells / mi_secs;
+        for &measure in &measures {
+            let secs = if measure == CombineKind::Mi {
+                mi_secs
+            } else {
+                timed_median(reps, || {
+                    std::hint::black_box(combine_block(measure, &g11, &colsums, &colsums, nf));
+                })
+            };
+            let cps = cells / secs;
+            entries.push(BenchEntry {
+                name: format!("combine/{}{tag}", measure.name()),
+                rows,
+                cols,
+                density,
+                secs,
+                cells_per_sec: cps,
+                rel: Some(cps / mi_cps),
                 chosen: None,
             });
         }
@@ -281,7 +332,10 @@ fn check_baseline(entries: &[BenchEntry], path: &Path, tolerance: f64) -> Result
             continue; // auto entries and other ungated rows
         }
         let Some(current) = entries.iter().find(|e| e.name == name) else {
-            eprintln!("warning: baseline entry '{name}' skipped: {}", skip_reason(name));
+            eprintln!(
+                "warning: baseline entry '{name}' skipped: {}",
+                skip_reason(name, entries)
+            );
             skipped.push(name.to_string());
             continue;
         };
@@ -338,8 +392,24 @@ fn check_baseline(entries: &[BenchEntry], path: &Path, tolerance: f64) -> Result
 }
 
 /// Why a baseline entry has no matching measurement in this run — the
-/// warn-and-skip diagnostic for [`check_baseline`].
-fn skip_reason(name: &str) -> String {
+/// warn-and-skip diagnostic for [`check_baseline`]. Entry ids carry
+/// their full identity (kernel name, or `combine/<measure>`, plus the
+/// `@dX` density tag), so two per-measure rows can never alias each
+/// other here. `measured` is this run's entry set: a baseline row
+/// whose prefix *was* measured, just at different densities, is a
+/// run-mode mismatch (`--quick` vs full), not an eligibility problem.
+fn skip_reason(name: &str, measured: &[BenchEntry]) -> String {
+    if let Some((prefix, density)) = name.split_once('@') {
+        let same_prefix_other_density = measured
+            .iter()
+            .any(|e| e.name.split_once('@').is_some_and(|(p, d)| p == prefix && d != density));
+        if same_prefix_other_density {
+            return format!(
+                "density '@{density}' not exercised by this run (baseline from a \
+                 different bench mode? --quick and full use different density sets)"
+            );
+        }
+    }
     if let Some(kernel) = name
         .strip_prefix("gram-kernel/")
         .and_then(|rest| rest.split('@').next())
@@ -353,6 +423,17 @@ fn skip_reason(name: &str) -> String {
             return format!("kernel '{kernel}' not eligible on this host (expected on other ISAs)");
         }
         return format!("kernel '{kernel}' unknown to this bench build (stale baseline?)");
+    }
+    if let Some(measure) = name
+        .strip_prefix("combine/")
+        .and_then(|rest| rest.split('@').next())
+    {
+        if CombineKind::parse(measure).is_some() {
+            // every known measure is measured unless --measure narrowed
+            // the run
+            return format!("measure '{measure}' not in this run's --measure set");
+        }
+        return format!("measure '{measure}' unknown to this bench build (stale baseline?)");
     }
     "no such measurement in this bench build (stale baseline?)".into()
 }
@@ -512,11 +593,41 @@ mod tests {
     fn skip_reasons_distinguish_ineligible_from_stale() {
         // a kernel the crate ships for another architecture
         let foreign = if cfg!(target_arch = "x86_64") { "neon" } else { "avx2" };
-        let reason = skip_reason(&format!("gram-kernel/{foreign}@d0.50"));
+        let reason = skip_reason(&format!("gram-kernel/{foreign}@d0.50"), &[]);
         assert!(reason.contains("not eligible"), "{reason}");
         // a name no build of this bench ever produces
-        assert!(skip_reason("gram-kernel/warp@d0.50").contains("stale"), "warp");
-        assert!(skip_reason("backend-gram/bogus@d0.50").contains("stale"), "bogus");
+        assert!(skip_reason("gram-kernel/warp@d0.50", &[]).contains("stale"), "warp");
+        assert!(skip_reason("backend-gram/bogus@d0.50", &[]).contains("stale"), "bogus");
+    }
+
+    #[test]
+    fn combine_skip_reasons_carry_the_measure_id() {
+        // a known measure missing from the run: named, not aliased
+        let known = skip_reason("combine/jaccard@d0.50", &[]);
+        assert!(known.contains("jaccard"), "{known}");
+        assert!(!known.contains("stale"), "{known}");
+        // an unknown measure name is flagged as stale
+        let stale = skip_reason("combine/pearson@d0.50", &[]);
+        assert!(stale.contains("stale"), "{stale}");
+        assert!(stale.contains("pearson"), "{stale}");
+    }
+
+    #[test]
+    fn skip_reasons_detect_density_mode_mismatch() {
+        // the same prefix was measured, just at other densities: a
+        // --quick run checked against a full-mode baseline row
+        let run = vec![gate_entry()]; // measured: gram-kernel/portable@d0.50
+        let reason = skip_reason("gram-kernel/portable@d0.10", &run);
+        assert!(reason.contains("@d0.10"), "{reason}");
+        assert!(reason.contains("bench mode"), "{reason}");
+        // a genuinely foreign prefix still falls through to the
+        // eligibility / staleness diagnosis
+        assert!(skip_reason("combine/pearson@d0.10", &run).contains("stale"));
+    }
+
+    #[test]
+    fn bad_measure_arg_rejected() {
+        assert!(bench(&sv(&["--measure", "pearson"])).is_err());
     }
 
     fn gate_entry() -> BenchEntry {

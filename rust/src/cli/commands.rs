@@ -7,12 +7,13 @@ use crate::coordinator::planner::{
 };
 use crate::coordinator::progress::Progress;
 use crate::coordinator::service::{JobService, JobSpec, JobStatus};
-use crate::coordinator::{execute_plan, execute_plan_sink, NativeProvider};
+use crate::coordinator::{execute_plan_measure, execute_plan_sink_measure, NativeProvider};
 use crate::data::dataset::BinaryDataset;
 use crate::data::io;
 use crate::data::synth::SynthSpec;
-use crate::mi::backend::{compute_mi_with, Backend};
+use crate::mi::backend::{compute_measure_with, compute_mi_with, Backend};
 use crate::mi::entropy::{normalized_mi, Normalization};
+use crate::mi::measure::CombineKind;
 use crate::mi::sink::{BlockSizing, SinkData, SinkSpec};
 use crate::mi::topk::{top_k_pairs, MiPair};
 use crate::mi::MiMatrix;
@@ -64,6 +65,14 @@ pub fn compute(argv: &[String]) -> Result<()> {
         cfg.backend =
             Backend::parse(b).ok_or_else(|| Error::Parse(format!("unknown backend '{b}'")))?;
     }
+    if let Some(m) = args.get("measure") {
+        cfg.measure = CombineKind::parse(m).ok_or_else(|| {
+            Error::Parse(format!(
+                "unknown measure '{m}' (expected one of: {})",
+                CombineKind::ALL.map(CombineKind::name).join(" ")
+            ))
+        })?;
+    }
     cfg.workers = args.get_usize("workers", cfg.workers)?;
     cfg.block_cols = args.get_usize("block-cols", cfg.block_cols)?;
     cfg.memory_budget = args.get_usize("memory-budget", cfg.memory_budget)?;
@@ -83,6 +92,13 @@ pub fn compute(argv: &[String]) -> Result<()> {
         input.display()
     );
 
+    if normalize.is_some() && cfg.measure != CombineKind::Mi {
+        return Err(Error::Parse(format!(
+            "--normalize applies to raw MI only, not measure '{}' (nmi is itself \
+             --measure nmi)",
+            cfg.measure
+        )));
+    }
     if !sink.is_dense() {
         // matrix-free / out-of-core path: never builds the m x m matrix
         if normalize.is_some() {
@@ -93,9 +109,10 @@ pub fn compute(argv: &[String]) -> Result<()> {
 
     let (mi, secs) = compute_with_plan(&ds, &cfg)?;
     println!(
-        "computed {}x{} MI matrix with {} in {}",
+        "computed {}x{} {} matrix with {} in {}",
         mi.dim(),
         mi.dim(),
+        cfg.measure,
         cfg.backend,
         fmt_secs(secs)
     );
@@ -156,11 +173,11 @@ pub fn compute_with_plan(ds: &BinaryDataset, cfg: &RunConfig) -> Result<(MiMatri
         let provider = NativeProvider::new(ds, kind);
         let progress = Progress::new(plan.tasks.len());
         let t0 = std::time::Instant::now();
-        let mi = execute_plan(ds, &plan, &provider, cfg.workers, &progress)?;
+        let mi = execute_plan_measure(ds, &plan, &provider, cfg.workers, &progress, cfg.measure)?;
         Ok((mi, t0.elapsed().as_secs_f64()))
     } else {
         let t0 = std::time::Instant::now();
-        let mi = compute_mi_with(ds, cfg.backend, cfg.workers)?;
+        let mi = compute_measure_with(ds, cfg.backend, cfg.workers, cfg.measure)?;
         Ok((mi, t0.elapsed().as_secs_f64()))
     }
 }
@@ -208,20 +225,30 @@ fn compute_into_sink(
         plan.tasks.len(),
         plan.block
     );
-    let mut sink = spec.build(ds.n_cols(), ds.n_rows())?;
+    let mut sink = spec.build_for(ds.n_cols(), ds.n_rows(), cfg.measure)?;
     let provider = NativeProvider::new(ds, backend.native_kind());
     let progress = Progress::new(plan.tasks.len());
     let t0 = std::time::Instant::now();
-    execute_plan_sink(ds, &plan, &provider, cfg.workers, &progress, sink.as_mut())?;
+    execute_plan_sink_measure(
+        ds,
+        &plan,
+        &provider,
+        cfg.workers,
+        &progress,
+        sink.as_mut(),
+        cfg.measure,
+    )?;
     let mut output = sink.finish()?;
     output.meta.backend = Some(backend.name().to_string());
     output.meta.requested_backend = Some(cfg.backend.name().to_string());
     output.meta.kernel = Some(crate::linalg::kernels::active().name().to_string());
+    output.meta.measure = Some(cfg.measure.name().to_string());
     output.meta.probe = probe;
     output.meta.sizing = Some(BlockSizing { block_cols: plan.block, source: sizing_source });
     println!(
-        "computed {} over {} columns in {}",
+        "computed {} ({}) over {} columns in {}",
         output.summary(),
+        cfg.measure,
         ds.n_cols(),
         fmt_secs(t0.elapsed().as_secs_f64())
     );
@@ -259,8 +286,9 @@ fn compute_into_sink(
         }
         SinkData::Sparse(sp) => {
             println!(
-                "{} pairs at or above MI {:.6}{}",
+                "{} pairs at or above {} {:.6}{}",
                 sp.nnz(),
+                cfg.measure,
                 sp.threshold,
                 sp.pvalue.map(|p| format!(" (p <= {p})")).unwrap_or_default()
             );
@@ -450,6 +478,11 @@ pub fn serve(argv: &[String]) -> Result<()> {
             .ok_or_else(|| Error::Parse(format!("unknown native backend '{b}'")))?,
         None => Backend::BulkBitpack,
     };
+    let measure = match args.get("measure") {
+        Some(m) => CombineKind::parse(m)
+            .ok_or_else(|| Error::Parse(format!("unknown measure '{m}'")))?,
+        None => CombineKind::Mi,
+    };
     args.reject_unknown()?;
 
     let svc = JobService::new(workers, max_queued);
@@ -467,7 +500,7 @@ pub fn serve(argv: &[String]) -> Result<()> {
             SinkSpec::Spill { dir } => SinkSpec::Spill { dir: dir.join(format!("job{k}")) },
             other => other.clone(),
         };
-        let spec = JobSpec { backend, block_cols, sink: job_sink, ..Default::default() };
+        let spec = JobSpec { backend, block_cols, sink: job_sink, measure, ..Default::default() };
         loop {
             match svc.submit(ds.clone(), spec.clone()) {
                 Ok(h) => {
@@ -629,6 +662,55 @@ mod tests {
     #[test]
     fn selftest_native_passes() {
         selftest(&sv(&["--rows", "120", "--cols", "10"])).unwrap();
+    }
+
+    #[test]
+    fn compute_measure_paths_end_to_end() {
+        let data = tmp("meas.bmat");
+        generate(&sv(&[
+            "--rows", "200", "--cols", "8", "--sparsity", "0.7", "--seed", "11",
+            "--plant", "0:5:0.02", "--out", data.to_str().unwrap(),
+        ]))
+        .unwrap();
+
+        // dense matrix under a non-MI measure
+        let out = tmp("meas-jac.csv");
+        compute(&sv(&[
+            "--input", data.to_str().unwrap(), "--measure", "jaccard",
+            "--top", "3", "--out", out.to_str().unwrap(),
+        ]))
+        .unwrap();
+        assert_eq!(std::fs::read_to_string(&out).unwrap().lines().count(), 9);
+
+        // matrix-free sink ranks by the selected measure
+        compute(&sv(&[
+            "--input", data.to_str().unwrap(), "--measure", "ochiai",
+            "--sink", "topk:3", "--block-cols", "4",
+        ]))
+        .unwrap();
+
+        // pvalue sink composes with gstat (G-test native units)...
+        compute(&sv(&[
+            "--input", data.to_str().unwrap(), "--measure", "gstat",
+            "--sink", "pvalue:0.01",
+        ]))
+        .unwrap();
+        // ...but is a clean error for measures without an asymptotic null
+        assert!(compute(&sv(&[
+            "--input", data.to_str().unwrap(), "--measure", "phi",
+            "--sink", "pvalue:0.01",
+        ]))
+        .is_err());
+
+        // unknown measure, and normalize x non-MI measure, are rejected
+        assert!(compute(&sv(&[
+            "--input", data.to_str().unwrap(), "--measure", "pearson",
+        ]))
+        .is_err());
+        assert!(compute(&sv(&[
+            "--input", data.to_str().unwrap(), "--measure", "vi", "--normalize", "min",
+        ]))
+        .is_err());
     }
 
     #[test]

@@ -20,15 +20,18 @@ COMMANDS:
     generate    Generate a synthetic binary dataset
         --rows N --cols M [--sparsity S=0.9] [--seed K=0]
         [--plant A:B:NOISE ...] --out FILE.{csv,bmat}
-    compute     Compute MI for a dataset (full matrix or a streaming sink)
+    compute     Compute MI (or any measure) for a dataset
         --input FILE.{csv,bmat} [--backend NAME=bulk-bitpack]
+        [--measure mi|nmi|vi|gstat|chi2|phi|jaccard|ochiai]
         [--workers N] [--block-cols B=0] [--memory-budget BYTES=0]
         [--sink dense|topk:K|topk-per-col:K|threshold:T|pvalue:P|spill:DIR]
         [--top K=10] [--normalize min|max|mean|joint] [--out FILE.csv]
         [--config FILE.toml]
         non-dense sinks run matrix-free: memory stays O(block^2) no
         matter how many columns the dataset has; --backend auto
-        micro-probes the native substrates and commits to the fastest
+        micro-probes the native substrates and commits to the fastest;
+        every measure rides the same single Gram (sinks rank/threshold
+        in the measure's units; pvalue: composes with mi and gstat only)
     analyze     MI with statistical post-processing + edge-list export
         --input FILE [--backend NAME] [--top K=10]
         [--bias-correction miller-madow] [--permutations P=0]
@@ -39,19 +42,24 @@ COMMANDS:
         [--rows N=500] [--cols M=40] [--with-xla]
     serve       Run the job service on a stream of generated jobs (demo)
         [--workers N] [--max-queued Q=4] [--jobs J=8] [--block-cols B]
-        [--backend NAME=bulk-bitpack]
+        [--backend NAME=bulk-bitpack] [--measure NAME=mi]
         [--sink dense|topk:K|topk-per-col:K|threshold:T|pvalue:P|spill:DIR]
     bench       Deterministic Gram/kernel perf suite (alias: pallas-bench)
         [--quick] [--seed K=42] [--reps R] [--out FILE.json]
-        [--baseline FILE.json] [--tolerance F=0.30]
+        [--baseline FILE.json] [--tolerance F=0.30] [--measure NAME ...]
         writes BENCH_<host>.json; with --baseline, fails when any Gram
-        entry's scalar-normalized throughput regresses past tolerance
+        entry's scalar-normalized throughput regresses past tolerance;
+        combine/<measure> rows time the combine stage per measure
+        (--measure repeatable; default: all)
     help        Show this message
 
 BACKENDS:
     pairwise bulk-basic bulk-opt bulk-sparse bulk-bitpack auto xla xla-pallas
     (auto = probe bulk-opt / bulk-sparse / bulk-bitpack on a sampled
     block, then run everything on the winner)
+
+MEASURES (--measure, all from the same one-Gram pipeline):
+    mi nmi vi gstat chi2 phi jaccard ochiai
 
 ENVIRONMENT:
     BULKMI_LOG=error|warn|info|debug|trace    log level (default info)

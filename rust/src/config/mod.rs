@@ -4,6 +4,7 @@
 //! values, `#` comments.
 
 use crate::mi::backend::Backend;
+use crate::mi::measure::CombineKind;
 use crate::util::error::{Error, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -105,6 +106,9 @@ fn strip_comment(line: &str) -> &str {
 pub struct RunConfig {
     /// Backend to compute with.
     pub backend: Backend,
+    /// Association measure the combine stage computes (MI by default;
+    /// see [`crate::mi::measure::CombineKind`]).
+    pub measure: CombineKind,
     /// Worker threads for parallel backends and the coordinator.
     pub workers: usize,
     /// Column-block size for the blockwise plan (0 = monolithic if it fits).
@@ -119,6 +123,7 @@ impl Default for RunConfig {
     fn default() -> Self {
         RunConfig {
             backend: Backend::BulkBitpack,
+            measure: CombineKind::Mi,
             workers: crate::util::threadpool::default_workers(),
             block_cols: 0,
             memory_budget: 0,
@@ -135,7 +140,8 @@ impl RunConfig {
         for key in raw.keys() {
             if let Some(name) = key.strip_prefix("run.") {
                 match name {
-                    "backend" | "workers" | "block_cols" | "memory_budget" | "artifacts_dir" => {}
+                    "backend" | "measure" | "workers" | "block_cols" | "memory_budget"
+                    | "artifacts_dir" => {}
                     other => {
                         return Err(Error::Config(format!("unknown key run.{other}")));
                     }
@@ -145,6 +151,10 @@ impl RunConfig {
         if let Some(b) = raw.get("run.backend") {
             cfg.backend = Backend::parse(b)
                 .ok_or_else(|| Error::Config(format!("unknown backend '{b}'")))?;
+        }
+        if let Some(m) = raw.get("run.measure") {
+            cfg.measure = CombineKind::parse(m)
+                .ok_or_else(|| Error::Config(format!("unknown measure '{m}'")))?;
         }
         if let Some(w) = raw.get_usize("run.workers")? {
             cfg.workers = w.max(1);
@@ -217,6 +227,15 @@ mod tests {
         assert_eq!(cfg.backend, Backend::Pairwise);
         assert_eq!(cfg.workers, 2);
         assert_eq!(cfg.block_cols, 256);
+        assert_eq!(cfg.measure, CombineKind::Mi, "measure defaults to mi");
+    }
+
+    #[test]
+    fn measure_key_parses_and_rejects() {
+        let raw = RawConfig::parse("[run]\nmeasure = \"jaccard\"\n").unwrap();
+        assert_eq!(RunConfig::from_raw(&raw).unwrap().measure, CombineKind::Jaccard);
+        let bad = RawConfig::parse("[run]\nmeasure = \"pearson\"\n").unwrap();
+        assert!(RunConfig::from_raw(&bad).is_err());
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! Plan execution: run block tasks on a Gram provider, combine each
-//! block's counts into MI, and stream the combined blocks into a
-//! [`MiSink`] — the crate's *single* execution engine. The monolithic
-//! backends are one-block plans over the same code path, so a blockwise
-//! run is bit-identical to a monolithic one by construction.
+//! block's counts into the selected association measure
+//! ([`CombineKind`], MI by default), and stream the combined blocks
+//! into a [`MiSink`] — the crate's *single* execution engine. The
+//! monolithic backends are one-block plans over the same code path, so
+//! a blockwise run is bit-identical to a monolithic one by
+//! construction, for every measure (each measure's combine is
+//! swap-invariant; see [`crate::mi::measure`]).
 //!
 //! Parallel runs have no shared output lock: workers send finished
 //! blocks over a channel and one collector thread feeds the sink, so
@@ -14,7 +17,7 @@ use crate::data::dataset::BinaryDataset;
 use crate::linalg::bitmat::BitMatrix;
 use crate::linalg::csr::CsrMatrix;
 use crate::linalg::dense::{Mat32, Mat64};
-use crate::mi::bulk_opt::combine;
+use crate::mi::measure::{combine_block, CombineKind};
 use crate::mi::sink::{DenseSink, MiSink, SinkData};
 use crate::mi::xla::XlaMi;
 use crate::mi::MiMatrix;
@@ -213,6 +216,21 @@ pub fn execute_plan_sink<P: GramProvider + Sync>(
     progress: &Progress,
     sink: &mut dyn MiSink,
 ) -> Result<()> {
+    execute_plan_sink_measure(ds, plan, provider, workers, progress, sink, CombineKind::Mi)
+}
+
+/// [`execute_plan_sink`] with an explicit combine measure: identical
+/// Gram work, only the element-wise combine differs. Sinks rank and
+/// threshold whatever values the measure produces.
+pub fn execute_plan_sink_measure<P: GramProvider + Sync>(
+    ds: &BinaryDataset,
+    plan: &BlockPlan,
+    provider: &P,
+    workers: usize,
+    progress: &Progress,
+    sink: &mut dyn MiSink,
+    measure: CombineKind,
+) -> Result<()> {
     let (n, colsums) = plan_inputs(ds, plan)?;
     let n_tasks = plan.tasks.len();
     let abort = AtomicBool::new(false);
@@ -254,7 +272,7 @@ pub fn execute_plan_sink<P: GramProvider + Sync>(
             if progress.is_cancelled() || abort.load(Ordering::Relaxed) {
                 return;
             }
-            let res = compute_block(provider, &plan.tasks[idx], &colsums, n);
+            let res = compute_block(provider, &plan.tasks[idx], &colsums, n, measure);
             // a send can only fail if the consumer died; nothing to do
             let _ = tx.lock().unwrap().send((idx, res));
         });
@@ -279,12 +297,24 @@ pub fn execute_plan_sink_serial<P: GramProvider>(
     progress: &Progress,
     sink: &mut dyn MiSink,
 ) -> Result<()> {
+    execute_plan_sink_serial_measure(ds, plan, provider, progress, sink, CombineKind::Mi)
+}
+
+/// Serial variant of [`execute_plan_sink_measure`].
+pub fn execute_plan_sink_serial_measure<P: GramProvider>(
+    ds: &BinaryDataset,
+    plan: &BlockPlan,
+    provider: &P,
+    progress: &Progress,
+    sink: &mut dyn MiSink,
+    measure: CombineKind,
+) -> Result<()> {
     let (n, colsums) = plan_inputs(ds, plan)?;
     for t in &plan.tasks {
         if progress.is_cancelled() {
             return Err(Error::Coordinator("job cancelled".into()));
         }
-        let block = compute_block(provider, t, &colsums, n)?;
+        let block = compute_block(provider, t, &colsums, n, measure)?;
         sink.consume_block(t, &block)?;
         progress.task_done();
     }
@@ -300,8 +330,21 @@ pub fn execute_plan<P: GramProvider + Sync>(
     workers: usize,
     progress: &Progress,
 ) -> Result<MiMatrix> {
+    execute_plan_measure(ds, plan, provider, workers, progress, CombineKind::Mi)
+}
+
+/// Dense-matrix execution with an explicit combine measure (the matrix
+/// then holds that measure's values instead of MI bits).
+pub fn execute_plan_measure<P: GramProvider + Sync>(
+    ds: &BinaryDataset,
+    plan: &BlockPlan,
+    provider: &P,
+    workers: usize,
+    progress: &Progress,
+    measure: CombineKind,
+) -> Result<MiMatrix> {
     let mut sink = DenseSink::new(plan.m);
-    execute_plan_sink(ds, plan, provider, workers, progress, &mut sink)?;
+    execute_plan_sink_measure(ds, plan, provider, workers, progress, &mut sink, measure)?;
     dense_result(&mut sink)
 }
 
@@ -323,6 +366,17 @@ pub fn execute_plan_serial<P: GramProvider>(
 /// `bulk-opt` / `bulk-sparse` / `bulk-bitpack` backends to — one
 /// Gram -> combine core for every substrate.
 pub fn compute_native(ds: &BinaryDataset, kind: NativeKind, workers: usize) -> Result<MiMatrix> {
+    compute_native_measure(ds, kind, workers, CombineKind::Mi)
+}
+
+/// [`compute_native`] with an explicit combine measure: the same one
+/// Gram per substrate, any association measure out the other side.
+pub fn compute_native_measure(
+    ds: &BinaryDataset,
+    kind: NativeKind,
+    workers: usize,
+    measure: CombineKind,
+) -> Result<MiMatrix> {
     let m = ds.n_cols();
     // over-decompose 4x per worker so work-stealing balances the
     // triangle's uneven task sizes; block 0 = monolithic single task
@@ -330,7 +384,7 @@ pub fn compute_native(ds: &BinaryDataset, kind: NativeKind, workers: usize) -> R
     let plan = plan_blocks(m, block)?;
     let provider = NativeProvider::new(ds, kind);
     let progress = Progress::new(plan.tasks.len());
-    execute_plan(ds, &plan, &provider, workers, &progress)
+    execute_plan_measure(ds, &plan, &provider, workers, &progress, measure)
 }
 
 fn dense_result(sink: &mut DenseSink) -> Result<MiMatrix> {
@@ -363,6 +417,7 @@ fn compute_block<P: GramProvider + ?Sized>(
     t: &BlockTask,
     colsums: &[f64],
     n: f64,
+    measure: CombineKind,
 ) -> Result<Mat64> {
     let g = provider.block_gram(t)?;
     if (g.rows(), g.cols()) != (t.a_len, t.b_len) {
@@ -375,7 +430,7 @@ fn compute_block<P: GramProvider + ?Sized>(
     }
     let ca = &colsums[t.a_start..t.a_start + t.a_len];
     let cb = &colsums[t.b_start..t.b_start + t.b_len];
-    Ok(combine(&g, ca, cb, n))
+    Ok(combine_block(measure, &g, ca, cb, n))
 }
 
 #[cfg(test)]
@@ -440,6 +495,27 @@ mod tests {
             for kind in [NativeKind::Bitpack, NativeKind::Dense, NativeKind::Sparse] {
                 let got = compute_native(&ds, kind, workers).unwrap();
                 assert_eq!(got.max_abs_diff(&serial), 0.0, "{kind:?} workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn blockwise_measure_matches_monolithic() {
+        use crate::mi::measure::{measure_pairwise, CombineKind};
+        let ds = SynthSpec::new(180, 19).sparsity(0.7).seed(13).generate();
+        for measure in CombineKind::ALL {
+            let want = measure_pairwise(&ds, measure);
+            for kind in [NativeKind::Bitpack, NativeKind::Dense, NativeKind::Sparse] {
+                let provider = NativeProvider::new(&ds, kind);
+                let plan = plan_blocks(19, 6).unwrap();
+                let progress = Progress::new(plan.tasks.len());
+                let got =
+                    execute_plan_measure(&ds, &plan, &provider, 2, &progress, measure).unwrap();
+                assert!(
+                    got.max_abs_diff(&want) < 1e-12,
+                    "{measure} on {kind:?}: diff {}",
+                    got.max_abs_diff(&want)
+                );
             }
         }
     }

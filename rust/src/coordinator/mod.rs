@@ -31,8 +31,10 @@ pub mod service;
 pub mod streaming;
 
 pub use executor::{
-    compute_native, execute_plan, execute_plan_serial, execute_plan_sink,
-    execute_plan_sink_serial, GramProvider, NativeProvider, XlaProvider,
+    compute_native, compute_native_measure, execute_plan, execute_plan_measure,
+    execute_plan_serial, execute_plan_sink, execute_plan_sink_measure,
+    execute_plan_sink_serial, execute_plan_sink_serial_measure, GramProvider,
+    NativeProvider, XlaProvider,
 };
 pub use planner::{plan_blocks, BlockPlan, BlockTask, PlannerConfig};
 pub use service::{JobHandle, JobService, JobStatus};

@@ -4,7 +4,7 @@
 //! the `bulkmi serve` CLI mode and the e2e example.
 
 use super::backpressure::Semaphore;
-use super::executor::{execute_plan_sink, NativeProvider};
+use super::executor::{execute_plan_sink_measure, NativeProvider};
 use super::planner::{block_policy, plan_blocks, BlockPlan};
 use super::progress::Progress;
 use super::scheduler::{order_tasks, Schedule};
@@ -12,6 +12,7 @@ use crate::data::dataset::BinaryDataset;
 use crate::metrics::Metrics;
 use crate::mi::autotune::ProbeReport;
 use crate::mi::backend::Backend;
+use crate::mi::measure::CombineKind;
 use crate::mi::sink::{BlockSizing, SinkOutput, SinkSpec};
 use crate::util::error::{Error, Result};
 use crate::util::threadpool::WorkerPool;
@@ -62,8 +63,12 @@ pub struct JobSpec {
     /// Worker threads *within* the job's plan execution.
     pub inner_workers: usize,
     pub schedule: Schedule,
-    /// Where the combined MI blocks go (dense matrix by default).
+    /// Where the combined blocks go (dense matrix by default).
     pub sink: SinkSpec,
+    /// Which association measure the combine stage computes from the
+    /// Gram blocks (MI by default; see [`crate::mi::measure`]). Sinks
+    /// rank and threshold in the measure's own units.
+    pub measure: CombineKind,
 }
 
 impl Default for JobSpec {
@@ -74,6 +79,7 @@ impl Default for JobSpec {
             inner_workers: 1,
             schedule: Schedule::LargestFirst,
             sink: SinkSpec::Dense,
+            measure: CombineKind::Mi,
         }
     }
 }
@@ -196,15 +202,16 @@ impl JobService {
                     order_tasks(&mut plan.tasks, spec.schedule);
                     progress.set_total(plan.tasks.len());
                     let provider = NativeProvider::new(&ds, resolved.native_kind());
-                    let mut sink = spec.sink.build(ds.n_cols(), ds.n_rows())?;
+                    let mut sink = spec.sink.build_for(ds.n_cols(), ds.n_rows(), spec.measure)?;
                     metrics.time("job_secs", || {
-                        execute_plan_sink(
+                        execute_plan_sink_measure(
                             &ds,
                             &plan,
                             &provider,
                             spec.inner_workers,
                             &progress,
                             sink.as_mut(),
+                            spec.measure,
                         )
                     })?;
                     let mut out = sink.finish()?;
@@ -212,6 +219,7 @@ impl JobService {
                     out.meta.requested_backend = Some(spec.backend.name().to_string());
                     out.meta.kernel =
                         Some(crate::linalg::kernels::active().name().to_string());
+                    out.meta.measure = Some(spec.measure.name().to_string());
                     out.meta.probe = probe;
                     out.meta.sizing = Some(sizing);
                     Ok(out)
@@ -341,6 +349,45 @@ mod tests {
             assert_eq!((got.i, got.j), (exp.i, exp.j));
             assert_eq!(got.mi, exp.mi);
         }
+    }
+
+    #[test]
+    fn measure_job_round_trip() {
+        use crate::mi::backend::compute_measure;
+        let svc = JobService::new(2, 4);
+        let ds = SynthSpec::new(300, 10).sparsity(0.6).seed(31).plant(2, 5, 0.02).generate();
+        let full = compute_measure(&ds, Backend::BulkBitpack, CombineKind::Jaccard).unwrap();
+        let want = crate::mi::topk::top_k_pairs(&full, 3);
+        let spec = JobSpec {
+            block_cols: 4,
+            sink: SinkSpec::TopK { k: 3, per_column: false },
+            measure: CombineKind::Jaccard,
+            ..Default::default()
+        };
+        let h = svc.submit(ds, spec).unwrap();
+        let JobStatus::Done(out) = svc.wait(h).unwrap() else { panic!() };
+        assert_eq!(out.meta.measure.as_deref(), Some("jaccard"));
+        let crate::mi::sink::SinkData::TopK(pairs) = out.data else { panic!() };
+        for (got, exp) in pairs.iter().zip(&want) {
+            assert_eq!((got.i, got.j), (exp.i, exp.j));
+            assert_eq!(got.mi, exp.mi, "sink ranks by the selected measure");
+        }
+    }
+
+    #[test]
+    fn pvalue_sink_with_incompatible_measure_fails_cleanly() {
+        let svc = JobService::new(1, 2);
+        let ds = SynthSpec::new(100, 6).sparsity(0.5).seed(32).generate();
+        let spec = JobSpec {
+            sink: SinkSpec::ThresholdPvalue { pvalue: 0.01 },
+            measure: CombineKind::Phi,
+            ..Default::default()
+        };
+        let h = svc.submit(ds, spec).unwrap();
+        let JobStatus::Failed(msg) = svc.wait(h).unwrap() else {
+            panic!("expected a clean failure")
+        };
+        assert!(msg.contains("asymptotic null"), "{msg}");
     }
 
     #[test]

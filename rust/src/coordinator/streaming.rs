@@ -11,7 +11,6 @@
 use super::planner::plan_blocks;
 use crate::data::dataset::BinaryDataset;
 use crate::linalg::dense::Mat64;
-use crate::mi::bulk_opt::combine;
 use crate::mi::sink::MiSink;
 use crate::mi::MiMatrix;
 use crate::util::error::{Error, Result};
@@ -93,10 +92,18 @@ impl StreamingAccumulator {
     /// Current MI estimate over everything ingested so far (can be
     /// called repeatedly; does not consume the accumulator).
     pub fn snapshot(&self) -> Result<MiMatrix> {
+        self.snapshot_measure(crate::mi::measure::CombineKind::Mi)
+    }
+
+    /// [`Self::snapshot`] under any association measure: the streamed
+    /// sufficient statistics `(G11, colsums, n)` determine every 2x2
+    /// measure, so a stream can end in φ or Jaccard as cheaply as MI.
+    pub fn snapshot_measure(&self, measure: crate::mi::measure::CombineKind) -> Result<MiMatrix> {
         if self.n_rows == 0 {
             return Err(Error::Shape("no rows ingested".into()));
         }
-        Ok(MiMatrix::from_mat(combine(
+        Ok(MiMatrix::from_mat(crate::mi::measure::combine_block(
+            measure,
             &self.g11,
             &self.colsums,
             &self.colsums,
@@ -119,6 +126,18 @@ impl StreamingAccumulator {
     /// The caller still invokes `sink.finish()` (sinks may be fed from
     /// several accumulators before finishing).
     pub fn drain_into(&self, sink: &mut dyn MiSink, block_cols: usize) -> Result<()> {
+        self.drain_into_measure(sink, block_cols, crate::mi::measure::CombineKind::Mi)
+    }
+
+    /// [`Self::drain_into`] under any association measure: the sink
+    /// ranks/thresholds in the measure's units, still without ever
+    /// materializing the m x m matrix.
+    pub fn drain_into_measure(
+        &self,
+        sink: &mut dyn MiSink,
+        block_cols: usize,
+        measure: crate::mi::measure::CombineKind,
+    ) -> Result<()> {
         if self.n_rows == 0 {
             return Err(Error::Shape("no rows ingested".into()));
         }
@@ -133,7 +152,8 @@ impl StreamingAccumulator {
             }
             let ca = &self.colsums[t.a_start..t.a_start + t.a_len];
             let cb = &self.colsums[t.b_start..t.b_start + t.b_len];
-            sink.consume_block(t, &combine(&g, ca, cb, n))?;
+            let block = crate::mi::measure::combine_block(measure, &g, ca, cb, n);
+            sink.consume_block(t, &block)?;
         }
         Ok(())
     }
@@ -217,6 +237,41 @@ mod tests {
         assert_eq!(sp.pairs.len(), want.len());
         for (got, exp) in sp.pairs.iter().zip(&want) {
             assert_eq!((got.i, got.j, got.mi), (exp.i, exp.j, exp.mi));
+        }
+    }
+
+    #[test]
+    fn snapshot_measure_matches_monolithic() {
+        use crate::mi::backend::compute_measure;
+        use crate::mi::measure::CombineKind;
+        let ds = SynthSpec::new(500, 9).sparsity(0.8).seed(7).generate();
+        let mut acc = StreamingAccumulator::new(9, ChunkGram::Bitpack).unwrap();
+        for start in (0..500).step_by(173) {
+            let len = 173.min(500 - start);
+            acc.push_chunk(&ds.row_chunk(start, len).unwrap()).unwrap();
+        }
+        for measure in CombineKind::ALL {
+            let got = acc.snapshot_measure(measure).unwrap();
+            let want = compute_measure(&ds, Backend::BulkBitpack, measure).unwrap();
+            assert_eq!(got.max_abs_diff(&want), 0.0, "{measure}");
+        }
+    }
+
+    #[test]
+    fn drain_into_measure_ranks_by_the_selected_measure() {
+        use crate::mi::measure::CombineKind;
+        use crate::mi::sink::{SinkData, TopKSink};
+        use crate::mi::topk::top_k_pairs;
+        let ds = SynthSpec::new(400, 10).sparsity(0.6).seed(8).plant(2, 7, 0.03).generate();
+        let mut acc = StreamingAccumulator::new(10, ChunkGram::Bitpack).unwrap();
+        acc.push_chunk(&ds).unwrap();
+        let full = acc.snapshot_measure(CombineKind::Jaccard).unwrap();
+        let mut topk = TopKSink::global(3);
+        acc.drain_into_measure(&mut topk, 4, CombineKind::Jaccard).unwrap();
+        let SinkData::TopK(pairs) = topk.finish().unwrap().data else { panic!() };
+        for (got, exp) in pairs.iter().zip(&top_k_pairs(&full, 3)) {
+            assert_eq!((got.i, got.j), (exp.i, exp.j));
+            assert_eq!(got.mi, exp.mi, "sink fed jaccard, not MI");
         }
     }
 

@@ -30,6 +30,7 @@
 //! so `backend-auto` entries always time a real probe).
 
 use super::backend::Backend;
+use super::measure::{combine_block, CombineKind};
 use crate::coordinator::executor::NativeKind;
 use crate::data::dataset::BinaryDataset;
 use crate::util::error::{Error, Result};
@@ -55,6 +56,19 @@ pub struct ProbeMeasurement {
     pub throughput: f64,
 }
 
+/// One measure's combine-stage probe result: how long the element-wise
+/// combine of the probe block's Gram takes for that [`CombineKind`].
+/// The combine is substrate-independent (it maps an f64 Gram block), so
+/// one timing per measure covers every backend.
+#[derive(Clone, Debug)]
+pub struct CombineMeasurement {
+    pub measure: CombineKind,
+    /// Best-of-k seconds for one combine of the probe block's Gram.
+    pub secs: f64,
+    /// Combine throughput: output cells / secs.
+    pub cells_per_sec: f64,
+}
+
 /// What the autotuner saw and decided; recorded in
 /// [`crate::mi::sink::SinkMeta`] so every auto run is auditable.
 #[derive(Clone, Debug)]
@@ -67,6 +81,11 @@ pub struct ProbeReport {
     pub probe_cols: usize,
     /// All candidates, in probe order.
     pub candidates: Vec<ProbeMeasurement>,
+    /// Combine-stage timing for every [`CombineKind`], on the probe
+    /// block's Gram (one entry per measure, [`CombineKind::ALL`]
+    /// order). Lets callers see how much of a run each measure's
+    /// combine will cost relative to the Gram itself.
+    pub combine: Vec<CombineMeasurement>,
     /// Did this report come from the process-wide probe cache (true)
     /// or from freshly timed measurements (false)? Cached reports carry
     /// the *original* run's timings.
@@ -100,6 +119,12 @@ impl ProbeReport {
             .find(|c| c.backend == self.chosen)
             .map(|c| c.throughput)
             .unwrap_or(0.0)
+    }
+
+    /// The probed combine-stage time for `measure`, when the probe
+    /// recorded one (always present on freshly probed reports).
+    pub fn combine_secs(&self, measure: CombineKind) -> Option<f64> {
+        self.combine.iter().find(|c| c.measure == measure).map(|c| c.secs)
     }
 }
 
@@ -214,8 +239,30 @@ fn probe_candidates(probe: &BinaryDataset, density: f64) -> Result<ProbeReport> 
         probe_rows: probe.n_rows(),
         probe_cols: probe.n_cols(),
         candidates,
+        combine: probe_combine(probe),
         cached: false,
     })
+}
+
+/// Time every measure's element-wise combine on the probe block's Gram
+/// (the combine is substrate-independent, so the bit-packed Gram serves
+/// as the shared input). Cells are tiny (≤ 48x48), so this adds
+/// microseconds to the probe while making the per-measure combine cost
+/// auditable in the report.
+fn probe_combine(probe: &BinaryDataset) -> Vec<CombineMeasurement> {
+    let g11 = probe.to_bitmatrix().gram();
+    let colsums: Vec<f64> = probe.col_counts().iter().map(|&v| v as f64).collect();
+    let n = probe.n_rows() as f64;
+    let cells = (probe.n_cols() * probe.n_cols()) as f64;
+    CombineKind::ALL
+        .iter()
+        .map(|&measure| {
+            let secs = best_of(|| {
+                std::hint::black_box(combine_block(measure, &g11, &colsums, &colsums, n));
+            });
+            CombineMeasurement { measure, secs, cells_per_sec: cells / secs.max(1e-12) }
+        })
+        .collect()
 }
 
 /// The deterministic probe block: up to [`PROBE_MAX_COLS`] evenly
@@ -362,6 +409,19 @@ mod tests {
         assert!(!autotune(&other).unwrap().cached);
         // uncached always re-times and never populates from the hit path
         assert!(!autotune_uncached(&ds).unwrap().cached);
+    }
+
+    #[test]
+    fn probe_records_combine_timing_per_measure() {
+        let ds = SynthSpec::new(1200, 24).sparsity(0.7).seed(17).generate();
+        let report = autotune_uncached(&ds).unwrap();
+        assert_eq!(report.combine.len(), CombineKind::ALL.len());
+        for (m, c) in CombineKind::ALL.iter().zip(&report.combine) {
+            assert_eq!(c.measure, *m, "ALL order preserved");
+            assert!(c.secs > 0.0, "{m}: non-positive combine time");
+            assert!(c.cells_per_sec > 0.0, "{m}");
+            assert_eq!(report.combine_secs(*m), Some(c.secs));
+        }
     }
 
     #[test]

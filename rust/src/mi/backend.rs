@@ -4,11 +4,11 @@
 //! `compute_mi` entry point.
 
 use super::autotune::{autotune, ProbeReport};
-use super::bulk_basic::mi_bulk_basic;
-use super::pairwise::mi_pairwise;
+use super::bulk_basic::measure_bulk_basic;
+use super::measure::{measure_pairwise, CombineKind};
 use super::xla::XlaMi;
 use super::MiMatrix;
-use crate::coordinator::executor::{compute_native, NativeKind};
+use crate::coordinator::executor::{compute_native_measure, NativeKind};
 use crate::data::dataset::BinaryDataset;
 use crate::util::error::{Error, Result};
 
@@ -149,23 +149,55 @@ pub fn compute_mi(ds: &BinaryDataset, backend: Backend) -> Result<MiMatrix> {
 /// Like [`compute_mi`] with an explicit worker count for backends that
 /// parallelize.
 pub fn compute_mi_with(ds: &BinaryDataset, backend: Backend, workers: usize) -> Result<MiMatrix> {
+    compute_measure_with(ds, backend, workers, CombineKind::Mi)
+}
+
+/// Compute the full matrix of any association measure
+/// ([`crate::mi::measure::CombineKind`]) with the chosen backend —
+/// same Gram work as MI, different element-wise combine.
+pub fn compute_measure(
+    ds: &BinaryDataset,
+    backend: Backend,
+    measure: CombineKind,
+) -> Result<MiMatrix> {
+    compute_measure_with(ds, backend, 1, measure)
+}
+
+/// [`compute_measure`] with an explicit worker count. The XLA backends
+/// fuse the *MI* combine into their AOT artifact graphs, so they accept
+/// only [`CombineKind::Mi`]; every native backend accepts every
+/// measure.
+pub fn compute_measure_with(
+    ds: &BinaryDataset,
+    backend: Backend,
+    workers: usize,
+    measure: CombineKind,
+) -> Result<MiMatrix> {
     if ds.n_rows() == 0 || ds.n_cols() == 0 {
         return Err(Error::Shape("empty dataset".into()));
     }
+    if !backend.is_native() && measure != CombineKind::Mi {
+        return Err(Error::Parse(format!(
+            "measure '{measure}' needs a native backend: '{backend}' combines MI inside \
+             its AOT artifact graph"
+        )));
+    }
     match backend {
-        Backend::Pairwise => Ok(mi_pairwise(ds)),
+        Backend::Pairwise => Ok(measure_pairwise(ds, measure)),
         // the deliberate Section-2 ablation baseline (4 Gram matmuls)
-        Backend::BulkBasic => Ok(mi_bulk_basic(ds)),
+        Backend::BulkBasic => Ok(measure_bulk_basic(ds, measure)),
         // all optimized native backends are one engine, three substrates
-        Backend::BulkOpt => compute_native(ds, NativeKind::Dense, workers),
-        Backend::BulkSparse => compute_native(ds, NativeKind::Sparse, workers),
-        Backend::BulkBitpack => compute_native(ds, NativeKind::Bitpack, workers),
+        Backend::BulkOpt => compute_native_measure(ds, NativeKind::Dense, workers, measure),
+        Backend::BulkSparse => compute_native_measure(ds, NativeKind::Sparse, workers, measure),
+        Backend::BulkBitpack => {
+            compute_native_measure(ds, NativeKind::Bitpack, workers, measure)
+        }
         Backend::Auto => {
             let (chosen, report) = backend.resolve(ds)?;
             if let Some(r) = &report {
                 crate::info!("{}", r.summary());
             }
-            compute_native(ds, chosen.native_kind(), workers)
+            compute_native_measure(ds, chosen.native_kind(), workers, measure)
         }
         Backend::Xla => XlaMi::load_default()?.compute(ds),
         Backend::XlaPallas => XlaMi::load_default_pallas()?.compute(ds),
@@ -203,6 +235,24 @@ mod tests {
     fn empty_dataset_rejected() {
         let ds = BinaryDataset::new(0, 0, vec![]).unwrap();
         assert!(compute_mi(&ds, Backend::BulkOpt).is_err());
+        assert!(compute_measure(&ds, Backend::BulkOpt, CombineKind::Phi).is_err());
+    }
+
+    #[test]
+    fn non_mi_measure_rejected_on_xla_backends() {
+        let ds = SynthSpec::new(64, 5).sparsity(0.5).seed(3).generate();
+        for backend in [Backend::Xla, Backend::XlaPallas] {
+            let err = compute_measure(&ds, backend, CombineKind::Jaccard).unwrap_err();
+            assert!(err.to_string().contains("native"), "{err}");
+        }
+    }
+
+    #[test]
+    fn mi_measure_is_the_mi_path() {
+        let ds = SynthSpec::new(100, 8).sparsity(0.6).seed(4).generate();
+        let a = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+        let b = compute_measure(&ds, Backend::BulkBitpack, CombineKind::Mi).unwrap();
+        assert_eq!(a.max_abs_diff(&b), 0.0);
     }
 
     #[test]

@@ -6,13 +6,20 @@
 //! the Section-3 identities guarantee `(G11, colsums)` determine the other
 //! three Grams, which the debug assertions below cross-check cell by cell.
 
-use super::bulk_opt::combine;
+use super::measure::{combine_block, CombineKind};
 use super::MiMatrix;
 use crate::data::dataset::BinaryDataset;
 use crate::linalg::blas;
 
 /// Full basic bulk MI (paper Section 2: four Gram matmuls).
 pub fn mi_bulk_basic(ds: &BinaryDataset) -> MiMatrix {
+    measure_bulk_basic(ds, CombineKind::Mi)
+}
+
+/// The Section-2 ablation with any combine measure: still pays the
+/// deliberate 4x matmul cost, then applies the selected measure's
+/// element-wise combine to the same `(G11, colsums, n)`.
+pub fn measure_bulk_basic(ds: &BinaryDataset, measure: CombineKind) -> MiMatrix {
     let n = ds.n_rows() as f64;
     let m = ds.n_cols();
     let d = ds.to_mat32();
@@ -40,8 +47,8 @@ pub fn mi_bulk_basic(ds: &BinaryDataset) -> MiMatrix {
         }
     }
 
-    // Steps 4-5: the shared exact eq. (3) combine on (G11, colsums, n).
-    MiMatrix::from_mat(combine(&g11, &c, &c, n))
+    // Steps 4-5: the shared exact combine on (G11, colsums, n).
+    MiMatrix::from_mat(combine_block(measure, &g11, &c, &c, n))
 }
 
 #[cfg(test)]

@@ -13,7 +13,7 @@
 //! ([`crate::coordinator::executor::compute_native`]), so the
 //! monolithic and blockwise paths are literally the same code.
 
-use super::counts::mi_from_counts_f64;
+use super::measure::{combine_block, CombineKind};
 use super::MiMatrix;
 use crate::coordinator::executor::{compute_native, NativeKind};
 use crate::data::dataset::BinaryDataset;
@@ -23,24 +23,11 @@ use crate::linalg::dense::Mat64;
 ///
 /// Works for rectangular cross-blocks: `g11[i][j]` counts co-occurring
 /// ones between variable `i` of block a and variable `j` of block b.
+/// This is the MI instance of the pluggable combine layer
+/// ([`crate::mi::measure::combine_block`]); other measures use the
+/// generic entry point with their [`CombineKind`].
 pub fn combine(g11: &Mat64, ca: &[f64], cb: &[f64], n: f64) -> Mat64 {
-    let (ma, mb) = (g11.rows(), g11.cols());
-    assert_eq!(ca.len(), ma, "colsums_a length");
-    assert_eq!(cb.len(), mb, "colsums_b length");
-    let mut out = Mat64::zeros(ma, mb);
-    for i in 0..ma {
-        let ci = ca[i];
-        let grow = g11.row(i);
-        let orow = &mut out.data_mut()[i * mb..(i + 1) * mb];
-        for j in 0..mb {
-            let n11 = grow[j];
-            let n10 = ci - n11;
-            let n01 = cb[j] - n11;
-            let n00 = n - ci - cb[j] + n11;
-            orow[j] = mi_from_counts_f64(n11, n10, n01, n00, n);
-        }
-    }
-    out
+    combine_block(CombineKind::Mi, g11, ca, cb, n)
 }
 
 /// Full optimized bulk MI for a dataset (dense f32 Gram substrate),

@@ -1,0 +1,389 @@
+//! Pluggable combine layer: every pairwise association measure the 2x2
+//! contingency table determines, computed from the *same* single Gram.
+//!
+//! The paper's identity — `(G11, colsums, n)` determine the full 2x2
+//! table `(n00, n01, n10, n11)` of every column pair — is not specific
+//! to mutual information. Any measure that is a function of the four
+//! joint counts rides the identical one-Gram pipeline for free: the
+//! blockwise engine computes the Gram block once and only the final
+//! element-wise combine differs. [`CombineKind`] names the measures the
+//! crate ships; [`CombineKind::combine`] is the scalar core and
+//! [`combine_block`] the block-level map every native backend routes
+//! through ([`crate::coordinator::executor`]).
+//!
+//! # Formula table
+//!
+//! With marginals `r1 = n11 + n10` (X=1), `r0 = n01 + n00`,
+//! `c1 = n11 + n01` (Y=1), `c0 = n10 + n00`, expected counts
+//! `e_xy = n_x · n_y / n`, and entropies in bits:
+//!
+//! | kind | formula | range | zero ⇔ |
+//! |------|---------|-------|--------|
+//! | `mi` | `Σ (n_xy/n) log2(n_xy n / (n_x n_y))` | `[0, min(H(X), H(Y))]` | independence |
+//! | `nmi` | `MI / min(H(X), H(Y))` (0 when a variable is constant) | `[0, 1]` | independence |
+//! | `vi` | `H(X) + H(Y) - 2 MI` (a metric) | `[0, H(X)+H(Y)]` | X determines Y and vice versa |
+//! | `gstat` | `G = 2 n ln2 · MI_bits = 2 Σ n_xy ln(n_xy/e_xy)` | `[0, 2n ln 2]` | independence |
+//! | `chi2` | `Σ (n_xy - e_xy)² / e_xy` | `[0, n]` | independence |
+//! | `phi` | `(n11 n00 - n10 n01) / sqrt(r1 r0 c1 c0)` | `[-1, 1]` | independence |
+//! | `jaccard` | `n11 / (n11 + n10 + n01)` | `[0, 1]` | no co-occurrence |
+//! | `ochiai` | `n11 / sqrt(r1 c1)` (cosine of the indicator vectors) | `[0, 1]` | no co-occurrence |
+//!
+//! Cells or denominators that vanish (constant columns, empty unions)
+//! contribute exactly 0 — the same no-epsilon convention as
+//! [`crate::mi::counts`]. Every formula is evaluated with a summation
+//! tree that is bitwise invariant under the `(i, j) -> (j, i)` swap
+//! (which exchanges `n10 <-> n01`, `r <-> c`), so blockwise
+//! mirror-writes stay bit-identical to monolithic runs for every
+//! measure, exactly as they do for MI.
+//!
+//! Only `mi` and `gstat` carry the G-test χ²₁ asymptotic null
+//! ([`crate::mi::significance`]); the `pvalue:` sink therefore accepts
+//! exactly those two ([`CombineKind::supports_pvalue_sink`]) and
+//! returns a clean error for the rest.
+//!
+//! ```
+//! use bulkmi::data::synth::SynthSpec;
+//! use bulkmi::mi::backend::{compute_measure, Backend};
+//! use bulkmi::mi::measure::CombineKind;
+//!
+//! let ds = SynthSpec::new(512, 12).sparsity(0.8).seed(3).generate();
+//! // one Gram per backend run, any measure from it
+//! let jac = compute_measure(&ds, Backend::BulkBitpack, CombineKind::Jaccard).unwrap();
+//! let nmi = compute_measure(&ds, Backend::BulkOpt, CombineKind::Nmi).unwrap();
+//! for i in 0..12 {
+//!     for j in 0..12 {
+//!         assert!((0.0..=1.0).contains(&jac.get(i, j)));
+//!         assert!((0.0..=1.0).contains(&nmi.get(i, j)));
+//!     }
+//! }
+//! // a column co-occurs perfectly with itself (unless it is all-zero)
+//! assert!((jac.get(0, 0) - 1.0).abs() < 1e-12 || ds.col_counts()[0] == 0);
+//! // parse() round-trips the CLI names
+//! assert_eq!(CombineKind::parse("ochiai"), Some(CombineKind::Ochiai));
+//! assert_eq!(CombineKind::parse("bogus"), None);
+//! ```
+
+use super::counts::{entropy_bits, mi_from_counts_f64};
+use super::MiMatrix;
+use crate::data::dataset::BinaryDataset;
+use crate::linalg::dense::Mat64;
+
+/// Which association measure the element-wise combine computes from the
+/// four 2x2 contingency counts. See the module-level formula table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum CombineKind {
+    /// Mutual information in bits (the paper's measure; the default).
+    #[default]
+    Mi,
+    /// MI normalized by `min(H(X), H(Y))` — 1 when one variable
+    /// determines the other (matches
+    /// [`crate::mi::entropy::Normalization::Min`]).
+    Nmi,
+    /// Variation of information `H(X) + H(Y) - 2 MI`, in bits.
+    Vi,
+    /// The G-test statistic `2 n ln2 · MI_bits` (log-likelihood ratio).
+    GStat,
+    /// Pearson's χ² statistic against the independence null.
+    Chi2,
+    /// The φ coefficient (Pearson correlation of binary indicators).
+    Phi,
+    /// Jaccard similarity of the ones-sets, `n11 / |union|`.
+    Jaccard,
+    /// Ochiai / cosine similarity, `n11 / sqrt(n_x n_y)`.
+    Ochiai,
+}
+
+impl CombineKind {
+    /// Every measure, in the module table's order.
+    pub const ALL: [CombineKind; 8] = [
+        CombineKind::Mi,
+        CombineKind::Nmi,
+        CombineKind::Vi,
+        CombineKind::GStat,
+        CombineKind::Chi2,
+        CombineKind::Phi,
+        CombineKind::Jaccard,
+        CombineKind::Ochiai,
+    ];
+
+    /// Stable identifier used by `--measure`, config and bench output.
+    pub fn name(self) -> &'static str {
+        match self {
+            CombineKind::Mi => "mi",
+            CombineKind::Nmi => "nmi",
+            CombineKind::Vi => "vi",
+            CombineKind::GStat => "gstat",
+            CombineKind::Chi2 => "chi2",
+            CombineKind::Phi => "phi",
+            CombineKind::Jaccard => "jaccard",
+            CombineKind::Ochiai => "ochiai",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<CombineKind> {
+        CombineKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+
+    /// Does this measure carry the G-test χ²₁ asymptotic null that the
+    /// `pvalue:P` sink converts cutoffs through? Only `mi` (monotone in
+    /// G) and `gstat` (G itself) do; measures without an asymptotic
+    /// null make `pvalue:` a clean error.
+    pub fn supports_pvalue_sink(self) -> bool {
+        matches!(self, CombineKind::Mi | CombineKind::GStat)
+    }
+
+    /// The measure's value for one column pair, from the total `n` and
+    /// the four joint counts (`c10` counts rows with X=1, Y=0, etc.).
+    ///
+    /// Counts arrive as f64 because they come off a Gram matrix; they
+    /// are integral up to float rounding. The evaluation order is
+    /// chosen so the result is bitwise invariant under the
+    /// `c10 <-> c01` (column swap) exchange — the blockwise engine's
+    /// mirror-write exactness relies on it.
+    #[inline]
+    pub fn combine(self, n: f64, c00: f64, c01: f64, c10: f64, c11: f64) -> f64 {
+        if n <= 0.0 {
+            return 0.0;
+        }
+        let r1 = c11 + c10; // X = 1 marginal
+        let r0 = c01 + c00;
+        let k1 = c11 + c01; // Y = 1 marginal
+        let k0 = c10 + c00;
+        match self {
+            CombineKind::Mi => mi_from_counts_f64(c11, c10, c01, c00, n),
+            CombineKind::Nmi => {
+                let mi = mi_from_counts_f64(c11, c10, c01, c00, n);
+                let denom = entropy_bits(r1 / n).min(entropy_bits(k1 / n));
+                if denom > 0.0 {
+                    (mi / denom).clamp(0.0, 1.0)
+                } else {
+                    0.0
+                }
+            }
+            CombineKind::Vi => {
+                let mi = mi_from_counts_f64(c11, c10, c01, c00, n);
+                // hx + hy is a commutative add: swap-invariant
+                (entropy_bits(r1 / n) + entropy_bits(k1 / n) - 2.0 * mi).max(0.0)
+            }
+            CombineKind::GStat => {
+                2.0 * n * std::f64::consts::LN_2 * mi_from_counts_f64(c11, c10, c01, c00, n)
+            }
+            CombineKind::Chi2 => {
+                if r1 <= 0.0 || r0 <= 0.0 || k1 <= 0.0 || k0 <= 0.0 {
+                    return 0.0; // a constant column: no deviation possible
+                }
+                let term = |obs: f64, nx: f64, ny: f64| -> f64 {
+                    let e = nx * ny / n;
+                    let d = obs - e;
+                    d * d / e
+                };
+                // swap-invariant tree, mirroring mi_from_counts_f64
+                (term(c11, r1, k1) + term(c00, r0, k0))
+                    + (term(c10, r1, k0) + term(c01, r0, k1))
+            }
+            CombineKind::Phi => {
+                let denom = ((r1 * r0) * (k1 * k0)).sqrt();
+                if denom > 0.0 {
+                    (c11 * c00 - c10 * c01) / denom
+                } else {
+                    0.0
+                }
+            }
+            CombineKind::Jaccard => {
+                let union = c11 + (c10 + c01);
+                if union > 0.0 { c11 / union } else { 0.0 }
+            }
+            CombineKind::Ochiai => {
+                let denom = (r1 * k1).sqrt();
+                if denom > 0.0 { c11 / denom } else { 0.0 }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for CombineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Element-wise combine of a (possibly rectangular cross-) Gram block
+/// into the selected measure — the generalization of the Section-3
+/// eq. (3) map that [`crate::mi::bulk_opt::combine`] applies for MI.
+///
+/// `g11[i][j]` counts co-occurring ones between variable `i` of block a
+/// and variable `j` of block b; `ca`/`cb` are the blocks' column sums.
+pub fn combine_block(kind: CombineKind, g11: &Mat64, ca: &[f64], cb: &[f64], n: f64) -> Mat64 {
+    let (ma, mb) = (g11.rows(), g11.cols());
+    assert_eq!(ca.len(), ma, "colsums_a length");
+    assert_eq!(cb.len(), mb, "colsums_b length");
+    let mut out = Mat64::zeros(ma, mb);
+    for i in 0..ma {
+        let ci = ca[i];
+        let grow = g11.row(i);
+        let orow = &mut out.data_mut()[i * mb..(i + 1) * mb];
+        for j in 0..mb {
+            let n11 = grow[j];
+            let n10 = ci - n11;
+            let n01 = cb[j] - n11;
+            let n00 = n - ci - cb[j] + n11;
+            orow[j] = kind.combine(n, n00, n01, n10, n11);
+        }
+    }
+    out
+}
+
+/// Sequential per-pair computation of any measure (the `pairwise`
+/// backend generalized): a full row scan builds each pair's 2x2 table
+/// ([`crate::mi::pairwise::pair_counts`], the same inner loop as
+/// `mi_pairwise`), then the scalar combine applies. O(m² n) — the
+/// comparator the bulk paths are validated against in
+/// `rust/tests/measures.rs`.
+pub fn measure_pairwise(ds: &BinaryDataset, kind: CombineKind) -> MiMatrix {
+    let (n, m) = (ds.n_rows(), ds.n_cols());
+    let mut out = Mat64::zeros(m, m);
+    for i in 0..m {
+        for j in i..m {
+            let (n11, n10, n01, n00) = super::pairwise::pair_counts(ds, i, j);
+            let v = kind.combine(n as f64, n00 as f64, n01 as f64, n10 as f64, n11 as f64);
+            out.set(i, j, v);
+            out.set(j, i, v);
+        }
+    }
+    MiMatrix::from_mat(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_round_trip() {
+        for k in CombineKind::ALL {
+            assert_eq!(CombineKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(CombineKind::parse("warp"), None);
+        assert_eq!(CombineKind::default(), CombineKind::Mi);
+        assert_eq!(CombineKind::GStat.to_string(), "gstat");
+    }
+
+    #[test]
+    fn pvalue_support_is_gtest_only() {
+        for k in CombineKind::ALL {
+            assert_eq!(
+                k.supports_pvalue_sink(),
+                matches!(k, CombineKind::Mi | CombineKind::GStat),
+                "{k}"
+            );
+        }
+    }
+
+    #[test]
+    fn perfect_dependence_extremes() {
+        // X == Y, both balanced over n = 8: n11 = 4, n00 = 4
+        let v = |k: CombineKind| k.combine(8.0, 4.0, 0.0, 0.0, 4.0);
+        assert!((v(CombineKind::Mi) - 1.0).abs() < 1e-12);
+        assert!((v(CombineKind::Nmi) - 1.0).abs() < 1e-12);
+        assert_eq!(v(CombineKind::Vi), 0.0);
+        assert!((v(CombineKind::GStat) - 16.0 * std::f64::consts::LN_2).abs() < 1e-12);
+        assert!((v(CombineKind::Chi2) - 8.0).abs() < 1e-12); // n·φ² = n
+        assert!((v(CombineKind::Phi) - 1.0).abs() < 1e-12);
+        assert!((v(CombineKind::Jaccard) - 1.0).abs() < 1e-12);
+        assert!((v(CombineKind::Ochiai) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exact_independence_zeroes_dependence_measures() {
+        // p(x) = 1/2, p(y) = 1/4, all cells exactly independent
+        for k in [
+            CombineKind::Mi,
+            CombineKind::Nmi,
+            CombineKind::GStat,
+            CombineKind::Chi2,
+            CombineKind::Phi,
+        ] {
+            assert!(
+                k.combine(8.0, 3.0, 1.0, 3.0, 1.0).abs() < 1e-12,
+                "{k} not zero on independent counts"
+            );
+        }
+        // similarity measures are *not* zero under independence
+        assert!(CombineKind::Jaccard.combine(8.0, 3.0, 1.0, 3.0, 1.0) > 0.0);
+        assert!(CombineKind::Ochiai.combine(8.0, 3.0, 1.0, 3.0, 1.0) > 0.0);
+    }
+
+    #[test]
+    fn constant_columns_are_safe_zeros() {
+        for k in CombineKind::ALL {
+            // X constant-zero (r1 = 0) against a balanced Y
+            let v = k.combine(8.0, 4.0, 4.0, 0.0, 0.0);
+            assert!(v.is_finite(), "{k} not finite on constant column");
+            assert_eq!(v, 0.0, "{k} on constant column");
+            // zero rows
+            assert_eq!(k.combine(0.0, 0.0, 0.0, 0.0, 0.0), 0.0, "{k} on n = 0");
+        }
+    }
+
+    #[test]
+    fn swap_symmetry_is_bitwise() {
+        // exchanging c10 <-> c01 (the (i,j) -> (j,i) swap) must be
+        // bit-identical for every measure: the blockwise mirror-write
+        // correctness condition.
+        let tables: &[(f64, f64, f64, f64, f64)] = &[
+            (10.0, 3.0, 2.0, 4.0, 1.0),
+            (100.0, 50.0, 30.0, 15.0, 5.0),
+            (7.0, 0.0, 3.0, 0.0, 4.0),
+            (9.0, 1.0, 0.0, 8.0, 0.0),
+        ];
+        for &(n, c00, c01, c10, c11) in tables {
+            for k in CombineKind::ALL {
+                let a = k.combine(n, c00, c01, c10, c11);
+                let b = k.combine(n, c00, c10, c01, c11);
+                assert_eq!(a.to_bits(), b.to_bits(), "{k} on {n} {c00} {c01} {c10} {c11}");
+            }
+        }
+    }
+
+    #[test]
+    fn phi_negative_on_anticorrelation() {
+        // X = not Y: n10 = n01 = 4
+        let v = CombineKind::Phi.combine(8.0, 0.0, 4.0, 4.0, 0.0);
+        assert!((v + 1.0).abs() < 1e-12, "phi = {v}");
+        // ...while the symmetric dependence measures max out
+        assert!((CombineKind::Mi.combine(8.0, 0.0, 4.0, 4.0, 0.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn combine_block_matches_scalar() {
+        use crate::data::synth::SynthSpec;
+        let ds = SynthSpec::new(200, 9).sparsity(0.7).seed(5).generate();
+        let bits = ds.to_bitmatrix();
+        let g = bits.gram();
+        let c: Vec<f64> = ds.col_counts().iter().map(|&v| v as f64).collect();
+        for k in CombineKind::ALL {
+            let block = combine_block(k, &g, &c, &c, 200.0);
+            let pair = measure_pairwise(&ds, k);
+            for i in 0..9 {
+                for j in 0..9 {
+                    assert!(
+                        (block.get(i, j) - pair.get(i, j)).abs() < 1e-12,
+                        "{k} ({i},{j}): {} vs {}",
+                        block.get(i, j),
+                        pair.get(i, j)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mi_kind_matches_legacy_combine() {
+        use crate::data::synth::SynthSpec;
+        let ds = SynthSpec::new(150, 7).sparsity(0.5).seed(2).generate();
+        let g = ds.to_bitmatrix().gram();
+        let c: Vec<f64> = ds.col_counts().iter().map(|&v| v as f64).collect();
+        let new = combine_block(CombineKind::Mi, &g, &c, &c, 150.0);
+        let old = crate::mi::bulk_opt::combine(&g, &c, &c, 150.0);
+        assert_eq!(new.max_abs_diff(&old), 0.0, "Mi combine must stay bit-identical");
+    }
+}

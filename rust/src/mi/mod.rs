@@ -11,6 +11,10 @@
 //! * [`autotune`] — the `--backend auto` micro-prober: picks the
 //!   fastest native substrate for this machine and dataset, caching
 //!   verdicts per dataset shape within the process.
+//! * [`measure`] — the pluggable combine layer: every association
+//!   measure the 2x2 table determines (MI, normalized MI, variation of
+//!   information, G-statistic, χ², φ, Jaccard, Ochiai) from the same
+//!   single Gram.
 //! * [`sink`] — streaming consumers of MI blocks (dense / top-k /
 //!   threshold / disk-spill); what decouples computing all pairs from
 //!   storing all pairs.
@@ -33,6 +37,7 @@ pub mod bulk_opt;
 pub mod bulk_sparse;
 pub mod counts;
 pub mod entropy;
+pub mod measure;
 pub mod pairwise;
 pub mod significance;
 pub mod sink;

@@ -25,8 +25,11 @@ pub fn mi_pairwise(ds: &BinaryDataset) -> MiMatrix {
     MiMatrix::from_mat(out)
 }
 
-/// MI between two columns via a row scan (the per-pair inner loop).
-fn mi_pair(ds: &BinaryDataset, i: usize, j: usize, n: usize) -> f64 {
+/// 2x2 contingency counts `(n11, n10, n01, n00)` of one column pair
+/// via a full row scan — the shared per-pair inner loop of this module
+/// and [`crate::mi::measure::measure_pairwise`].
+pub fn pair_counts(ds: &BinaryDataset, i: usize, j: usize) -> (u64, u64, u64, u64) {
+    let n = ds.n_rows();
     let mut n11 = 0u64;
     let mut n10 = 0u64;
     let mut n01 = 0u64;
@@ -39,8 +42,13 @@ fn mi_pair(ds: &BinaryDataset, i: usize, j: usize, n: usize) -> f64 {
             _ => {}
         }
     }
-    let n = n as u64;
-    mi_from_counts_u64(n11, n10, n01, n - n11 - n10 - n01, n)
+    (n11, n10, n01, n as u64 - n11 - n10 - n01)
+}
+
+/// MI between two columns via a row scan (the per-pair inner loop).
+fn mi_pair(ds: &BinaryDataset, i: usize, j: usize, n: usize) -> f64 {
+    let (n11, n10, n01, n00) = pair_counts(ds, i, j);
+    mi_from_counts_u64(n11, n10, n01, n00, n as u64)
 }
 
 /// MI between two explicit binary vectors (public convenience).

@@ -186,11 +186,21 @@ pub fn mi_pvalue_asymptotic(mi_bits: f64, n_rows: usize) -> f64 {
 /// uses so `--sink pvalue:P` can screen pairs without per-pair
 /// permutation tests.
 pub fn mi_threshold_for_pvalue(pvalue: f64, n_rows: usize) -> Result<f64, Error> {
-    if !(pvalue > 0.0 && pvalue < 1.0) {
-        return Err(Error::Parse(format!("p-value cutoff {pvalue} not in (0, 1)")));
-    }
     if n_rows == 0 {
         return Err(Error::Shape("p-value threshold needs n_rows >= 1".into()));
+    }
+    Ok(gstat_threshold_for_pvalue(pvalue)? / (2.0 * n_rows as f64 * std::f64::consts::LN_2))
+}
+
+/// The χ²₁ critical value at `pvalue` — the smallest G statistic whose
+/// asymptotic independence p-value is `<= pvalue`. This is the cutoff
+/// `--sink pvalue:P` applies directly when the run's combine measure is
+/// [`crate::mi::measure::CombineKind::GStat`] (G needs no `n` scaling:
+/// the statistic already carries it); the MI-bits conversion
+/// [`mi_threshold_for_pvalue`] divides it by `2 n ln 2`.
+pub fn gstat_threshold_for_pvalue(pvalue: f64) -> Result<f64, Error> {
+    if !(pvalue > 0.0 && pvalue < 1.0) {
+        return Err(Error::Parse(format!("p-value cutoff {pvalue} not in (0, 1)")));
     }
     // invert the (monotone decreasing) chi-square survival by bisection
     let mut hi = 1.0f64;
@@ -209,7 +219,7 @@ pub fn mi_threshold_for_pvalue(pvalue: f64, n_rows: usize) -> Result<f64, Error>
             hi = mid;
         }
     }
-    Ok(hi / (2.0 * n_rows as f64 * std::f64::consts::LN_2))
+    Ok(hi)
 }
 
 fn pair_mi(x: &[u8], y: &[u8]) -> f64 {
@@ -292,6 +302,18 @@ mod tests {
         assert!((chi2_sf_1df(6.635) - 0.01).abs() < 1e-3);
         // monotone decreasing
         assert!(chi2_sf_1df(1.0) > chi2_sf_1df(2.0));
+    }
+
+    #[test]
+    fn gstat_threshold_is_the_chi2_critical_value() {
+        // the documented P = 0.01 example: chi²₁ critical value 6.635
+        let g = gstat_threshold_for_pvalue(0.01).unwrap();
+        assert!((g - 6.635).abs() < 0.01, "g = {g}");
+        // the MI conversion is exactly the G cutoff rescaled by 2 n ln2
+        let t = mi_threshold_for_pvalue(0.01, 10_000).unwrap();
+        assert!((t * 2.0 * 10_000.0 * std::f64::consts::LN_2 - g).abs() < 1e-12);
+        assert!(gstat_threshold_for_pvalue(0.0).is_err());
+        assert!(gstat_threshold_for_pvalue(1.0).is_err());
     }
 
     #[test]

@@ -20,6 +20,7 @@
 //! `TopKSink`/`ThresholdSink` agree exactly with post-hoc extraction
 //! from the full matrix (property-tested in `rust/tests/sinks.rs`).
 
+use super::measure::CombineKind;
 use super::topk::MiPair;
 use super::MiMatrix;
 use crate::coordinator::planner::BlockTask;
@@ -138,6 +139,10 @@ pub struct SinkMeta {
     /// The process-wide AND-popcount kernel
     /// ([`crate::linalg::kernels::active`]).
     pub kernel: Option<String>,
+    /// The association measure the run's combine stage computed
+    /// ([`crate::mi::measure::CombineKind::name`]); `None` on legacy
+    /// paths that never set it, which always means MI.
+    pub measure: Option<String>,
     /// The autotuner's probe report, when the run was `--backend auto`
     /// (its [`cached`](crate::mi::autotune::ProbeReport::cached) flag
     /// records whether the verdict came from the probe cache).
@@ -484,9 +489,33 @@ impl ThresholdSink {
     }
 
     /// Keep pairs whose asymptotic independence p-value is `<= pvalue`
-    /// for a dataset with `n_rows` observations.
+    /// for a dataset with `n_rows` observations (MI-bits cutoff).
     pub fn by_pvalue(pvalue: f64, n_rows: usize) -> Result<Self> {
-        let threshold = super::significance::mi_threshold_for_pvalue(pvalue, n_rows)?;
+        Self::by_pvalue_for(pvalue, n_rows, CombineKind::Mi)
+    }
+
+    /// [`Self::by_pvalue`] for a run whose combine stage computes
+    /// `measure`: the χ²₁ cutoff converts to MI bits for
+    /// [`CombineKind::Mi`] and applies directly for
+    /// [`CombineKind::GStat`] (the statistic *is* G). Every other
+    /// measure has no G-test asymptotic null, so the conversion is a
+    /// clean error rather than a silently wrong threshold.
+    pub fn by_pvalue_for(pvalue: f64, n_rows: usize, measure: CombineKind) -> Result<Self> {
+        let threshold = match measure {
+            CombineKind::Mi => super::significance::mi_threshold_for_pvalue(pvalue, n_rows)?,
+            CombineKind::GStat => {
+                if n_rows == 0 {
+                    return Err(Error::Shape("p-value threshold needs n_rows >= 1".into()));
+                }
+                super::significance::gstat_threshold_for_pvalue(pvalue)?
+            }
+            other => {
+                return Err(Error::Parse(format!(
+                    "sink pvalue: measure '{other}' has no G-test asymptotic null \
+                     (supported: mi, gstat); use threshold:T instead"
+                )))
+            }
+        };
         Ok(ThresholdSink { threshold, pvalue: Some(pvalue), pairs: Vec::new() })
     }
 
@@ -712,15 +741,29 @@ impl SinkSpec {
         matches!(self, SinkSpec::Dense)
     }
 
-    /// Instantiate for a dataset with `m` columns and `n_rows` rows.
+    /// Instantiate for a dataset with `m` columns and `n_rows` rows
+    /// (MI combine; see [`Self::build_for`] for other measures).
     pub fn build(&self, m: usize, n_rows: usize) -> Result<Box<dyn MiSink>> {
+        self.build_for(m, n_rows, CombineKind::Mi)
+    }
+
+    /// Instantiate for a run whose combine stage computes `measure`.
+    /// Sinks rank/threshold whatever values the measure produces; only
+    /// `pvalue:` is measure-sensitive (its χ²₁ conversion exists for
+    /// `mi` and `gstat` alone and errors cleanly otherwise).
+    pub fn build_for(
+        &self,
+        m: usize,
+        n_rows: usize,
+        measure: CombineKind,
+    ) -> Result<Box<dyn MiSink>> {
         Ok(match self {
             SinkSpec::Dense => Box::new(DenseSink::new(m)),
             SinkSpec::TopK { k, per_column: false } => Box::new(TopKSink::global(*k)),
             SinkSpec::TopK { k, per_column: true } => Box::new(TopKSink::per_column(m, *k)),
             SinkSpec::ThresholdMi { threshold } => Box::new(ThresholdSink::by_mi(*threshold)),
             SinkSpec::ThresholdPvalue { pvalue } => {
-                Box::new(ThresholdSink::by_pvalue(*pvalue, n_rows)?)
+                Box::new(ThresholdSink::by_pvalue_for(*pvalue, n_rows, measure)?)
             }
             SinkSpec::Spill { dir } => Box::new(TileSpillSink::new(dir.clone(), m)?),
         })
@@ -884,6 +927,28 @@ mod tests {
         assert!(SinkSpec::parse("topk").is_err());
         assert!(SinkSpec::parse("topk:ten").is_err());
         assert!(SinkSpec::parse("bogus:1").is_err());
+    }
+
+    #[test]
+    fn pvalue_sink_is_measure_aware() {
+        // mi: cutoff in MI bits
+        let mi = ThresholdSink::by_pvalue_for(0.01, 10_000, CombineKind::Mi).unwrap();
+        let want = crate::mi::significance::mi_threshold_for_pvalue(0.01, 10_000).unwrap();
+        assert_eq!(mi.threshold(), want);
+        // gstat: the chi²₁ critical value itself (≈ 6.635 at P = 0.01)
+        let g = ThresholdSink::by_pvalue_for(0.01, 10_000, CombineKind::GStat).unwrap();
+        assert!((g.threshold() - 6.635).abs() < 0.01, "{}", g.threshold());
+        // measures without an asymptotic null: clean Err, not a panic
+        for k in CombineKind::ALL {
+            let built = SinkSpec::ThresholdPvalue { pvalue: 0.01 }.build_for(4, 100, k);
+            assert_eq!(built.is_ok(), k.supports_pvalue_sink(), "{k}");
+        }
+        // non-pvalue sinks build under every measure
+        for k in CombineKind::ALL {
+            for s in ["dense", "topk:2", "topk-per-col:1", "threshold:0.5"] {
+                SinkSpec::parse(s).unwrap().build_for(4, 100, k).unwrap();
+            }
+        }
     }
 
     #[test]

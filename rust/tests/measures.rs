@@ -1,0 +1,374 @@
+//! Oracle suite for the pluggable combine layer: every [`CombineKind`]
+//! on every native backend must match a naive per-pair reference
+//! (row-scan contingency counts + textbook formulas, written
+//! independently of `mi::measure`) to 1e-12 precision, on dense,
+//! 1%-sparse, constant-column and 0/1-row edge datasets — plus the
+//! measure invariants (symmetry, ranges, zero under exact
+//! independence) and the `pvalue:` sink's measure-aware χ²₁
+//! conversion.
+
+use bulkmi::data::dataset::BinaryDataset;
+use bulkmi::data::synth::SynthSpec;
+use bulkmi::mi::autotune;
+use bulkmi::mi::backend::{compute_measure_with, Backend};
+use bulkmi::mi::measure::CombineKind;
+use bulkmi::mi::significance::mi_threshold_for_pvalue;
+use bulkmi::mi::sink::SinkSpec;
+use bulkmi::mi::MiMatrix;
+
+/// The backends that must agree with the oracle: every implementation
+/// that needs no XLA artifacts.
+fn native_backends() -> Vec<Backend> {
+    Backend::ALL.into_iter().filter(|b| b.is_native()).collect()
+}
+
+// ---------------------------------------------------------------------
+// The naive reference oracle
+// ---------------------------------------------------------------------
+
+/// 2x2 contingency counts of one column pair via a full row scan —
+/// the `pairwise.rs`-style reference path, no Gram anywhere.
+fn pair_counts(ds: &BinaryDataset, i: usize, j: usize) -> (u64, u64, u64, u64) {
+    let (mut n11, mut n10, mut n01, mut n00) = (0u64, 0u64, 0u64, 0u64);
+    for r in 0..ds.n_rows() {
+        match (ds.get(r, i), ds.get(r, j)) {
+            (1, 1) => n11 += 1,
+            (1, 0) => n10 += 1,
+            (0, 1) => n01 += 1,
+            _ => n00 += 1,
+        }
+    }
+    (n11, n10, n01, n00)
+}
+
+fn binary_entropy(p: f64) -> f64 {
+    if p <= 0.0 || p >= 1.0 {
+        0.0
+    } else {
+        -p * p.log2() - (1.0 - p) * (1.0 - p).log2()
+    }
+}
+
+/// Textbook formulas straight from the definitions (probabilities for
+/// MI, nats for G, expected counts for χ²) — deliberately *not* the
+/// evaluation order `mi::measure` uses, so agreement is a real check.
+fn oracle(kind: CombineKind, n11: u64, n10: u64, n01: u64, n00: u64) -> f64 {
+    let n = (n11 + n10 + n01 + n00) as f64;
+    if n <= 0.0 {
+        return 0.0;
+    }
+    let (f11, f10, f01, f00) = (n11 as f64, n10 as f64, n01 as f64, n00 as f64);
+    let (rx1, rx0) = (f11 + f10, f01 + f00); // X marginal counts
+    let (cy1, cy0) = (f11 + f01, f10 + f00); // Y marginal counts
+    let mi = {
+        let cell = |fxy: f64, fx: f64, fy: f64| {
+            if fxy > 0.0 {
+                let pxy = fxy / n;
+                pxy * (pxy / ((fx / n) * (fy / n))).log2()
+            } else {
+                0.0
+            }
+        };
+        cell(f11, rx1, cy1) + cell(f10, rx1, cy0) + cell(f01, rx0, cy1) + cell(f00, rx0, cy0)
+    };
+    match kind {
+        CombineKind::Mi => mi,
+        CombineKind::Nmi => {
+            let denom = binary_entropy(rx1 / n).min(binary_entropy(cy1 / n));
+            if denom > 0.0 {
+                (mi / denom).clamp(0.0, 1.0)
+            } else {
+                0.0
+            }
+        }
+        CombineKind::Vi => {
+            (binary_entropy(rx1 / n) + binary_entropy(cy1 / n) - 2.0 * mi).max(0.0)
+        }
+        CombineKind::GStat => {
+            // G in nats, straight from the log-likelihood ratio
+            let cell = |fxy: f64, fx: f64, fy: f64| {
+                if fxy > 0.0 {
+                    fxy * (fxy * n / (fx * fy)).ln()
+                } else {
+                    0.0
+                }
+            };
+            2.0 * (cell(f11, rx1, cy1)
+                + cell(f10, rx1, cy0)
+                + cell(f01, rx0, cy1)
+                + cell(f00, rx0, cy0))
+        }
+        CombineKind::Chi2 => {
+            if rx1 <= 0.0 || rx0 <= 0.0 || cy1 <= 0.0 || cy0 <= 0.0 {
+                return 0.0; // a constant column: no deviation possible
+            }
+            let cell = |obs: f64, fx: f64, fy: f64| {
+                let e = fx * fy / n;
+                (obs - e).powi(2) / e
+            };
+            cell(f11, rx1, cy1) + cell(f10, rx1, cy0) + cell(f01, rx0, cy1) + cell(f00, rx0, cy0)
+        }
+        CombineKind::Phi => {
+            let denom = (rx1 * rx0 * cy1 * cy0).sqrt();
+            if denom > 0.0 {
+                (f11 * f00 - f10 * f01) / denom
+            } else {
+                0.0
+            }
+        }
+        CombineKind::Jaccard => {
+            let union = f11 + f10 + f01;
+            if union > 0.0 { f11 / union } else { 0.0 }
+        }
+        CombineKind::Ochiai => {
+            let denom = (rx1 * cy1).sqrt();
+            if denom > 0.0 { f11 / denom } else { 0.0 }
+        }
+    }
+}
+
+/// 1e-12 precision: absolute for O(1)-scaled measures, relative for the
+/// statistics whose magnitude grows with n (gstat, chi2).
+fn tol(v: f64) -> f64 {
+    1e-12 * v.abs().max(1.0)
+}
+
+fn check_against_oracle(ds: &BinaryDataset, backend: Backend, workers: usize) {
+    let m = ds.n_cols();
+    for kind in CombineKind::ALL {
+        let got = compute_measure_with(ds, backend, workers, kind).unwrap();
+        assert_eq!(got.dim(), m);
+        for i in 0..m {
+            for j in 0..m {
+                let (n11, n10, n01, n00) = pair_counts(ds, i, j);
+                let want = oracle(kind, n11, n10, n01, n00);
+                let diff = (got.get(i, j) - want).abs();
+                assert!(
+                    diff <= tol(want),
+                    "{kind} on {backend} ({i},{j}): got {} want {want} (diff {diff:.3e})",
+                    got.get(i, j)
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Property tests: every measure x every native backend x dataset shapes
+// ---------------------------------------------------------------------
+
+#[test]
+fn dense_dataset_matches_oracle_on_every_backend() {
+    let ds = SynthSpec::new(300, 12).sparsity(0.5).seed(41).plant(0, 7, 0.05).generate();
+    for backend in native_backends() {
+        check_against_oracle(&ds, backend, 1);
+    }
+}
+
+#[test]
+fn one_percent_sparse_matches_oracle_on_every_backend() {
+    let ds = SynthSpec::new(500, 10).sparsity(0.99).seed(42).generate();
+    for backend in native_backends() {
+        check_against_oracle(&ds, backend, 1);
+    }
+}
+
+#[test]
+fn constant_columns_match_oracle_on_every_backend() {
+    // col 0 all-zero, col 1 all-one, col 2 alternating, col 3 sparse
+    let n = 48;
+    let mut data = vec![0u8; n * 4];
+    for r in 0..n {
+        data[r * 4 + 1] = 1;
+        data[r * 4 + 2] = (r % 2) as u8;
+        data[r * 4 + 3] = u8::from(r % 5 == 0);
+    }
+    let ds = BinaryDataset::new(n, 4, data).unwrap();
+    for backend in native_backends() {
+        check_against_oracle(&ds, backend, 1);
+    }
+}
+
+#[test]
+fn one_row_edge_dataset_matches_oracle() {
+    // a single observation: every variable is constant, every
+    // dependence measure must be 0 and every similarity well-defined
+    let ds = BinaryDataset::new(1, 5, vec![1, 0, 1, 1, 0]).unwrap();
+    for backend in native_backends() {
+        check_against_oracle(&ds, backend, 1);
+    }
+    let jac = compute_measure_with(&ds, Backend::BulkBitpack, 1, CombineKind::Jaccard).unwrap();
+    assert_eq!(jac.get(0, 2), 1.0, "both ones in the single row co-occur");
+    assert_eq!(jac.get(1, 4), 0.0, "empty union is 0, not NaN");
+}
+
+#[test]
+fn zero_one_row_extremes_match_oracle() {
+    // rows of all-zeros and all-ones alongside mixed rows
+    let n = 6;
+    let rows: [[u8; 3]; 6] = [[0, 0, 0], [1, 1, 1], [0, 0, 0], [1, 0, 1], [1, 1, 1], [0, 1, 0]];
+    let ds = BinaryDataset::new(n, 3, rows.concat()).unwrap();
+    for backend in native_backends() {
+        check_against_oracle(&ds, backend, 1);
+    }
+}
+
+#[test]
+fn zero_row_dataset_is_a_clean_error() {
+    let ds = BinaryDataset::new(0, 3, vec![]).unwrap();
+    for kind in CombineKind::ALL {
+        assert!(compute_measure_with(&ds, Backend::BulkBitpack, 1, kind).is_err(), "{kind}");
+    }
+}
+
+#[test]
+fn parallel_blockwise_is_bit_identical_to_serial() {
+    let ds = SynthSpec::new(400, 21).sparsity(0.8).seed(43).generate();
+    for kind in CombineKind::ALL {
+        let serial = compute_measure_with(&ds, Backend::BulkBitpack, 1, kind).unwrap();
+        for workers in [2, 5] {
+            let par = compute_measure_with(&ds, Backend::BulkBitpack, workers, kind).unwrap();
+            assert_eq!(par.max_abs_diff(&serial), 0.0, "{kind} workers={workers}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Invariants
+// ---------------------------------------------------------------------
+
+fn matrix_for(kind: CombineKind, ds: &BinaryDataset) -> MiMatrix {
+    compute_measure_with(ds, Backend::BulkBitpack, 2, kind).unwrap()
+}
+
+#[test]
+fn every_measure_is_exactly_symmetric() {
+    let ds = SynthSpec::new(250, 15).sparsity(0.6).seed(44).generate();
+    for kind in CombineKind::ALL {
+        let mat = matrix_for(kind, &ds);
+        assert_eq!(mat.max_asymmetry(), 0.0, "{kind}: mirror writes must be bit-identical");
+    }
+}
+
+#[test]
+fn measure_ranges_hold() {
+    let ds = SynthSpec::new(350, 14).sparsity(0.7).seed(45).plant(1, 9, 0.01).generate();
+    let in_range = |kind: CombineKind, lo: f64, hi: f64| {
+        let mat = matrix_for(kind, &ds);
+        for &v in mat.data() {
+            assert!((lo..=hi).contains(&v) && v.is_finite(), "{kind}: {v} outside [{lo}, {hi}]");
+        }
+    };
+    in_range(CombineKind::Nmi, 0.0, 1.0);
+    in_range(CombineKind::Jaccard, 0.0, 1.0);
+    in_range(CombineKind::Ochiai, 0.0, 1.0);
+    in_range(CombineKind::Phi, -1.0, 1.0);
+    in_range(CombineKind::Vi, 0.0, f64::INFINITY);
+    in_range(CombineKind::GStat, 0.0, f64::INFINITY);
+    in_range(CombineKind::Chi2, 0.0, f64::INFINITY);
+}
+
+#[test]
+fn exactly_independent_columns_are_zero() {
+    // 8 rows where col 0 = first half, col 1 = parity: every joint
+    // cell holds exactly n/4 rows, so independence is exact, not
+    // merely asymptotic
+    let mut data = vec![0u8; 16];
+    for r in 0..8 {
+        data[r * 2] = u8::from(r < 4);
+        data[r * 2 + 1] = (r % 2) as u8;
+    }
+    let ds = BinaryDataset::new(8, 2, data).unwrap();
+    for kind in [
+        CombineKind::Mi,
+        CombineKind::Nmi,
+        CombineKind::GStat,
+        CombineKind::Chi2,
+        CombineKind::Phi,
+    ] {
+        let mat = matrix_for(kind, &ds);
+        assert!(mat.get(0, 1).abs() < 1e-12, "{kind}: {} on independent pair", mat.get(0, 1));
+    }
+    // similarity coefficients are positive under independence: they
+    // measure overlap, not dependence
+    assert!(matrix_for(CombineKind::Jaccard, &ds).get(0, 1) > 0.0);
+    assert!(matrix_for(CombineKind::Ochiai, &ds).get(0, 1) > 0.0);
+}
+
+#[test]
+fn vi_is_zero_iff_columns_determine_each_other() {
+    let ds = SynthSpec::new(600, 6).sparsity(0.6).seed(46).plant(0, 5, 0.0).generate();
+    let vi = matrix_for(CombineKind::Vi, &ds);
+    assert!(vi.get(0, 5).abs() < 1e-12, "planted copy: VI = 0");
+    for i in 0..6 {
+        assert!(vi.get(i, i).abs() < 1e-12, "VI(X,X) = 0");
+    }
+    assert!(vi.get(1, 2) > 0.1, "independent pair: VI far from 0");
+}
+
+// ---------------------------------------------------------------------
+// pvalue sink: the χ²₁ conversion is measure-aware
+// ---------------------------------------------------------------------
+
+#[test]
+fn pvalue_cutoff_round_trips_the_documented_example() {
+    // the significance.rs doc example: P = 0.01 over n = 10_000 rows
+    let spec = SinkSpec::parse("pvalue:0.01").unwrap();
+    let _sink = spec.build_for(50, 10_000, CombineKind::Mi).unwrap();
+    let threshold = mi_threshold_for_pvalue(0.01, 10_000).unwrap();
+    let g = 2.0 * 10_000.0 * std::f64::consts::LN_2 * threshold;
+    assert!((g - 6.635).abs() < 0.01, "chi²₁ 1% critical value, got G = {g}");
+    // under gstat the same spec applies the critical value directly:
+    // consuming a gstat matrix with it keeps exactly the pairs whose
+    // MI-threshold counterpart keeps under mi (same test, same null)
+    let ds = SynthSpec::new(800, 8).sparsity(0.6).seed(47).plant(0, 3, 0.05).generate();
+    let mi = matrix_for(CombineKind::Mi, &ds);
+    let gstat = matrix_for(CombineKind::GStat, &ds);
+    let t_mi = mi_threshold_for_pvalue(0.01, 800).unwrap();
+    let t_g = 2.0 * 800.0 * std::f64::consts::LN_2 * t_mi;
+    for i in 0..8 {
+        for j in (i + 1)..8 {
+            assert_eq!(
+                mi.get(i, j) >= t_mi,
+                gstat.get(i, j) >= t_g,
+                "({i},{j}): mi and gstat cutoffs must agree on survivors"
+            );
+        }
+    }
+}
+
+#[test]
+fn pvalue_sink_errors_cleanly_for_measures_without_a_null() {
+    let spec = SinkSpec::parse("pvalue:0.01").unwrap();
+    for kind in CombineKind::ALL {
+        let built = spec.build_for(10, 500, kind);
+        if kind.supports_pvalue_sink() {
+            assert!(built.is_ok(), "{kind} should support pvalue:");
+        } else {
+            let err = built.err().expect("clean Err, not a panic");
+            assert!(err.to_string().contains("asymptotic null"), "{kind}: {err}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Autotuner: combine-stage timings per measure (acceptance criterion)
+// ---------------------------------------------------------------------
+
+#[test]
+fn probe_report_carries_combine_timings_for_every_measure() {
+    let ds = SynthSpec::new(2048, 32).sparsity(0.8).seed(48).generate();
+    let report = autotune::autotune_uncached(&ds).unwrap();
+    assert_eq!(report.combine.len(), CombineKind::ALL.len());
+    for kind in CombineKind::ALL {
+        let secs = report.combine_secs(kind).expect("one timing per probed measure");
+        assert!(secs > 0.0 && secs.is_finite(), "{kind}: secs = {secs}");
+    }
+    // the timings travel with the verdict into the cache path too
+    bulkmi::mi::autotune::clear_probe_cache();
+    let fresh = autotune::autotune(&ds).unwrap();
+    assert_eq!(fresh.combine.len(), CombineKind::ALL.len());
+    let cached = autotune::autotune(&ds).unwrap();
+    assert!(cached.cached);
+    assert_eq!(cached.combine.len(), CombineKind::ALL.len());
+}

@@ -1,0 +1,92 @@
+//! Direct unit tests for the planner's block-width policy — previously
+//! exercised only indirectly through the job service. Covers the
+//! `block_policy` precedence chain (explicit > probe-throughput >
+//! caller fallback) and the `throughput_block` latency-cap math.
+
+use bulkmi::coordinator::planner::{
+    block_policy, matrix_free_block, task_bytes, throughput_block, DEFAULT_TASK_LATENCY_SECS,
+};
+
+#[test]
+fn explicit_width_beats_probe_and_fallback() {
+    // an explicit caller width wins no matter what else is available
+    let (b, src) = block_policy(9, Some(1e9), 10_000, 500, 0, (7, "budget"));
+    assert_eq!((b, src), (9, "explicit"));
+    // ...even an absurdly small one
+    let (b, src) = block_policy(1, Some(f64::MAX), 10_000, 500, 0, (7, "monolithic"));
+    assert_eq!((b, src), (1, "explicit"));
+}
+
+#[test]
+fn probe_throughput_beats_fallback() {
+    let (n, m) = (10_000usize, 500usize);
+    let (b, src) = block_policy(0, Some(1e8), n, m, 0, (7, "budget"));
+    assert_eq!(src, "probe-throughput");
+    assert_eq!(b, throughput_block(n, m, 0, 1e8, DEFAULT_TASK_LATENCY_SECS));
+    assert!(b >= 1);
+}
+
+#[test]
+fn fallback_applies_when_nothing_else_is_known() {
+    // no explicit width, no probe: the caller's fallback rule verbatim
+    assert_eq!(block_policy(0, None, 10_000, 500, 0, (0, "monolithic")), (0, "monolithic"));
+    assert_eq!(block_policy(0, None, 10_000, 500, 0, (123, "budget")), (123, "budget"));
+}
+
+#[test]
+fn latency_cap_math_is_maximal_under_the_target() {
+    // when the latency cap (not the memory cap) binds, the chosen b is
+    // the largest with b² · n / throughput <= target
+    let (n, m) = (10_000usize, 5_000usize);
+    let (tput, target) = (1e8f64, 1.0f64);
+    let b = throughput_block(n, m, usize::MAX, tput, target);
+    assert!(b >= 1);
+    if b < m {
+        let latency = |w: usize| (w * w) as f64 * n as f64 / tput;
+        assert!(latency(b) <= target + 1e-9, "b = {b} exceeds the target");
+        assert!(latency(b + 1) > target, "b = {b} is not maximal");
+    }
+}
+
+#[test]
+fn faster_substrates_get_larger_blocks() {
+    let (n, m) = (10_000usize, 5_000usize);
+    let mut last = 0usize;
+    for tput in [1e6, 1e7, 1e8, 1e9] {
+        let b = throughput_block(n, m, 0, tput, DEFAULT_TASK_LATENCY_SECS);
+        assert!(b >= last, "throughput {tput}: block shrank {last} -> {b}");
+        last = b;
+    }
+}
+
+#[test]
+fn memory_cap_still_binds_an_arbitrarily_fast_probe() {
+    let (n, m) = (100_000usize, 1_000_000usize);
+    let b = throughput_block(n, m, 0, f64::MAX, 1e9);
+    assert_eq!(b, matrix_free_block(n, m, 0), "latency cap can only shrink the memory cap");
+    assert!(task_bytes(n, b) <= 256 << 20 || b == 1);
+}
+
+#[test]
+fn degenerate_throughput_falls_back_to_the_memory_rule() {
+    let (n, m) = (10_000usize, 500usize);
+    for bad in [0.0, -5.0, f64::NAN, f64::INFINITY] {
+        assert_eq!(
+            throughput_block(n, m, 0, bad, DEFAULT_TASK_LATENCY_SECS),
+            matrix_free_block(n, m, 0),
+            "throughput = {bad}"
+        );
+    }
+    // a zero/negative target is equally degenerate
+    assert_eq!(throughput_block(n, m, 0, 1e8, 0.0), matrix_free_block(n, m, 0));
+    assert_eq!(throughput_block(n, m, 0, 1e8, -1.0), matrix_free_block(n, m, 0));
+}
+
+#[test]
+fn latency_cap_is_clamped_to_valid_widths() {
+    // a probe so slow the latency cap would be 0 still yields >= 1
+    assert!(throughput_block(1_000_000, 100, usize::MAX, 1.0, 1e-6) >= 1);
+    // and never exceeds the column count
+    let b = throughput_block(10, 4, usize::MAX, f64::MAX / 2.0, 1e6);
+    assert!(b <= 4, "b = {b}");
+}
