@@ -1,0 +1,141 @@
+#!/usr/bin/env python3
+"""Fold BENCH_*.json artifacts into per-entry time series and flag drift.
+
+CI uploads one ``BENCH_<host>.json`` per perf-smoke run (see
+``bench/README.md``). Download a stack of those artifacts into a
+directory tree and point this script at it to get, per ``(host, entry)``
+pair, the ordered series of scalar-normalized throughput (``rel``; the
+absolute ``cells_per_sec`` is the fallback for entries without a ratio)
+and a drift verdict: the latest value against the median of the prior
+runs.
+
+Stdlib only — no third-party imports — so it runs anywhere CI's python3
+does. Non-gating by default (always exits 0 unless ``--strict``): the
+hard perf gate stays ``bulkmi bench --baseline``; this is the trend
+companion that shows slow regressions creeping under the gate's
+tolerance.
+
+Usage:
+    python3 bench/trend.py DIR [DIR ...] [--threshold 0.15]
+                           [--csv OUT.csv] [--strict]
+
+Runs are ordered by file modification time, which artifact downloads
+preserve per run directory; identical mtimes fall back to path order.
+"""
+
+import argparse
+import glob
+import json
+import os
+import statistics
+import sys
+
+
+def find_runs(dirs):
+    """Collect parsed BENCH_*.json docs, oldest first."""
+    runs = []
+    for d in dirs:
+        pattern = os.path.join(d, "**", "BENCH_*.json")
+        for path in sorted(glob.glob(pattern, recursive=True)):
+            try:
+                with open(path, encoding="utf-8") as f:
+                    doc = json.load(f)
+            except (OSError, json.JSONDecodeError) as e:
+                print(f"warn: skipping {path}: {e}", file=sys.stderr)
+                continue
+            runs.append(
+                {
+                    "path": path,
+                    "mtime": os.path.getmtime(path),
+                    "host": doc.get("host", "?"),
+                    "results": doc.get("results", []),
+                }
+            )
+    runs.sort(key=lambda r: (r["mtime"], r["path"]))
+    return runs
+
+
+def build_series(runs):
+    """{(host, entry name, unit): [(path, metric), ...]} in run order.
+
+    The unit is part of the key so a series never mixes scalar-relative
+    ratios (~1.0) with absolute cells/sec (~1e9) — an entry that gains
+    or loses its scalar reference across runs starts a separate series
+    instead of producing a nonsense median.
+    """
+    series = {}
+    for run in runs:
+        for entry in run["results"]:
+            name = entry.get("name", "?")
+            rel = entry.get("rel")
+            cps = entry.get("cells_per_sec")
+            metric = rel if rel is not None else cps
+            if metric is None or metric <= 0:
+                continue  # probe-style entries carry no throughput
+            unit = "rel" if rel is not None else "cells/s"
+            key = (run["host"], name, unit)
+            series.setdefault(key, []).append((run["path"], metric))
+    return series
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("dirs", nargs="+", help="directories holding BENCH_*.json artifacts")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.15,
+        help="flag when the latest value is this fraction below the prior median",
+    )
+    ap.add_argument("--csv", help="also write the full series as CSV")
+    ap.add_argument(
+        "--strict",
+        action="store_true",
+        help="exit 1 when anything drifted (default: report only)",
+    )
+    args = ap.parse_args(argv)
+
+    runs = find_runs(args.dirs)
+    if not runs:
+        print("no BENCH_*.json artifacts found — nothing to trend")
+        return 0
+    print(f"{len(runs)} bench run(s) across {len(args.dirs)} dir(s)\n")
+
+    series = build_series(runs)
+    flagged = []
+    rows = []
+    for (host, name, unit), points in sorted(series.items()):
+        vals = [m for (_, m) in points]
+        latest = vals[-1]
+        line = f"{host:<30} {name:<30} n={len(vals):<3} latest={latest:.4g} {unit}"
+        prior = vals[:-1]
+        if prior:
+            base = statistics.median(prior)
+            drift = latest / base - 1.0 if base > 0 else 0.0
+            line += f" median={base:.4g} drift={drift:+.1%}"
+            if drift < -args.threshold:
+                flagged.append((host, name, drift))
+                line += "  << DRIFT"
+        print(line)
+        for i, (path, metric) in enumerate(points):
+            rows.append((host, name, i, metric, unit, path))
+
+    if args.csv:
+        with open(args.csv, "w", encoding="utf-8") as f:
+            f.write("host,entry,run_index,metric,unit,path\n")
+            for host, name, i, metric, unit, path in rows:
+                f.write(f"{host},{name},{i},{metric:.6g},{unit},{path}\n")
+        print(f"\nwrote {len(rows)} series points to {args.csv}")
+
+    if flagged:
+        print(f"\n{len(flagged)} entr{'y' if len(flagged) == 1 else 'ies'} drifted "
+              f"more than {args.threshold:.0%} below their prior median:")
+        for host, name, drift in flagged:
+            print(f"  {host} / {name}: {drift:+.1%}")
+        return 1 if args.strict else 0
+    print("\nno drift beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,7 +1,7 @@
 //! Command-line interface (own arg parser — no `clap` offline).
 //!
-//! Subcommands: `generate`, `compute`, `info`, `selftest`, `serve`.
-//! Run `bulkmi help` for usage.
+//! Subcommands: `generate`, `pack`, `compute`, `analyze`, `info`,
+//! `selftest`, `serve`, `bench`. Run `bulkmi help` for usage.
 
 pub mod args;
 pub mod benchcmd;
@@ -20,18 +20,28 @@ COMMANDS:
     generate    Generate a synthetic binary dataset
         --rows N --cols M [--sparsity S=0.9] [--seed K=0]
         [--plant A:B:NOISE ...] --out FILE.{csv,bmat}
+        (.bmat output is the v2 column-major packed format, which
+        compute/serve stream blockwise without loading the dataset)
+    pack        Convert CSV / .bmat v1 to the streaming .bmat v2 format
+        --input FILE.{csv,bmat} --out FILE.bmat [--chunk-rows N=8192]
+        converts one row chunk at a time — the dataset is never
+        materialized, so inputs of any size pack in bounded memory
     compute     Compute MI (or any measure) for a dataset
         --input FILE.{csv,bmat} [--backend NAME=bulk-bitpack]
         [--measure mi|nmi|vi|gstat|chi2|phi|jaccard|ochiai]
         [--workers N] [--block-cols B=0] [--memory-budget BYTES=0]
+        [--task-latency SECS=2] [--top K=10]
         [--sink dense|topk:K|topk-per-col:K|threshold:T|pvalue:P|spill:DIR]
-        [--top K=10] [--normalize min|max|mean|joint] [--out FILE.csv]
+        [--normalize min|max|mean|joint] [--out FILE.csv]
         [--config FILE.toml]
         non-dense sinks run matrix-free: memory stays O(block^2) no
-        matter how many columns the dataset has; --backend auto
-        micro-probes the native substrates and commits to the fastest;
-        every measure rides the same single Gram (sinks rank/threshold
-        in the measure's units; pvalue: composes with mi and gstat only)
+        matter how many columns the dataset has; a .bmat v2 input
+        additionally streams the *input* side — column blocks are
+        seek-read off disk, so a run never holds more than
+        task_bytes(n, b) of the dataset; --backend auto micro-probes
+        the native substrates and commits to the fastest; every
+        measure rides the same single Gram (sinks rank/threshold in
+        the measure's units; pvalue: composes with mi and gstat only)
     analyze     MI with statistical post-processing + edge-list export
         --input FILE [--backend NAME] [--top K=10]
         [--bias-correction miller-madow] [--permutations P=0]
@@ -40,10 +50,14 @@ COMMANDS:
         [--artifacts DIR]
     selftest    Cross-check every available backend on random data
         [--rows N=500] [--cols M=40] [--with-xla]
-    serve       Run the job service on a stream of generated jobs (demo)
+    serve       Run the job service on a stream of jobs
         [--workers N] [--max-queued Q=4] [--jobs J=8] [--block-cols B]
         [--backend NAME=bulk-bitpack] [--measure NAME=mi]
         [--sink dense|topk:K|topk-per-col:K|threshold:T|pvalue:P|spill:DIR]
+        [--input FILE.{csv,bmat}]
+        with --input every job runs over that file (a .bmat v2 file is
+        streamed blockwise off disk); without it, demo datasets are
+        generated per job
     bench       Deterministic Gram/kernel perf suite (alias: pallas-bench)
         [--quick] [--seed K=42] [--reps R] [--out FILE.json]
         [--baseline FILE.json] [--tolerance F=0.30] [--measure NAME ...]
@@ -93,6 +107,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
     let rest = &argv[1..];
     match cmd.as_str() {
         "generate" => commands::generate(rest),
+        "pack" => commands::pack(rest),
         "compute" => commands::compute(rest),
         "analyze" => commands::analyze(rest),
         "info" => commands::info(rest),

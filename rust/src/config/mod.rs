@@ -115,6 +115,10 @@ pub struct RunConfig {
     pub block_cols: usize,
     /// Memory budget in bytes for the planner (0 = unlimited).
     pub memory_budget: usize,
+    /// Per-task Gram latency target (seconds) for probe-throughput
+    /// block sizing (`--task-latency`; see
+    /// [`crate::coordinator::planner::throughput_block`]).
+    pub task_latency_secs: f64,
     /// Artifact directory override (None = default discovery).
     pub artifacts_dir: Option<String>,
 }
@@ -127,6 +131,7 @@ impl Default for RunConfig {
             workers: crate::util::threadpool::default_workers(),
             block_cols: 0,
             memory_budget: 0,
+            task_latency_secs: crate::coordinator::planner::DEFAULT_TASK_LATENCY_SECS,
             artifacts_dir: None,
         }
     }
@@ -141,7 +146,7 @@ impl RunConfig {
             if let Some(name) = key.strip_prefix("run.") {
                 match name {
                     "backend" | "measure" | "workers" | "block_cols" | "memory_budget"
-                    | "artifacts_dir" => {}
+                    | "task_latency_secs" | "artifacts_dir" => {}
                     other => {
                         return Err(Error::Config(format!("unknown key run.{other}")));
                     }
@@ -164,6 +169,14 @@ impl RunConfig {
         }
         if let Some(m) = raw.get_usize("run.memory_budget")? {
             cfg.memory_budget = m;
+        }
+        if let Some(t) = raw.get_f64("run.task_latency_secs")? {
+            if !t.is_finite() || t <= 0.0 {
+                return Err(Error::Config(format!(
+                    "run.task_latency_secs must be a positive number, got {t}"
+                )));
+            }
+            cfg.task_latency_secs = t;
         }
         if let Some(d) = raw.get("run.artifacts_dir") {
             cfg.artifacts_dir = Some(d.to_string());
@@ -236,6 +249,22 @@ mod tests {
         assert_eq!(RunConfig::from_raw(&raw).unwrap().measure, CombineKind::Jaccard);
         let bad = RawConfig::parse("[run]\nmeasure = \"pearson\"\n").unwrap();
         assert!(RunConfig::from_raw(&bad).is_err());
+    }
+
+    #[test]
+    fn task_latency_parses_and_validates() {
+        let raw = RawConfig::parse("[run]\ntask_latency_secs = 0.5\n").unwrap();
+        assert_eq!(RunConfig::from_raw(&raw).unwrap().task_latency_secs, 0.5);
+        let default = RawConfig::parse("[run]\nworkers = 1\n").unwrap();
+        assert_eq!(
+            RunConfig::from_raw(&default).unwrap().task_latency_secs,
+            crate::coordinator::planner::DEFAULT_TASK_LATENCY_SECS
+        );
+        for bad in ["0", "-1.5", "nan"] {
+            let raw =
+                RawConfig::parse(&format!("[run]\ntask_latency_secs = {bad}\n")).unwrap();
+            assert!(RunConfig::from_raw(&raw).is_err(), "{bad} must be rejected");
+        }
     }
 
     #[test]

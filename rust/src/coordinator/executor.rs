@@ -13,10 +13,10 @@
 
 use super::planner::{plan_blocks, BlockPlan, BlockTask};
 use super::progress::Progress;
+use crate::data::colstore::{ColumnSource, InMemorySource};
 use crate::data::dataset::BinaryDataset;
-use crate::linalg::bitmat::BitMatrix;
 use crate::linalg::csr::CsrMatrix;
-use crate::linalg::dense::{Mat32, Mat64};
+use crate::linalg::dense::Mat64;
 use crate::mi::measure::{combine_block, CombineKind};
 use crate::mi::sink::{DenseSink, MiSink, SinkData};
 use crate::mi::xla::XlaMi;
@@ -43,39 +43,28 @@ pub enum NativeKind {
     Sparse,
 }
 
-/// Gram provider over the in-process substrates. Owns exactly one
-/// substrate (bit-packed, CSR, or dense f32), built once up front so
-/// per-task block extraction is cheap — no dataset clone, no repeated
-/// format conversion.
-pub struct NativeProvider {
+/// Gram provider over the in-process substrates, fed block by block
+/// from a [`ColumnSource`]. Nothing is converted up front: each task
+/// fetches its two bit-packed column blocks from the source and builds
+/// the substrate (bit-packed, CSR, or dense f32) for just those
+/// columns, so peak memory per task is the task's own working set —
+/// `task_bytes(n, b)` — no matter how large the source is. With an
+/// [`InMemorySource`] the fetch is a column-range memcpy (the
+/// historical whole-dataset cost profile); with a
+/// [`crate::data::colstore::PackedFileSource`] it is one contiguous
+/// seek-read, which is what makes the input side out-of-core.
+pub struct NativeProvider<'a> {
     kind: NativeKind,
-    bit: Option<BitMatrix>,
-    csr: Option<CsrMatrix>,
-    dense: Option<Mat32>,
+    src: &'a dyn ColumnSource,
 }
 
-impl NativeProvider {
-    pub fn new(ds: &BinaryDataset, kind: NativeKind) -> Self {
-        let bit = matches!(kind, NativeKind::Bitpack).then(|| ds.to_bitmatrix());
-        let csr = matches!(kind, NativeKind::Sparse).then(|| ds.to_csr());
-        let dense = matches!(kind, NativeKind::Dense).then(|| ds.to_mat32());
-        NativeProvider { kind, bit, csr, dense }
+impl<'a> NativeProvider<'a> {
+    pub fn new(src: &'a dyn ColumnSource, kind: NativeKind) -> Self {
+        NativeProvider { kind, src }
     }
 }
 
-/// Copy columns `[start, start + len)` of a row-major matrix into a
-/// contiguous block (the dense substrate's per-task extraction).
-fn mat32_col_block(d: &Mat32, start: usize, len: usize) -> Mat32 {
-    let n = d.rows();
-    let mut out = Mat32::zeros(n, len);
-    for r in 0..n {
-        let src = &d.row(r)[start..start + len];
-        out.data_mut()[r * len..(r + 1) * len].copy_from_slice(src);
-    }
-    out
-}
-
-impl GramProvider for NativeProvider {
+impl GramProvider for NativeProvider<'_> {
     fn name(&self) -> &'static str {
         match self.kind {
             NativeKind::Bitpack => "native-bitpack",
@@ -85,41 +74,36 @@ impl GramProvider for NativeProvider {
     }
 
     fn block_gram(&self, t: &BlockTask) -> Result<Mat64> {
+        let a = self.src.col_block(t.a_start, t.a_len)?;
         match self.kind {
             NativeKind::Bitpack => {
-                let bit = self.bit.as_ref().expect("built in new");
-                let a = bit.col_block(t.a_start, t.a_len)?;
                 if t.is_diagonal() {
                     Ok(a.gram())
                 } else {
-                    let b = bit.col_block(t.b_start, t.b_len)?;
+                    let b = self.src.col_block(t.b_start, t.b_len)?;
                     a.gram_cross(&b)
                 }
             }
             NativeKind::Dense => {
-                let d = self.dense.as_ref().expect("built in new");
-                if t.a_start + t.a_len > d.cols() || t.b_start + t.b_len > d.cols() {
-                    return Err(Error::Shape(format!(
-                        "task {t:?} out of bounds for {} columns",
-                        d.cols()
-                    )));
-                }
-                let a = mat32_col_block(d, t.a_start, t.a_len);
+                let da = a.to_mat32();
                 if t.is_diagonal() {
-                    Ok(crate::linalg::blas::gram(&a))
+                    Ok(crate::linalg::blas::gram(&da))
                 } else {
-                    let b = mat32_col_block(d, t.b_start, t.b_len);
-                    crate::linalg::blas::gemm_at_b(&a, &b)
+                    let db = self.src.col_block(t.b_start, t.b_len)?.to_mat32();
+                    crate::linalg::blas::gemm_at_b(&da, &db)
                 }
             }
             NativeKind::Sparse => {
-                let csr = self.csr.as_ref().expect("built in new");
-                let a = csr.col_block(t.a_start, t.a_len)?;
+                // word-skipping CSR build: O(words + nnz) per block, so
+                // the sparse substrate's extraction cost stays
+                // proportional to its ones, as the old whole-CSR
+                // col_block was
+                let ca = CsrMatrix::from_bitmatrix(&a);
                 if t.is_diagonal() {
-                    Ok(a.gram())
+                    Ok(ca.gram())
                 } else {
-                    let b = csr.col_block(t.b_start, t.b_len)?;
-                    a.gram_cross(&b)
+                    let cb = CsrMatrix::from_bitmatrix(&self.src.col_block(t.b_start, t.b_len)?);
+                    ca.gram_cross(&cb)
                 }
             }
         }
@@ -209,21 +193,21 @@ impl GramProvider for XlaProvider {
 /// Respects cancellation through `progress`; the first provider or
 /// sink error aborts the remaining tasks and is returned.
 pub fn execute_plan_sink<P: GramProvider + Sync>(
-    ds: &BinaryDataset,
+    src: &dyn ColumnSource,
     plan: &BlockPlan,
     provider: &P,
     workers: usize,
     progress: &Progress,
     sink: &mut dyn MiSink,
 ) -> Result<()> {
-    execute_plan_sink_measure(ds, plan, provider, workers, progress, sink, CombineKind::Mi)
+    execute_plan_sink_measure(src, plan, provider, workers, progress, sink, CombineKind::Mi)
 }
 
 /// [`execute_plan_sink`] with an explicit combine measure: identical
 /// Gram work, only the element-wise combine differs. Sinks rank and
 /// threshold whatever values the measure produces.
 pub fn execute_plan_sink_measure<P: GramProvider + Sync>(
-    ds: &BinaryDataset,
+    src: &dyn ColumnSource,
     plan: &BlockPlan,
     provider: &P,
     workers: usize,
@@ -231,7 +215,7 @@ pub fn execute_plan_sink_measure<P: GramProvider + Sync>(
     sink: &mut dyn MiSink,
     measure: CombineKind,
 ) -> Result<()> {
-    let (n, colsums) = plan_inputs(ds, plan)?;
+    let (n, colsums) = plan_inputs(src, plan)?;
     let n_tasks = plan.tasks.len();
     let abort = AtomicBool::new(false);
     // Bounded channel: workers block when the collector falls behind,
@@ -291,25 +275,25 @@ pub fn execute_plan_sink_measure<P: GramProvider + Sync>(
 /// Serial variant of [`execute_plan_sink`] for providers that are not
 /// `Sync` (e.g. [`XlaProvider`]).
 pub fn execute_plan_sink_serial<P: GramProvider>(
-    ds: &BinaryDataset,
+    src: &dyn ColumnSource,
     plan: &BlockPlan,
     provider: &P,
     progress: &Progress,
     sink: &mut dyn MiSink,
 ) -> Result<()> {
-    execute_plan_sink_serial_measure(ds, plan, provider, progress, sink, CombineKind::Mi)
+    execute_plan_sink_serial_measure(src, plan, provider, progress, sink, CombineKind::Mi)
 }
 
 /// Serial variant of [`execute_plan_sink_measure`].
 pub fn execute_plan_sink_serial_measure<P: GramProvider>(
-    ds: &BinaryDataset,
+    src: &dyn ColumnSource,
     plan: &BlockPlan,
     provider: &P,
     progress: &Progress,
     sink: &mut dyn MiSink,
     measure: CombineKind,
 ) -> Result<()> {
-    let (n, colsums) = plan_inputs(ds, plan)?;
+    let (n, colsums) = plan_inputs(src, plan)?;
     for t in &plan.tasks {
         if progress.is_cancelled() {
             return Err(Error::Coordinator("job cancelled".into()));
@@ -324,19 +308,19 @@ pub fn execute_plan_sink_serial_measure<P: GramProvider>(
 /// Execute a plan into a full dense matrix (a [`DenseSink`] run) —
 /// the historical API, now a thin wrapper over the sink engine.
 pub fn execute_plan<P: GramProvider + Sync>(
-    ds: &BinaryDataset,
+    src: &dyn ColumnSource,
     plan: &BlockPlan,
     provider: &P,
     workers: usize,
     progress: &Progress,
 ) -> Result<MiMatrix> {
-    execute_plan_measure(ds, plan, provider, workers, progress, CombineKind::Mi)
+    execute_plan_measure(src, plan, provider, workers, progress, CombineKind::Mi)
 }
 
 /// Dense-matrix execution with an explicit combine measure (the matrix
 /// then holds that measure's values instead of MI bits).
 pub fn execute_plan_measure<P: GramProvider + Sync>(
-    ds: &BinaryDataset,
+    src: &dyn ColumnSource,
     plan: &BlockPlan,
     provider: &P,
     workers: usize,
@@ -344,19 +328,19 @@ pub fn execute_plan_measure<P: GramProvider + Sync>(
     measure: CombineKind,
 ) -> Result<MiMatrix> {
     let mut sink = DenseSink::new(plan.m);
-    execute_plan_sink_measure(ds, plan, provider, workers, progress, &mut sink, measure)?;
+    execute_plan_sink_measure(src, plan, provider, workers, progress, &mut sink, measure)?;
     dense_result(&mut sink)
 }
 
 /// Serial dense-matrix execution (for providers that are not `Sync`).
 pub fn execute_plan_serial<P: GramProvider>(
-    ds: &BinaryDataset,
+    src: &dyn ColumnSource,
     plan: &BlockPlan,
     provider: &P,
     progress: &Progress,
 ) -> Result<MiMatrix> {
     let mut sink = DenseSink::new(plan.m);
-    execute_plan_sink_serial(ds, plan, provider, progress, &mut sink)?;
+    execute_plan_sink_serial(src, plan, provider, progress, &mut sink)?;
     dense_result(&mut sink)
 }
 
@@ -382,9 +366,11 @@ pub fn compute_native_measure(
     // triangle's uneven task sizes; block 0 = monolithic single task
     let block = if workers <= 1 { 0 } else { m.div_ceil(workers * 4).max(1) };
     let plan = plan_blocks(m, block)?;
-    let provider = NativeProvider::new(ds, kind);
+    // one up-front pack; block fetches are then column-range memcpys
+    let src = InMemorySource::new(ds);
+    let provider = NativeProvider::new(&src, kind);
     let progress = Progress::new(plan.tasks.len());
-    execute_plan_measure(ds, &plan, &provider, workers, &progress, measure)
+    execute_plan_measure(&src, &plan, &provider, workers, &progress, measure)
 }
 
 fn dense_result(sink: &mut DenseSink) -> Result<MiMatrix> {
@@ -397,17 +383,24 @@ fn dense_result(sink: &mut DenseSink) -> Result<MiMatrix> {
     }
 }
 
-/// Shared validation + sufficient statistics for a plan execution.
-fn plan_inputs(ds: &BinaryDataset, plan: &BlockPlan) -> Result<(f64, Vec<f64>)> {
-    if ds.n_cols() != plan.m {
+/// Shared validation + sufficient statistics for a plan execution. The
+/// column sums are fetched through the source in plan-block-sized
+/// chunks, so even this pass never holds more than one block of
+/// columns.
+fn plan_inputs(src: &dyn ColumnSource, plan: &BlockPlan) -> Result<(f64, Vec<f64>)> {
+    if src.n_cols() != plan.m {
         return Err(Error::Shape(format!(
-            "plan is over {} columns but dataset has {}",
+            "plan is over {} columns but the source has {}",
             plan.m,
-            ds.n_cols()
+            src.n_cols()
         )));
     }
-    let n = ds.n_rows() as f64;
-    let colsums = ds.col_counts().iter().map(|&v| v as f64).collect();
+    let n = src.n_rows() as f64;
+    let colsums = src
+        .all_col_counts(plan.block)?
+        .iter()
+        .map(|&v| v as f64)
+        .collect();
     Ok((n, colsums))
 }
 

@@ -158,7 +158,11 @@ pub fn throughput_block(
     target_secs: f64,
 ) -> usize {
     let mem_cap = matrix_free_block(n, m, budget);
-    if !cell_rows_per_sec.is_finite() || cell_rows_per_sec <= 0.0 || target_secs <= 0.0 {
+    if !cell_rows_per_sec.is_finite()
+        || cell_rows_per_sec <= 0.0
+        || !target_secs.is_finite()
+        || target_secs <= 0.0
+    {
         return mem_cap;
     }
     let cell_rows = cell_rows_per_sec * target_secs / n.max(1) as f64;
@@ -168,17 +172,20 @@ pub fn throughput_block(
 
 /// The block-width policy shared by the job service and the CLI sink
 /// path: an explicit caller width always wins, then a probed
-/// throughput (via [`throughput_block`] under
-/// [`DEFAULT_TASK_LATENCY_SECS`]), then the caller's `fallback` rule —
-/// the service's monolithic plan, or the CLI's memory-budget rule.
-/// Returns the width together with its `BlockSizing::source` tag
-/// (`"explicit"` / `"probe-throughput"` / the fallback's own tag).
+/// throughput (via [`throughput_block`] under the caller's
+/// `target_secs` latency target — `--task-latency` /
+/// `run.task_latency_secs`, default [`DEFAULT_TASK_LATENCY_SECS`]),
+/// then the caller's `fallback` rule — the service's monolithic plan,
+/// or the CLI's memory-budget rule. Returns the width together with
+/// its `BlockSizing::source` tag (`"explicit"` / `"probe-throughput"`
+/// / the fallback's own tag).
 pub fn block_policy(
     explicit_cols: usize,
     probe_cell_rows_per_sec: Option<f64>,
     n: usize,
     m: usize,
     budget: usize,
+    target_secs: f64,
     fallback: (usize, &'static str),
 ) -> (usize, &'static str) {
     if explicit_cols > 0 {
@@ -186,7 +193,7 @@ pub fn block_policy(
     }
     if let Some(tput) = probe_cell_rows_per_sec {
         return (
-            throughput_block(n, m, budget, tput, DEFAULT_TASK_LATENCY_SECS),
+            throughput_block(n, m, budget, tput, target_secs),
             "probe-throughput",
         );
     }
@@ -309,17 +316,30 @@ mod tests {
 
     #[test]
     fn block_policy_precedence() {
+        let t = DEFAULT_TASK_LATENCY_SECS;
         // explicit width wins over everything
         assert_eq!(
-            block_policy(7, Some(1e9), 1000, 100, 0, (3, "budget")),
+            block_policy(7, Some(1e9), 1000, 100, 0, t, (3, "budget")),
             (7, "explicit")
         );
         // probed throughput next
-        let (b, src) = block_policy(0, Some(1e9), 1000, 100, 0, (3, "budget"));
+        let (b, src) = block_policy(0, Some(1e9), 1000, 100, 0, t, (3, "budget"));
         assert_eq!(src, "probe-throughput");
-        assert_eq!(b, throughput_block(1000, 100, 0, 1e9, DEFAULT_TASK_LATENCY_SECS));
+        assert_eq!(b, throughput_block(1000, 100, 0, 1e9, t));
         // the caller's fallback last
-        assert_eq!(block_policy(0, None, 1000, 100, 0, (3, "budget")), (3, "budget"));
+        assert_eq!(block_policy(0, None, 1000, 100, 0, t, (3, "budget")), (3, "budget"));
+    }
+
+    #[test]
+    fn block_policy_honors_the_latency_target() {
+        // a longer target affords blocks at least as large
+        let (short, _) = block_policy(0, Some(1e8), 10_000, 5_000, 0, 0.5, (1, "budget"));
+        let (long, _) = block_policy(0, Some(1e8), 10_000, 5_000, 0, 8.0, (1, "budget"));
+        assert!(long >= short, "long {long} < short {short}");
+        // a degenerate target falls back to the memory rule
+        let (b, src) = block_policy(0, Some(1e8), 10_000, 5_000, 0, 0.0, (1, "budget"));
+        assert_eq!(src, "probe-throughput");
+        assert_eq!(b, matrix_free_block(10_000, 5_000, 0));
     }
 
     #[test]

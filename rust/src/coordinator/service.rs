@@ -5,9 +5,12 @@
 
 use super::backpressure::Semaphore;
 use super::executor::{execute_plan_sink_measure, NativeProvider};
-use super::planner::{block_policy, plan_blocks, BlockPlan};
+use super::planner::{
+    block_policy, matrix_free_block, plan_blocks, BlockPlan, DEFAULT_TASK_LATENCY_SECS,
+};
 use super::progress::Progress;
 use super::scheduler::{order_tasks, Schedule};
+use crate::data::colstore::{ColumnSource, InMemorySource};
 use crate::data::dataset::BinaryDataset;
 use crate::metrics::Metrics;
 use crate::mi::autotune::ProbeReport;
@@ -69,6 +72,12 @@ pub struct JobSpec {
     /// Gram blocks (MI by default; see [`crate::mi::measure`]). Sinks
     /// rank and threshold in the measure's own units.
     pub measure: CombineKind,
+    /// Per-task Gram latency target (seconds) for probe-throughput
+    /// block sizing
+    /// ([`crate::coordinator::planner::throughput_block`]); recorded in
+    /// the output's `BlockSizing`. Default
+    /// [`DEFAULT_TASK_LATENCY_SECS`].
+    pub task_latency_secs: f64,
 }
 
 impl Default for JobSpec {
@@ -80,6 +89,7 @@ impl Default for JobSpec {
             schedule: Schedule::LargestFirst,
             sink: SinkSpec::Dense,
             measure: CombineKind::Mi,
+            task_latency_secs: DEFAULT_TASK_LATENCY_SECS,
         }
     }
 }
@@ -96,21 +106,36 @@ struct JobEntry {
 /// The returned [`BlockSizing`] is recorded in the job's
 /// [`crate::mi::sink::SinkMeta`].
 fn plan_for_job(
-    ds: &BinaryDataset,
+    src: &dyn ColumnSource,
     spec: &JobSpec,
     probe: Option<&ProbeReport>,
 ) -> Result<(BlockPlan, BlockSizing)> {
-    let m = ds.n_cols();
+    let (n_rows, m) = (src.n_rows(), src.n_cols());
+    // In-memory sources keep the historical monolithic fallback (block
+    // 0 = single-task plan). An out-of-core source must never plan
+    // monolithically — that one task's col_block(0, m) fetch would
+    // materialize the whole source — so its fallback is the bounded
+    // matrix-free memory rule instead.
+    let fallback = if src.out_of_core() {
+        (matrix_free_block(n_rows, m, 0), "budget")
+    } else {
+        (0, "monolithic")
+    };
     let (block, source) = block_policy(
         spec.block_cols,
         probe.map(ProbeReport::chosen_throughput),
-        ds.n_rows(),
+        n_rows,
         m,
         0,
-        (0, "monolithic"), // block 0 = the historical single-task plan
+        spec.task_latency_secs,
+        fallback,
     );
     let plan = plan_blocks(m, block)?;
-    Ok((plan, BlockSizing { block_cols: plan.block, source }))
+    Ok((plan, BlockSizing {
+        block_cols: plan.block,
+        source,
+        task_latency_secs: spec.task_latency_secs,
+    }))
 }
 
 /// The service. Dropping it drains in-flight jobs.
@@ -152,9 +177,22 @@ impl JobService {
         &self.metrics
     }
 
-    /// Submit a job; fails fast with `Error::Coordinator` when the
-    /// admission queue is full (callers should retry with backoff).
+    /// Submit a job over an in-memory dataset; fails fast with
+    /// `Error::Coordinator` when the admission queue is full (callers
+    /// should retry with backoff). Packs the dataset once into an
+    /// [`InMemorySource`] and delegates to [`Self::submit_source`].
     pub fn submit(&self, ds: BinaryDataset, spec: JobSpec) -> Result<JobHandle> {
+        self.submit_source(Arc::new(InMemorySource::new(&ds)), spec)
+    }
+
+    /// Submit a job over any [`ColumnSource`] — the streaming-input
+    /// path: a [`crate::data::colstore::PackedFileSource`] job reads
+    /// column blocks straight off disk, so the service's peak RAM per
+    /// job is the plan's task working set plus sink state, independent
+    /// of the dataset's size. Admission control, planning, autotuning
+    /// (through block fetches) and sink handling are identical to
+    /// [`Self::submit`].
+    pub fn submit_source(&self, src: Arc<dyn ColumnSource>, spec: JobSpec) -> Result<JobHandle> {
         if !spec.backend.is_native() {
             return Err(Error::Coordinator(format!(
                 "job backend must be native, not '{}'",
@@ -171,7 +209,7 @@ impl JobService {
                 self.admission.capacity()
             )));
         };
-        if ds.n_cols() == 0 {
+        if src.n_cols() == 0 {
             return Err(Error::Shape("cannot plan over zero columns".into()));
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -197,15 +235,15 @@ impl JobService {
                     return;
                 }
                 jobs.lock().unwrap().get_mut(&id).unwrap().status = JobStatus::Running(0.0);
-                let result = spec.backend.resolve(&ds).and_then(|(resolved, probe)| {
-                    let (mut plan, sizing) = plan_for_job(&ds, &spec, probe.as_ref())?;
+                let result = spec.backend.resolve_source(&*src).and_then(|(resolved, probe)| {
+                    let (mut plan, sizing) = plan_for_job(&*src, &spec, probe.as_ref())?;
                     order_tasks(&mut plan.tasks, spec.schedule);
                     progress.set_total(plan.tasks.len());
-                    let provider = NativeProvider::new(&ds, resolved.native_kind());
-                    let mut sink = spec.sink.build_for(ds.n_cols(), ds.n_rows(), spec.measure)?;
+                    let provider = NativeProvider::new(&*src, resolved.native_kind());
+                    let mut sink = spec.sink.build_for(src.n_cols(), src.n_rows(), spec.measure)?;
                     metrics.time("job_secs", || {
                         execute_plan_sink_measure(
-                            &ds,
+                            &*src,
                             &plan,
                             &provider,
                             spec.inner_workers,
@@ -402,7 +440,11 @@ mod tests {
         let JobStatus::Done(out) = svc.wait(h).unwrap() else { panic!() };
         assert_eq!(
             out.meta.sizing,
-            Some(BlockSizing { block_cols: 4, source: "explicit" })
+            Some(BlockSizing {
+                block_cols: 4,
+                source: "explicit",
+                task_latency_secs: DEFAULT_TASK_LATENCY_SECS,
+            })
         );
 
         // fixed backend without a block size: the historical monolithic plan
@@ -419,8 +461,61 @@ mod tests {
         let JobStatus::Done(out) = svc.wait(h).unwrap() else { panic!() };
         let sizing = out.meta.sizing.expect("sizing recorded");
         assert_eq!(sizing.source, "probe-throughput");
+        assert_eq!(sizing.task_latency_secs, DEFAULT_TASK_LATENCY_SECS);
         assert!(sizing.block_cols >= 1 && sizing.block_cols <= 16);
         assert!(out.meta.probe.is_some(), "auto jobs carry the probe report");
+    }
+
+    #[test]
+    fn submit_source_matches_submit() {
+        let svc = JobService::new(2, 4);
+        let ds = SynthSpec::new(250, 14).sparsity(0.7).seed(41).plant(1, 9, 0.03).generate();
+        let want = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+        let src: Arc<dyn ColumnSource> = Arc::new(InMemorySource::new(&ds));
+        let spec = JobSpec { block_cols: 5, ..Default::default() };
+        let h = svc.submit_source(Arc::clone(&src), spec).unwrap();
+        let JobStatus::Done(out) = svc.wait(h).unwrap() else { panic!() };
+        let got = out.into_dense().unwrap();
+        assert_eq!(got.max_abs_diff(&want), 0.0, "source job == in-memory job");
+    }
+
+    #[test]
+    fn packed_source_job_never_plans_monolithically() {
+        use crate::data::colstore::PackedFileSource;
+        use crate::data::io;
+        let svc = JobService::new(1, 2);
+        let ds = SynthSpec::new(180, 11).sparsity(0.7).seed(47).generate();
+        let want = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+        let path =
+            std::env::temp_dir().join(format!("bulkmi-svc-ooc-{}.bmat", std::process::id()));
+        io::write_bmat_v2(&ds, &path).unwrap();
+        let src: Arc<dyn ColumnSource> = Arc::new(PackedFileSource::open(&path).unwrap());
+        // default spec (fixed backend, no block size): the fallback for
+        // an out-of-core source must be the bounded budget rule — a
+        // monolithic plan would fetch the whole file in one col_block
+        let h = svc.submit_source(src, JobSpec::default()).unwrap();
+        let JobStatus::Done(out) = svc.wait(h).unwrap() else { panic!() };
+        let sizing = out.meta.sizing.clone().expect("sizing recorded");
+        assert_eq!(sizing.source, "budget");
+        let got = out.into_dense().unwrap();
+        assert_eq!(got.max_abs_diff(&want), 0.0, "streamed job == in-memory result");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn custom_task_latency_recorded() {
+        let svc = JobService::new(1, 2);
+        let ds = SynthSpec::new(200, 12).sparsity(0.8).seed(43).generate();
+        let spec = JobSpec {
+            backend: Backend::Auto,
+            task_latency_secs: 0.25,
+            ..Default::default()
+        };
+        let h = svc.submit(ds, spec).unwrap();
+        let JobStatus::Done(out) = svc.wait(h).unwrap() else { panic!() };
+        let sizing = out.meta.sizing.expect("sizing recorded");
+        assert_eq!(sizing.task_latency_secs, 0.25);
+        assert_eq!(sizing.source, "probe-throughput");
     }
 
     #[test]

@@ -1,13 +1,48 @@
-//! Dataset IO: CSV (with optional header) and `.bmat`, a compact binary
-//! format (magic + dims + bit-packed payload) for large panels.
+//! Dataset IO: CSV (with optional header) and the `.bmat` binary
+//! format, in two versions:
+//!
+//! * **v1** — row-major bit stream, 8 cells per byte. Compact, but a
+//!   column block read has to touch every row's bytes, so it only ever
+//!   loads whole datasets.
+//! * **v2** — **column-major** bit-packed 64-bit words, one
+//!   `⌈n_rows/64⌉`-word run per column (exactly the
+//!   [`crate::linalg::bitmat::BitMatrix`] layout). 8x smaller than the
+//!   one-byte-per-cell in-memory form, and a column block is one
+//!   contiguous byte range — which is what lets
+//!   [`crate::data::colstore::PackedFileSource`] stream blocks straight
+//!   off disk without materializing the dataset.
+//!
+//! v2 layout (all integers little-endian):
+//!
+//! ```text
+//! magic      8 B   b"BULKMI\x02\0"
+//! n_rows     8 B   u64
+//! n_cols     8 B   u64
+//! names_len  8 B   u64 — 0 when the columns are unnamed
+//! names      names_len B of UTF-8, the n_cols names '\n'-joined
+//! payload    n_cols x ⌈n_rows/64⌉ x 8 B — column-major packed words,
+//!            bit r%64 of word r/64 in column c's run = cell (r, c)
+//! ```
+//!
+//! [`pack`] converts CSV / v1 to v2 one row chunk at a time (seek-writes
+//! into each column's word run), so the conversion itself never holds
+//! more than a chunk of rows; [`write_bmat_v2`] is the in-memory
+//! convenience writer over the same code path.
 
+use super::colstore::PackedFileSource;
 use super::dataset::BinaryDataset;
 use crate::util::error::{Error, Result};
-use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::io::{BufRead, BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
-/// Magic bytes for the .bmat format, version 1.
+/// Magic bytes for the .bmat format, version 1 (row-major bits).
 const BMAT_MAGIC: &[u8; 8] = b"BULKMI\x01\0";
+/// Magic bytes for the .bmat format, version 2 (column-major words).
+const BMAT2_MAGIC: &[u8; 8] = b"BULKMI\x02\0";
+
+/// Rows per chunk for the streaming [`pack`] conversion (a multiple of
+/// 64 so chunk boundaries never straddle a packed word).
+pub const PACK_CHUNK_ROWS: usize = 8192;
 
 /// Write CSV. `header` controls whether column names are emitted.
 pub fn write_csv(ds: &BinaryDataset, path: &Path, header: bool) -> Result<()> {
@@ -81,7 +116,9 @@ pub fn read_csv(path: &Path) -> Result<BinaryDataset> {
     }
 }
 
-/// Write the compact bit-packed `.bmat` format.
+/// Write the row-major bit-packed `.bmat` **v1** format (kept for
+/// interchange with older tooling; new datasets should use
+/// [`write_bmat_v2`], which column blocks can be streamed from).
 ///
 /// Layout: magic(8) | n_rows(u64 LE) | n_cols(u64 LE) | payload where the
 /// payload packs cells row-major, 8 cells per byte, LSB first.
@@ -102,23 +139,39 @@ pub fn write_bmat(ds: &BinaryDataset, path: &Path) -> Result<()> {
     Ok(())
 }
 
-/// Read `.bmat`.
+/// Read `.bmat`, either version (the magic selects the decoder).
+///
+/// The v1 payload length is validated against `n_rows x n_cols`
+/// (checked multiply; truncated files and trailing bytes are clean
+/// [`Error::Parse`]s, never a short read into a wrong-shaped dataset).
 pub fn read_bmat(path: &Path) -> Result<BinaryDataset> {
     let mut f = std::fs::File::open(path)?;
     let mut magic = [0u8; 8];
     f.read_exact(&mut magic)?;
+    if &magic == BMAT2_MAGIC {
+        drop(f);
+        return PackedFileSource::open(path)?.to_dataset();
+    }
     if &magic != BMAT_MAGIC {
         return Err(Error::Parse("not a .bmat file (bad magic)".into()));
     }
     let mut dims = [0u8; 16];
     f.read_exact(&mut dims)?;
-    let n_rows = u64::from_le_bytes(dims[..8].try_into().unwrap()) as usize;
-    let n_cols = u64::from_le_bytes(dims[8..].try_into().unwrap()) as usize;
+    let n_rows = u64::from_le_bytes(dims[..8].try_into().expect("8 bytes")) as usize;
+    let n_cols = u64::from_le_bytes(dims[8..].try_into().expect("8 bytes")) as usize;
     let total = n_rows
         .checked_mul(n_cols)
         .ok_or_else(|| Error::Parse("dimension overflow".into()))?;
-    let mut packed = vec![0u8; total.div_ceil(8)];
-    f.read_exact(&mut packed)?;
+    let want = total.div_ceil(8);
+    let mut packed = Vec::new();
+    f.read_to_end(&mut packed)?;
+    if packed.len() != want {
+        return Err(Error::Parse(format!(
+            "v1 payload is {} bytes but {n_rows}x{n_cols} needs {want} \
+             (truncated or trailing bytes)",
+            packed.len()
+        )));
+    }
     let mut data = vec![0u8; total];
     for (i, cell) in data.iter_mut().enumerate() {
         *cell = (packed[i / 8] >> (i % 8)) & 1;
@@ -126,7 +179,454 @@ pub fn read_bmat(path: &Path) -> Result<BinaryDataset> {
     BinaryDataset::new(n_rows, n_cols, data)
 }
 
-/// Load by extension: `.csv` or `.bmat`.
+/// Does `path` look like a `.bmat` v2 file (extension + magic)? Used by
+/// the CLI to pick the streaming input path; `Ok(false)` for anything
+/// the ordinary in-memory loaders should handle (including files too
+/// short to carry a magic — the loader reports those properly).
+pub fn is_bmat_v2(path: &Path) -> Result<bool> {
+    if path.extension().and_then(|e| e.to_str()) != Some("bmat") {
+        return Ok(false);
+    }
+    let mut f = std::fs::File::open(path)?;
+    let mut magic = [0u8; 8];
+    match f.read_exact(&mut magic) {
+        Ok(()) => Ok(&magic == BMAT2_MAGIC),
+        Err(_) => Ok(false),
+    }
+}
+
+/// Parsed v2 header (everything before the packed payload).
+pub(crate) struct Bmat2Header {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    pub names: Option<Vec<String>>,
+    /// Absolute byte offset of the packed payload.
+    pub payload_off: u64,
+}
+
+/// Read and validate a v2 header from the start of `f`.
+pub(crate) fn read_bmat2_header(f: &mut std::fs::File, path: &Path) -> Result<Bmat2Header> {
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != BMAT2_MAGIC {
+        return Err(Error::Parse(format!(
+            "{} is not a .bmat v2 file (convert with `bulkmi pack`)",
+            path.display()
+        )));
+    }
+    let mut head = [0u8; 24];
+    f.read_exact(&mut head)?;
+    let n_rows = usize::try_from(u64::from_le_bytes(head[..8].try_into().expect("8 bytes")))
+        .map_err(|_| Error::Parse("v2 header: n_rows overflows usize".into()))?;
+    let n_cols = usize::try_from(u64::from_le_bytes(head[8..16].try_into().expect("8 bytes")))
+        .map_err(|_| Error::Parse("v2 header: n_cols overflows usize".into()))?;
+    let names_len = u64::from_le_bytes(head[16..24].try_into().expect("8 bytes"));
+    let names = if names_len == 0 {
+        None
+    } else {
+        // guard the allocation against a corrupt header: the name blob
+        // cannot be larger than the file it came from
+        if names_len > f.metadata()?.len() {
+            return Err(Error::Parse(format!(
+                "v2 header: names length {names_len} exceeds the file size"
+            )));
+        }
+        let len = usize::try_from(names_len)
+            .map_err(|_| Error::Parse("v2 header: names length overflows usize".into()))?;
+        let mut blob = vec![0u8; len];
+        f.read_exact(&mut blob)?;
+        let text = String::from_utf8(blob)
+            .map_err(|_| Error::Parse("v2 header: column names are not UTF-8".into()))?;
+        let ns: Vec<String> = text.split('\n').map(str::to_string).collect();
+        if ns.len() != n_cols {
+            return Err(Error::Parse(format!(
+                "v2 header: {} names for {n_cols} columns",
+                ns.len()
+            )));
+        }
+        Some(ns)
+    };
+    Ok(Bmat2Header { n_rows, n_cols, names, payload_off: 32 + names_len })
+}
+
+/// Incremental v2 writer: fixes the dimensions up front, then accepts
+/// row chunks and seek-writes each chunk's words into every column's
+/// run. Every chunk except the last must be a multiple of 64 rows so
+/// no packed word straddles two chunks.
+struct Bmat2Writer {
+    f: std::fs::File,
+    payload_off: u64,
+    words_per_col: usize,
+    n_rows: usize,
+    n_cols: usize,
+    next_row: usize,
+    colbuf: Vec<u64>,
+}
+
+impl Bmat2Writer {
+    fn create(
+        path: &Path,
+        n_rows: usize,
+        n_cols: usize,
+        names: Option<&[String]>,
+    ) -> Result<Self> {
+        if let Some(ns) = names {
+            if ns.len() != n_cols {
+                return Err(Error::Shape(format!(
+                    "{} names for {n_cols} columns",
+                    ns.len()
+                )));
+            }
+            if ns.iter().any(|n| n.contains('\n')) {
+                return Err(Error::Parse(
+                    "column names must not contain newlines (.bmat v2 stores them \
+                     '\\n'-joined)"
+                        .into(),
+                ));
+            }
+        }
+        let words_per_col = n_rows.div_ceil(64);
+        let payload_words = words_per_col
+            .checked_mul(n_cols)
+            .ok_or_else(|| Error::Parse(format!("{n_rows}x{n_cols} overflows")))?;
+        let name_blob = match names {
+            Some(ns) if !ns.is_empty() => ns.join("\n"),
+            _ => String::new(),
+        };
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(BMAT2_MAGIC)?;
+        f.write_all(&(n_rows as u64).to_le_bytes())?;
+        f.write_all(&(n_cols as u64).to_le_bytes())?;
+        f.write_all(&(name_blob.len() as u64).to_le_bytes())?;
+        f.write_all(name_blob.as_bytes())?;
+        let payload_off = 32 + name_blob.len() as u64;
+        f.set_len(payload_off + payload_words as u64 * 8)?;
+        Ok(Bmat2Writer {
+            f,
+            payload_off,
+            words_per_col,
+            n_rows,
+            n_cols,
+            next_row: 0,
+            colbuf: Vec::new(),
+        })
+    }
+
+    /// Append `k` rows given as row-major 0/1 bytes (any nonzero byte
+    /// counts as a one).
+    fn push_rows(&mut self, rows: &[u8], k: usize) -> Result<()> {
+        if rows.len() != k * self.n_cols {
+            return Err(Error::Shape(format!(
+                "chunk buffer has {} bytes, {k} rows x {} cols needs {}",
+                rows.len(),
+                self.n_cols,
+                k * self.n_cols
+            )));
+        }
+        if self.next_row % 64 != 0 {
+            return Err(Error::Shape(
+                "only the final chunk may have a non-multiple-of-64 row count".into(),
+            ));
+        }
+        if self.next_row + k > self.n_rows {
+            return Err(Error::Shape(format!(
+                "chunk overruns the declared {} rows",
+                self.n_rows
+            )));
+        }
+        let kw = k.div_ceil(64);
+        self.colbuf.clear();
+        self.colbuf.resize(self.n_cols * kw, 0);
+        for r in 0..k {
+            let row = &rows[r * self.n_cols..(r + 1) * self.n_cols];
+            let (word, bit) = (r / 64, r % 64);
+            for (c, &v) in row.iter().enumerate() {
+                if v != 0 {
+                    self.colbuf[c * kw + word] |= 1u64 << bit;
+                }
+            }
+        }
+        let word0 = (self.next_row / 64) as u64;
+        let mut bytes = Vec::with_capacity(kw * 8);
+        for c in 0..self.n_cols {
+            bytes.clear();
+            for w in &self.colbuf[c * kw..(c + 1) * kw] {
+                bytes.extend_from_slice(&w.to_le_bytes());
+            }
+            let off = self.payload_off + (c as u64 * self.words_per_col as u64 + word0) * 8;
+            self.f.seek(SeekFrom::Start(off))?;
+            self.f.write_all(&bytes)?;
+        }
+        self.next_row += k;
+        Ok(())
+    }
+
+    /// Verify every declared row arrived and return the total file size.
+    fn finish(mut self) -> Result<u64> {
+        if self.next_row != self.n_rows {
+            return Err(Error::Shape(format!(
+                "wrote {} of {} declared rows",
+                self.next_row, self.n_rows
+            )));
+        }
+        self.f.flush()?;
+        Ok(self.payload_off + (self.words_per_col * self.n_cols) as u64 * 8)
+    }
+}
+
+/// Write the column-major bit-packed `.bmat` **v2** format (the
+/// streaming-readable layout — see the module docs for the byte
+/// layout). Column names, when present, are stored in the header.
+pub fn write_bmat_v2(ds: &BinaryDataset, path: &Path) -> Result<()> {
+    let mut w = Bmat2Writer::create(path, ds.n_rows(), ds.n_cols(), ds.names())?;
+    let mut start = 0;
+    while start < ds.n_rows() {
+        let k = PACK_CHUNK_ROWS.min(ds.n_rows() - start);
+        let rows = &ds.bytes()[start * ds.n_cols()..(start + k) * ds.n_cols()];
+        w.push_rows(rows, k)?;
+        start += k;
+    }
+    w.finish()?;
+    Ok(())
+}
+
+/// What [`pack`] produced.
+#[derive(Clone, Copy, Debug)]
+pub struct PackStats {
+    pub n_rows: usize,
+    pub n_cols: usize,
+    /// Input file size in bytes.
+    pub in_bytes: u64,
+    /// Output (v2) file size in bytes.
+    pub out_bytes: u64,
+}
+
+/// Convert a CSV or `.bmat` v1 dataset to `.bmat` v2, streaming one
+/// `chunk_rows` row chunk at a time — the dataset is **never**
+/// materialized, so arbitrarily large inputs convert in bounded memory
+/// (one chunk of cells plus one chunk of packed words).
+///
+/// `chunk_rows` is rounded up to a multiple of 64 (packed-word
+/// alignment); pass [`PACK_CHUNK_ROWS`] when in doubt.
+pub fn pack(input: &Path, out: &Path, chunk_rows: usize) -> Result<PackStats> {
+    let chunk_rows = chunk_rows.max(1).div_ceil(64) * 64;
+    // refuse in-place conversion: creating the output truncates the
+    // inode the input read fd points at, destroying the dataset
+    // (canonicalize on `out` only succeeds when it already exists —
+    // and a non-existent output cannot be the input)
+    if let (Ok(ci), Ok(co)) = (input.canonicalize(), out.canonicalize()) {
+        if ci == co {
+            return Err(Error::Parse(
+                "pack: --out must differ from --input (in-place conversion would \
+                 destroy the input)"
+                    .into(),
+            ));
+        }
+    }
+    let in_bytes = std::fs::metadata(input)?.len();
+    let (n_rows, n_cols, out_bytes) = match input.extension().and_then(|e| e.to_str()) {
+        Some("csv") => pack_csv(input, out, chunk_rows)?,
+        Some("bmat") => pack_bmat_v1(input, out, chunk_rows)?,
+        other => {
+            return Err(Error::Parse(format!(
+                "pack: unsupported input extension {other:?} (expected .csv or .bmat)"
+            )))
+        }
+    };
+    Ok(PackStats { n_rows, n_cols, in_bytes, out_bytes })
+}
+
+/// Remove a partially-written v2 output after a mid-conversion error: a
+/// header-valid, zero-payload stub must not be left for `compute` to
+/// load silently. Only called once the writer has created the file —
+/// errors *before* creation (bad input, corrupt header) must not
+/// delete whatever the caller's `--out` path already held.
+fn cleanup_partial<T>(out: &Path, result: Result<T>) -> Result<T> {
+    if result.is_err() {
+        let _ = std::fs::remove_file(out);
+    }
+    result
+}
+
+/// Pass 1 of the CSV pack: dimensions + header names, no cell storage.
+fn scan_csv(path: &Path) -> Result<(usize, usize, Option<Vec<String>>)> {
+    let reader = BufReader::new(std::fs::File::open(path)?);
+    let mut names: Option<Vec<String>> = None;
+    let mut n_cols = 0usize;
+    let mut n_rows = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(|s| s.trim()).collect();
+        if lineno == 0 && fields.iter().any(|f| f.parse::<u8>().is_err()) {
+            names = Some(fields.iter().map(|s| s.to_string()).collect());
+            n_cols = fields.len();
+            continue;
+        }
+        if n_cols == 0 {
+            n_cols = fields.len();
+        }
+        n_rows += 1;
+    }
+    Ok((n_rows, n_cols, names))
+}
+
+fn pack_csv(input: &Path, out: &Path, chunk_rows: usize) -> Result<(usize, usize, u64)> {
+    let (n_rows, n_cols, names) = scan_csv(input)?;
+    let w = Bmat2Writer::create(out, n_rows, n_cols, names.as_deref())?;
+    cleanup_partial(out, fill_from_csv(w, input, chunk_rows, names.is_some()))
+}
+
+fn fill_from_csv(
+    mut w: Bmat2Writer,
+    input: &Path,
+    chunk_rows: usize,
+    has_header: bool,
+) -> Result<(usize, usize, u64)> {
+    let (n_rows, n_cols) = (w.n_rows, w.n_cols);
+    let reader = BufReader::new(std::fs::File::open(input)?);
+    let mut buf: Vec<u8> = Vec::with_capacity(chunk_rows.min(n_rows.max(1)) * n_cols);
+    let mut buffered = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() {
+            continue;
+        }
+        if lineno == 0 && has_header {
+            continue; // header consumed in pass 1
+        }
+        let mut count = 0usize;
+        for f in t.split(',') {
+            match f.trim() {
+                "0" => buf.push(0),
+                "1" => buf.push(1),
+                other => {
+                    return Err(Error::Parse(format!(
+                        "line {}: non-binary value '{other}'",
+                        lineno + 1
+                    )))
+                }
+            }
+            count += 1;
+        }
+        if count != n_cols {
+            return Err(Error::Parse(format!(
+                "line {}: {count} fields, expected {n_cols}",
+                lineno + 1
+            )));
+        }
+        buffered += 1;
+        if buffered == chunk_rows {
+            w.push_rows(&buf, buffered)?;
+            buf.clear();
+            buffered = 0;
+        }
+    }
+    if buffered > 0 {
+        w.push_rows(&buf, buffered)?;
+    }
+    let out_bytes = w.finish()?;
+    Ok((n_rows, n_cols, out_bytes))
+}
+
+fn pack_bmat_v1(input: &Path, out: &Path, chunk_rows: usize) -> Result<(usize, usize, u64)> {
+    let mut f = std::fs::File::open(input)?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic == BMAT2_MAGIC {
+        return Err(Error::Parse("pack: input is already a .bmat v2 file".into()));
+    }
+    if &magic != BMAT_MAGIC {
+        return Err(Error::Parse("pack: not a .bmat file (bad magic)".into()));
+    }
+    let mut dims = [0u8; 16];
+    f.read_exact(&mut dims)?;
+    let n_rows = u64::from_le_bytes(dims[..8].try_into().expect("8 bytes")) as usize;
+    let n_cols = u64::from_le_bytes(dims[8..].try_into().expect("8 bytes")) as usize;
+    let total = n_rows
+        .checked_mul(n_cols)
+        .ok_or_else(|| Error::Parse("dimension overflow".into()))?;
+    // validate the header against the input's actual size *before*
+    // creating (and pre-sizing) the output: a corrupt header must not
+    // provoke a huge set_len, and no stub file should be left behind
+    let want_payload = total.div_ceil(8) as u64;
+    let expect_file = want_payload
+        .checked_add(24)
+        .ok_or_else(|| Error::Parse("dimension overflow".into()))?;
+    let actual_file = f.metadata()?.len();
+    if actual_file != expect_file {
+        return Err(Error::Parse(format!(
+            "v1 payload is {} bytes but {n_rows}x{n_cols} needs {want_payload} \
+             (truncated or trailing bytes)",
+            actual_file.saturating_sub(24)
+        )));
+    }
+    let w = Bmat2Writer::create(out, n_rows, n_cols, None)?;
+    cleanup_partial(out, fill_from_v1(w, f, chunk_rows, total))
+}
+
+/// Stream the v1 row-major bit payload into a v2 writer: rows do not
+/// align to byte boundaries, so walk a global cell cursor across
+/// fixed-size reads. `f` is positioned just past the v1 header.
+fn fill_from_v1(
+    mut w: Bmat2Writer,
+    f: std::fs::File,
+    chunk_rows: usize,
+    total: usize,
+) -> Result<(usize, usize, u64)> {
+    let (n_rows, n_cols) = (w.n_rows, w.n_cols);
+    let chunk_cells = chunk_rows * n_cols.max(1);
+    let mut chunk: Vec<u8> = Vec::with_capacity(chunk_cells.min(total.max(1)));
+    let mut reader = BufReader::new(f);
+    let mut io_buf = vec![0u8; 64 * 1024];
+    let mut cells = 0usize;
+    let mut payload_bytes = 0usize;
+    loop {
+        let got = reader.read(&mut io_buf)?;
+        if got == 0 {
+            break;
+        }
+        payload_bytes += got;
+        for &b in &io_buf[..got] {
+            for bit in 0..8 {
+                if cells >= total {
+                    break; // padding bits of the final byte
+                }
+                chunk.push((b >> bit) & 1);
+                cells += 1;
+                if chunk.len() == chunk_cells {
+                    w.push_rows(&chunk, chunk_rows)?;
+                    chunk.clear();
+                }
+            }
+        }
+    }
+    let want = total.div_ceil(8);
+    if payload_bytes != want {
+        return Err(Error::Parse(format!(
+            "v1 payload is {payload_bytes} bytes but {n_rows}x{n_cols} needs {want} \
+             (truncated or trailing bytes)"
+        )));
+    }
+    if n_cols == 0 {
+        // zero-column datasets carry no cells; declare the rows directly
+        w.push_rows(&[], n_rows)?;
+    } else if !chunk.is_empty() {
+        let k = chunk.len() / n_cols;
+        w.push_rows(&chunk, k)?;
+    }
+    let out_bytes = w.finish()?;
+    Ok((n_rows, n_cols, out_bytes))
+}
+
+/// Load a whole dataset into memory by extension: `.csv` or `.bmat`
+/// (either version). For out-of-core runs over v2 files, open a
+/// [`PackedFileSource`] instead — it streams blocks without this
+/// function's full materialization.
 pub fn load(path: &Path) -> Result<BinaryDataset> {
     match path.extension().and_then(|e| e.to_str()) {
         Some("csv") => read_csv(path),
@@ -138,6 +638,7 @@ pub fn load(path: &Path) -> Result<BinaryDataset> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::colstore::ColumnSource;
     use crate::data::synth::SynthSpec;
 
     fn tmpdir() -> std::path::PathBuf {
@@ -196,6 +697,177 @@ mod tests {
     }
 
     #[test]
+    fn bmat_v1_payload_length_is_validated() {
+        let ds = SynthSpec::new(50, 9).sparsity(0.5).seed(4).generate();
+        let path = tmpdir().join("len.bmat");
+        write_bmat(&ds, &path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // truncated payload
+        std::fs::write(&path, &good[..good.len() - 1]).unwrap();
+        let err = read_bmat(&path).unwrap_err();
+        assert!(matches!(err, Error::Parse(_)), "truncated: {err}");
+
+        // trailing bytes
+        let mut long = good.clone();
+        long.push(0);
+        std::fs::write(&path, &long).unwrap();
+        let err = read_bmat(&path).unwrap_err();
+        assert!(matches!(err, Error::Parse(_)), "trailing: {err}");
+
+        // absurd dimensions overflow the checked multiply
+        let mut evil = good;
+        evil[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        evil[16..24].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &evil).unwrap();
+        let err = read_bmat(&path).unwrap_err();
+        assert!(matches!(err, Error::Parse(_)), "overflow: {err}");
+    }
+
+    #[test]
+    fn bmat_v2_round_trip_with_names() {
+        let ds = SynthSpec::new(131, 9)
+            .sparsity(0.7)
+            .seed(5)
+            .generate()
+            .with_names((0..9).map(|c| format!("m{c}")).collect())
+            .unwrap();
+        let path = tmpdir().join("v2.bmat");
+        write_bmat_v2(&ds, &path).unwrap();
+        assert!(is_bmat_v2(&path).unwrap());
+        let back = read_bmat(&path).unwrap();
+        assert_eq!(back.bytes(), ds.bytes());
+        assert_eq!(back.names().unwrap(), ds.names().unwrap());
+        // v1 files are not v2
+        let v1 = tmpdir().join("v1notv2.bmat");
+        write_bmat(&ds, &v1).unwrap();
+        assert!(!is_bmat_v2(&v1).unwrap());
+    }
+
+    #[test]
+    fn bmat_v2_validates_file_length() {
+        let ds = SynthSpec::new(70, 5).sparsity(0.5).seed(6).generate();
+        let path = tmpdir().join("v2len.bmat");
+        write_bmat_v2(&ds, &path).unwrap();
+        let good = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &good[..good.len() - 8]).unwrap();
+        assert!(read_bmat(&path).is_err(), "truncated v2 must not load");
+        let mut long = good;
+        long.push(7);
+        std::fs::write(&path, &long).unwrap();
+        assert!(read_bmat(&path).is_err(), "trailing v2 bytes must not load");
+    }
+
+    #[test]
+    fn pack_csv_to_v2_streams() {
+        let ds = SynthSpec::new(300, 17)
+            .sparsity(0.8)
+            .seed(7)
+            .generate()
+            .with_names((0..17).map(|c| format!("w{c}")).collect())
+            .unwrap();
+        let csv = tmpdir().join("p.csv");
+        let v2 = tmpdir().join("p.bmat");
+        write_csv(&ds, &csv, true).unwrap();
+        // a tiny chunk size forces many chunk flushes (rounded to 64)
+        let stats = pack(&csv, &v2, 1).unwrap();
+        assert_eq!((stats.n_rows, stats.n_cols), (300, 17));
+        assert!(stats.out_bytes > 0 && stats.in_bytes > 0);
+        let back = read_bmat(&v2).unwrap();
+        assert_eq!(back.bytes(), ds.bytes());
+        assert_eq!(back.names().unwrap(), ds.names().unwrap());
+    }
+
+    #[test]
+    fn pack_v1_to_v2_streams() {
+        // 13 cols: rows do not align to v1 byte boundaries
+        let ds = SynthSpec::new(257, 13).sparsity(0.6).seed(8).generate();
+        let v1 = tmpdir().join("q1.bmat");
+        let v2 = tmpdir().join("q2.bmat");
+        write_bmat(&ds, &v1).unwrap();
+        let stats = pack(&v1, &v2, 64).unwrap();
+        assert_eq!((stats.n_rows, stats.n_cols), (257, 13));
+        let back = read_bmat(&v2).unwrap();
+        assert_eq!(back.bytes(), ds.bytes());
+        // packing an already-v2 file is a clean error
+        assert!(pack(&v2, &tmpdir().join("q3.bmat"), 64).is_err());
+        // unsupported extensions are rejected
+        assert!(pack(&tmpdir().join("nope.xyz"), &v2, 64).is_err());
+        // in-place conversion is refused and leaves the input intact
+        assert!(pack(&v1, &v1, 64).is_err());
+        assert_eq!(read_bmat(&v1).unwrap().bytes(), ds.bytes(), "input untouched");
+    }
+
+    #[test]
+    fn failed_csv_pack_leaves_no_output_stub() {
+        let dir = tmpdir();
+        let csv = dir.join("badcell.csv");
+        std::fs::write(&csv, "0,1\n1,2\n").unwrap(); // non-binary '2'
+        let out = dir.join("badcell.bmat");
+        assert!(pack(&csv, &out, 64).is_err());
+        assert!(!out.exists(), "failed pack must remove its partial output");
+        // short row past line 1 likewise
+        std::fs::write(&csv, "0,1\n1\n").unwrap();
+        assert!(pack(&csv, &out, 64).is_err());
+        assert!(!out.exists());
+    }
+
+    #[test]
+    fn pack_rejects_corrupt_v1_header_without_touching_output() {
+        let ds = SynthSpec::new(40, 8).sparsity(0.5).seed(10).generate();
+        let v1 = tmpdir().join("corrupt.bmat");
+        write_bmat(&ds, &v1).unwrap();
+        let mut bytes = std::fs::read(&v1).unwrap();
+        // absurd n_rows: the header now implies a gigabyte payload
+        bytes[8..16].copy_from_slice(&(1u64 << 30).to_le_bytes());
+        std::fs::write(&v1, &bytes).unwrap();
+        let out = tmpdir().join("corrupt-out.bmat");
+        assert!(pack(&v1, &out, 64).is_err());
+        assert!(!out.exists(), "corrupt header must not leave an output stub behind");
+    }
+
+    #[test]
+    fn pack_empty_and_tiny_edges() {
+        let dir = tmpdir();
+        // 0 rows, 3 named columns
+        let ds = BinaryDataset::new(0, 3, vec![])
+            .unwrap()
+            .with_names(vec!["a".into(), "b".into(), "c".into()])
+            .unwrap();
+        let csv = dir.join("e0.csv");
+        let v2 = dir.join("e0.bmat");
+        write_csv(&ds, &csv, true).unwrap();
+        let stats = pack(&csv, &v2, 64).unwrap();
+        assert_eq!((stats.n_rows, stats.n_cols), (0, 3));
+        let back = read_bmat(&v2).unwrap();
+        assert_eq!((back.n_rows(), back.n_cols()), (0, 3));
+        assert_eq!(back.names().unwrap(), ds.names().unwrap());
+
+        // 0 columns via direct v2 write
+        let none = BinaryDataset::new(4, 0, vec![]).unwrap();
+        let v2z = dir.join("e1.bmat");
+        write_bmat_v2(&none, &v2z).unwrap();
+        let back = read_bmat(&v2z).unwrap();
+        assert_eq!((back.n_rows(), back.n_cols()), (4, 0));
+
+        // 1x1
+        let one = BinaryDataset::new(1, 1, vec![1]).unwrap();
+        let v2o = dir.join("e2.bmat");
+        write_bmat_v2(&one, &v2o).unwrap();
+        let back = read_bmat(&v2o).unwrap();
+        assert_eq!(back.bytes(), &[1]);
+    }
+
+    #[test]
+    fn v2_col_counts_match_dataset() {
+        let ds = SynthSpec::new(200, 21).sparsity(0.85).seed(9).generate();
+        let path = tmpdir().join("cnt.bmat");
+        write_bmat_v2(&ds, &path).unwrap();
+        let src = PackedFileSource::open(&path).unwrap();
+        assert_eq!(src.all_col_counts(5).unwrap(), ds.col_counts());
+    }
+
+    #[test]
     fn load_dispatches_on_extension() {
         let ds = SynthSpec::new(4, 4).seed(4).generate();
         let dir = tmpdir();
@@ -205,6 +877,9 @@ mod tests {
         write_bmat(&ds, &b).unwrap();
         assert_eq!(load(&c).unwrap().bytes(), ds.bytes());
         assert_eq!(load(&b).unwrap().bytes(), ds.bytes());
+        let b2 = dir.join("d2.bmat");
+        write_bmat_v2(&ds, &b2).unwrap();
+        assert_eq!(load(&b2).unwrap().bytes(), ds.bytes());
         assert!(load(&dir.join("d.xyz")).is_err());
     }
 }

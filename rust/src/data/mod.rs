@@ -1,12 +1,17 @@
-//! Datasets: the in-memory binary dataset type, synthetic workload
-//! generators matching the paper's experimental setup (sparsity-controlled
+//! Datasets: the in-memory binary dataset type, the [`colstore`]
+//! column-source abstraction that streams bit-packed column blocks from
+//! memory or disk (out-of-core input), synthetic workload generators
+//! matching the paper's experimental setup (sparsity-controlled
 //! Bernoulli data) and the application domains its introduction motivates
 //! (genomics marker panels, text bag-of-words, network adjacency), plus
-//! CSV / `.bmat` IO.
+//! CSV / `.bmat` (v1 row-major bits, v2 column-major packed words) IO.
 
+pub mod colstore;
 pub mod dataset;
 pub mod genomics;
 pub mod graph;
 pub mod io;
 pub mod synth;
 pub mod text;
+
+pub use colstore::{ColumnSource, InMemorySource, PackedFileSource};

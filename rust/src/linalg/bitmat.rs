@@ -11,7 +11,7 @@
 //! process. Every kernel is bit-identical, so the choice never changes
 //! a result.
 
-use super::dense::Mat64;
+use super::dense::{Mat32, Mat64};
 use super::kernels::{self, Kernel};
 use crate::util::error::{Error, Result};
 
@@ -51,12 +51,82 @@ impl BitMatrix {
         Ok(BitMatrix { rows, cols, words_per_col, data })
     }
 
+    /// Construct directly from column-major packed words — `cols`
+    /// columns of `rows.div_ceil(64)` words each, bit `r % 64` of word
+    /// `r / 64` holding row `r`. This is the `.bmat` v2 on-disk payload
+    /// layout, so a [`crate::data::colstore::ColumnSource`] block read
+    /// becomes a straight copy with **no unpack/repack round trip**.
+    /// Bits at row positions `>= rows` in each column's last word are
+    /// masked off so the popcount invariants hold even for payloads
+    /// written by other tools.
+    pub fn from_packed_cols(rows: usize, cols: usize, mut data: Vec<u64>) -> Result<Self> {
+        let words_per_col = rows.div_ceil(64);
+        let want = words_per_col
+            .checked_mul(cols)
+            .ok_or_else(|| Error::Shape(format!("packed shape {rows}x{cols} overflows")))?;
+        if data.len() != want {
+            return Err(Error::Shape(format!(
+                "packed buffer has {} words, {rows}x{cols} needs {want}",
+                data.len()
+            )));
+        }
+        let tail_bits = rows % 64;
+        if tail_bits != 0 {
+            let mask = (1u64 << tail_bits) - 1;
+            for c in 0..cols {
+                data[(c + 1) * words_per_col - 1] &= mask;
+            }
+        }
+        Ok(BitMatrix { rows, cols, words_per_col, data })
+    }
+
     pub fn rows(&self) -> usize {
         self.rows
     }
 
     pub fn cols(&self) -> usize {
         self.cols
+    }
+
+    /// Packed words per column (`rows.div_ceil(64)`).
+    pub fn words_per_col(&self) -> usize {
+        self.words_per_col
+    }
+
+    /// All packed words, column-major ([`Self::words_per_col`] words
+    /// per column) — the `.bmat` v2 payload layout, verbatim.
+    pub fn words(&self) -> &[u64] {
+        &self.data
+    }
+
+    /// Unpack to row-major 0/1 bytes (the `BinaryDataset` cell layout).
+    pub fn to_row_major_bytes(&self) -> Vec<u8> {
+        let mut out = vec![0u8; self.rows * self.cols];
+        for c in 0..self.cols {
+            let col = self.col(c);
+            for r in 0..self.rows {
+                if col[r / 64] >> (r % 64) & 1 == 1 {
+                    out[r * self.cols + c] = 1;
+                }
+            }
+        }
+        out
+    }
+
+    /// Unpack to a row-major dense f32 matrix (the BLAS substrate's
+    /// input layout; exact — every count fits f32).
+    pub fn to_mat32(&self) -> Mat32 {
+        let mut out = Mat32::zeros(self.rows, self.cols);
+        let data = out.data_mut();
+        for c in 0..self.cols {
+            let col = self.col(c);
+            for r in 0..self.rows {
+                if col[r / 64] >> (r % 64) & 1 == 1 {
+                    data[r * self.cols + c] = 1.0;
+                }
+            }
+        }
+        out
     }
 
     /// Packed words of one column.
@@ -329,6 +399,46 @@ mod tests {
             }
         }
         assert!(bm.col_block(8, 4).is_err());
+    }
+
+    #[test]
+    fn packed_cols_round_trip() {
+        let mut rng = Rng::new(11);
+        for &(n, m) in &[(1usize, 1usize), (63, 3), (64, 4), (65, 5), (200, 9)] {
+            let bytes = random_bytes(&mut rng, n, m, 0.4);
+            let bm = BitMatrix::from_row_major(n, m, &bytes).unwrap();
+            let back =
+                BitMatrix::from_packed_cols(n, m, bm.words().to_vec()).unwrap();
+            assert_eq!(back.words(), bm.words(), "n={n} m={m}");
+            assert_eq!(back.to_row_major_bytes(), bytes, "n={n} m={m}");
+        }
+    }
+
+    #[test]
+    fn packed_cols_masks_tail_bits_and_validates_length() {
+        // 65 rows -> 2 words per column; poison the tail word's high bits
+        let mut words = vec![0u64; 2];
+        words[1] = !0u64; // row 64 set, rows 65..127 are garbage
+        let bm = BitMatrix::from_packed_cols(65, 1, words).unwrap();
+        assert_eq!(bm.col_counts(), vec![1], "garbage past row 65 masked off");
+        assert!(bm.get(64, 0));
+        // wrong word count rejected
+        assert!(BitMatrix::from_packed_cols(65, 1, vec![0u64; 3]).is_err());
+        assert!(BitMatrix::from_packed_cols(64, 2, vec![0u64; 1]).is_err());
+    }
+
+    #[test]
+    fn to_mat32_matches_cells() {
+        let mut rng = Rng::new(12);
+        let (n, m) = (130, 7);
+        let bytes = random_bytes(&mut rng, n, m, 0.5);
+        let bm = BitMatrix::from_row_major(n, m, &bytes).unwrap();
+        let dense = bm.to_mat32();
+        for r in 0..n {
+            for c in 0..m {
+                assert_eq!(dense.get(r, c), bytes[r * m + c] as f32);
+            }
+        }
     }
 
     #[test]

@@ -45,6 +45,49 @@ impl CsrMatrix {
         Ok(CsrMatrix { rows, cols, indptr, indices })
     }
 
+    /// Build from a bit-packed column-major matrix without unpacking to
+    /// bytes: a word-skipping counting sort — one pass counts per-row
+    /// nonzeros, a second drops each one into its row's slot (columns
+    /// visited in ascending order, so rows come out sorted). Work is
+    /// `O(words + nnz)` rather than the `O(rows × cols)` byte scan of
+    /// [`Self::from_row_major`], which keeps the sparse substrate's
+    /// per-block construction proportional to the ones it stores — the
+    /// regime where the sparse backend wins in the first place.
+    pub fn from_bitmatrix(bits: &super::bitmat::BitMatrix) -> Self {
+        let (rows, cols) = (bits.rows(), bits.cols());
+        let mut row_nnz = vec![0usize; rows];
+        for c in 0..cols {
+            for (w, &word) in bits.col(c).iter().enumerate() {
+                let mut word = word;
+                while word != 0 {
+                    row_nnz[w * 64 + word.trailing_zeros() as usize] += 1;
+                    word &= word - 1;
+                }
+            }
+        }
+        let mut indptr = Vec::with_capacity(rows + 1);
+        indptr.push(0);
+        let mut total = 0usize;
+        for &k in &row_nnz {
+            total += k;
+            indptr.push(total);
+        }
+        let mut cursor = indptr.clone(); // next free slot per row
+        let mut indices = vec![0u32; total];
+        for c in 0..cols {
+            for (w, &word) in bits.col(c).iter().enumerate() {
+                let mut word = word;
+                while word != 0 {
+                    let r = w * 64 + word.trailing_zeros() as usize;
+                    indices[cursor[r]] = c as u32;
+                    cursor[r] += 1;
+                    word &= word - 1;
+                }
+            }
+        }
+        CsrMatrix { rows, cols, indptr, indices }
+    }
+
     pub fn rows(&self) -> usize {
         self.rows
     }
@@ -185,6 +228,29 @@ mod tests {
     #[test]
     fn rejects_bad_length() {
         assert!(CsrMatrix::from_row_major(2, 3, &[0u8; 5]).is_err());
+    }
+
+    #[test]
+    fn from_bitmatrix_matches_from_row_major() {
+        use crate::linalg::bitmat::BitMatrix;
+        let mut rng = Rng::new(21);
+        for &(n, m, d) in &[
+            (1usize, 1usize, 1.0f64),
+            (63, 5, 0.3),
+            (64, 4, 0.0),
+            (65, 7, 0.9),
+            (200, 13, 0.05),
+        ] {
+            let bytes = random_bytes(&mut rng, n, m, d);
+            let want = CsrMatrix::from_row_major(n, m, &bytes).unwrap();
+            let bits = BitMatrix::from_row_major(n, m, &bytes).unwrap();
+            let got = CsrMatrix::from_bitmatrix(&bits);
+            assert_eq!((got.rows(), got.cols()), (n, m), "n={n} m={m} d={d}");
+            assert_eq!(got.nnz(), want.nnz(), "n={n} m={m} d={d}");
+            for r in 0..n {
+                assert_eq!(got.row_indices(r), want.row_indices(r), "row {r}");
+            }
+        }
     }
 
     #[test]

@@ -3,12 +3,13 @@
 //! bit-packed extra), a parser for CLI/config use, and a uniform
 //! `compute_mi` entry point.
 
-use super::autotune::{autotune, ProbeReport};
+use super::autotune::{autotune, autotune_source, ProbeReport};
 use super::bulk_basic::measure_bulk_basic;
 use super::measure::{measure_pairwise, CombineKind};
 use super::xla::XlaMi;
 use super::MiMatrix;
 use crate::coordinator::executor::{compute_native_measure, NativeKind};
+use crate::data::colstore::ColumnSource;
 use crate::data::dataset::BinaryDataset;
 use crate::util::error::{Error, Result};
 
@@ -125,6 +126,21 @@ impl Backend {
         match self {
             Backend::Auto => {
                 let report = autotune(ds)?;
+                Ok((report.chosen, Some(report)))
+            }
+            fixed => Ok((fixed, None)),
+        }
+    }
+
+    /// [`Self::resolve`] over any [`ColumnSource`]: `Auto` probes
+    /// through block fetches ([`crate::mi::autotune::autotune_source`])
+    /// so streaming inputs resolve without materializing the dataset;
+    /// fixed backends resolve to themselves with no probe. Shares the
+    /// probe cache with [`Self::resolve`].
+    pub fn resolve_source(self, src: &dyn ColumnSource) -> Result<(Backend, Option<ProbeReport>)> {
+        match self {
+            Backend::Auto => {
+                let report = autotune_source(src)?;
                 Ok((report.chosen, Some(report)))
             }
             fixed => Ok((fixed, None)),

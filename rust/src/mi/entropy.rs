@@ -9,8 +9,16 @@ use crate::data::dataset::BinaryDataset;
 
 /// Marginal entropy H(X_c) in bits for every column.
 pub fn column_entropies(ds: &BinaryDataset) -> Vec<f64> {
-    let n = ds.n_rows() as f64;
-    ds.col_counts().iter().map(|&c| entropy_bits(c as f64 / n)).collect()
+    entropies_from_counts(&ds.col_counts(), ds.n_rows())
+}
+
+/// Marginal entropies from per-column ones counts — everything a
+/// streaming [`crate::data::colstore::ColumnSource`] can supply without
+/// materializing rows (a binary column's entropy is a function of its
+/// count alone).
+pub fn entropies_from_counts(counts: &[u64], n_rows: usize) -> Vec<f64> {
+    let n = n_rows as f64;
+    counts.iter().map(|&c| entropy_bits(c as f64 / n)).collect()
 }
 
 /// Joint entropy H(X_i, X_j) = H(X_i) + H(X_j) - MI(X_i, X_j).
@@ -34,7 +42,12 @@ pub enum Normalization {
 /// Normalized MI matrix; cells with a zero denominator (constant
 /// variables) are defined as 0.
 pub fn normalized_mi(ds: &BinaryDataset, mi: &MiMatrix, norm: Normalization) -> MiMatrix {
-    let h = column_entropies(ds);
+    normalized_mi_with(&column_entropies(ds), mi, norm)
+}
+
+/// [`normalized_mi`] from precomputed marginal entropies (the streaming
+/// input path derives them via [`entropies_from_counts`]).
+pub fn normalized_mi_with(h: &[f64], mi: &MiMatrix, norm: Normalization) -> MiMatrix {
     let m = mi.dim();
     let mut out = crate::linalg::dense::Mat64::zeros(m, m);
     for i in 0..m {
@@ -43,7 +56,7 @@ pub fn normalized_mi(ds: &BinaryDataset, mi: &MiMatrix, norm: Normalization) -> 
                 Normalization::Min => h[i].min(h[j]),
                 Normalization::Max => h[i].max(h[j]),
                 Normalization::Mean => 0.5 * (h[i] + h[j]),
-                Normalization::Joint => joint_entropy(&h, mi, i, j),
+                Normalization::Joint => joint_entropy(h, mi, i, j),
             };
             let v = if denom > 0.0 { (mi.get(i, j) / denom).clamp(0.0, 1.0) } else { 0.0 };
             out.set(i, j, v);

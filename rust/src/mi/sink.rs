@@ -154,7 +154,7 @@ pub struct SinkMeta {
 
 /// The planner's block-sizing decision for one run, recorded in
 /// [`SinkMeta`] so auto runs are auditable end to end.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct BlockSizing {
     /// Column-block width of the executed plan.
     pub block_cols: usize,
@@ -164,6 +164,11 @@ pub struct BlockSizing {
     /// (autotuner cells/sec folded into the latency target via
     /// [`crate::coordinator::planner::throughput_block`]).
     pub source: &'static str,
+    /// The per-task Gram latency target (seconds) the sizing ran under
+    /// (`--task-latency` / `run.task_latency_secs` /
+    /// `JobSpec::task_latency_secs`; only binding when `source` is
+    /// `"probe-throughput"`, recorded always so runs are comparable).
+    pub task_latency_secs: f64,
 }
 
 /// What a sink retained plus how the run was executed, returned by

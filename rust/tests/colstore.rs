@@ -1,0 +1,230 @@
+//! Column-source integration tests: format round trips (CSV → `pack` →
+//! `.bmat` v2 → block reads, bit for bit against the in-memory source),
+//! v1 backward compatibility, and the out-of-core acceptance run — a
+//! dataset whose `Vec<u8>` form exceeds the planner budget, streamed
+//! through a `PackedFileSource` and bit-identical to the in-memory run
+//! on every native backend including `auto`.
+
+use bulkmi::coordinator::executor::NativeKind;
+use bulkmi::coordinator::planner::{block_for_budget, plan_blocks, task_bytes};
+use bulkmi::coordinator::progress::Progress;
+use bulkmi::coordinator::{execute_plan_measure, execute_plan_sink, NativeProvider};
+use bulkmi::data::colstore::{ColumnSource, InMemorySource, PackedFileSource};
+use bulkmi::data::dataset::BinaryDataset;
+use bulkmi::data::io;
+use bulkmi::data::synth::SynthSpec;
+use bulkmi::mi::backend::{compute_mi, Backend};
+use bulkmi::mi::measure::CombineKind;
+use bulkmi::mi::sink::{SinkData, TopKSink};
+use bulkmi::mi::topk::top_k_pairs;
+use bulkmi::util::prop::{gen, prop_check, Config};
+use std::path::PathBuf;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bulkmi-colstore-it-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Assert two sources serve identical metadata and identical bits for a
+/// spread of block shapes (full width, unit columns, tails).
+fn assert_sources_equal(a: &dyn ColumnSource, b: &dyn ColumnSource, ctx: &str) {
+    assert_eq!(a.n_rows(), b.n_rows(), "{ctx}: n_rows");
+    assert_eq!(a.n_cols(), b.n_cols(), "{ctx}: n_cols");
+    assert_eq!(a.names(), b.names(), "{ctx}: names");
+    let m = a.n_cols();
+    let mut shapes = vec![(0usize, m)];
+    if m > 0 {
+        shapes.push((m - 1, 1)); // last column alone (tail)
+        shapes.push((0, 1));
+        shapes.push((m / 2, m - m / 2)); // tail-heavy block
+        if m >= 3 {
+            shapes.push((1, m - 2)); // interior block
+        }
+    }
+    for (start, len) in shapes {
+        let ba = a.col_block(start, len).unwrap();
+        let bb = b.col_block(start, len).unwrap();
+        assert_eq!(ba.words(), bb.words(), "{ctx}: block [{start}, {start}+{len})");
+        assert_eq!(
+            a.col_counts_block(start, len).unwrap(),
+            b.col_counts_block(start, len).unwrap(),
+            "{ctx}: counts [{start}, {start}+{len})"
+        );
+    }
+    assert_eq!(
+        a.all_col_counts(3).unwrap(),
+        b.all_col_counts(0).unwrap(),
+        "{ctx}: all counts (different chunkings)"
+    );
+    // out-of-range blocks rejected by both
+    assert!(a.col_block(m, 1).is_err(), "{ctx}");
+    assert!(b.col_block(m, 1).is_err(), "{ctx}");
+}
+
+/// CSV → `pack` → v2 → `ColumnSource::col_block` equals the in-memory
+/// source bit for bit, across random shapes (rows straddling word
+/// boundaries, tail columns) with and without column names.
+#[test]
+fn prop_csv_pack_v2_round_trips_bit_for_bit() {
+    prop_check(
+        "csv -> pack -> v2 == in-memory",
+        Config::with_cases(12),
+        |rng| {
+            let (n, m, bytes) = gen::binary_matrix(rng, 200, 20);
+            let named = gen::int_in(rng, 0, 1) == 1;
+            let chunk = gen::int_in(rng, 1, 130); // pack rounds up to 64
+            (n, m, bytes, named, chunk)
+        },
+        |(n, m, bytes, named, chunk)| {
+            let mut ds = BinaryDataset::new(*n, *m, bytes.clone()).map_err(|e| e.to_string())?;
+            if *named {
+                ds = ds
+                    .with_names((0..*m).map(|c| format!("var_{c}")).collect())
+                    .map_err(|e| e.to_string())?;
+            }
+            let csv = tmp(&format!("prop-{n}-{m}-{named}.csv"));
+            let v2 = tmp(&format!("prop-{n}-{m}-{named}.bmat"));
+            io::write_csv(&ds, &csv, *named).map_err(|e| e.to_string())?;
+            io::pack(&csv, &v2, *chunk).map_err(|e| e.to_string())?;
+            let packed = PackedFileSource::open(&v2).map_err(|e| e.to_string())?;
+            let mem = InMemorySource::new(&ds);
+            assert_sources_equal(&packed, &mem, &format!("n={n} m={m} named={named}"));
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn zero_row_and_zero_col_edges() {
+    // 0 rows, named columns
+    let ds = BinaryDataset::new(0, 4, vec![])
+        .unwrap()
+        .with_names((0..4).map(|c| format!("c{c}")).collect())
+        .unwrap();
+    let path = tmp("edge-0rows.bmat");
+    io::write_bmat_v2(&ds, &path).unwrap();
+    let packed = PackedFileSource::open(&path).unwrap();
+    assert_sources_equal(&packed, &InMemorySource::new(&ds), "0 rows");
+    assert_eq!(packed.col_block(0, 4).unwrap().rows(), 0);
+
+    // 0 columns
+    let none = BinaryDataset::new(7, 0, vec![]).unwrap();
+    let path = tmp("edge-0cols.bmat");
+    io::write_bmat_v2(&none, &path).unwrap();
+    let packed = PackedFileSource::open(&path).unwrap();
+    assert_sources_equal(&packed, &InMemorySource::new(&none), "0 cols");
+}
+
+/// v1 files still read back exactly (backward compatibility), and a v1
+/// → v2 `pack` serves the same bits.
+#[test]
+fn v1_backward_compat_reads_and_packs() {
+    let ds = SynthSpec::new(331, 19).sparsity(0.75).seed(77).generate();
+    let v1 = tmp("compat.bmat");
+    io::write_bmat(&ds, &v1).unwrap();
+    assert!(!io::is_bmat_v2(&v1).unwrap());
+    let back = io::load(&v1).unwrap();
+    assert_eq!(back.bytes(), ds.bytes(), "v1 load is unchanged");
+    let v2 = tmp("compat-v2.bmat");
+    io::pack(&v1, &v2, 64).unwrap();
+    let packed = PackedFileSource::open(&v2).unwrap();
+    assert_sources_equal(&packed, &InMemorySource::new(&ds), "v1 -> v2");
+}
+
+/// The acceptance criterion: a dataset whose one-byte-per-cell form
+/// exceeds the planner budget runs through `PackedFileSource` under
+/// that budget (block sizing keeps `task_bytes(n, b)` within it) and
+/// every native backend — and `auto` — produces results bit-identical
+/// to the in-memory run.
+#[test]
+fn out_of_core_run_bit_identical_on_every_backend() {
+    const BUDGET: usize = 256 << 10; // 256 KiB
+    let (n, m) = (20_000usize, 64usize);
+    let ds = SynthSpec::new(n, m).sparsity(0.9).seed(91).plant(3, 40, 0.02).generate();
+    assert!(
+        n * m > BUDGET,
+        "the dataset's Vec<u8> form ({} bytes) must exceed the budget ({BUDGET})",
+        n * m
+    );
+    let block = block_for_budget(n, m, BUDGET);
+    assert!(
+        task_bytes(n, block) <= BUDGET || block == 1,
+        "block sizing must respect the budget"
+    );
+
+    let path = tmp("acceptance.bmat");
+    io::write_bmat_v2(&ds, &path).unwrap();
+    let want = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+
+    let packed = PackedFileSource::open(&path).unwrap();
+    let mem = InMemorySource::new(&ds);
+    let plan = plan_blocks(m, block).unwrap();
+    for kind in [NativeKind::Bitpack, NativeKind::Dense, NativeKind::Sparse] {
+        let from_disk = execute_plan_measure(
+            &packed,
+            &plan,
+            &NativeProvider::new(&packed, kind),
+            2,
+            &Progress::new(plan.tasks.len()),
+            CombineKind::Mi,
+        )
+        .unwrap();
+        let from_mem = execute_plan_measure(
+            &mem,
+            &plan,
+            &NativeProvider::new(&mem, kind),
+            2,
+            &Progress::new(plan.tasks.len()),
+            CombineKind::Mi,
+        )
+        .unwrap();
+        assert_eq!(
+            from_disk.max_abs_diff(&from_mem),
+            0.0,
+            "{kind:?}: packed-file run must be bit-identical to the in-memory run"
+        );
+        assert_eq!(
+            from_disk.max_abs_diff(&want),
+            0.0,
+            "{kind:?}: blockwise streaming run must equal the monolithic result"
+        );
+    }
+
+    // `--backend auto`: resolve through the packed source, then run the
+    // chosen substrate out of core — still bit-identical.
+    let (chosen, probe) = Backend::Auto.resolve_source(&packed).unwrap();
+    assert!(chosen.is_native());
+    assert!(probe.is_some(), "auto must carry its probe report");
+    let auto_run = execute_plan_measure(
+        &packed,
+        &plan,
+        &NativeProvider::new(&packed, chosen.native_kind()),
+        2,
+        &Progress::new(plan.tasks.len()),
+        CombineKind::Mi,
+    )
+    .unwrap();
+    assert_eq!(auto_run.max_abs_diff(&want), 0.0, "auto ({chosen}) out-of-core run");
+
+    // a matrix-free sink over the same streamed plan matches post-hoc
+    // extraction from the full matrix
+    let mut sink = TopKSink::global(5);
+    execute_plan_sink(
+        &packed,
+        &plan,
+        &NativeProvider::new(&packed, NativeKind::Bitpack),
+        2,
+        &Progress::new(plan.tasks.len()),
+        &mut sink,
+    )
+    .unwrap();
+    let SinkData::TopK(got) = sink.finish().unwrap().data else { panic!() };
+    let exp = top_k_pairs(&want, 5);
+    assert_eq!(got.len(), exp.len());
+    for (g, w) in got.iter().zip(&exp) {
+        assert_eq!((g.i, g.j), (w.i, w.j));
+        assert_eq!(g.mi, w.mi);
+    }
+    assert_eq!((got[0].i, got[0].j), (3, 40), "planted pair surfaces first");
+}

@@ -118,13 +118,13 @@ fn schedules_do_not_change_results() {
 }
 
 /// Failure injection: a provider that errors on one specific task.
-struct FailingProvider {
-    inner: NativeProvider,
+struct FailingProvider<'a> {
+    inner: NativeProvider<'a>,
     fail_at: usize,
     calls: std::sync::atomic::AtomicUsize,
 }
 
-impl GramProvider for FailingProvider {
+impl GramProvider for FailingProvider<'_> {
     fn name(&self) -> &'static str {
         "failing"
     }

@@ -60,6 +60,72 @@ fn cli_serve_demo() {
 }
 
 #[test]
+fn pack_then_streaming_compute_matches_in_memory() {
+    // CSV -> `pack` -> v2 -> matrix-free compute over the streamed
+    // file equals the same run over the in-memory CSV load, through
+    // the real CLI surface end to end.
+    let csv = tmp("pk.csv");
+    assert_eq!(
+        cli::run(&sv(&[
+            "generate", "--rows", "600", "--cols", "40", "--sparsity", "0.85",
+            "--seed", "9", "--plant", "2:31:0.02", "--out", csv.to_str().unwrap(),
+        ])),
+        0
+    );
+    let v2 = tmp("pk.bmat");
+    assert_eq!(
+        cli::run(&sv(&[
+            "pack", "--input", csv.to_str().unwrap(), "--out", v2.to_str().unwrap(),
+        ])),
+        0
+    );
+    let from_csv = tmp("pk-mem-pairs.csv");
+    let from_v2 = tmp("pk-strm-pairs.csv");
+    for (input, out) in [(&csv, &from_csv), (&v2, &from_v2)] {
+        assert_eq!(
+            cli::run(&sv(&[
+                "compute", "--input", input.to_str().unwrap(), "--sink", "topk:32",
+                "--block-cols", "12", "--out", out.to_str().unwrap(),
+            ])),
+            0
+        );
+    }
+    let mem = std::fs::read_to_string(&from_csv).unwrap();
+    let strm = std::fs::read_to_string(&from_v2).unwrap();
+    assert_eq!(mem, strm, "streamed v2 run must equal the in-memory run");
+    assert_eq!(mem.lines().count(), 33, "header + 32 pairs");
+    assert!(mem.lines().nth(1).unwrap().starts_with("col2,col31,"), "planted pair first");
+    // the autotuned backend also streams
+    assert_eq!(
+        cli::run(&sv(&[
+            "compute", "--input", v2.to_str().unwrap(), "--backend", "auto",
+            "--sink", "topk:5", "--top", "3",
+        ])),
+        0
+    );
+}
+
+#[test]
+fn serve_streams_a_packed_input_file() {
+    let data = tmp("serve-src.bmat");
+    assert_eq!(
+        cli::run(&sv(&[
+            "generate", "--rows", "500", "--cols", "30", "--sparsity", "0.9",
+            "--seed", "13", "--out", data.to_str().unwrap(),
+        ])),
+        0
+    );
+    assert_eq!(
+        cli::run(&sv(&[
+            "serve", "--workers", "2", "--max-queued", "2", "--jobs", "3",
+            "--block-cols", "8", "--sink", "topk:4",
+            "--input", data.to_str().unwrap(),
+        ])),
+        0
+    );
+}
+
+#[test]
 fn config_driven_compute() {
     let cfg_path = tmp("run.toml");
     std::fs::write(

@@ -9,28 +9,36 @@ use bulkmi::coordinator::planner::{
 
 #[test]
 fn explicit_width_beats_probe_and_fallback() {
+    let t = DEFAULT_TASK_LATENCY_SECS;
     // an explicit caller width wins no matter what else is available
-    let (b, src) = block_policy(9, Some(1e9), 10_000, 500, 0, (7, "budget"));
+    let (b, src) = block_policy(9, Some(1e9), 10_000, 500, 0, t, (7, "budget"));
     assert_eq!((b, src), (9, "explicit"));
     // ...even an absurdly small one
-    let (b, src) = block_policy(1, Some(f64::MAX), 10_000, 500, 0, (7, "monolithic"));
+    let (b, src) = block_policy(1, Some(f64::MAX), 10_000, 500, 0, t, (7, "monolithic"));
     assert_eq!((b, src), (1, "explicit"));
 }
 
 #[test]
 fn probe_throughput_beats_fallback() {
     let (n, m) = (10_000usize, 500usize);
-    let (b, src) = block_policy(0, Some(1e8), n, m, 0, (7, "budget"));
+    let t = DEFAULT_TASK_LATENCY_SECS;
+    let (b, src) = block_policy(0, Some(1e8), n, m, 0, t, (7, "budget"));
     assert_eq!(src, "probe-throughput");
-    assert_eq!(b, throughput_block(n, m, 0, 1e8, DEFAULT_TASK_LATENCY_SECS));
+    assert_eq!(b, throughput_block(n, m, 0, 1e8, t));
     assert!(b >= 1);
+    // the caller's latency target feeds straight through: a longer
+    // target affords blocks at least as large
+    let (short, _) = block_policy(0, Some(1e8), n, m, 0, 0.25, (7, "budget"));
+    let (long, _) = block_policy(0, Some(1e8), n, m, 0, 16.0, (7, "budget"));
+    assert!(long >= short, "target 16s gave {long} < target 0.25s {short}");
 }
 
 #[test]
 fn fallback_applies_when_nothing_else_is_known() {
+    let t = DEFAULT_TASK_LATENCY_SECS;
     // no explicit width, no probe: the caller's fallback rule verbatim
-    assert_eq!(block_policy(0, None, 10_000, 500, 0, (0, "monolithic")), (0, "monolithic"));
-    assert_eq!(block_policy(0, None, 10_000, 500, 0, (123, "budget")), (123, "budget"));
+    assert_eq!(block_policy(0, None, 10_000, 500, 0, t, (0, "monolithic")), (0, "monolithic"));
+    assert_eq!(block_policy(0, None, 10_000, 500, 0, t, (123, "budget")), (123, "budget"));
 }
 
 #[test]
@@ -77,9 +85,14 @@ fn degenerate_throughput_falls_back_to_the_memory_rule() {
             "throughput = {bad}"
         );
     }
-    // a zero/negative target is equally degenerate
-    assert_eq!(throughput_block(n, m, 0, 1e8, 0.0), matrix_free_block(n, m, 0));
-    assert_eq!(throughput_block(n, m, 0, 1e8, -1.0), matrix_free_block(n, m, 0));
+    // a zero/negative/non-finite target is equally degenerate
+    for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+        assert_eq!(
+            throughput_block(n, m, 0, 1e8, bad),
+            matrix_free_block(n, m, 0),
+            "target = {bad}"
+        );
+    }
 }
 
 #[test]
