@@ -7,7 +7,10 @@ directory tree and point this script at it to get, per ``(host, entry)``
 pair, the ordered series of scalar-normalized throughput (``rel``; the
 absolute ``cells_per_sec`` is the fallback for entries without a ratio)
 and a drift verdict: the latest value against the median of the prior
-runs.
+runs. Out-of-core entries (``oocgram/...``) additionally trend their
+``bytes_read`` counter as a separate series, where drift points the
+other way: reading *more* bytes than the prior median is the
+regression.
 
 Stdlib only — no third-party imports — so it runs anywhere CI's python3
 does. Non-gating by default (always exits 0 unless ``--strict``): the
@@ -69,6 +72,13 @@ def build_series(runs):
             name = entry.get("name", "?")
             rel = entry.get("rel")
             cps = entry.get("cells_per_sec")
+            # out-of-core entries also carry a bytes_read counter; track
+            # it as its own series (drift direction inverts: more bytes
+            # read is the regression)
+            bytes_read = entry.get("bytes_read")
+            if bytes_read is not None and bytes_read > 0:
+                key = (run["host"], name, "bytes")
+                series.setdefault(key, []).append((run["path"], float(bytes_read)))
             metric = rel if rel is not None else cps
             if metric is None or metric <= 0:
                 continue  # probe-style entries carry no throughput
@@ -113,7 +123,10 @@ def main(argv=None):
             base = statistics.median(prior)
             drift = latest / base - 1.0 if base > 0 else 0.0
             line += f" median={base:.4g} drift={drift:+.1%}"
-            if drift < -args.threshold:
+            # throughput regresses downward; a bytes-read series
+            # regresses upward (the run started reading more)
+            drifted = drift > args.threshold if unit == "bytes" else drift < -args.threshold
+            if drifted:
                 flagged.append((host, name, drift))
                 line += "  << DRIFT"
         print(line)

@@ -13,7 +13,14 @@
 //!   measure is part of the entry id so per-measure rows can never
 //!   alias each other in the baseline gate;
 //! * `backend-auto@dX` — the autotuner probe itself (wall time + what
-//!   it chose).
+//!   it chose);
+//! * `oocgram/{uncached,cached}@dX` — the out-of-core streaming path
+//!   over a real `.bmat` v2 file split into >= 8 column blocks, run
+//!   once without the block cache (largest-first order) and once with
+//!   it (panel order + prefetch). These rows carry `bytes_read`, and
+//!   the cached row's `rel` is the uncached/cached bytes-read ratio —
+//!   the read-amplification win the cache exists to deliver (expected
+//!   well above 2x), gated like any other `rel`.
 //!
 //! Every entry carries both absolute throughput (`cells_per_sec`, Gram
 //! output cells per second) and `rel`, the throughput normalized by the
@@ -48,6 +55,9 @@ struct BenchEntry {
     rel: Option<f64>,
     /// The autotuner's choice, for `backend-auto` entries.
     chosen: Option<String>,
+    /// Bytes read from storage, for the out-of-core `oocgram` entries
+    /// (None for in-memory measurements).
+    bytes_read: Option<u64>,
 }
 
 pub fn bench(argv: &[String]) -> Result<()> {
@@ -115,6 +125,7 @@ pub fn bench(argv: &[String]) -> Result<()> {
                 cells_per_sec: cps,
                 rel: Some(cps / scalar_cps),
                 chosen: None,
+                bytes_read: None,
             });
         }
 
@@ -143,6 +154,7 @@ pub fn bench(argv: &[String]) -> Result<()> {
                 cells_per_sec: cps,
                 rel: Some(cps / scalar_cps),
                 chosen: None,
+                bytes_read: None,
             });
         }
 
@@ -175,6 +187,7 @@ pub fn bench(argv: &[String]) -> Result<()> {
                 cells_per_sec: cps,
                 rel: Some(cps / mi_cps),
                 chosen: None,
+                bytes_read: None,
             });
         }
 
@@ -192,8 +205,15 @@ pub fn bench(argv: &[String]) -> Result<()> {
             cells_per_sec: 0.0,
             rel: None,
             chosen: Some(report.chosen.name().to_string()),
+            bytes_read: None,
         });
     }
+
+    // --- out-of-core streaming path (cached vs uncached) ----------------
+    // sized down from the in-memory grid: the interesting number here is
+    // bytes read, not raw throughput, and 8k rows already gives >= 8
+    // column blocks with real positioned-read I/O
+    entries.extend(bench_ooc(rows.min(8_192), cols, 0.5, seed)?);
 
     print_table(&entries);
     let path = out.unwrap_or_else(|| PathBuf::from(format!("BENCH_{}.json", host_id())));
@@ -229,6 +249,75 @@ fn timed_median(reps: usize, mut f: impl FnMut()) -> f64 {
     }
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
     samples[samples.len() / 2]
+}
+
+/// The out-of-core streaming path, measured end to end over a real
+/// `.bmat` v2 file: plan >= 8 column blocks, run the top-k sink once
+/// uncached (largest-first, every off-diagonal task re-reads both
+/// blocks) and once through the block cache (panel order + one task of
+/// readahead). Timed once — the entries exist for their `bytes_read`
+/// counters and the cached row's `rel` (uncached/cached bytes-read
+/// ratio), which are deterministic; wall time on temp-file I/O is not.
+fn bench_ooc(rows: usize, cols: usize, density: f64, seed: u64) -> Result<Vec<BenchEntry>> {
+    use crate::coordinator::blockcache::{BlockCache, CacheHandle};
+    use crate::coordinator::executor::{execute_plan_sink, NativeKind, NativeProvider};
+    use crate::coordinator::planner::plan_blocks;
+    use crate::coordinator::progress::Progress;
+    use crate::coordinator::scheduler::{order_tasks, Schedule};
+    use crate::data::colstore::{ColumnSource, PackedFileSource};
+    use crate::data::io::write_bmat_v2;
+    use crate::mi::sink::TopKSink;
+    use std::sync::Arc;
+
+    let ds = SynthSpec::new(rows, cols).sparsity(1.0 - density).seed(seed).generate();
+    let path = std::env::temp_dir()
+        .join(format!("bulkmi-bench-ooc-{}-{rows}x{cols}.bmat", std::process::id()));
+    write_bmat_v2(&ds, &path)?;
+    let block = cols.div_ceil(8).max(1);
+    let cells = (cols * cols) as f64;
+    let tag = format!("@d{density:.2}");
+    let mut entries = Vec::new();
+    let mut uncached_bytes = 0u64;
+    for cached in [false, true] {
+        let src = PackedFileSource::open(&path)?;
+        let before = src.io_stats().unwrap_or_default();
+        let mut plan = plan_blocks(cols, block)?;
+        order_tasks(
+            &mut plan.tasks,
+            if cached { Schedule::Panel } else { Schedule::LargestFirst },
+        );
+        let handle = CacheHandle::fresh(Arc::new(BlockCache::new(64 << 20)));
+        let provider = if cached {
+            NativeProvider::with_cache(&src, NativeKind::Bitpack, handle, 1)
+        } else {
+            NativeProvider::new(&src, NativeKind::Bitpack)
+        };
+        let mut sink = TopKSink::global(8);
+        let progress = Progress::new(plan.tasks.len());
+        let t0 = Instant::now();
+        execute_plan_sink(&src, &plan, &provider, 2, &progress, &mut sink)?;
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        let delta = src.io_stats().unwrap_or_default().since(&before);
+        let rel = if cached && delta.bytes_read > 0 {
+            Some(uncached_bytes as f64 / delta.bytes_read as f64)
+        } else {
+            uncached_bytes = delta.bytes_read;
+            None
+        };
+        entries.push(BenchEntry {
+            name: format!("oocgram/{}{tag}", if cached { "cached" } else { "uncached" }),
+            rows,
+            cols,
+            density,
+            secs,
+            cells_per_sec: cells / secs,
+            rel,
+            chosen: None,
+            bytes_read: Some(delta.bytes_read),
+        });
+    }
+    let _ = std::fs::remove_file(&path);
+    Ok(entries)
 }
 
 fn print_table(entries: &[BenchEntry]) {
@@ -278,13 +367,15 @@ fn write_json(
             .as_ref()
             .map(|c| format!("\"{}\"", escape(c)))
             .unwrap_or_else(|| "null".into());
+        let bytes = e.bytes_read.map(|b| b.to_string()).unwrap_or_else(|| "null".into());
         let comma = if i + 1 == entries.len() { "" } else { "," };
         writeln!(
             w,
             "    {{\"name\": \"{}\", \"rows\": {}, \"cols\": {}, \"density\": {}, \
-             \"secs\": {:.6e}, \"cells_per_sec\": {:.6e}, \"rel\": {}, \"chosen\": {}}}{}",
+             \"secs\": {:.6e}, \"cells_per_sec\": {:.6e}, \"rel\": {}, \"chosen\": {}, \
+             \"bytes_read\": {}}}{}",
             escape(&e.name), e.rows, e.cols, e.density, e.secs, e.cells_per_sec, rel, chosen,
-            comma
+            bytes, comma
         )?;
     }
     writeln!(w, "  ]")?;
@@ -504,6 +595,7 @@ mod tests {
                 cells_per_sec: 128.0,
                 rel: Some(1.0),
                 chosen: None,
+                bytes_read: None,
             },
             BenchEntry {
                 name: "backend-auto@d0.50".into(),
@@ -514,6 +606,7 @@ mod tests {
                 cells_per_sec: 0.0,
                 rel: None,
                 chosen: Some("bulk-bitpack".into()),
+                bytes_read: Some(4096),
             },
         ];
         let path = tmp("roundtrip.json");
@@ -526,6 +619,10 @@ mod tests {
             results[1].get("chosen").unwrap().as_str(),
             Some("bulk-bitpack")
         );
+        // bytes_read survives the round trip: null when absent, the
+        // raw counter when present
+        assert!(results[0].get("bytes_read").unwrap().as_f64().is_none());
+        assert_eq!(results[1].get("bytes_read").unwrap().as_f64(), Some(4096.0));
         // a run always passes a gate against its own numbers
         check_baseline(&entries, &path, 0.30).unwrap();
         let _ = std::fs::remove_file(&path);
@@ -542,6 +639,7 @@ mod tests {
             cells_per_sec: 128.0,
             rel: Some(2.0),
             chosen: None,
+            bytes_read: None,
         }];
         let path = tmp("gate.json");
         write_json(&good, "quick", 1, 3, &path).unwrap();
@@ -640,7 +738,27 @@ mod tests {
             cells_per_sec: 128.0,
             rel: Some(1.0),
             chosen: None,
+            bytes_read: None,
         }
+    }
+
+    #[test]
+    fn ooc_entries_report_bytes_and_ratio() {
+        // small but real: 64 cols in 8 blocks off a temp .bmat v2 file
+        let entries = bench_ooc(256, 64, 0.5, 7).unwrap();
+        assert_eq!(entries.len(), 2);
+        let uncached = &entries[0];
+        let cached = &entries[1];
+        assert_eq!(uncached.name, "oocgram/uncached@d0.50");
+        assert_eq!(cached.name, "oocgram/cached@d0.50");
+        let ub = uncached.bytes_read.unwrap();
+        let cb = cached.bytes_read.unwrap();
+        assert!(ub > 0 && cb > 0);
+        // the whole point of the cache: the panel schedule re-reads
+        // nothing, so the uncached run moves at least 2x the bytes
+        assert!(ub >= 2 * cb, "uncached {ub} vs cached {cb}");
+        assert_eq!(cached.rel, Some(ub as f64 / cb as f64));
+        assert_eq!(uncached.rel, None);
     }
 
     #[test]

@@ -2,10 +2,12 @@
 
 use super::args::Args;
 use crate::config::RunConfig;
+use crate::coordinator::blockcache::{cache_plan, run_reports, BlockCache, CacheHandle};
 use crate::coordinator::planner::{
     block_policy, matrix_free_block, plan_blocks, plan_with_config, PlannerConfig,
 };
 use crate::coordinator::progress::Progress;
+use crate::coordinator::scheduler::{order_tasks, Schedule};
 use crate::coordinator::service::{JobService, JobSpec, JobStatus};
 use crate::coordinator::{execute_plan_measure, execute_plan_sink_measure, NativeProvider};
 use crate::data::colstore::{ColumnSource, InMemorySource, PackedFileSource};
@@ -84,6 +86,12 @@ pub fn compute(argv: &[String]) -> Result<()> {
             "--task-latency must be a positive number of seconds".into(),
         ));
     }
+    if let Some(v) = args.get("cache-budget") {
+        cfg.cache_bytes = Some(v.parse().map_err(|_| {
+            Error::Parse(format!("--cache-budget expects bytes, got '{v}' (0 disables)"))
+        })?);
+    }
+    cfg.readahead = args.get_usize("readahead", cfg.readahead)?;
     let input = PathBuf::from(args.req("input")?);
     let top = args.get_usize("top", 10)?;
     let normalize = args.get("normalize").map(|s| s.to_string());
@@ -226,22 +234,36 @@ fn compute_packed(
     if let Some(report) = &probe {
         crate::info!("{}", report.summary());
     }
+    let (cache, task_budget) = cache_setup(cfg, &src);
     let (block, sizing_source) = block_policy(
         cfg.block_cols,
         probe.as_ref().map(|r| r.chosen_throughput()),
         src.n_rows(),
         src.n_cols(),
-        cfg.memory_budget,
+        task_budget,
         cfg.task_latency_secs,
-        (matrix_free_block(src.n_rows(), src.n_cols(), cfg.memory_budget), "budget"),
+        (matrix_free_block(src.n_rows(), src.n_cols(), task_budget), "budget"),
     );
-    let plan = plan_blocks(src.n_cols(), block)?;
+    let mut plan = plan_blocks(src.n_cols(), block)?;
+    let schedule = pick_schedule(&cache, &src);
+    order_tasks(&mut plan.tasks, schedule);
     crate::info!(
-        "streaming dense plan: {} tasks, block {} cols ({sizing_source})",
+        "streaming dense plan: {} tasks, block {} cols ({sizing_source}), {} order",
         plan.tasks.len(),
-        plan.block
+        plan.block,
+        schedule.name()
     );
-    let provider = NativeProvider::new(&src, backend.native_kind());
+    let provider = match &cache {
+        Some(c) => NativeProvider::with_cache(
+            &src,
+            backend.native_kind(),
+            CacheHandle::fresh(Arc::clone(c)),
+            cfg.readahead,
+        ),
+        None => NativeProvider::new(&src, backend.native_kind()),
+    };
+    let io0 = src.io_stats();
+    let cache0 = cache.as_ref().map(|c| c.stats());
     let progress = Progress::new(plan.tasks.len());
     let t0 = std::time::Instant::now();
     let mi = execute_plan_measure(&src, &plan, &provider, cfg.workers, &progress, cfg.measure)?;
@@ -253,7 +275,61 @@ fn compute_packed(
         backend,
         fmt_secs(t0.elapsed().as_secs_f64())
     );
+    report_io(&src, io0, cache.as_deref().zip(cache0));
     finish_dense(mi, &src, normalize, plan.block, top, out)
+}
+
+/// The CLI mirror of the job service's cache decision: resolve the
+/// cache budget (and the task budget left after the carve) from the
+/// run config, building the cache when one is called for.
+fn cache_setup(cfg: &RunConfig, src: &dyn ColumnSource) -> (Option<Arc<BlockCache>>, usize) {
+    let (cache_budget, task_budget) =
+        cache_plan(cfg.cache_bytes, src.out_of_core(), cfg.memory_budget);
+    (cache_budget.map(|b| Arc::new(BlockCache::new(b))), task_budget)
+}
+
+/// Schedule resolution: cache-friendly panel order for cached
+/// out-of-core runs, the tail-friendly largest-first otherwise.
+fn pick_schedule(cache: &Option<Arc<BlockCache>>, src: &dyn ColumnSource) -> Schedule {
+    if cache.is_some() && src.out_of_core() {
+        Schedule::Panel
+    } else {
+        Schedule::LargestFirst
+    }
+}
+
+/// Log the run's read traffic and cache behaviour (the CLI equivalent
+/// of the `SinkMeta` io/cache fields), and return the reports for
+/// callers that do have a meta to fill.
+fn report_io(
+    src: &dyn ColumnSource,
+    io_before: Option<crate::data::colstore::IoStats>,
+    cache: Option<(&BlockCache, crate::coordinator::blockcache::CacheStats)>,
+) -> (
+    Option<crate::mi::sink::IoReport>,
+    Option<crate::mi::sink::CacheReport>,
+) {
+    let (io, cache_report) = run_reports(src, io_before, cache);
+    if let Some(io) = &io {
+        crate::info!(
+            "io: {} bytes in {} reads ({:.2}x read amplification, {} in reads)",
+            io.bytes_read,
+            io.reads,
+            io.read_amplification,
+            fmt_secs(io.read_secs)
+        );
+    }
+    if let Some(c) = &cache_report {
+        crate::info!(
+            "cache: {} hits / {} misses ({} prefetched, {} evictions, {} stalled)",
+            c.hits,
+            c.misses,
+            c.prefetched,
+            c.evictions,
+            fmt_secs(c.stall_secs)
+        );
+    }
+    (io, cache_report)
 }
 
 /// Compute respecting block/budget settings (blockwise plans go through
@@ -320,24 +396,39 @@ fn compute_into_sink(
     // Explicit block size wins; otherwise an auto run folds the
     // probe's throughput into the width (faster substrates afford
     // larger blocks under the same latency target) and fixed backends
-    // use the memory-budget rule.
+    // use the memory-budget rule (shrunk by the cache carve on
+    // out-of-core runs, so cache + task working set share the budget).
+    let (cache, task_budget) = cache_setup(cfg, src);
     let (block, sizing_source) = block_policy(
         cfg.block_cols,
         probe.as_ref().map(|r| r.chosen_throughput()),
         src.n_rows(),
         src.n_cols(),
-        cfg.memory_budget,
+        task_budget,
         cfg.task_latency_secs,
-        (matrix_free_block(src.n_rows(), src.n_cols(), cfg.memory_budget), "budget"),
+        (matrix_free_block(src.n_rows(), src.n_cols(), task_budget), "budget"),
     );
-    let plan = plan_blocks(src.n_cols(), block)?;
+    let mut plan = plan_blocks(src.n_cols(), block)?;
+    let schedule = pick_schedule(&cache, src);
+    order_tasks(&mut plan.tasks, schedule);
     crate::info!(
-        "matrix-free plan: {} tasks, block {} cols ({sizing_source})",
+        "matrix-free plan: {} tasks, block {} cols ({sizing_source}), {} order",
         plan.tasks.len(),
-        plan.block
+        plan.block,
+        schedule.name()
     );
     let mut sink = spec.build_for(src.n_cols(), src.n_rows(), cfg.measure)?;
-    let provider = NativeProvider::new(src, backend.native_kind());
+    let provider = match &cache {
+        Some(c) => NativeProvider::with_cache(
+            src,
+            backend.native_kind(),
+            CacheHandle::fresh(Arc::clone(c)),
+            cfg.readahead,
+        ),
+        None => NativeProvider::new(src, backend.native_kind()),
+    };
+    let io0 = src.io_stats();
+    let cache0 = cache.as_ref().map(|c| c.stats());
     let progress = Progress::new(plan.tasks.len());
     let t0 = std::time::Instant::now();
     execute_plan_sink_measure(
@@ -360,6 +451,10 @@ fn compute_into_sink(
         source: sizing_source,
         task_latency_secs: cfg.task_latency_secs,
     });
+    output.meta.schedule = Some(schedule.name());
+    let (io, cache_report) = report_io(src, io0, cache.as_deref().zip(cache0));
+    output.meta.io = io;
+    output.meta.cache = cache_report;
     println!(
         "computed {} ({}) over {} columns in {}",
         output.summary(),

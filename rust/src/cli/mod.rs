@@ -31,14 +31,19 @@ COMMANDS:
         [--measure mi|nmi|vi|gstat|chi2|phi|jaccard|ochiai]
         [--workers N] [--block-cols B=0] [--memory-budget BYTES=0]
         [--task-latency SECS=2] [--top K=10]
+        [--cache-budget BYTES] [--readahead N=1]
         [--sink dense|topk:K|topk-per-col:K|threshold:T|pvalue:P|spill:DIR]
         [--normalize min|max|mean|joint] [--out FILE.csv]
         [--config FILE.toml]
         non-dense sinks run matrix-free: memory stays O(block^2) no
         matter how many columns the dataset has; a .bmat v2 input
         additionally streams the *input* side — column blocks are
-        seek-read off disk, so a run never holds more than
-        task_bytes(n, b) of the dataset; --backend auto micro-probes
+        positioned-read off disk, so a run never holds more than
+        task_bytes(n, b) of the dataset; streamed runs get a block
+        substrate cache (auto-sized from half the memory budget;
+        --cache-budget overrides, 0 disables) with a cache-aware panel
+        schedule and --readahead tasks of prefetch, so each block is
+        read once instead of once per task; --backend auto micro-probes
         the native substrates and commits to the fastest; every
         measure rides the same single Gram (sinks rank/threshold in
         the measure's units; pvalue: composes with mi and gstat only)

@@ -119,6 +119,14 @@ pub struct RunConfig {
     /// block sizing (`--task-latency`; see
     /// [`crate::coordinator::planner::throughput_block`]).
     pub task_latency_secs: f64,
+    /// Block-substrate cache budget in bytes (`--cache-budget` /
+    /// `run.cache_bytes`). `None` = auto: carve half the memory budget
+    /// for out-of-core sources, no cache for in-memory ones. `Some(0)`
+    /// disables the cache.
+    pub cache_bytes: Option<usize>,
+    /// Tasks of readahead for the executor's prefetch stage
+    /// (`--readahead` / `run.readahead`; only active when a cache is).
+    pub readahead: usize,
     /// Artifact directory override (None = default discovery).
     pub artifacts_dir: Option<String>,
 }
@@ -132,6 +140,8 @@ impl Default for RunConfig {
             block_cols: 0,
             memory_budget: 0,
             task_latency_secs: crate::coordinator::planner::DEFAULT_TASK_LATENCY_SECS,
+            cache_bytes: None,
+            readahead: 1,
             artifacts_dir: None,
         }
     }
@@ -146,7 +156,7 @@ impl RunConfig {
             if let Some(name) = key.strip_prefix("run.") {
                 match name {
                     "backend" | "measure" | "workers" | "block_cols" | "memory_budget"
-                    | "task_latency_secs" | "artifacts_dir" => {}
+                    | "task_latency_secs" | "cache_bytes" | "readahead" | "artifacts_dir" => {}
                     other => {
                         return Err(Error::Config(format!("unknown key run.{other}")));
                     }
@@ -177,6 +187,12 @@ impl RunConfig {
                 )));
             }
             cfg.task_latency_secs = t;
+        }
+        if let Some(c) = raw.get_usize("run.cache_bytes")? {
+            cfg.cache_bytes = Some(c);
+        }
+        if let Some(r) = raw.get_usize("run.readahead")? {
+            cfg.readahead = r;
         }
         if let Some(d) = raw.get("run.artifacts_dir") {
             cfg.artifacts_dir = Some(d.to_string());
@@ -265,6 +281,22 @@ mod tests {
                 RawConfig::parse(&format!("[run]\ntask_latency_secs = {bad}\n")).unwrap();
             assert!(RunConfig::from_raw(&raw).is_err(), "{bad} must be rejected");
         }
+    }
+
+    #[test]
+    fn cache_and_readahead_keys_parse() {
+        let raw = RawConfig::parse("[run]\ncache_bytes = 1048576\nreadahead = 3\n").unwrap();
+        let cfg = RunConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.cache_bytes, Some(1048576));
+        assert_eq!(cfg.readahead, 3);
+        // explicit zero disables the cache (distinct from unset = auto)
+        let raw = RawConfig::parse("[run]\ncache_bytes = 0\nreadahead = 0\n").unwrap();
+        let cfg = RunConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.cache_bytes, Some(0));
+        assert_eq!(cfg.readahead, 0);
+        let defaults = RunConfig::default();
+        assert_eq!(defaults.cache_bytes, None);
+        assert_eq!(defaults.readahead, 1);
     }
 
     #[test]

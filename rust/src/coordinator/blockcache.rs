@@ -1,0 +1,599 @@
+//! Block-substrate cache: the block-reuse layer for out-of-core runs.
+//!
+//! A blockwise plan over `nb` column blocks has `nb(nb+1)/2` tasks, and
+//! an uncached [`super::executor::NativeProvider`] fetches and rebuilds
+//! both of a task's substrates from the [`ColumnSource`] on every task —
+//! `nb²` block fetches where `nb` would do. For an in-memory source the
+//! refetch is a memcpy; for a [`crate::data::colstore::PackedFileSource`]
+//! it is a disk read plus a CSR build or `to_mat32` conversion, which
+//! makes the streaming path I/O-bound instead of matmul-bound. The
+//! [`BlockCache`] closes that gap: a bounded, process-wide LRU keyed by
+//! `(source id, start, len, kind)` holding the *constructed* per-block
+//! substrate (packed bits, CSR, or dense f32), so fetch + build happen
+//! once per block per run. Combined with the panel task order
+//! ([`crate::coordinator::scheduler::Schedule::Panel`]) the fetch count
+//! drops from `O(nb²)` to `O(nb)` whenever the cache holds a panel's
+//! working set.
+//!
+//! Concurrency model: the cache never holds its lock across a build.
+//! `get_or_build` is lock → probe → unlock → build → lock → insert; two
+//! workers racing on the same missing block may both build it (correct,
+//! occasionally wasteful), and the second one adopts the first's entry
+//! so both tasks share one allocation. Values are `Arc<Substrate>`, so
+//! eviction never invalidates a block a task is still computing with.
+//!
+//! Budget honesty: the cache's byte budget is carved out of the run's
+//! memory budget ([`crate::coordinator::planner::carve_cache_budget`]),
+//! so `task_bytes` block sizing and the cache together stay within what
+//! the caller asked for. An entry larger than the whole budget is
+//! served but never retained.
+
+use super::executor::NativeKind;
+use crate::data::colstore::{ColumnSource, IoStats};
+use crate::linalg::bitmat::BitMatrix;
+use crate::linalg::csr::CsrMatrix;
+use crate::linalg::dense::{Mat32, Mat64};
+use crate::mi::sink::{CacheReport, IoReport};
+use crate::util::error::{Error, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::time::Instant;
+
+/// A constructed per-block Gram substrate — what a
+/// [`super::executor::NativeProvider`] builds from a fetched column
+/// block, and what the cache retains so the build happens once per
+/// block instead of once per task.
+pub enum Substrate {
+    Bits(BitMatrix),
+    Csr(CsrMatrix),
+    Dense(Mat32),
+}
+
+impl Substrate {
+    /// Build the substrate `kind` from a fetched bit-packed block.
+    pub fn build(bits: BitMatrix, kind: NativeKind) -> Substrate {
+        match kind {
+            NativeKind::Bitpack => Substrate::Bits(bits),
+            NativeKind::Sparse => Substrate::Csr(CsrMatrix::from_bitmatrix(&bits)),
+            NativeKind::Dense => Substrate::Dense(bits.to_mat32()),
+        }
+    }
+
+    /// Resident bytes, the cache's cost model (CSR: indices + indptr).
+    pub fn bytes(&self) -> usize {
+        match self {
+            Substrate::Bits(b) => b.words().len() * 8,
+            Substrate::Csr(c) => c.nnz() * 4 + (c.rows() + 1) * 8,
+            Substrate::Dense(d) => d.rows() * d.cols() * 4,
+        }
+    }
+
+    /// Diagonal Gram — the same per-substrate routine the uncached
+    /// provider always used, so cached runs stay bit-identical.
+    pub fn gram(&self) -> Mat64 {
+        match self {
+            Substrate::Bits(b) => b.gram(),
+            Substrate::Csr(c) => c.gram(),
+            Substrate::Dense(d) => crate::linalg::blas::gram(d),
+        }
+    }
+
+    /// Cross Gram against a substrate of the same kind.
+    pub fn gram_cross(&self, other: &Substrate) -> Result<Mat64> {
+        match (self, other) {
+            (Substrate::Bits(a), Substrate::Bits(b)) => a.gram_cross(b),
+            (Substrate::Csr(a), Substrate::Csr(b)) => a.gram_cross(b),
+            (Substrate::Dense(a), Substrate::Dense(b)) => crate::linalg::blas::gemm_at_b(a, b),
+            _ => Err(Error::Coordinator(
+                "gram_cross over mismatched substrate kinds".into(),
+            )),
+        }
+    }
+}
+
+/// Cache key: which block of which source, built for which substrate.
+/// The source id comes from [`BlockCache::source_id`] /
+/// [`BlockCache::fresh_source_id`] — never from the source's address
+/// alone, so a recycled allocation can never serve stale blocks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct BlockKey {
+    pub source: u64,
+    pub start: usize,
+    pub len: usize,
+    pub kind: NativeKind,
+}
+
+/// A snapshot of the cache's counters. Take one before a run and
+/// [`CacheStats::since`] after it to get per-run numbers (the cache is
+/// process-wide, so absolute counters span runs).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CacheStats {
+    /// Requests served from a resident entry.
+    pub hits: u64,
+    /// Requests that had to build the substrate.
+    pub misses: u64,
+    /// Entries dropped to stay under the byte budget.
+    pub evictions: u64,
+    /// Misses filled by the readahead stage (`demand = false`) rather
+    /// than by a stalled worker.
+    pub prefetched: u64,
+    /// Bytes of substrate inserted (lifetime, not resident).
+    pub inserted_bytes: u64,
+    /// Wall time demand-path misses spent in fetch + build — the I/O
+    /// stall the cache and prefetch exist to hide.
+    pub stall_secs: f64,
+}
+
+impl CacheStats {
+    /// Counters accumulated since the `earlier` snapshot.
+    pub fn since(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+            evictions: self.evictions.saturating_sub(earlier.evictions),
+            prefetched: self.prefetched.saturating_sub(earlier.prefetched),
+            inserted_bytes: self.inserted_bytes.saturating_sub(earlier.inserted_bytes),
+            stall_secs: (self.stall_secs - earlier.stall_secs).max(0.0),
+        }
+    }
+}
+
+struct Entry {
+    value: Arc<Substrate>,
+    bytes: usize,
+    last_use: u64,
+}
+
+struct Inner {
+    map: HashMap<BlockKey, Entry>,
+    total_bytes: usize,
+    /// Monotone access clock; unique per touch, so LRU has no ties.
+    tick: u64,
+}
+
+/// Bounded LRU over constructed block substrates. Thread-safe; see the
+/// module docs for the concurrency and budget model.
+pub struct BlockCache {
+    budget: usize,
+    inner: Mutex<Inner>,
+    /// Source identity registry: allocation address -> (id, liveness
+    /// witness). A dead witness at a reused address purges the old id's
+    /// entries before a new id is handed out.
+    sources: Mutex<HashMap<usize, (u64, Weak<dyn ColumnSource>)>>,
+    next_source: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    prefetched: AtomicU64,
+    inserted_bytes: AtomicU64,
+    stall_nanos: AtomicU64,
+}
+
+impl BlockCache {
+    pub fn new(budget_bytes: usize) -> Self {
+        BlockCache {
+            budget: budget_bytes,
+            inner: Mutex::new(Inner { map: HashMap::new(), total_bytes: 0, tick: 0 }),
+            sources: Mutex::new(HashMap::new()),
+            next_source: AtomicU64::new(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            prefetched: AtomicU64::new(0),
+            inserted_bytes: AtomicU64::new(0),
+            stall_nanos: AtomicU64::new(0),
+        }
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    /// Bytes currently resident.
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().total_bytes
+    }
+
+    /// Entries currently resident.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            prefetched: self.prefetched.load(Ordering::Relaxed),
+            inserted_bytes: self.inserted_bytes.load(Ordering::Relaxed),
+            stall_secs: self.stall_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+        }
+    }
+
+    /// Stable id for a shared source: the same live `Arc` always maps
+    /// to the same id (so jobs over one `serve --input` file share
+    /// blocks), and an address recycled after the source died gets a
+    /// fresh id with the dead id's entries purged first.
+    pub fn source_id(&self, src: &Arc<dyn ColumnSource>) -> u64 {
+        let ptr = Arc::as_ptr(src) as *const () as usize;
+        let mut sources = self.sources.lock().unwrap();
+        let existing = sources.get(&ptr).map(|(id, weak)| (*id, weak.upgrade().is_some()));
+        match existing {
+            Some((id, true)) => return id,
+            Some((id, false)) => {
+                sources.remove(&ptr);
+                self.purge_source(id);
+            }
+            None => {}
+        }
+        let id = self.next_source.fetch_add(1, Ordering::Relaxed);
+        sources.insert(ptr, (id, Arc::downgrade(src)));
+        id
+    }
+
+    /// A never-before-used id for a non-shared (borrowed) source — its
+    /// entries can only ever be hit through the handle that owns it.
+    pub fn fresh_source_id(&self) -> u64 {
+        self.next_source.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Drop every entry of one source id.
+    pub fn purge_source(&self, source: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        let keys: Vec<BlockKey> =
+            inner.map.keys().filter(|k| k.source == source).copied().collect();
+        for k in keys {
+            let e = inner.map.remove(&k).unwrap();
+            inner.total_bytes -= e.bytes;
+        }
+    }
+
+    /// Serve `key` from the cache or build it with `build`, retaining
+    /// the result when it fits the budget. `demand` distinguishes a
+    /// worker that is stalled on the block (counted into `stall_secs`)
+    /// from the readahead stage (counted into `prefetched`).
+    pub fn get_or_build(
+        &self,
+        key: BlockKey,
+        demand: bool,
+        build: impl FnOnce() -> Result<Substrate>,
+    ) -> Result<Arc<Substrate>> {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(e) = inner.map.get_mut(&key) {
+                e.last_use = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(Arc::clone(&e.value));
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let built = Arc::new(build()?);
+        if demand {
+            self.stall_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        } else {
+            self.prefetched.fetch_add(1, Ordering::Relaxed);
+        }
+        let bytes = built.bytes();
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner.map.get_mut(&key) {
+            // a racing worker built and inserted it first: adopt that
+            // copy so both tasks share one allocation
+            e.last_use = tick;
+            return Ok(Arc::clone(&e.value));
+        }
+        if bytes <= self.budget {
+            inner.total_bytes += bytes;
+            inner
+                .map
+                .insert(key, Entry { value: Arc::clone(&built), bytes, last_use: tick });
+            self.inserted_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+            // evict LRU down to budget; the fresh entry carries the
+            // newest tick, so it is only ever the last one standing
+            while inner.total_bytes > self.budget {
+                let victim = inner.map.iter().min_by_key(|(_, e)| e.last_use).map(|(k, _)| *k);
+                match victim {
+                    Some(k) => {
+                        let e = inner.map.remove(&k).unwrap();
+                        inner.total_bytes -= e.bytes;
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                    None => break,
+                }
+            }
+        }
+        Ok(built)
+    }
+}
+
+/// A cache plus the source id requests are keyed under — what a
+/// [`super::executor::NativeProvider`] carries.
+#[derive(Clone)]
+pub struct CacheHandle {
+    cache: Arc<BlockCache>,
+    source: u64,
+}
+
+impl CacheHandle {
+    /// Handle for a shared (`Arc`) source: stable id, so later jobs
+    /// over the same source hit this run's blocks.
+    pub fn for_source(cache: Arc<BlockCache>, src: &Arc<dyn ColumnSource>) -> Self {
+        let source = cache.source_id(src);
+        CacheHandle { cache, source }
+    }
+
+    /// Handle with a fresh id (borrowed / single-run sources).
+    pub fn fresh(cache: Arc<BlockCache>) -> Self {
+        let source = cache.fresh_source_id();
+        CacheHandle { cache, source }
+    }
+
+    pub fn cache(&self) -> &Arc<BlockCache> {
+        &self.cache
+    }
+
+    pub fn source(&self) -> u64 {
+        self.source
+    }
+
+    /// [`BlockCache::get_or_build`] under this handle's source id.
+    pub fn get_or_build(
+        &self,
+        start: usize,
+        len: usize,
+        kind: NativeKind,
+        demand: bool,
+        build: impl FnOnce() -> Result<Substrate>,
+    ) -> Result<Arc<Substrate>> {
+        self.cache
+            .get_or_build(BlockKey { source: self.source, start, len, kind }, demand, build)
+    }
+}
+
+/// Resolve a run's cache decision from its knobs. An explicit
+/// `cache_bytes` wins (`Some(0)` disables the cache); `None`
+/// auto-enables it for out-of-core sources only, carving the budget
+/// out of `memory_budget` via
+/// [`crate::coordinator::planner::carve_cache_budget`]. Returns
+/// `(cache budget when enabled, task memory budget)` — block sizing
+/// must use the second value so the combined footprint stays within
+/// what the caller asked for.
+pub fn cache_plan(
+    cache_bytes: Option<usize>,
+    out_of_core: bool,
+    memory_budget: usize,
+) -> (Option<usize>, usize) {
+    match cache_bytes {
+        Some(0) => (None, memory_budget),
+        Some(n) => (Some(n), memory_budget),
+        None if out_of_core => {
+            let (task, cache) = super::planner::carve_cache_budget(memory_budget);
+            (Some(cache), task)
+        }
+        None => (None, memory_budget),
+    }
+}
+
+/// Build a run's [`IoReport`] / [`CacheReport`] from start-of-run
+/// snapshots — the shared tail of the job service and the CLI drivers.
+/// `None` io when the source is not instrumented (in-memory).
+pub fn run_reports(
+    src: &dyn ColumnSource,
+    io_before: Option<IoStats>,
+    cache: Option<(&BlockCache, CacheStats)>,
+) -> (Option<IoReport>, Option<CacheReport>) {
+    let io = match (io_before, src.io_stats()) {
+        (Some(before), Some(now)) => {
+            let d = now.since(&before);
+            let payload = src.payload_bytes_hint().unwrap_or(0);
+            Some(IoReport {
+                bytes_read: d.bytes_read,
+                reads: d.reads,
+                read_secs: d.read_secs,
+                payload_bytes: payload,
+                read_amplification: if payload > 0 {
+                    d.bytes_read as f64 / payload as f64
+                } else {
+                    0.0
+                },
+            })
+        }
+        _ => None,
+    };
+    let cache = cache.map(|(c, before)| {
+        let d = c.stats().since(&before);
+        CacheReport {
+            hits: d.hits,
+            misses: d.misses,
+            evictions: d.evictions,
+            prefetched: d.prefetched,
+            stall_secs: d.stall_secs,
+            budget_bytes: c.budget_bytes(),
+        }
+    });
+    (io, cache)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::colstore::InMemorySource;
+    use crate::data::synth::SynthSpec;
+
+    fn bits(seed: u64) -> BitMatrix {
+        SynthSpec::new(128, 4).sparsity(0.5).seed(seed).generate().to_bitmatrix()
+    }
+
+    fn key(source: u64, start: usize) -> BlockKey {
+        BlockKey { source, start, len: 4, kind: NativeKind::Bitpack }
+    }
+
+    #[test]
+    fn hit_after_miss_shares_the_entry() {
+        let cache = BlockCache::new(1 << 20);
+        let a = cache
+            .get_or_build(key(1, 0), true, || Ok(Substrate::build(bits(1), NativeKind::Bitpack)))
+            .unwrap();
+        let b = cache
+            .get_or_build(key(1, 0), true, || panic!("must not rebuild on a hit"))
+            .unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.resident_bytes(), a.bytes());
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        // each substrate is 128 rows x 4 cols bitpack = 2 words * 4 cols
+        // * 8 bytes = 64 bytes; budget fits exactly two
+        let one = Substrate::build(bits(1), NativeKind::Bitpack).bytes();
+        let cache = BlockCache::new(2 * one);
+        let build = |seed| move || Ok(Substrate::build(bits(seed), NativeKind::Bitpack));
+        cache.get_or_build(key(1, 0), true, build(1)).unwrap();
+        cache.get_or_build(key(1, 4), true, build(2)).unwrap();
+        cache.get_or_build(key(1, 0), true, build(1)).unwrap(); // 0 is now MRU
+        cache.get_or_build(key(1, 8), true, build(3)).unwrap(); // evicts 4
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().evictions, 1);
+        // 4 must rebuild; 0 must still be resident
+        cache.get_or_build(key(1, 0), true, || panic!("0 was evicted")).unwrap();
+        let mut rebuilt = false;
+        cache
+            .get_or_build(key(1, 4), true, || {
+                rebuilt = true;
+                Ok(Substrate::build(bits(2), NativeKind::Bitpack))
+            })
+            .unwrap();
+        assert!(rebuilt, "the LRU victim must have been 4");
+    }
+
+    #[test]
+    fn oversized_entries_are_served_but_not_retained() {
+        let cache = BlockCache::new(8); // smaller than any substrate
+        let v = cache
+            .get_or_build(key(1, 0), true, || Ok(Substrate::build(bits(1), NativeKind::Bitpack)))
+            .unwrap();
+        assert!(v.bytes() > 8);
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn prefetch_misses_counted_separately() {
+        let cache = BlockCache::new(1 << 20);
+        cache
+            .get_or_build(key(1, 0), false, || Ok(Substrate::build(bits(1), NativeKind::Bitpack)))
+            .unwrap();
+        let s = cache.stats();
+        assert_eq!((s.misses, s.prefetched), (1, 1));
+        assert_eq!(s.stall_secs, 0.0, "prefetch builds are not worker stalls");
+    }
+
+    #[test]
+    fn substrate_kinds_never_alias() {
+        let cache = BlockCache::new(1 << 20);
+        cache
+            .get_or_build(key(1, 0), true, || Ok(Substrate::build(bits(1), NativeKind::Bitpack)))
+            .unwrap();
+        let mut built = false;
+        cache
+            .get_or_build(
+                BlockKey { source: 1, start: 0, len: 4, kind: NativeKind::Dense },
+                true,
+                || {
+                    built = true;
+                    Ok(Substrate::build(bits(1), NativeKind::Dense))
+                },
+            )
+            .unwrap();
+        assert!(built, "a different substrate kind is a different entry");
+    }
+
+    #[test]
+    fn source_ids_stable_for_live_arcs_and_purged_for_dead() {
+        let cache = BlockCache::new(1 << 20);
+        let ds = SynthSpec::new(64, 4).sparsity(0.5).seed(1).generate();
+        let s1: Arc<dyn ColumnSource> = Arc::new(InMemorySource::new(&ds));
+        let s2: Arc<dyn ColumnSource> = Arc::new(InMemorySource::new(&ds));
+        let id1 = cache.source_id(&s1);
+        assert_eq!(cache.source_id(&s1), id1, "same live Arc, same id");
+        assert_ne!(cache.source_id(&s2), id1, "distinct sources, distinct ids");
+        cache
+            .get_or_build(key(id1, 0), true, || Ok(Substrate::build(bits(1), NativeKind::Bitpack)))
+            .unwrap();
+        assert_eq!(cache.len(), 1);
+        cache.purge_source(id1);
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn substrate_grams_match_uncached_routines() {
+        let a = bits(1);
+        let b = bits(2);
+        for kind in [NativeKind::Bitpack, NativeKind::Dense, NativeKind::Sparse] {
+            let sa = Substrate::build(a.clone(), kind);
+            let sb = Substrate::build(b.clone(), kind);
+            assert_eq!(sa.gram().max_abs_diff(&a.gram()), 0.0, "{kind:?} diag");
+            assert_eq!(
+                sa.gram_cross(&sb).unwrap().max_abs_diff(&a.gram_cross(&b).unwrap()),
+                0.0,
+                "{kind:?} cross"
+            );
+        }
+        let sa = Substrate::build(a, NativeKind::Bitpack);
+        let sb = Substrate::build(b, NativeKind::Dense);
+        assert!(sa.gram_cross(&sb).is_err(), "mixed kinds must be rejected");
+    }
+
+    #[test]
+    fn cache_plan_resolution() {
+        // explicit budget wins, task budget untouched
+        assert_eq!(cache_plan(Some(64), true, 1000), (Some(64), 1000));
+        assert_eq!(cache_plan(Some(64), false, 0), (Some(64), 0));
+        // Some(0) disables
+        assert_eq!(cache_plan(Some(0), true, 1000), (None, 1000));
+        // auto: carve for out-of-core, off for in-memory
+        let (cache, task) = cache_plan(None, true, 1000);
+        assert_eq!(cache, Some(500));
+        assert_eq!(task, 500);
+        assert_eq!(cache_plan(None, false, 1000), (None, 1000));
+    }
+
+    #[test]
+    fn concurrent_get_or_build_is_consistent() {
+        let cache = Arc::new(BlockCache::new(1 << 20));
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let cache = Arc::clone(&cache);
+                s.spawn(move || {
+                    for i in 0..50 {
+                        let start = (i % 4) * 4;
+                        let v = cache
+                            .get_or_build(key(1, start), true, || {
+                                Ok(Substrate::build(bits(start as u64), NativeKind::Bitpack))
+                            })
+                            .unwrap();
+                        let want = bits(start as u64);
+                        let Substrate::Bits(got) = &*v else { panic!() };
+                        assert_eq!(got.words(), want.words());
+                    }
+                });
+            }
+        });
+        let s = cache.stats();
+        assert_eq!(s.hits + s.misses, 8 * 50);
+        assert_eq!(cache.len(), 4);
+    }
+}

@@ -11,11 +11,11 @@
 //! blocks over a channel and one collector thread feeds the sink, so
 //! high worker counts never contend on a global `Mutex<Mat64>`.
 
+use super::blockcache::{CacheHandle, Substrate};
 use super::planner::{plan_blocks, BlockPlan, BlockTask};
 use super::progress::Progress;
 use crate::data::colstore::{ColumnSource, InMemorySource};
 use crate::data::dataset::BinaryDataset;
-use crate::linalg::csr::CsrMatrix;
 use crate::linalg::dense::Mat64;
 use crate::mi::measure::{combine_block, CombineKind};
 use crate::mi::sink::{DenseSink, MiSink, SinkData};
@@ -26,17 +26,32 @@ use crate::util::error::{Error, Result};
 use crate::util::threadpool::parallel_for;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::sync_channel;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 /// Computes the ones-co-occurrence Gram block for a column-block pair.
 pub trait GramProvider {
     fn name(&self) -> &'static str;
     /// G11 block of shape (t.a_len, t.b_len).
     fn block_gram(&self, t: &BlockTask) -> Result<Mat64>;
+
+    /// How many tasks ahead of the workers the executor may warm via
+    /// [`GramProvider::prefetch`]. 0 (the default) disables the
+    /// readahead stage entirely — right for providers whose fetches
+    /// are cheap or uncacheable.
+    fn readahead(&self) -> usize {
+        0
+    }
+
+    /// Warm whatever state `block_gram(t)` will need, without
+    /// computing the Gram. Called from the executor's readahead thread
+    /// while earlier Grams compute, so fetch latency overlaps compute;
+    /// must be cheap to call redundantly and must swallow errors (the
+    /// demand path will surface them). Default: no-op.
+    fn prefetch(&self, _t: &BlockTask) {}
 }
 
 /// Which native substrate a [`NativeProvider`] uses.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum NativeKind {
     Bitpack,
     Dense,
@@ -52,15 +67,49 @@ pub enum NativeKind {
 /// [`InMemorySource`] the fetch is a column-range memcpy (the
 /// historical whole-dataset cost profile); with a
 /// [`crate::data::colstore::PackedFileSource`] it is one contiguous
-/// seek-read, which is what makes the input side out-of-core.
+/// positioned read, which is what makes the input side out-of-core.
+///
+/// Attach a [`CacheHandle`] ([`NativeProvider::with_cache`]) and the
+/// provider serves substrates through the block cache instead of
+/// rebuilding them per task — with the panel schedule this takes a
+/// streaming run from `O(nb²)` block fetches down to `O(nb)` — and a
+/// non-zero `readahead` lets the executor's prefetch stage pull the
+/// next tasks' blocks while the current Grams compute. Cached and
+/// uncached providers produce bit-identical Grams: the cache stores
+/// exactly the substrate the uncached path would have built.
 pub struct NativeProvider<'a> {
     kind: NativeKind,
     src: &'a dyn ColumnSource,
+    cache: Option<CacheHandle>,
+    readahead: usize,
 }
 
 impl<'a> NativeProvider<'a> {
     pub fn new(src: &'a dyn ColumnSource, kind: NativeKind) -> Self {
-        NativeProvider { kind, src }
+        NativeProvider { kind, src, cache: None, readahead: 0 }
+    }
+
+    /// A provider that serves substrates through `cache` and asks the
+    /// executor for `readahead` tasks of prefetch.
+    pub fn with_cache(
+        src: &'a dyn ColumnSource,
+        kind: NativeKind,
+        cache: CacheHandle,
+        readahead: usize,
+    ) -> Self {
+        NativeProvider { kind, src, cache: Some(cache), readahead }
+    }
+
+    /// The substrate for one column block — through the cache when one
+    /// is attached, built fresh otherwise. `demand` is false only on
+    /// the prefetch path (it routes into the cache's stall/prefetch
+    /// accounting).
+    fn substrate(&self, start: usize, len: usize, demand: bool) -> Result<Arc<Substrate>> {
+        let build = || Ok(Substrate::build(self.src.col_block(start, len)?, self.kind));
+        match &self.cache {
+            Some(handle) => handle.get_or_build(start, len, self.kind, demand, build),
+            None => Ok(Arc::new(build()?)),
+        }
     }
 }
 
@@ -74,38 +123,32 @@ impl GramProvider for NativeProvider<'_> {
     }
 
     fn block_gram(&self, t: &BlockTask) -> Result<Mat64> {
-        let a = self.src.col_block(t.a_start, t.a_len)?;
-        match self.kind {
-            NativeKind::Bitpack => {
-                if t.is_diagonal() {
-                    Ok(a.gram())
-                } else {
-                    let b = self.src.col_block(t.b_start, t.b_len)?;
-                    a.gram_cross(&b)
-                }
-            }
-            NativeKind::Dense => {
-                let da = a.to_mat32();
-                if t.is_diagonal() {
-                    Ok(crate::linalg::blas::gram(&da))
-                } else {
-                    let db = self.src.col_block(t.b_start, t.b_len)?.to_mat32();
-                    crate::linalg::blas::gemm_at_b(&da, &db)
-                }
-            }
-            NativeKind::Sparse => {
-                // word-skipping CSR build: O(words + nnz) per block, so
-                // the sparse substrate's extraction cost stays
-                // proportional to its ones, as the old whole-CSR
-                // col_block was
-                let ca = CsrMatrix::from_bitmatrix(&a);
-                if t.is_diagonal() {
-                    Ok(ca.gram())
-                } else {
-                    let cb = CsrMatrix::from_bitmatrix(&self.src.col_block(t.b_start, t.b_len)?);
-                    ca.gram_cross(&cb)
-                }
-            }
+        // one structural fetch path for every substrate kind: a
+        // diagonal task touches exactly one block, an off-diagonal
+        // task exactly two
+        let a = self.substrate(t.a_start, t.a_len, true)?;
+        if t.is_diagonal() {
+            Ok(a.gram())
+        } else {
+            let b = self.substrate(t.b_start, t.b_len, true)?;
+            a.gram_cross(&b)
+        }
+    }
+
+    fn readahead(&self) -> usize {
+        if self.cache.is_some() {
+            self.readahead
+        } else {
+            0 // nowhere to park a prefetched block without a cache
+        }
+    }
+
+    fn prefetch(&self, t: &BlockTask) {
+        // errors are swallowed by design: the demand path will hit the
+        // same failure and surface it with full context
+        let _ = self.substrate(t.a_start, t.a_len, false);
+        if !t.is_diagonal() {
+            let _ = self.substrate(t.b_start, t.b_len, false);
         }
     }
 }
@@ -228,6 +271,32 @@ pub fn execute_plan_sink_measure<P: GramProvider + Sync>(
     let first_err = std::thread::scope(|scope| {
         let tasks = &plan.tasks;
         let abort = &abort;
+        // Readahead stage: one thread walking the schedule ahead of
+        // the workers, warming each upcoming task's blocks (the
+        // provider parks them in its cache) so fetch latency overlaps
+        // Gram compute instead of stalling a worker. The window is
+        // bounded by worker count + the provider's readahead, so the
+        // cache working set stays small; progress.done() only ever
+        // grows, so the wait loop always terminates, and abort /
+        // cancellation stop the stage early.
+        let readahead = provider.readahead();
+        if readahead > 0 {
+            let window = workers.max(1) + readahead;
+            scope.spawn(move || {
+                for (idx, t) in tasks.iter().enumerate() {
+                    while idx >= progress.done() + window {
+                        if abort.load(Ordering::Relaxed) || progress.is_cancelled() {
+                            return;
+                        }
+                        std::thread::sleep(std::time::Duration::from_micros(200));
+                    }
+                    if abort.load(Ordering::Relaxed) || progress.is_cancelled() {
+                        return;
+                    }
+                    provider.prefetch(t);
+                }
+            });
+        }
         let consumer = scope.spawn(move || {
             let mut first_err: Option<Error> = None;
             for (idx, res) in rx.iter() {

@@ -6,14 +6,19 @@
 //! Pipeline:
 //!
 //! 1. [`planner`] — split the m x m MI matrix into column-block pair
-//!   tasks under a memory budget.
-//! 2. [`scheduler`] — order tasks and track their lifecycle.
+//!   tasks under a memory budget (carving a slice of it for the block
+//!   cache on streaming runs).
+//! 2. [`scheduler`] — order tasks and track their lifecycle (the
+//!   `Panel` order maximizes block reuse for cached streaming runs).
 //! 3. [`executor`] — run tasks on any Gram provider (bit-packed, dense,
 //!   sparse, or the XLA/PJRT artifacts) and stream the combined MI
 //!   blocks into a [`crate::mi::sink::MiSink`] (dense matrix, top-k,
 //!   threshold COO, or disk spill). This is the *single* execution
 //!   engine: the monolithic backends are one-block plans over it.
-//! 4. [`service`] — a long-lived job API (submit / poll / cancel)
+//! 4. [`blockcache`] — a bounded LRU over constructed block substrates
+//!   plus prefetch support, so out-of-core runs fetch each block
+//!   `O(1)` times instead of `O(n_blocks)` and reads overlap compute.
+//! 5. [`service`] — a long-lived job API (submit / poll / cancel)
 //!   with worker pool, progress reporting and admission control
 //!   ([`backpressure`]).
 //!
@@ -23,6 +28,7 @@
 //! integer counts.
 
 pub mod backpressure;
+pub mod blockcache;
 pub mod executor;
 pub mod planner;
 pub mod progress;
@@ -30,6 +36,7 @@ pub mod scheduler;
 pub mod service;
 pub mod streaming;
 
+pub use blockcache::{cache_plan, BlockCache, BlockKey, CacheHandle, CacheStats, Substrate};
 pub use executor::{
     compute_native, compute_native_measure, execute_plan, execute_plan_measure,
     execute_plan_serial, execute_plan_sink, execute_plan_sink_measure,

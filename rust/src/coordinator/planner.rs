@@ -120,14 +120,31 @@ pub fn dense_output_bytes(m: usize) -> usize {
     m * m * 8
 }
 
+/// The memory budget assumed when the caller passes 0 ("no budget"):
+/// 256 MiB, the historical [`matrix_free_block`] default.
+pub const DEFAULT_MEMORY_BUDGET: usize = 256 << 20;
+
 /// Block size for matrix-free sink runs (top-k / threshold / spill)
 /// when none is requested: the largest block whose *task* working set
-/// fits `budget` bytes (default 256 MiB when 0). Unlike the dense
-/// path there is no m x m term, so this stays bounded for any m —
-/// the out-of-core sizing rule documented in ROADMAP.md.
+/// fits `budget` bytes (default [`DEFAULT_MEMORY_BUDGET`] when 0).
+/// Unlike the dense path there is no m x m term, so this stays bounded
+/// for any m — the out-of-core sizing rule documented in ROADMAP.md.
 pub fn matrix_free_block(n: usize, m: usize, budget: usize) -> usize {
-    let budget = if budget == 0 { 256 << 20 } else { budget };
+    let budget = if budget == 0 { DEFAULT_MEMORY_BUDGET } else { budget };
     block_for_budget(n, m, budget)
+}
+
+/// Split a run's memory budget between task working sets and the block
+/// substrate cache (`super::blockcache`), half each: returns
+/// `(task_budget, cache_budget)`. `0` means "no budget" and carves
+/// from [`DEFAULT_MEMORY_BUDGET`]. Keeping the carve inside the
+/// planner keeps `task_bytes` accounting honest — block sizing and the
+/// cache together stay within what the caller asked for, rather than
+/// the cache silently doubling the footprint.
+pub fn carve_cache_budget(budget: usize) -> (usize, usize) {
+    let budget = if budget == 0 { DEFAULT_MEMORY_BUDGET } else { budget };
+    let cache = budget / 2;
+    (budget - cache, cache)
 }
 
 /// Default per-task Gram latency target for
@@ -272,6 +289,17 @@ mod tests {
                 assert!(task_bytes(100_000, b + 1) > budget);
             }
         }
+    }
+
+    #[test]
+    fn cache_carve_preserves_the_budget() {
+        for budget in [0usize, 1, 7, 1 << 20, 256 << 20, usize::MAX - 1] {
+            let (task, cache) = carve_cache_budget(budget);
+            let want = if budget == 0 { DEFAULT_MEMORY_BUDGET } else { budget };
+            assert_eq!(task + cache, want, "budget {budget}");
+            assert!(task >= cache, "task side gets the rounding byte");
+        }
+        assert_eq!(carve_cache_budget(0), (128 << 20, 128 << 20));
     }
 
     #[test]

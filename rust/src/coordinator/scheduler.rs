@@ -1,6 +1,10 @@
 //! Task ordering policies for a block plan. With work-stealing workers
 //! the schedule mostly affects tail latency: issuing the most expensive
-//! tasks first avoids a single large task straggling at the end.
+//! tasks first avoids a single large task straggling at the end. For
+//! out-of-core runs the schedule also controls block *reuse*: the
+//! [`Schedule::Panel`] order keeps consecutive tasks sharing a block so
+//! the substrate cache (`super::blockcache`) turns `O(nb²)` fetches
+//! into `O(nb)`.
 
 use super::planner::BlockTask;
 
@@ -14,6 +18,26 @@ pub enum Schedule {
     /// Diagonal blocks first (warms per-column state, useful for
     /// providers that cache per-block packing).
     DiagonalFirst,
+    /// Cache-aware panel order: fix block `a`, sweep `b` — and sweep
+    /// in *serpentine* direction (alternate panels reversed), so the
+    /// block at a panel's turn is reused immediately by the next
+    /// panel's first task. With a substrate cache that holds one
+    /// panel's pinned block plus the sweeping block, every task after
+    /// the first in a panel needs exactly one new fetch; this is the
+    /// order that realizes the cache's `O(nb)`-fetch floor.
+    Panel,
+}
+
+impl Schedule {
+    /// Stable lowercase name, for `SinkMeta` / logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            Schedule::Sequential => "sequential",
+            Schedule::LargestFirst => "largest-first",
+            Schedule::DiagonalFirst => "diagonal-first",
+            Schedule::Panel => "panel",
+        }
+    }
 }
 
 /// Order `tasks` in place according to `policy` (stable).
@@ -25,6 +49,24 @@ pub fn order_tasks(tasks: &mut [BlockTask], policy: Schedule) {
         }
         Schedule::DiagonalFirst => {
             tasks.sort_by_key(|t| !t.is_diagonal());
+        }
+        Schedule::Panel => {
+            tasks.sort_by(|x, y| (x.a_start, x.b_start).cmp(&(y.a_start, y.b_start)));
+            // reverse the b-sweep of every other panel (serpentine)
+            let mut i = 0;
+            let mut flip = false;
+            while i < tasks.len() {
+                let a = tasks[i].a_start;
+                let mut j = i;
+                while j < tasks.len() && tasks[j].a_start == a {
+                    j += 1;
+                }
+                if flip {
+                    tasks[i..j].reverse();
+                }
+                flip = !flip;
+                i = j;
+            }
         }
     }
 }
@@ -66,8 +108,43 @@ mod tests {
     }
 
     #[test]
+    fn panel_order_is_serpentine() {
+        let mut t = plan_blocks(16, 4).unwrap().tasks; // 4 blocks, 10 tasks
+        order_tasks(&mut t, Schedule::Panel);
+        let starts: Vec<(usize, usize)> = t.iter().map(|x| (x.a_start, x.b_start)).collect();
+        assert_eq!(
+            starts,
+            vec![
+                (0, 0),
+                (0, 4),
+                (0, 8),
+                (0, 12),
+                (4, 12), // panel 1 reversed: reuses block 12 at the turn
+                (4, 8),
+                (4, 4),
+                (8, 8), // panel 2 forward again: reuses block 8
+                (8, 12),
+                (12, 12),
+            ]
+        );
+    }
+
+    #[test]
+    fn schedule_names_are_stable() {
+        assert_eq!(Schedule::Sequential.name(), "sequential");
+        assert_eq!(Schedule::LargestFirst.name(), "largest-first");
+        assert_eq!(Schedule::DiagonalFirst.name(), "diagonal-first");
+        assert_eq!(Schedule::Panel.name(), "panel");
+    }
+
+    #[test]
     fn ordering_preserves_the_task_set() {
-        for policy in [Schedule::Sequential, Schedule::LargestFirst, Schedule::DiagonalFirst] {
+        for policy in [
+            Schedule::Sequential,
+            Schedule::LargestFirst,
+            Schedule::DiagonalFirst,
+            Schedule::Panel,
+        ] {
             let mut t = sample();
             order_tasks(&mut t, policy);
             let mut a = t;

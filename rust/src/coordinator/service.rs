@@ -4,9 +4,11 @@
 //! the `bulkmi serve` CLI mode and the e2e example.
 
 use super::backpressure::Semaphore;
+use super::blockcache::{cache_plan, run_reports, BlockCache, CacheHandle};
 use super::executor::{execute_plan_sink_measure, NativeProvider};
 use super::planner::{
-    block_policy, matrix_free_block, plan_blocks, BlockPlan, DEFAULT_TASK_LATENCY_SECS,
+    block_policy, carve_cache_budget, matrix_free_block, plan_blocks, BlockPlan,
+    DEFAULT_TASK_LATENCY_SECS,
 };
 use super::progress::Progress;
 use super::scheduler::{order_tasks, Schedule};
@@ -65,7 +67,21 @@ pub struct JobSpec {
     pub block_cols: usize,
     /// Worker threads *within* the job's plan execution.
     pub inner_workers: usize,
-    pub schedule: Schedule,
+    /// Task ordering. `None` = let the service decide: the
+    /// cache-friendly [`Schedule::Panel`] for cached out-of-core jobs,
+    /// [`Schedule::LargestFirst`] (best tail behaviour) otherwise.
+    pub schedule: Option<Schedule>,
+    /// Block-substrate cache budget in bytes. `None` = auto: enable
+    /// the service's shared cache for out-of-core sources, skip it for
+    /// in-memory ones (their fetches are memcpys). `Some(0)` disables
+    /// the cache; any other value gives the job a private cache of
+    /// that size.
+    pub cache_bytes: Option<usize>,
+    /// Tasks of readahead for the executor's prefetch stage (0
+    /// disables; only active when a cache is attached). Default 1 —
+    /// double-buffering: the next task's blocks load while the current
+    /// Grams compute.
+    pub readahead: usize,
     /// Where the combined blocks go (dense matrix by default).
     pub sink: SinkSpec,
     /// Which association measure the combine stage computes from the
@@ -86,7 +102,9 @@ impl Default for JobSpec {
             backend: Backend::BulkBitpack,
             block_cols: 0,
             inner_workers: 1,
-            schedule: Schedule::LargestFirst,
+            schedule: None,
+            cache_bytes: None,
+            readahead: 1,
             sink: SinkSpec::Dense,
             measure: CombineKind::Mi,
             task_latency_secs: DEFAULT_TASK_LATENCY_SECS,
@@ -109,15 +127,17 @@ fn plan_for_job(
     src: &dyn ColumnSource,
     spec: &JobSpec,
     probe: Option<&ProbeReport>,
+    task_budget: usize,
 ) -> Result<(BlockPlan, BlockSizing)> {
     let (n_rows, m) = (src.n_rows(), src.n_cols());
     // In-memory sources keep the historical monolithic fallback (block
     // 0 = single-task plan). An out-of-core source must never plan
     // monolithically — that one task's col_block(0, m) fetch would
     // materialize the whole source — so its fallback is the bounded
-    // matrix-free memory rule instead.
+    // matrix-free memory rule instead, sized by the budget left after
+    // the cache carve so cache + task working set stay honest.
     let fallback = if src.out_of_core() {
-        (matrix_free_block(n_rows, m, 0), "budget")
+        (matrix_free_block(n_rows, m, task_budget), "budget")
     } else {
         (0, "monolithic")
     };
@@ -126,7 +146,7 @@ fn plan_for_job(
         probe.map(ProbeReport::chosen_throughput),
         n_rows,
         m,
-        0,
+        task_budget,
         spec.task_latency_secs,
         fallback,
     );
@@ -158,6 +178,11 @@ pub struct JobService {
     admission: Semaphore,
     next_id: AtomicU64,
     metrics: Arc<Metrics>,
+    /// Shared block-substrate cache for auto-cached jobs: process-wide
+    /// across the service's jobs, so repeated jobs over the same
+    /// `Arc`'d source (the `serve --input` pattern) reuse each other's
+    /// blocks. Sized by the default budget carve.
+    cache: Arc<BlockCache>,
 }
 
 impl JobService {
@@ -170,6 +195,7 @@ impl JobService {
             admission: Semaphore::new(max_queued.max(1)),
             next_id: AtomicU64::new(1),
             metrics: Arc::new(Metrics::new()),
+            cache: Arc::new(BlockCache::new(carve_cache_budget(0).1)),
         }
     }
 
@@ -227,6 +253,7 @@ impl JobService {
 
         let jobs = Arc::clone(&self.jobs);
         let metrics = Arc::clone(&self.metrics);
+        let shared_cache = Arc::clone(&self.cache);
         self.pool
             .submit(move || {
                 let _permit = permit; // released when the job finishes
@@ -236,10 +263,39 @@ impl JobService {
                 }
                 jobs.lock().unwrap().get_mut(&id).unwrap().status = JobStatus::Running(0.0);
                 let result = spec.backend.resolve_source(&*src).and_then(|(resolved, probe)| {
-                    let (mut plan, sizing) = plan_for_job(&*src, &spec, probe.as_ref())?;
-                    order_tasks(&mut plan.tasks, spec.schedule);
+                    // cache decision first: the carve shrinks the task
+                    // budget the plan is sized under
+                    let (cache_budget, task_budget) =
+                        cache_plan(spec.cache_bytes, src.out_of_core(), 0);
+                    let cache: Option<Arc<BlockCache>> = match (cache_budget, spec.cache_bytes) {
+                        (None, _) => None,
+                        // auto-enabled: the service's shared cache
+                        (Some(_), None) => Some(Arc::clone(&shared_cache)),
+                        // explicit budget: a private per-job cache
+                        (Some(n), Some(_)) => Some(Arc::new(BlockCache::new(n))),
+                    };
+                    let (mut plan, sizing) =
+                        plan_for_job(&*src, &spec, probe.as_ref(), task_budget)?;
+                    let schedule = spec.schedule.unwrap_or(
+                        if cache.is_some() && src.out_of_core() {
+                            Schedule::Panel
+                        } else {
+                            Schedule::LargestFirst
+                        },
+                    );
+                    order_tasks(&mut plan.tasks, schedule);
                     progress.set_total(plan.tasks.len());
-                    let provider = NativeProvider::new(&*src, resolved.native_kind());
+                    let provider = match &cache {
+                        Some(c) => NativeProvider::with_cache(
+                            &*src,
+                            resolved.native_kind(),
+                            CacheHandle::for_source(Arc::clone(c), &src),
+                            spec.readahead,
+                        ),
+                        None => NativeProvider::new(&*src, resolved.native_kind()),
+                    };
+                    let io0 = src.io_stats();
+                    let cache0 = cache.as_ref().map(|c| c.stats());
                     let mut sink = spec.sink.build_for(src.n_cols(), src.n_rows(), spec.measure)?;
                     metrics.time("job_secs", || {
                         execute_plan_sink_measure(
@@ -260,6 +316,21 @@ impl JobService {
                     out.meta.measure = Some(spec.measure.name().to_string());
                     out.meta.probe = probe;
                     out.meta.sizing = Some(sizing);
+                    out.meta.schedule = Some(schedule.name());
+                    let (io, cache_report) = run_reports(&*src, io0, cache.as_deref().zip(cache0));
+                    if let Some(io) = &io {
+                        metrics.counter("io_bytes_read").add(io.bytes_read);
+                        metrics.counter("io_reads").add(io.reads);
+                    }
+                    if let Some(cr) = &cache_report {
+                        metrics.counter("cache_hits").add(cr.hits);
+                        metrics.counter("cache_misses").add(cr.misses);
+                        metrics.counter("cache_evictions").add(cr.evictions);
+                        metrics.counter("cache_prefetched").add(cr.prefetched);
+                        metrics.histogram("cache_stall_secs").observe(cr.stall_secs);
+                    }
+                    out.meta.io = io;
+                    out.meta.cache = cache_report;
                     Ok(out)
                 });
                 let status = match result {
@@ -499,6 +570,54 @@ mod tests {
         assert_eq!(sizing.source, "budget");
         let got = out.into_dense().unwrap();
         assert_eq!(got.max_abs_diff(&want), 0.0, "streamed job == in-memory result");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn packed_job_cache_cuts_bytes_read_and_stays_bit_identical() {
+        use crate::data::colstore::PackedFileSource;
+        use crate::data::io;
+        let svc = JobService::new(1, 4);
+        let ds = SynthSpec::new(256, 64).sparsity(0.6).seed(53).generate();
+        let want = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+        let path =
+            std::env::temp_dir().join(format!("bulkmi-svc-cache-{}.bmat", std::process::id()));
+        io::write_bmat_v2(&ds, &path).unwrap();
+
+        // block_cols 8 -> 8 column blocks, 36 tasks: the acceptance
+        // scenario from ISSUE 6. Run uncached first, then cached, each
+        // against its own source so the io_stats deltas are per-run.
+        let mut bytes = Vec::new();
+        for cache_bytes in [Some(0), None] {
+            let src: Arc<dyn ColumnSource> = Arc::new(PackedFileSource::open(&path).unwrap());
+            let spec = JobSpec {
+                block_cols: 8,
+                inner_workers: 2,
+                cache_bytes,
+                ..Default::default()
+            };
+            let h = svc.submit_source(Arc::clone(&src), spec).unwrap();
+            let JobStatus::Done(out) = svc.wait(h).unwrap() else { panic!() };
+            let io = out.meta.io.clone().expect("packed jobs report io");
+            assert_eq!(io.payload_bytes, 64 * 4 * 8, "64 cols x 4 words x 8 bytes");
+            assert!(io.read_amplification > 0.0);
+            if cache_bytes.is_none() {
+                assert_eq!(out.meta.schedule, Some("panel"));
+                let cr = out.meta.cache.clone().expect("cached jobs report the cache");
+                assert!(cr.hits > 0, "panel schedule must produce hits: {cr:?}");
+            } else {
+                assert_eq!(out.meta.schedule, Some("largest-first"));
+                assert!(out.meta.cache.is_none(), "cache_bytes=0 disables the cache");
+            }
+            let got = out.into_dense().unwrap();
+            assert_eq!(got.max_abs_diff(&want), 0.0, "cached == uncached == monolithic");
+            bytes.push(io.bytes_read);
+        }
+        let (uncached, cached) = (bytes[0], bytes[1]);
+        assert!(
+            uncached >= 2 * cached,
+            "cache + panel schedule must cut bytes read >= 2x: uncached {uncached}, cached {cached}"
+        );
         let _ = std::fs::remove_file(&path);
     }
 

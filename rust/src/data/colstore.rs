@@ -13,16 +13,21 @@
 //! * [`InMemorySource`] — wraps a packed [`BinaryDataset`] (one up-front
 //!   pack, block fetches are column-range memcpys). Identical behavior
 //!   and cost profile to the historical whole-dataset path.
-//! * [`PackedFileSource`] — seek-reads blocks out of a column-major
-//!   bit-packed `.bmat` v2 file (see `crate::data::io`), 8x smaller
-//!   than v1's byte cells; a block read touches only the requested
-//!   columns' words, so peak RAM is `task_bytes(n, b)` regardless of
-//!   how large the file is.
+//! * [`PackedFileSource`] — positioned-reads blocks out of a
+//!   column-major bit-packed `.bmat` v2 file (see `crate::data::io`),
+//!   8x smaller than v1's byte cells; a block read touches only the
+//!   requested columns' words, so peak RAM is `task_bytes(n, b)`
+//!   regardless of how large the file is. Reads carry no shared file
+//!   cursor (`pread`-style), so workers fetch concurrently, and
+//!   per-source [`IoStats`] feed the engine's read-amplification
+//!   reporting.
 //! * [`BinaryDataset`] itself implements the trait (packing the
 //!   requested block per fetch) so existing `&BinaryDataset` call sites
 //!   coerce to `&dyn ColumnSource` unchanged — convenient for tests and
 //!   one-shot monolithic plans; repeated-fetch paths should prefer
-//!   [`InMemorySource`].
+//!   [`InMemorySource`] (one up-front pack) or run behind the
+//!   substrate cache (`crate::coordinator::blockcache`), which
+//!   memoizes each block's constructed substrate.
 //!
 //! Every implementation serves *identical bits* for identical inputs —
 //! the round-trip property tested in `rust/tests/colstore.rs` — so the
@@ -32,9 +37,36 @@ use super::dataset::BinaryDataset;
 use super::io;
 use crate::linalg::bitmat::BitMatrix;
 use crate::util::error::{Error, Result};
-use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Cumulative read-side counters of an instrumented source (see
+/// [`ColumnSource::io_stats`]). Take a snapshot before a run and
+/// [`IoStats::since`] after it for per-run numbers; dividing
+/// `bytes_read` by the source's payload size gives the run's
+/// *read-amplification factor* — 1.0 means each block was read exactly
+/// once, the floor the block cache aims for.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct IoStats {
+    /// Payload bytes read from storage.
+    pub bytes_read: u64,
+    /// Read calls issued.
+    pub reads: u64,
+    /// Wall time spent inside read calls.
+    pub read_secs: f64,
+}
+
+impl IoStats {
+    /// Counters accumulated since the `earlier` snapshot.
+    pub fn since(&self, earlier: &IoStats) -> IoStats {
+        IoStats {
+            bytes_read: self.bytes_read.saturating_sub(earlier.bytes_read),
+            reads: self.reads.saturating_sub(earlier.reads),
+            read_secs: (self.read_secs - earlier.read_secs).max(0.0),
+        }
+    }
+}
 
 /// A provider of bit-packed column blocks — the blockwise engine's
 /// input abstraction ([`crate::coordinator::executor::NativeProvider`]
@@ -73,6 +105,22 @@ pub trait ColumnSource: Send + Sync {
     /// (in-memory sources, where monolithic is cheapest).
     fn out_of_core(&self) -> bool {
         false
+    }
+
+    /// Cumulative read counters, when the source is instrumented.
+    /// `None` (the default) means reads are free or untracked —
+    /// in-memory sources. [`PackedFileSource`] reports real disk
+    /// traffic here, which is what the executor's read-amplification
+    /// reporting is built on.
+    fn io_stats(&self) -> Option<IoStats> {
+        None
+    }
+
+    /// Total payload bytes the source holds (the denominator of the
+    /// read-amplification factor), when known. `None` for sources
+    /// without a meaningful on-storage payload.
+    fn payload_bytes_hint(&self) -> Option<u64> {
+        None
     }
 
     /// All column counts, fetched in `chunk_cols`-sized blocks so no
@@ -140,12 +188,16 @@ impl ColumnSource for InMemorySource {
 }
 
 /// `BinaryDataset` as a column source: packs the requested block from
-/// the row-major bytes on every fetch. Fine for tests and one-shot
-/// monolithic plans; blockwise runs that fetch each block `O(n_blocks)`
-/// times should wrap the dataset in [`InMemorySource`] instead (one
-/// up-front pack). Note the *inherent* `BinaryDataset::col_block`
-/// returns a `BinaryDataset` and takes precedence under method syntax;
-/// this trait impl is reached through `&dyn ColumnSource`.
+/// the row-major bytes on every fetch — an `O(n·b)` bit-twiddling pass
+/// per fetch, not a memcpy. Fine for tests and one-shot monolithic
+/// plans; blockwise runs that fetch each block `O(n_blocks)` times
+/// must wrap the dataset in [`InMemorySource`] instead (one up-front
+/// pack — `compute_native_measure` and the job service both do) or
+/// attach the substrate cache (`crate::coordinator::blockcache`),
+/// which memoizes the packed block after the first fetch. Note the
+/// *inherent* `BinaryDataset::col_block` returns a `BinaryDataset` and
+/// takes precedence under method syntax; this trait impl is reached
+/// through `&dyn ColumnSource`.
 impl ColumnSource for BinaryDataset {
     fn n_rows(&self) -> usize {
         BinaryDataset::n_rows(self)
@@ -193,23 +245,89 @@ impl ColumnSource for BinaryDataset {
     }
 }
 
+/// A file read at explicit offsets with no shared cursor, so
+/// concurrent block reads never serialize on a seek lock: `pread` on
+/// Unix, `seek_read` on Windows, and a `Mutex` + seek fallback
+/// elsewhere. The shared-cursor `Mutex<File>` this replaces was the
+/// scaling limit of multi-worker streaming runs — every worker's read
+/// queued behind one file position.
+struct PositionedFile {
+    #[cfg(any(unix, windows))]
+    file: std::fs::File,
+    #[cfg(not(any(unix, windows)))]
+    file: std::sync::Mutex<std::fs::File>,
+}
+
+impl PositionedFile {
+    fn new(file: std::fs::File) -> Self {
+        #[cfg(any(unix, windows))]
+        {
+            PositionedFile { file }
+        }
+        #[cfg(not(any(unix, windows)))]
+        {
+            PositionedFile { file: std::sync::Mutex::new(file) }
+        }
+    }
+
+    /// Fill `buf` from `offset`; does not touch any file cursor on
+    /// unix/windows, so it is safe to call from many threads at once.
+    fn read_exact_at(&self, buf: &mut [u8], offset: u64) -> std::io::Result<()> {
+        #[cfg(unix)]
+        {
+            std::os::unix::fs::FileExt::read_exact_at(&self.file, buf, offset)
+        }
+        #[cfg(windows)]
+        {
+            use std::os::windows::fs::FileExt;
+            let mut pos = 0usize;
+            while pos < buf.len() {
+                match self.file.seek_read(&mut buf[pos..], offset + pos as u64) {
+                    Ok(0) => {
+                        return Err(std::io::Error::new(
+                            std::io::ErrorKind::UnexpectedEof,
+                            "failed to fill whole buffer",
+                        ))
+                    }
+                    Ok(n) => pos += n,
+                    Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                    Err(e) => return Err(e),
+                }
+            }
+            Ok(())
+        }
+        #[cfg(not(any(unix, windows)))]
+        {
+            use std::io::{Read, Seek, SeekFrom};
+            let mut f = self.file.lock().unwrap();
+            f.seek(SeekFrom::Start(offset))?;
+            f.read_exact(buf)
+        }
+    }
+}
+
 /// Streaming column source over a `.bmat` v2 file: column-major
 /// bit-packed 64-bit words, so a block fetch is one contiguous
-/// seek-read of exactly the requested columns' words — no row-height
-/// pass, no unpack/repack. Peak RAM for a fetch is `len * ⌈n/64⌉ * 8`
-/// bytes, independent of the file's total size.
+/// positioned read of exactly the requested columns' words — no
+/// row-height pass, no unpack/repack. Peak RAM for a fetch is
+/// `len * ⌈n/64⌉ * 8` bytes, independent of the file's total size.
 ///
-/// Reads go through a positioned seek under a `Mutex` (portable; block
-/// reads are large, so the serialized syscall count stays negligible
-/// next to the Gram work, and disk bandwidth is the real bound).
+/// Reads use positioned I/O ([`PositionedFile`]) with no shared file
+/// cursor, so concurrent workers and the prefetch stage read in
+/// parallel; per-source counters ([`ColumnSource::io_stats`]) track
+/// bytes, read calls, and read wall time for the engine's
+/// read-amplification reporting.
 pub struct PackedFileSource {
-    file: Mutex<std::fs::File>,
+    file: PositionedFile,
     path: PathBuf,
     n_rows: usize,
     n_cols: usize,
     words_per_col: usize,
     payload_off: u64,
     names: Option<Vec<String>>,
+    bytes_read: AtomicU64,
+    reads: AtomicU64,
+    read_nanos: AtomicU64,
 }
 
 impl PackedFileSource {
@@ -235,13 +353,16 @@ impl PackedFileSource {
             )));
         }
         Ok(PackedFileSource {
-            file: Mutex::new(f),
+            file: PositionedFile::new(f),
             path: path.to_path_buf(),
             n_rows: header.n_rows,
             n_cols: header.n_cols,
             words_per_col,
             payload_off: header.payload_off,
             names: header.names,
+            bytes_read: AtomicU64::new(0),
+            reads: AtomicU64::new(0),
+            read_nanos: AtomicU64::new(0),
         })
     }
 
@@ -286,18 +407,40 @@ impl ColumnSource for PackedFileSource {
     fn col_block(&self, start: usize, len: usize) -> Result<BitMatrix> {
         block_bounds(start, len, self.n_cols)?;
         let words = len * self.words_per_col;
-        let mut bytes = vec![0u8; words * 8];
-        {
-            let mut f = self.file.lock().unwrap();
-            let off = self.payload_off + (start * self.words_per_col) as u64 * 8;
-            f.seek(SeekFrom::Start(off))?;
-            f.read_exact(&mut bytes)?;
-        }
         let mut data = vec![0u64; words];
-        for (w, chunk) in data.iter_mut().zip(bytes.chunks_exact(8)) {
-            *w = u64::from_le_bytes(chunk.try_into().expect("chunks_exact(8)"));
+        // read straight into the u64 buffer's byte view — no
+        // intermediate Vec<u8>, no second copy. Viewing u64 storage as
+        // bytes is always alignment-safe (u64 align >= u8), and for
+        // words == 0 the dangling pointer is valid for a length of 0.
+        let bytes: &mut [u8] = unsafe {
+            std::slice::from_raw_parts_mut(data.as_mut_ptr().cast::<u8>(), words * 8)
+        };
+        let off = self.payload_off + (start * self.words_per_col) as u64 * 8;
+        let t0 = Instant::now();
+        self.file.read_exact_at(bytes, off)?;
+        self.read_nanos.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        self.bytes_read.fetch_add((words * 8) as u64, Ordering::Relaxed);
+        self.reads.fetch_add(1, Ordering::Relaxed);
+        // the file stores little-endian words; on LE hosts the bytes
+        // already are the words, elsewhere fix them up in place
+        if cfg!(target_endian = "big") {
+            for w in data.iter_mut() {
+                *w = u64::from_le(*w);
+            }
         }
         BitMatrix::from_packed_cols(self.n_rows, len, data)
+    }
+
+    fn io_stats(&self) -> Option<IoStats> {
+        Some(IoStats {
+            bytes_read: self.bytes_read.load(Ordering::Relaxed),
+            reads: self.reads.load(Ordering::Relaxed),
+            read_secs: self.read_nanos.load(Ordering::Relaxed) as f64 / 1e9,
+        })
+    }
+
+    fn payload_bytes_hint(&self) -> Option<u64> {
+        Some(self.payload_bytes())
     }
 }
 
@@ -363,5 +506,24 @@ mod tests {
         assert_eq!(src.all_col_counts(3).unwrap(), ds.col_counts());
         assert_eq!(src.to_dataset().unwrap().bytes(), ds.bytes());
         assert!(src.col_block(13, 1).is_err());
+    }
+
+    #[test]
+    fn packed_file_source_accounts_bytes_read() {
+        let ds = SynthSpec::new(130, 8).sparsity(0.5).seed(11).generate();
+        let path = tmpdir().join("iostats.bmat");
+        io::write_bmat_v2(&ds, &path).unwrap();
+        let src = PackedFileSource::open(&path).unwrap();
+        assert!(InMemorySource::new(&ds).io_stats().is_none());
+        let before = src.io_stats().unwrap();
+        assert_eq!(before, IoStats::default());
+        // 130 rows -> 3 words per column, 8 bytes each
+        src.col_block(2, 4).unwrap();
+        src.col_block(0, 8).unwrap();
+        let d = src.io_stats().unwrap().since(&before);
+        assert_eq!(d.reads, 2);
+        assert_eq!(d.bytes_read, (4 + 8) * 3 * 8);
+        assert_eq!(src.payload_bytes_hint(), Some(8 * 3 * 8));
+        std::fs::remove_file(&path).ok();
     }
 }

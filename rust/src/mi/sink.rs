@@ -150,6 +150,56 @@ pub struct SinkMeta {
     /// How the executed plan's column-block width was decided, when the
     /// driving layer planned blockwise.
     pub sizing: Option<BlockSizing>,
+    /// Read-side I/O of the run, when the source is instrumented
+    /// (file-backed sources; `None` for in-memory runs).
+    pub io: Option<IoReport>,
+    /// Block-substrate cache behaviour, when a cache was attached.
+    pub cache: Option<CacheReport>,
+    /// Task-ordering policy of the executed plan
+    /// ([`crate::coordinator::scheduler::Schedule::name`]).
+    pub schedule: Option<&'static str>,
+}
+
+/// Read-side I/O of one run against an instrumented
+/// [`crate::data::colstore::ColumnSource`] (deltas over the run, not
+/// process totals), recorded in [`SinkMeta`] so the streaming path's
+/// read amplification is auditable per run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct IoReport {
+    /// Payload bytes read from storage during the run.
+    pub bytes_read: u64,
+    /// Read calls issued during the run.
+    pub reads: u64,
+    /// Wall time spent inside read calls.
+    pub read_secs: f64,
+    /// The source's total payload size (the read-amplification
+    /// denominator).
+    pub payload_bytes: u64,
+    /// `bytes_read / payload_bytes` — 1.0 means every block was read
+    /// exactly once (the block cache's floor); an uncached blockwise
+    /// run over `nb` blocks reads ~`nb/2 + 1/2` times the payload.
+    pub read_amplification: f64,
+}
+
+/// Block-substrate cache behaviour over one run (deltas, not process
+/// totals), recorded in [`SinkMeta`]. See
+/// `crate::coordinator::blockcache`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CacheReport {
+    /// Substrate requests served from cache.
+    pub hits: u64,
+    /// Substrate requests that fetched + built.
+    pub misses: u64,
+    /// Entries evicted to stay under the byte budget.
+    pub evictions: u64,
+    /// Misses filled by the readahead stage rather than a stalled
+    /// worker.
+    pub prefetched: u64,
+    /// Wall time demand misses spent fetching + building — the I/O
+    /// stall the cache and prefetch exist to hide.
+    pub stall_secs: f64,
+    /// The cache's byte budget for the run.
+    pub budget_bytes: usize,
 }
 
 /// The planner's block-sizing decision for one run, recorded in

@@ -1,0 +1,200 @@
+//! Block-cache integration tests: cached streaming runs must be
+//! bit-identical to uncached ones on every native backend, cache
+//! hit/miss counts must be exactly predictable under a deterministic
+//! schedule, positioned reads must be safe under heavy thread
+//! contention, and diagonal tasks must never fetch a second block.
+
+use bulkmi::coordinator::blockcache::{BlockCache, CacheHandle};
+use bulkmi::coordinator::executor::{
+    execute_plan, execute_plan_sink, NativeKind, NativeProvider,
+};
+use bulkmi::coordinator::planner::plan_blocks;
+use bulkmi::coordinator::progress::Progress;
+use bulkmi::coordinator::scheduler::{order_tasks, Schedule};
+use bulkmi::data::colstore::{ColumnSource, InMemorySource, PackedFileSource};
+use bulkmi::data::io::write_bmat_v2;
+use bulkmi::data::synth::SynthSpec;
+use bulkmi::linalg::bitmat::BitMatrix;
+use bulkmi::mi::sink::{MiSink, SinkData, TopKSink};
+use bulkmi::util::error::Result;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("bulkmi-blockcache-{}-{name}.bmat", std::process::id()))
+}
+
+/// Property: for every native substrate kind, a cached streaming run
+/// (panel order, prefetch on, multiple workers) produces bit-identical
+/// results to the uncached run over the same file — through both the
+/// dense path and a top-k sink.
+#[test]
+fn cached_runs_are_bit_identical_to_uncached() {
+    let ds = SynthSpec::new(300, 48).sparsity(0.8).seed(11).generate();
+    let path = tmp("ident");
+    write_bmat_v2(&ds, &path).unwrap();
+    let src = PackedFileSource::open(&path).unwrap();
+    for kind in [NativeKind::Bitpack, NativeKind::Dense, NativeKind::Sparse] {
+        let plan = plan_blocks(48, 6).unwrap();
+        let progress = Progress::new(plan.tasks.len());
+        let uncached =
+            execute_plan(&src, &plan, &NativeProvider::new(&src, kind), 2, &progress).unwrap();
+
+        let mut plan = plan_blocks(48, 6).unwrap();
+        order_tasks(&mut plan.tasks, Schedule::Panel);
+        let handle = CacheHandle::fresh(Arc::new(BlockCache::new(32 << 20)));
+        let provider = NativeProvider::with_cache(&src, kind, handle, 2);
+        let progress = Progress::new(plan.tasks.len());
+        let cached = execute_plan(&src, &plan, &provider, 3, &progress).unwrap();
+        assert_eq!(cached.max_abs_diff(&uncached), 0.0, "{kind:?}");
+    }
+
+    // the matrix-free sink path agrees pair for pair
+    let mut topk_runs = Vec::new();
+    for cached in [false, true] {
+        let mut plan = plan_blocks(48, 6).unwrap();
+        let handle = CacheHandle::fresh(Arc::new(BlockCache::new(32 << 20)));
+        let provider = if cached {
+            order_tasks(&mut plan.tasks, Schedule::Panel);
+            NativeProvider::with_cache(&src, NativeKind::Bitpack, handle, 1)
+        } else {
+            NativeProvider::new(&src, NativeKind::Bitpack)
+        };
+        let mut sink = TopKSink::global(12);
+        let progress = Progress::new(plan.tasks.len());
+        execute_plan_sink(&src, &plan, &provider, 2, &progress, &mut sink).unwrap();
+        match sink.finish().unwrap().data {
+            SinkData::TopK(pairs) => topk_runs.push(pairs),
+            other => panic!("unexpected sink output {}", other.kind_name()),
+        }
+    }
+    assert_eq!(topk_runs[0], topk_runs[1], "top-k pairs differ cached vs uncached");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// With one worker and no readahead the executor requests substrates in
+/// exact panel order, so the cache's hit/miss/eviction counters are
+/// fully predictable — both unbounded and with a budget of exactly two
+/// entries.
+#[test]
+fn panel_schedule_hit_counts_are_deterministic() {
+    // m = 16, block = 4: panel order is
+    // (0,0) (0,4) (0,8) (0,12) (4,12) (4,8) (4,4) (8,8) (8,12) (12,12)
+    // with per-task requests a then b — 16 requests over 4 blocks.
+    let ds = SynthSpec::new(128, 16).sparsity(0.7).seed(21).generate();
+    let one_substrate_bytes = {
+        // 128 rows = 2 words per column, 4 columns per block
+        2 * 4 * 8
+    };
+
+    // unbounded: every block builds once, every revisit hits
+    let cache = Arc::new(BlockCache::new(1 << 20));
+    run_panel(&ds, &cache);
+    let s = cache.stats();
+    assert_eq!((s.misses, s.hits, s.evictions), (4, 12, 0), "unbounded: {s:?}");
+
+    // capacity of exactly two substrates: hand-simulated LRU gives
+    // 7 misses / 9 hits / 5 evictions for the serpentine order above
+    let cache = Arc::new(BlockCache::new(2 * one_substrate_bytes));
+    run_panel(&ds, &cache);
+    let s = cache.stats();
+    assert_eq!((s.misses, s.hits, s.evictions), (7, 9, 5), "capacity 2: {s:?}");
+}
+
+fn run_panel(ds: &bulkmi::data::dataset::BinaryDataset, cache: &Arc<BlockCache>) {
+    let mut plan = plan_blocks(16, 4).unwrap();
+    order_tasks(&mut plan.tasks, Schedule::Panel);
+    // workers = 1 runs tasks inline in plan order; readahead = 0 keeps
+    // the prefetch thread (and its racy request interleaving) out
+    let provider =
+        NativeProvider::with_cache(ds, NativeKind::Bitpack, CacheHandle::fresh(Arc::clone(cache)), 0);
+    let progress = Progress::new(plan.tasks.len());
+    execute_plan(ds, &plan, &provider, 1, &progress).unwrap();
+}
+
+/// Positioned reads share one file handle with no seek state: many
+/// threads hammering random `col_block` ranges must each get exactly
+/// the bytes an in-memory packing of the same dataset holds.
+#[test]
+fn concurrent_col_block_reads_are_bit_identical() {
+    let n_rows = 997; // odd shape: 16 words per column, last word partial
+    let n_cols = 37;
+    let ds = SynthSpec::new(n_rows, n_cols).sparsity(0.6).seed(31).generate();
+    let path = tmp("concurrent");
+    write_bmat_v2(&ds, &path).unwrap();
+    let src = Arc::new(PackedFileSource::open(&path).unwrap());
+    let reference = ds.to_bitmatrix();
+    let before = src.io_stats().unwrap();
+
+    let expected_bytes: u64 = std::thread::scope(|scope| {
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let src = Arc::clone(&src);
+            let reference = &reference;
+            handles.push(scope.spawn(move || {
+                let mut state = 0x9e37_79b9_7f4a_7c15u64.wrapping_mul(t + 1);
+                let mut bytes = 0u64;
+                for _ in 0..50 {
+                    // LCG per thread: deterministic but thread-unique ranges
+                    state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                    let start = (state >> 33) as usize % n_cols;
+                    state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                    let len = 1 + (state >> 33) as usize % (n_cols - start);
+                    let got = src.col_block(start, len).unwrap();
+                    let want = reference.col_block(start, len).unwrap();
+                    assert_eq!(got.words(), want.words(), "block [{start}, {start}+{len})");
+                    bytes += (len * got.words_per_col() * 8) as u64;
+                }
+                bytes
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).sum()
+    });
+
+    let delta = src.io_stats().unwrap().since(&before);
+    assert_eq!(delta.bytes_read, expected_bytes, "byte accounting");
+    assert_eq!(delta.reads, 8 * 50, "one positioned read per col_block");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A source wrapper counting `col_block` calls. Diagonal tasks must
+/// fetch exactly one block, so an uncached plan over `nb` blocks and
+/// `T` tasks costs `nb` (colsums) + `nb` (diagonals) + `2 (T - nb)`
+/// (off-diagonals) fetches — no hidden re-fetch on any path.
+struct CountingSource {
+    inner: InMemorySource,
+    calls: AtomicUsize,
+}
+
+impl ColumnSource for CountingSource {
+    fn n_rows(&self) -> usize {
+        self.inner.n_rows()
+    }
+
+    fn n_cols(&self) -> usize {
+        self.inner.n_cols()
+    }
+
+    fn names(&self) -> Option<&[String]> {
+        self.inner.names()
+    }
+
+    fn col_block(&self, start: usize, len: usize) -> Result<BitMatrix> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        self.inner.col_block(start, len)
+    }
+}
+
+#[test]
+fn diagonal_tasks_fetch_exactly_one_block() {
+    let ds = SynthSpec::new(200, 16).sparsity(0.5).seed(41).generate();
+    let src = CountingSource { inner: InMemorySource::new(&ds), calls: AtomicUsize::new(0) };
+    let plan = plan_blocks(16, 4).unwrap(); // nb = 4, T = 10
+    let provider = NativeProvider::new(&src, NativeKind::Bitpack);
+    let progress = Progress::new(plan.tasks.len());
+    execute_plan(&src, &plan, &provider, 1, &progress).unwrap();
+    let nb = 4;
+    let t = plan.tasks.len();
+    assert_eq!(src.calls.load(Ordering::Relaxed), nb + nb + 2 * (t - nb));
+}

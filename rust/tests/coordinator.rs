@@ -108,7 +108,12 @@ fn schedules_do_not_change_results() {
     let ds = SynthSpec::new(300, 40).sparsity(0.8).seed(3).generate();
     let provider = NativeProvider::new(&ds, NativeKind::Bitpack);
     let mono = compute_mi(&ds, Backend::BulkBitpack).unwrap();
-    for policy in [Schedule::Sequential, Schedule::LargestFirst, Schedule::DiagonalFirst] {
+    for policy in [
+        Schedule::Sequential,
+        Schedule::LargestFirst,
+        Schedule::DiagonalFirst,
+        Schedule::Panel,
+    ] {
         let mut plan = plan_blocks(40, 7).unwrap();
         order_tasks(&mut plan.tasks, policy);
         let progress = Progress::new(plan.tasks.len());
