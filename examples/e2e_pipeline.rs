@@ -21,11 +21,12 @@
 use bulkmi::coordinator::planner::{block_for_budget, plan_blocks};
 use bulkmi::coordinator::progress::Progress;
 use bulkmi::coordinator::service::{JobService, JobSpec, JobStatus};
-use bulkmi::coordinator::{execute_plan, execute_plan_serial, NativeProvider, XlaProvider};
+use bulkmi::coordinator::{run_plan_dense, run_plan_dense_serial, NativeProvider, XlaProvider};
 use bulkmi::coordinator::executor::NativeKind;
 use bulkmi::data::genomics::GenomicsSpec;
 use bulkmi::data::io;
 use bulkmi::mi::backend::{compute_mi_with, Backend};
+use bulkmi::mi::measure::CombineKind;
 use bulkmi::mi::topk::top_k_pairs;
 use bulkmi::mi::xla::XlaMi;
 use bulkmi::runtime::{ArtifactRegistry, Impl, XlaRuntime};
@@ -111,7 +112,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
     let provider = NativeProvider::new(&ds, NativeKind::Bitpack);
     let progress = Progress::new(plan.tasks.len());
-    let (blockwise, secs) = time_it(|| execute_plan(&ds, &plan, &provider, 1, &progress));
+    let (blockwise, secs) =
+        time_it(|| run_plan_dense(&ds, &plan, &provider, 1, &progress, CombineKind::Mi));
     let blockwise = blockwise?;
     assert_eq!(
         blockwise.max_abs_diff(&bitpack_mi),
@@ -126,7 +128,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         let xprov = XlaProvider::new(xla, Impl::Xla, &ds);
         let xplan = plan_blocks(ds.n_cols(), 256)?;
         let xprog = Progress::new(xplan.tasks.len());
-        let (xmi, xsecs) = time_it(|| execute_plan_serial(&ds, &xplan, &xprov, &xprog));
+        let (xmi, xsecs) =
+            time_it(|| run_plan_dense_serial(&ds, &xplan, &xprov, &xprog, CombineKind::Mi));
         let xmi = xmi?;
         let diff = xmi.max_abs_diff(&reference);
         assert!(diff < 1e-3, "xla blockwise diff {diff}");
@@ -137,7 +140,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let svc = JobService::new(2, 4);
     let h = svc.submit(
         ds.clone(),
-        JobSpec { backend: Backend::BulkBitpack, block_cols: block, ..Default::default() },
+        JobSpec::builder().backend(Backend::BulkBitpack).block_cols(block).build()?,
     )?;
     let status = svc.wait(h)?;
     let JobStatus::Done(out) = status else {

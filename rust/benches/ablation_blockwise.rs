@@ -7,9 +7,10 @@
 use bulkmi::coordinator::executor::NativeKind;
 use bulkmi::coordinator::planner::{dense_output_bytes, plan_blocks, task_bytes};
 use bulkmi::coordinator::progress::Progress;
-use bulkmi::coordinator::{execute_plan, execute_plan_sink, NativeProvider};
+use bulkmi::coordinator::{run_plan, run_plan_dense, NativeProvider};
 use bulkmi::data::synth::SynthSpec;
 use bulkmi::mi::backend::{compute_mi_with, Backend};
+use bulkmi::mi::measure::CombineKind;
 use bulkmi::mi::sink::{MiSink, SinkSpec};
 use bulkmi::util::bench::{emit_json, full_mode, measure, print_header, print_row, Cell};
 
@@ -30,7 +31,7 @@ fn main() {
             let plan = plan_blocks(cols, b).unwrap();
             let secs = measure(|| {
                 let progress = Progress::new(plan.tasks.len());
-                execute_plan(&ds, &plan, &provider, 1, &progress).unwrap()
+                run_plan_dense(&ds, &plan, &provider, 1, &progress, CombineKind::Mi).unwrap()
             });
             (secs, b.to_string())
         };
@@ -72,7 +73,7 @@ fn main() {
             let secs = measure(|| {
                 let mut sink: Box<dyn MiSink> = spec.build(cols2, rows2).unwrap();
                 let progress = Progress::new(plan2.tasks.len());
-                execute_plan_sink(&ds2, &plan2, &provider2, 1, &progress, sink.as_mut())
+                run_plan(&ds2, &plan2, &provider2, 1, &progress, sink.as_mut(), CombineKind::Mi)
                     .unwrap();
                 result_bytes = sink.finish().unwrap().state_bytes();
             });

@@ -14,7 +14,7 @@ pub struct Args {
 }
 
 /// Names that take no value (everything else with `--` expects one).
-const FLAG_NAMES: &[&str] = &["with-xla", "header", "verbose", "quiet", "quick"];
+const FLAG_NAMES: &[&str] = &["with-xla", "header", "verbose", "quiet", "quick", "stdin"];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Self> {

@@ -260,7 +260,7 @@ fn timed_median(reps: usize, mut f: impl FnMut()) -> f64 {
 /// ratio), which are deterministic; wall time on temp-file I/O is not.
 fn bench_ooc(rows: usize, cols: usize, density: f64, seed: u64) -> Result<Vec<BenchEntry>> {
     use crate::coordinator::blockcache::{BlockCache, CacheHandle};
-    use crate::coordinator::executor::{execute_plan_sink, NativeKind, NativeProvider};
+    use crate::coordinator::executor::{run_plan, NativeKind, NativeProvider};
     use crate::coordinator::planner::plan_blocks;
     use crate::coordinator::progress::Progress;
     use crate::coordinator::scheduler::{order_tasks, Schedule};
@@ -295,7 +295,7 @@ fn bench_ooc(rows: usize, cols: usize, density: f64, seed: u64) -> Result<Vec<Be
         let mut sink = TopKSink::global(8);
         let progress = Progress::new(plan.tasks.len());
         let t0 = Instant::now();
-        execute_plan_sink(&src, &plan, &provider, 2, &progress, &mut sink)?;
+        run_plan(&src, &plan, &provider, 2, &progress, &mut sink, CombineKind::Mi)?;
         let secs = t0.elapsed().as_secs_f64().max(1e-9);
         let delta = src.io_stats().unwrap_or_default().since(&before);
         let rel = if cached && delta.bytes_read > 0 {

@@ -1,7 +1,7 @@
 //! Subcommand implementations.
 
 use super::args::Args;
-use crate::config::RunConfig;
+use crate::config::{RunConfig, ServeConfig};
 use crate::coordinator::blockcache::{cache_plan, run_reports, BlockCache, CacheHandle};
 use crate::coordinator::planner::{
     block_policy, matrix_free_block, plan_blocks, plan_with_config, PlannerConfig,
@@ -9,7 +9,7 @@ use crate::coordinator::planner::{
 use crate::coordinator::progress::Progress;
 use crate::coordinator::scheduler::{order_tasks, Schedule};
 use crate::coordinator::service::{JobService, JobSpec, JobStatus};
-use crate::coordinator::{execute_plan_measure, execute_plan_sink_measure, NativeProvider};
+use crate::coordinator::{run_plan, run_plan_dense, NativeProvider};
 use crate::data::colstore::{ColumnSource, InMemorySource, PackedFileSource};
 use crate::data::dataset::BinaryDataset;
 use crate::data::io;
@@ -21,6 +21,7 @@ use crate::mi::sink::{BlockSizing, SinkData, SinkSpec};
 use crate::mi::topk::{top_k_pairs, MiPair};
 use crate::mi::MiMatrix;
 use crate::runtime::ArtifactRegistry;
+use crate::server::{signal, wire, Server, ServerConfig};
 use crate::util::error::{Error, Result};
 use crate::util::timer::{fmt_secs, time_it};
 use std::path::{Path, PathBuf};
@@ -66,16 +67,10 @@ pub fn compute(argv: &[String]) -> Result<()> {
         None => RunConfig::default(),
     };
     if let Some(b) = args.get("backend") {
-        cfg.backend =
-            Backend::parse(b).ok_or_else(|| Error::Parse(format!("unknown backend '{b}'")))?;
+        cfg.backend = wire::parse_backend(b)?;
     }
     if let Some(m) = args.get("measure") {
-        cfg.measure = CombineKind::parse(m).ok_or_else(|| {
-            Error::Parse(format!(
-                "unknown measure '{m}' (expected one of: {})",
-                CombineKind::ALL.map(CombineKind::name).join(" ")
-            ))
-        })?;
+        cfg.measure = wire::parse_measure(m)?;
     }
     cfg.workers = args.get_usize("workers", cfg.workers)?;
     cfg.block_cols = args.get_usize("block-cols", cfg.block_cols)?;
@@ -266,7 +261,7 @@ fn compute_packed(
     let cache0 = cache.as_ref().map(|c| c.stats());
     let progress = Progress::new(plan.tasks.len());
     let t0 = std::time::Instant::now();
-    let mi = execute_plan_measure(&src, &plan, &provider, cfg.workers, &progress, cfg.measure)?;
+    let mi = run_plan_dense(&src, &plan, &provider, cfg.workers, &progress, cfg.measure)?;
     println!(
         "computed {}x{} {} matrix with {} in {}",
         mi.dim(),
@@ -357,7 +352,7 @@ pub fn compute_with_plan(ds: &BinaryDataset, cfg: &RunConfig) -> Result<(MiMatri
         let provider = NativeProvider::new(&src, kind);
         let progress = Progress::new(plan.tasks.len());
         let t0 = std::time::Instant::now();
-        let mi = execute_plan_measure(&src, &plan, &provider, cfg.workers, &progress, cfg.measure)?;
+        let mi = run_plan_dense(&src, &plan, &provider, cfg.workers, &progress, cfg.measure)?;
         Ok((mi, t0.elapsed().as_secs_f64()))
     } else {
         let t0 = std::time::Instant::now();
@@ -431,7 +426,7 @@ fn compute_into_sink(
     let cache0 = cache.as_ref().map(|c| c.stats());
     let progress = Progress::new(plan.tasks.len());
     let t0 = std::time::Instant::now();
-    execute_plan_sink_measure(
+    run_plan(
         src,
         &plan,
         &provider,
@@ -562,8 +557,7 @@ pub fn analyze(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
     let input = PathBuf::from(args.req("input")?);
     let backend = match args.get("backend") {
-        Some(b) => Backend::parse(b)
-            .ok_or_else(|| Error::Parse(format!("unknown backend '{b}'")))?,
+        Some(b) => wire::parse_backend(b)?,
         None => Backend::BulkBitpack,
     };
     let top = args.get_usize("top", 10)?;
@@ -703,6 +697,137 @@ pub fn selftest(argv: &[String]) -> Result<()> {
 
 pub fn serve(argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
+    // Three modes: --listen (or --config with a [serve] section) runs
+    // the HTTP job server, --stdin speaks the same v1 wire schema over
+    // stdin/stdout lines, neither keeps the original local demo /
+    // --input batch behavior.
+    let stdin_mode = args.flag("stdin");
+    let listen = args.get("listen").map(|s| s.to_string());
+    let config_path = args.get("config").map(PathBuf::from);
+    if stdin_mode || listen.is_some() || config_path.is_some() {
+        serve_wire(&args, listen, config_path, stdin_mode)
+    } else {
+        serve_demo(&args)
+    }
+}
+
+/// The serving modes: parse the `[serve]` config + flags, register
+/// `--dataset NAME=PATH` mounts, install the SIGINT/SIGTERM latch, and
+/// run either the HTTP accept loop or the stdin line loop.
+fn serve_wire(
+    args: &Args,
+    listen: Option<String>,
+    config_path: Option<PathBuf>,
+    stdin_mode: bool,
+) -> Result<()> {
+    let mut cfg = match &config_path {
+        Some(p) => ServeConfig::load(p)?,
+        None => ServeConfig::default(),
+    };
+    if let Some(l) = listen {
+        cfg.listen = l;
+    }
+    cfg.workers = args.get_usize("workers", cfg.workers)?.max(1);
+    cfg.max_queued = args.get_usize("max-queued", cfg.max_queued)?.max(1);
+    if let Some(v) = args.get("memory-budget") {
+        let bytes: usize = v.parse().map_err(|_| {
+            Error::Parse(format!("--memory-budget expects bytes, got '{v}' (0 = unbounded)"))
+        })?;
+        cfg.memory_budget = if bytes == 0 { None } else { Some(bytes) };
+    }
+    let mut datasets: Vec<(String, PathBuf)> = Vec::new();
+    for spec in args.get_all("dataset") {
+        let (name, path) = spec.split_once('=').ok_or_else(|| {
+            Error::Parse(format!("--dataset expects NAME=PATH, got '{spec}'"))
+        })?;
+        datasets.push((name.to_string(), PathBuf::from(path)));
+    }
+    args.reject_unknown()?;
+    signal::install();
+
+    if stdin_mode {
+        return serve_stdin(&cfg, &datasets);
+    }
+    let server = Server::bind(&ServerConfig {
+        listen: cfg.listen.clone(),
+        workers: cfg.workers,
+        max_queued: cfg.max_queued,
+        memory_budget: cfg.memory_budget,
+    })?;
+    for (name, path) in &datasets {
+        let (rows, cols) = server.register_dataset(name, path)?;
+        crate::info!("dataset '{name}': {rows}x{cols} from {}", path.display());
+    }
+    server.run()
+}
+
+/// Line protocol: each stdin line is a v1 [`wire::JobRequest`]; the
+/// matching result envelope (or error envelope) is printed on stdout.
+/// Jobs run to completion in submission order — this is the scripting
+/// surface, the HTTP server is the concurrent one.
+fn serve_stdin(cfg: &ServeConfig, datasets: &[(String, PathBuf)]) -> Result<()> {
+    use std::collections::BTreeMap;
+    use std::io::BufRead;
+
+    let svc = match cfg.memory_budget {
+        Some(b) => JobService::with_budget(cfg.workers, cfg.max_queued, b),
+        None => JobService::new(cfg.workers, cfg.max_queued),
+    };
+    let mut sources: BTreeMap<String, Arc<dyn ColumnSource>> = BTreeMap::new();
+    for (name, path) in datasets {
+        let src = crate::server::open_source(path)?;
+        crate::info!(
+            "dataset '{name}': {}x{} from {}",
+            src.n_rows(),
+            src.n_cols(),
+            path.display()
+        );
+        sources.insert(name.clone(), src);
+    }
+    for line in std::io::stdin().lock().lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if signal::requested() {
+            break;
+        }
+        match run_wire_job(&svc, &sources, line) {
+            Ok(json) => println!("{json}"),
+            Err(err) => println!("{}", wire::error_json(&err.to_string())),
+        }
+    }
+    svc.drain();
+    Ok(())
+}
+
+fn run_wire_job(
+    svc: &JobService,
+    sources: &std::collections::BTreeMap<String, Arc<dyn ColumnSource>>,
+    line: &str,
+) -> Result<String> {
+    let req = wire::JobRequest::parse(line)?;
+    let src = sources.get(&req.dataset).cloned().ok_or_else(|| {
+        Error::Parse(format!(
+            "unknown dataset '{}' (registered: {})",
+            req.dataset,
+            if sources.is_empty() {
+                "none".to_string()
+            } else {
+                sources.keys().cloned().collect::<Vec<_>>().join(" ")
+            }
+        ))
+    })?;
+    let handle = svc.submit_source(src, req.spec)?;
+    svc.wait(handle)?;
+    let out = svc.take(handle)?;
+    Ok(wire::result_json(handle.id(), &out))
+}
+
+/// The original local batch demo (and `--input` batch mode): submit
+/// `--jobs` jobs to an in-process service and wait for them all.
+fn serve_demo(args: &Args) -> Result<()> {
     let workers = args.get_usize("workers", crate::util::threadpool::default_workers())?;
     let max_queued = args.get_usize("max-queued", 4)?;
     let jobs = args.get_usize("jobs", 8)?;
@@ -710,14 +835,11 @@ pub fn serve(argv: &[String]) -> Result<()> {
     let sink = SinkSpec::parse(args.get("sink").unwrap_or("dense"))?;
     let input = args.get("input").map(PathBuf::from);
     let backend = match args.get("backend") {
-        Some(b) => Backend::parse(b)
-            .filter(|b| b.is_native())
-            .ok_or_else(|| Error::Parse(format!("unknown native backend '{b}'")))?,
+        Some(b) => wire::parse_native_backend(b)?,
         None => Backend::BulkBitpack,
     };
     let measure = match args.get("measure") {
-        Some(m) => CombineKind::parse(m)
-            .ok_or_else(|| Error::Parse(format!("unknown measure '{m}'")))?,
+        Some(m) => wire::parse_measure(m)?,
         None => CombineKind::Mi,
     };
     args.reject_unknown()?;
@@ -727,13 +849,7 @@ pub fn serve(argv: &[String]) -> Result<()> {
     // otherwise. Without it, each job generates its own demo dataset.
     let shared: Option<Arc<dyn ColumnSource>> = match &input {
         None => None,
-        Some(p) => {
-            if io::is_bmat_v2(p)? {
-                Some(Arc::new(PackedFileSource::open(p)?))
-            } else {
-                Some(Arc::new(InMemorySource::new(&io::load(p)?)))
-            }
-        }
+        Some(p) => Some(crate::server::open_source(p)?),
     };
 
     let svc = JobService::new(workers, max_queued);
@@ -756,7 +872,12 @@ pub fn serve(argv: &[String]) -> Result<()> {
             SinkSpec::Spill { dir } => SinkSpec::Spill { dir: dir.join(format!("job{k}")) },
             other => other.clone(),
         };
-        let spec = JobSpec { backend, block_cols, sink: job_sink, measure, ..Default::default() };
+        let spec = JobSpec::builder()
+            .backend(backend)
+            .block_cols(block_cols)
+            .sink(job_sink)
+            .measure(measure)
+            .build()?;
         loop {
             match svc.submit_source(Arc::clone(&src), spec.clone()) {
                 Ok(h) => {

@@ -55,14 +55,30 @@ COMMANDS:
         [--artifacts DIR]
     selftest    Cross-check every available backend on random data
         [--rows N=500] [--cols M=40] [--with-xla]
-    serve       Run the job service on a stream of jobs
-        [--workers N] [--max-queued Q=4] [--jobs J=8] [--block-cols B]
-        [--backend NAME=bulk-bitpack] [--measure NAME=mi]
-        [--sink dense|topk:K|topk-per-col:K|threshold:T|pvalue:P|spill:DIR]
-        [--input FILE.{csv,bmat}]
-        with --input every job runs over that file (a .bmat v2 file is
-        streamed blockwise off disk); without it, demo datasets are
-        generated per job
+    serve       Run the job server (HTTP, stdin wire, or local demo)
+        HTTP mode:  --listen ADDR:PORT [--dataset NAME=PATH ...]
+            [--workers N=2] [--max-queued Q=64] [--memory-budget BYTES]
+            [--config FILE.toml]   ([serve] section: listen, workers,
+            max_queued, memory_budget; flags override)
+            JSON/HTTP job API over the v1 wire schema: POST /v1/jobs
+            {\"v\":1,\"dataset\":NAME,...}, GET /v1/jobs/ID,
+            GET /v1/jobs/ID/result, POST /v1/jobs/ID/cancel,
+            GET /metrics, POST /v1/admin/drain; --memory-budget caps
+            aggregate resident bytes across concurrent jobs (over-
+            budget jobs queue; interactive sinks jump batch); port 0
+            picks a free port (printed as `serving on http://...`);
+            SIGINT/SIGTERM drain in-flight jobs, then exit 0
+        stdin mode: --stdin [--dataset NAME=PATH ...] [same sizing]
+            one v1 JSON job request per stdin line, one result
+            envelope per stdout line
+        demo mode (no --listen/--stdin/--config):
+            [--workers N] [--max-queued Q=4] [--jobs J=8] [--block-cols B]
+            [--backend NAME=bulk-bitpack] [--measure NAME=mi]
+            [--sink dense|topk:K|topk-per-col:K|threshold:T|pvalue:P|spill:DIR]
+            [--input FILE.{csv,bmat}]
+            with --input every job runs over that file (a .bmat v2 file
+            is streamed blockwise off disk); without it, demo datasets
+            are generated per job
     bench       Deterministic Gram/kernel perf suite (alias: pallas-bench)
         [--quick] [--seed K=42] [--reps R] [--out FILE.json]
         [--baseline FILE.json] [--tolerance F=0.30] [--measure NAME ...]

@@ -205,6 +205,70 @@ impl RunConfig {
     }
 }
 
+/// Typed `[serve]` section for `bulkmi serve --listen` deployments
+/// (the CLI maps it onto [`crate::server::ServerConfig`]); unknown
+/// `serve.` keys are errors, same typo protection as [`RunConfig`].
+/// A `[run]` and `[serve]` section can share one file — each consumer
+/// reads only its own section.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ServeConfig {
+    /// `ADDR:PORT` to listen on (port 0 picks a free port).
+    pub listen: String,
+    /// Job service worker threads (concurrent jobs).
+    pub workers: usize,
+    /// Admission queue slots beyond the running jobs.
+    pub max_queued: usize,
+    /// Aggregate resident-byte cap across concurrent jobs; `None` (or
+    /// an explicit 0) = unbounded.
+    pub memory_budget: Option<usize>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            listen: "127.0.0.1:8371".to_string(),
+            workers: 2,
+            max_queued: 64,
+            memory_budget: None,
+        }
+    }
+}
+
+impl ServeConfig {
+    /// Build from a parsed document; unknown keys under `serve.` are
+    /// errors.
+    pub fn from_raw(raw: &RawConfig) -> Result<Self> {
+        let mut cfg = ServeConfig::default();
+        for key in raw.keys() {
+            if let Some(name) = key.strip_prefix("serve.") {
+                match name {
+                    "listen" | "workers" | "max_queued" | "memory_budget" => {}
+                    other => {
+                        return Err(Error::Config(format!("unknown key serve.{other}")));
+                    }
+                }
+            }
+        }
+        if let Some(l) = raw.get("serve.listen") {
+            cfg.listen = l.to_string();
+        }
+        if let Some(w) = raw.get_usize("serve.workers")? {
+            cfg.workers = w.max(1);
+        }
+        if let Some(q) = raw.get_usize("serve.max_queued")? {
+            cfg.max_queued = q.max(1);
+        }
+        if let Some(b) = raw.get_usize("serve.memory_budget")? {
+            cfg.memory_budget = if b == 0 { None } else { Some(b) };
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_raw(&RawConfig::load(path)?)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -309,5 +373,38 @@ mod tests {
     fn bad_backend_rejected() {
         let raw = RawConfig::parse("[run]\nbackend = \"warp-drive\"\n").unwrap();
         assert!(RunConfig::from_raw(&raw).is_err());
+    }
+
+    #[test]
+    fn serve_config_from_raw() {
+        let raw = RawConfig::parse(
+            "[serve]\nlisten = \"0.0.0.0:9000\"\nworkers = 4\nmax_queued = 8\n\
+             memory_budget = 1048576\n",
+        )
+        .unwrap();
+        let cfg = ServeConfig::from_raw(&raw).unwrap();
+        assert_eq!(cfg.listen, "0.0.0.0:9000");
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.max_queued, 8);
+        assert_eq!(cfg.memory_budget, Some(1 << 20));
+        // zero means unbounded, same convention as the run section
+        let raw = RawConfig::parse("[serve]\nmemory_budget = 0\n").unwrap();
+        assert_eq!(ServeConfig::from_raw(&raw).unwrap().memory_budget, None);
+    }
+
+    #[test]
+    fn serve_and_run_sections_share_a_file() {
+        let raw = RawConfig::parse(
+            "[run]\nworkers = 3\n[serve]\nlisten = \"127.0.0.1:0\"\n",
+        )
+        .unwrap();
+        assert_eq!(RunConfig::from_raw(&raw).unwrap().workers, 3);
+        assert_eq!(ServeConfig::from_raw(&raw).unwrap().listen, "127.0.0.1:0");
+    }
+
+    #[test]
+    fn unknown_serve_key_rejected() {
+        let raw = RawConfig::parse("[serve]\nlisten_addr = \"x\"\n").unwrap();
+        assert!(ServeConfig::from_raw(&raw).is_err());
     }
 }

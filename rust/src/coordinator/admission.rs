@@ -1,0 +1,434 @@
+//! RAM-bounded admission control for the job service.
+//!
+//! Every job is priced *before* it runs, from the same sizing model the
+//! planner uses ([`task_bytes`]), so the service can bound the
+//! **aggregate** resident bytes of all concurrently running jobs
+//! instead of discovering an over-commit as an OOM kill:
+//!
+//! ```text
+//! job_bytes = task_bytes(n, block) * inner_workers   (Gram working set)
+//!           + sink_state_bytes(sink, m)              (accumulated output)
+//!           + private cache budget                   (explicit --cache-budget)
+//! ```
+//!
+//! The shared auto-carved substrate cache is deliberately *not* part of
+//! a job's price: it is one server-wide allocation, accounted once by
+//! whoever constructs the [`super::service::JobService`].
+//!
+//! Admission is strict priority order ([`Priority::Interactive`] jumps
+//! [`Priority::Batch`]), FIFO within a class. A job whose price exceeds
+//! the whole budget is still admitted — but only once the server is
+//! idle, so the cap degrades to "one oversized job at a time" instead
+//! of deadlocking. Permits are RAII: the reserved bytes are returned
+//! exactly once when the [`AdmissionPermit`] drops, however the job
+//! ends (done, failed, cancelled, panicked worker).
+
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use super::blockcache::cache_plan;
+use super::planner::{dense_output_bytes, matrix_free_block, task_bytes};
+use super::service::JobSpec;
+use crate::mi::sink::SinkSpec;
+use crate::mi::topk::MiPair;
+
+/// Scheduling class for admission: interactive jobs overtake queued
+/// batch jobs when bytes free up.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Priority {
+    /// Latency-sensitive queries (top-k, thresholded screens).
+    Interactive,
+    /// Throughput work (dense all-pairs, spill runs).
+    Batch,
+}
+
+impl Priority {
+    /// Stable lowercase name for metrics / the wire schema.
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Inverse of [`Priority::name`].
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "interactive" => Some(Priority::Interactive),
+            "batch" => Some(Priority::Batch),
+            _ => None,
+        }
+    }
+
+    /// Default class for a sink when the submitter does not say:
+    /// bounded-output sinks are interactive, full-matrix ones batch.
+    pub fn for_sink(sink: &SinkSpec) -> Priority {
+        match sink {
+            SinkSpec::Dense | SinkSpec::Spill { .. } => Priority::Batch,
+            SinkSpec::TopK { .. }
+            | SinkSpec::ThresholdMi { .. }
+            | SinkSpec::ThresholdPvalue { .. } => Priority::Interactive,
+        }
+    }
+
+    fn rank(self) -> u8 {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+        }
+    }
+}
+
+/// Resident bytes a sink accumulates while a job runs.
+///
+/// Dense holds the full `m x m` output; top-k holds `k` (or `m*k`
+/// per-column) heap entries; threshold sinks are priced at one retained
+/// pair per column — a documented heuristic, since true retention
+/// depends on the data. Spill keeps nothing resident beyond the block
+/// in flight, which the working-set term already covers.
+pub fn sink_state_bytes(sink: &SinkSpec, m: usize) -> usize {
+    const PAIR: usize = std::mem::size_of::<MiPair>();
+    match sink {
+        SinkSpec::Dense => dense_output_bytes(m),
+        SinkSpec::TopK { k, per_column: false } => k.saturating_mul(PAIR),
+        SinkSpec::TopK { k, per_column: true } => m.saturating_mul(*k).saturating_mul(PAIR),
+        SinkSpec::ThresholdMi { .. } | SinkSpec::ThresholdPvalue { .. } => {
+            m.saturating_mul(PAIR)
+        }
+        SinkSpec::Spill { .. } => 0,
+    }
+}
+
+/// Price a job: the peak resident bytes it is expected to pin while
+/// running (see the module docs for the model).
+pub fn estimate_job_bytes(
+    n_rows: usize,
+    n_cols: usize,
+    out_of_core: bool,
+    spec: &JobSpec,
+) -> usize {
+    let (cache_budget, task_budget) = cache_plan(spec.cache_bytes, out_of_core, 0);
+    let block = if spec.block_cols > 0 {
+        spec.block_cols.min(n_cols.max(1))
+    } else if out_of_core {
+        matrix_free_block(n_rows, n_cols, task_budget)
+    } else {
+        // monolithic worst case: probe-throughput sizing only shrinks it
+        n_cols.max(1)
+    };
+    let lanes = spec.inner_workers.max(1);
+    let working = task_bytes(n_rows, block).saturating_mul(lanes);
+    // only an *explicit* cache budget is private to the job; the
+    // auto-carved cache is the shared server-wide one (priced once)
+    let private_cache = match (cache_budget, spec.cache_bytes) {
+        (Some(n), Some(_)) => n,
+        _ => 0,
+    };
+    working
+        .saturating_add(sink_state_bytes(&spec.sink, n_cols))
+        .saturating_add(private_cache)
+}
+
+#[derive(Debug)]
+struct Ticket {
+    seq: u64,
+    rank: u8,
+    bytes: usize,
+}
+
+#[derive(Debug, Default)]
+struct AdmState {
+    inflight_bytes: usize,
+    inflight_jobs: usize,
+    peak_bytes: usize,
+    admitted: u64,
+    next_seq: u64,
+    waiting: Vec<Ticket>,
+}
+
+/// Aggregate-byte admission gate shared by every job of a service.
+#[derive(Debug)]
+pub struct AdmissionController {
+    /// `usize::MAX` means unbounded.
+    budget: usize,
+    state: Mutex<AdmState>,
+    cv: Condvar,
+}
+
+impl AdmissionController {
+    /// `budget_bytes == 0` means unbounded (every job admits at once).
+    pub fn new(budget_bytes: usize) -> Self {
+        AdmissionController {
+            budget: if budget_bytes == 0 { usize::MAX } else { budget_bytes },
+            state: Mutex::new(AdmState::default()),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn unbounded() -> Self {
+        Self::new(0)
+    }
+
+    /// The configured cap; `None` when unbounded.
+    pub fn budget_bytes(&self) -> Option<usize> {
+        if self.budget == usize::MAX {
+            None
+        } else {
+            Some(self.budget)
+        }
+    }
+
+    /// Estimated bytes currently admitted (running jobs).
+    pub fn inflight_bytes(&self) -> usize {
+        self.state.lock().unwrap().inflight_bytes
+    }
+
+    /// Number of currently admitted jobs.
+    pub fn inflight_jobs(&self) -> usize {
+        self.state.lock().unwrap().inflight_jobs
+    }
+
+    /// High-water mark of admitted bytes since construction.
+    pub fn peak_bytes(&self) -> usize {
+        self.state.lock().unwrap().peak_bytes
+    }
+
+    /// Total jobs ever admitted.
+    pub fn admitted(&self) -> u64 {
+        self.state.lock().unwrap().admitted
+    }
+
+    /// Jobs currently queued behind the byte cap.
+    pub fn waiting(&self) -> usize {
+        self.state.lock().unwrap().waiting.len()
+    }
+
+    /// Block until `bytes` fit under the aggregate cap (strict
+    /// priority-then-FIFO order), or `cancelled()` turns true. Returns
+    /// `None` only on cancellation. A request larger than the whole
+    /// budget waits for the server to go idle, then runs alone.
+    pub fn admit(
+        self: &Arc<Self>,
+        bytes: usize,
+        priority: Priority,
+        cancelled: &dyn Fn() -> bool,
+    ) -> Option<AdmissionPermit> {
+        let mut st = self.state.lock().unwrap();
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.waiting.push(Ticket { seq, rank: priority.rank(), bytes });
+        loop {
+            let head = st
+                .waiting
+                .iter()
+                .map(|t| (t.rank, t.seq))
+                .min()
+                .expect("own ticket is registered");
+            let fits = st.inflight_bytes == 0
+                || st.inflight_bytes.saturating_add(bytes) <= self.budget;
+            if head == (priority.rank(), seq) && fits {
+                st.waiting.retain(|t| t.seq != seq);
+                st.inflight_bytes = st.inflight_bytes.saturating_add(bytes);
+                st.inflight_jobs += 1;
+                st.peak_bytes = st.peak_bytes.max(st.inflight_bytes);
+                st.admitted += 1;
+                drop(st);
+                // the head changed: let the next-best waiter re-evaluate
+                self.cv.notify_all();
+                return Some(AdmissionPermit { ctrl: Arc::clone(self), bytes });
+            }
+            let (guard, _) = self.cv.wait_timeout(st, Duration::from_millis(25)).unwrap();
+            st = guard;
+            if cancelled() {
+                st.waiting.retain(|t| t.seq != seq);
+                drop(st);
+                self.cv.notify_all();
+                return None;
+            }
+        }
+    }
+}
+
+/// RAII receipt for admitted bytes; dropping it returns them exactly
+/// once and wakes the queue.
+#[derive(Debug)]
+pub struct AdmissionPermit {
+    ctrl: Arc<AdmissionController>,
+    bytes: usize,
+}
+
+impl AdmissionPermit {
+    /// The bytes this permit reserved.
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+impl Drop for AdmissionPermit {
+    fn drop(&mut self) {
+        let mut st = self.ctrl.state.lock().unwrap();
+        st.inflight_bytes = st.inflight_bytes.saturating_sub(self.bytes);
+        st.inflight_jobs = st.inflight_jobs.saturating_sub(1);
+        drop(st);
+        self.ctrl.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::thread;
+    use std::time::Instant;
+
+    fn never() -> bool {
+        false
+    }
+
+    #[test]
+    fn unbounded_admits_everything_at_once() {
+        let ctrl = Arc::new(AdmissionController::unbounded());
+        let a = ctrl.admit(usize::MAX / 2, Priority::Batch, &never).unwrap();
+        let b = ctrl.admit(usize::MAX / 2, Priority::Batch, &never).unwrap();
+        assert_eq!(ctrl.inflight_jobs(), 2);
+        assert!(ctrl.budget_bytes().is_none());
+        drop((a, b));
+        assert_eq!(ctrl.inflight_bytes(), 0);
+    }
+
+    #[test]
+    fn over_budget_jobs_serialize_and_peak_stays_under_cap() {
+        let ctrl = Arc::new(AdmissionController::new(100));
+        let first = ctrl.admit(80, Priority::Batch, &never).unwrap();
+        let c2 = Arc::clone(&ctrl);
+        let (tx, rx) = mpsc::channel();
+        let waiter = thread::spawn(move || {
+            let p = c2.admit(80, Priority::Batch, &never).unwrap();
+            tx.send(()).unwrap();
+            drop(p);
+        });
+        // the second 80 does not fit next to the first
+        assert!(rx.recv_timeout(Duration::from_millis(100)).is_err());
+        assert_eq!(ctrl.waiting(), 1);
+        drop(first);
+        rx.recv_timeout(Duration::from_secs(5)).expect("waiter admitted after release");
+        waiter.join().unwrap();
+        assert!(ctrl.peak_bytes() <= 100, "peak {} > cap", ctrl.peak_bytes());
+        assert_eq!(ctrl.admitted(), 2);
+    }
+
+    #[test]
+    fn interactive_overtakes_queued_batch() {
+        let ctrl = Arc::new(AdmissionController::new(100));
+        let holder = ctrl.admit(100, Priority::Batch, &never).unwrap();
+        let order = Arc::new(Mutex::new(Vec::new()));
+
+        let (c, o) = (Arc::clone(&ctrl), Arc::clone(&order));
+        let batch = thread::spawn(move || {
+            let p = c.admit(60, Priority::Batch, &never).unwrap();
+            o.lock().unwrap().push("batch");
+            drop(p);
+        });
+        thread::sleep(Duration::from_millis(60)); // batch queues first
+        let (c, o) = (Arc::clone(&ctrl), Arc::clone(&order));
+        let inter = thread::spawn(move || {
+            let p = c.admit(60, Priority::Interactive, &never).unwrap();
+            o.lock().unwrap().push("interactive");
+            // hold so batch cannot slip in concurrently (60+60 > 100)
+            thread::sleep(Duration::from_millis(60));
+            drop(p);
+        });
+        thread::sleep(Duration::from_millis(60)); // interactive queued too
+        assert_eq!(ctrl.waiting(), 2);
+        drop(holder);
+        batch.join().unwrap();
+        inter.join().unwrap();
+        assert_eq!(*order.lock().unwrap(), vec!["interactive", "batch"]);
+        assert!(ctrl.peak_bytes() <= 100);
+    }
+
+    #[test]
+    fn oversized_job_runs_alone() {
+        let ctrl = Arc::new(AdmissionController::new(10));
+        let big = ctrl.admit(1000, Priority::Batch, &never).unwrap();
+        let c2 = Arc::clone(&ctrl);
+        let t = thread::spawn(move || {
+            let t0 = Instant::now();
+            drop(c2.admit(5, Priority::Interactive, &never).unwrap());
+            t0.elapsed()
+        });
+        thread::sleep(Duration::from_millis(80));
+        drop(big);
+        let waited = t.join().unwrap();
+        assert!(waited >= Duration::from_millis(50), "small job ran beside oversized one");
+    }
+
+    #[test]
+    fn cancelled_waiter_unregisters() {
+        let ctrl = Arc::new(AdmissionController::new(10));
+        let hold = ctrl.admit(10, Priority::Batch, &never).unwrap();
+        let c2 = Arc::clone(&ctrl);
+        let t = thread::spawn(move || c2.admit(10, Priority::Batch, &|| true));
+        assert!(t.join().unwrap().is_none());
+        assert_eq!(ctrl.waiting(), 0);
+        drop(hold);
+        assert_eq!(ctrl.inflight_bytes(), 0);
+    }
+
+    #[test]
+    fn priority_names_round_trip() {
+        for p in [Priority::Interactive, Priority::Batch] {
+            assert_eq!(Priority::parse(p.name()), Some(p));
+        }
+        assert_eq!(Priority::parse("turbo"), None);
+        assert_eq!(Priority::for_sink(&SinkSpec::Dense), Priority::Batch);
+        assert_eq!(
+            Priority::for_sink(&SinkSpec::TopK { k: 4, per_column: false }),
+            Priority::Interactive
+        );
+    }
+
+    #[test]
+    fn sink_pricing_model() {
+        const PAIR: usize = std::mem::size_of::<MiPair>();
+        assert_eq!(sink_state_bytes(&SinkSpec::Dense, 100), 100 * 100 * 8);
+        assert_eq!(sink_state_bytes(&SinkSpec::TopK { k: 8, per_column: false }, 100), 8 * PAIR);
+        assert_eq!(
+            sink_state_bytes(&SinkSpec::TopK { k: 8, per_column: true }, 100),
+            100 * 8 * PAIR
+        );
+        assert_eq!(sink_state_bytes(&SinkSpec::ThresholdMi { threshold: 0.1 }, 100), 100 * PAIR);
+        assert_eq!(
+            sink_state_bytes(&SinkSpec::Spill { dir: std::path::PathBuf::from("/tmp/x") }, 100),
+            0
+        );
+    }
+
+    #[test]
+    fn job_pricing_covers_working_set_sink_and_private_cache() {
+        let base = JobSpec::builder().block_cols(8).build().unwrap();
+        let dense = estimate_job_bytes(1000, 64, false, &base);
+        assert_eq!(dense, task_bytes(1000, 8) + dense_output_bytes(64));
+
+        let topk = JobSpec::builder()
+            .block_cols(8)
+            .sink(SinkSpec::TopK { k: 4, per_column: false })
+            .build()
+            .unwrap();
+        assert!(estimate_job_bytes(1000, 64, false, &topk) < dense);
+
+        let cached = JobSpec::builder()
+            .block_cols(8)
+            .cache_bytes(Some(1 << 20))
+            .build()
+            .unwrap();
+        assert_eq!(estimate_job_bytes(1000, 64, false, &cached), dense + (1 << 20));
+
+        // more lanes pin more concurrent task working sets
+        let wide = JobSpec::builder().block_cols(8).inner_workers(4).build().unwrap();
+        assert_eq!(
+            estimate_job_bytes(1000, 64, false, &wide),
+            4 * task_bytes(1000, 8) + dense_output_bytes(64)
+        );
+    }
+}

@@ -12,9 +12,9 @@
 //! high worker counts never contend on a global `Mutex<Mat64>`.
 
 use super::blockcache::{CacheHandle, Substrate};
-use super::planner::{plan_blocks, BlockPlan, BlockTask};
+use super::planner::{matrix_free_block, plan_blocks, BlockPlan, BlockTask};
 use super::progress::Progress;
-use crate::data::colstore::{ColumnSource, InMemorySource};
+use crate::data::colstore::ColumnSource;
 use crate::data::dataset::BinaryDataset;
 use crate::linalg::dense::Mat64;
 use crate::mi::measure::{combine_block, CombineKind};
@@ -155,7 +155,7 @@ impl GramProvider for NativeProvider<'_> {
 
 /// Gram provider over the AOT XLA artifacts (`xgram` buckets). Not
 /// `Sync` (PJRT executable cache is thread-affine): use
-/// [`execute_plan_sink_serial`] / [`execute_plan_serial`].
+/// [`run_plan_serial`] / [`run_plan_dense_serial`].
 pub struct XlaProvider {
     xla: XlaMi,
     impl_: Impl,
@@ -228,28 +228,16 @@ impl GramProvider for XlaProvider {
     }
 }
 
-/// Execute a plan in parallel, streaming combined MI blocks into
-/// `sink`. Workers compute Gram + combine per task and send the result
-/// over a channel; the calling thread is the single consumer feeding
-/// the sink (no global output lock, and sinks need no `Sync`).
+/// Execute a plan in parallel, streaming combined blocks of `measure`
+/// values into `sink` — **the** canonical engine entry point; every
+/// driver (CLI `compute`, the job service, the HTTP handlers, benches)
+/// funnels here. Workers compute Gram + combine per task and send the
+/// result over a channel; the calling thread is the single consumer
+/// feeding the sink (no global output lock, and sinks need no `Sync`).
 ///
 /// Respects cancellation through `progress`; the first provider or
 /// sink error aborts the remaining tasks and is returned.
-pub fn execute_plan_sink<P: GramProvider + Sync>(
-    src: &dyn ColumnSource,
-    plan: &BlockPlan,
-    provider: &P,
-    workers: usize,
-    progress: &Progress,
-    sink: &mut dyn MiSink,
-) -> Result<()> {
-    execute_plan_sink_measure(src, plan, provider, workers, progress, sink, CombineKind::Mi)
-}
-
-/// [`execute_plan_sink`] with an explicit combine measure: identical
-/// Gram work, only the element-wise combine differs. Sinks rank and
-/// threshold whatever values the measure produces.
-pub fn execute_plan_sink_measure<P: GramProvider + Sync>(
+pub fn run_plan<P: GramProvider + Sync>(
     src: &dyn ColumnSource,
     plan: &BlockPlan,
     provider: &P,
@@ -341,20 +329,9 @@ pub fn execute_plan_sink_measure<P: GramProvider + Sync>(
     Ok(())
 }
 
-/// Serial variant of [`execute_plan_sink`] for providers that are not
-/// `Sync` (e.g. [`XlaProvider`]).
-pub fn execute_plan_sink_serial<P: GramProvider>(
-    src: &dyn ColumnSource,
-    plan: &BlockPlan,
-    provider: &P,
-    progress: &Progress,
-    sink: &mut dyn MiSink,
-) -> Result<()> {
-    execute_plan_sink_serial_measure(src, plan, provider, progress, sink, CombineKind::Mi)
-}
-
-/// Serial variant of [`execute_plan_sink_measure`].
-pub fn execute_plan_sink_serial_measure<P: GramProvider>(
+/// Serial variant of [`run_plan`] for providers that are not `Sync`
+/// (e.g. [`XlaProvider`]).
+pub fn run_plan_serial<P: GramProvider>(
     src: &dyn ColumnSource,
     plan: &BlockPlan,
     provider: &P,
@@ -374,21 +351,9 @@ pub fn execute_plan_sink_serial_measure<P: GramProvider>(
     Ok(())
 }
 
-/// Execute a plan into a full dense matrix (a [`DenseSink`] run) —
-/// the historical API, now a thin wrapper over the sink engine.
-pub fn execute_plan<P: GramProvider + Sync>(
-    src: &dyn ColumnSource,
-    plan: &BlockPlan,
-    provider: &P,
-    workers: usize,
-    progress: &Progress,
-) -> Result<MiMatrix> {
-    execute_plan_measure(src, plan, provider, workers, progress, CombineKind::Mi)
-}
-
-/// Dense-matrix execution with an explicit combine measure (the matrix
-/// then holds that measure's values instead of MI bits).
-pub fn execute_plan_measure<P: GramProvider + Sync>(
+/// Execute a plan into a full dense matrix of `measure` values (a
+/// [`DenseSink`] run over [`run_plan`]).
+pub fn run_plan_dense<P: GramProvider + Sync>(
     src: &dyn ColumnSource,
     plan: &BlockPlan,
     provider: &P,
@@ -397,49 +362,52 @@ pub fn execute_plan_measure<P: GramProvider + Sync>(
     measure: CombineKind,
 ) -> Result<MiMatrix> {
     let mut sink = DenseSink::new(plan.m);
-    execute_plan_sink_measure(src, plan, provider, workers, progress, &mut sink, measure)?;
+    run_plan(src, plan, provider, workers, progress, &mut sink, measure)?;
     dense_result(&mut sink)
 }
 
 /// Serial dense-matrix execution (for providers that are not `Sync`).
-pub fn execute_plan_serial<P: GramProvider>(
+pub fn run_plan_dense_serial<P: GramProvider>(
     src: &dyn ColumnSource,
     plan: &BlockPlan,
     provider: &P,
     progress: &Progress,
+    measure: CombineKind,
 ) -> Result<MiMatrix> {
     let mut sink = DenseSink::new(plan.m);
-    execute_plan_sink_serial(src, plan, provider, progress, &mut sink)?;
+    run_plan_serial(src, plan, provider, progress, &mut sink, measure)?;
     dense_result(&mut sink)
 }
 
-/// Monolithic native computation through the blockwise engine: a
-/// one-block plan for serial runs, or enough blocks to keep `workers`
-/// busy. This is what `mi::backend::compute_mi_with` dispatches the
+/// Whole-dataset computation over any [`ColumnSource`] through the
+/// blockwise engine — the source-generic successor to the
+/// `compute_native*` wrapper pile. A one-block plan for serial
+/// in-memory runs, enough blocks to keep `workers` busy otherwise; an
+/// out-of-core source gets the bounded matrix-free block width instead
+/// (a monolithic plan would materialize the whole file in one fetch).
+/// This is what `mi::backend::compute_measure_with` dispatches the
 /// `bulk-opt` / `bulk-sparse` / `bulk-bitpack` backends to — one
 /// Gram -> combine core for every substrate.
-pub fn compute_native(ds: &BinaryDataset, kind: NativeKind, workers: usize) -> Result<MiMatrix> {
-    compute_native_measure(ds, kind, workers, CombineKind::Mi)
-}
-
-/// [`compute_native`] with an explicit combine measure: the same one
-/// Gram per substrate, any association measure out the other side.
-pub fn compute_native_measure(
-    ds: &BinaryDataset,
+pub fn compute_source(
+    src: &dyn ColumnSource,
     kind: NativeKind,
     workers: usize,
     measure: CombineKind,
 ) -> Result<MiMatrix> {
-    let m = ds.n_cols();
-    // over-decompose 4x per worker so work-stealing balances the
-    // triangle's uneven task sizes; block 0 = monolithic single task
-    let block = if workers <= 1 { 0 } else { m.div_ceil(workers * 4).max(1) };
+    let m = src.n_cols();
+    let block = if src.out_of_core() {
+        matrix_free_block(src.n_rows(), m, 0)
+    } else if workers <= 1 {
+        0 // monolithic single task
+    } else {
+        // over-decompose 4x per worker so work-stealing balances the
+        // triangle's uneven task sizes
+        m.div_ceil(workers * 4).max(1)
+    };
     let plan = plan_blocks(m, block)?;
-    // one up-front pack; block fetches are then column-range memcpys
-    let src = InMemorySource::new(ds);
-    let provider = NativeProvider::new(&src, kind);
+    let provider = NativeProvider::new(src, kind);
     let progress = Progress::new(plan.tasks.len());
-    execute_plan_measure(&src, &plan, &provider, workers, &progress, measure)
+    run_plan_dense(src, &plan, &provider, workers, &progress, measure)
 }
 
 fn dense_result(sink: &mut DenseSink) -> Result<MiMatrix> {
@@ -510,7 +478,9 @@ mod tests {
         for block in [1usize, 5, 8, 23, 100] {
             let plan = plan_blocks(23, block).unwrap();
             let progress = Progress::new(plan.tasks.len());
-            let got = execute_plan(&ds, &plan, &provider, workers, &progress).unwrap();
+            let got =
+                run_plan_dense(&ds, &plan, &provider, workers, &progress, CombineKind::Mi)
+                    .unwrap();
             assert!(
                 got.max_abs_diff(&want) < 1e-12,
                 "{kind:?} block={block}: diff {}",
@@ -541,21 +511,33 @@ mod tests {
         let ds = SynthSpec::new(150, 17).sparsity(0.6).seed(9).generate();
         let provider = NativeProvider::new(&ds, NativeKind::Bitpack);
         let plan = plan_blocks(17, 4).unwrap();
-        let par =
-            execute_plan(&ds, &plan, &provider, 4, &Progress::new(plan.tasks.len())).unwrap();
-        let ser =
-            execute_plan_serial(&ds, &plan, &provider, &Progress::new(plan.tasks.len()))
-                .unwrap();
+        let par = run_plan_dense(
+            &ds,
+            &plan,
+            &provider,
+            4,
+            &Progress::new(plan.tasks.len()),
+            CombineKind::Mi,
+        )
+        .unwrap();
+        let ser = run_plan_dense_serial(
+            &ds,
+            &plan,
+            &provider,
+            &Progress::new(plan.tasks.len()),
+            CombineKind::Mi,
+        )
+        .unwrap();
         assert_eq!(par.max_abs_diff(&ser), 0.0);
     }
 
     #[test]
-    fn compute_native_matches_across_workers() {
+    fn compute_source_matches_across_workers() {
         let ds = SynthSpec::new(300, 29).sparsity(0.7).seed(11).generate();
-        let serial = compute_native(&ds, NativeKind::Bitpack, 1).unwrap();
+        let serial = compute_source(&ds, NativeKind::Bitpack, 1, CombineKind::Mi).unwrap();
         for workers in [2, 4, 7] {
             for kind in [NativeKind::Bitpack, NativeKind::Dense, NativeKind::Sparse] {
-                let got = compute_native(&ds, kind, workers).unwrap();
+                let got = compute_source(&ds, kind, workers, CombineKind::Mi).unwrap();
                 assert_eq!(got.max_abs_diff(&serial), 0.0, "{kind:?} workers={workers}");
             }
         }
@@ -572,7 +554,7 @@ mod tests {
                 let plan = plan_blocks(19, 6).unwrap();
                 let progress = Progress::new(plan.tasks.len());
                 let got =
-                    execute_plan_measure(&ds, &plan, &provider, 2, &progress, measure).unwrap();
+                    run_plan_dense(&ds, &plan, &provider, 2, &progress, measure).unwrap();
                 assert!(
                     got.max_abs_diff(&want) < 1e-12,
                     "{measure} on {kind:?}: diff {}",
@@ -589,7 +571,8 @@ mod tests {
         let plan = plan_blocks(12, 3).unwrap();
         let progress = Progress::new(plan.tasks.len());
         progress.cancel();
-        let err = execute_plan(&ds, &plan, &provider, 2, &progress).unwrap_err();
+        let err =
+            run_plan_dense(&ds, &plan, &provider, 2, &progress, CombineKind::Mi).unwrap_err();
         assert!(matches!(err, Error::Coordinator(_)));
     }
 
@@ -598,7 +581,10 @@ mod tests {
         let ds = SynthSpec::new(50, 12).seed(2).generate();
         let provider = NativeProvider::new(&ds, NativeKind::Bitpack);
         let plan = plan_blocks(13, 4).unwrap();
-        assert!(execute_plan(&ds, &plan, &provider, 1, &Progress::new(1)).is_err());
+        assert!(
+            run_plan_dense(&ds, &plan, &provider, 1, &Progress::new(1), CombineKind::Mi)
+                .is_err()
+        );
     }
 
     /// A sink that errors on its nth block: the executor must surface
@@ -629,8 +615,9 @@ mod tests {
         let plan = plan_blocks(20, 4).unwrap();
         let mut sink = FailingSink { after: 2, seen: 0 };
         let progress = Progress::new(plan.tasks.len());
-        let err = execute_plan_sink(&ds, &plan, &provider, 2, &progress, &mut sink)
-            .unwrap_err();
+        let err =
+            run_plan(&ds, &plan, &provider, 2, &progress, &mut sink, CombineKind::Mi)
+                .unwrap_err();
         assert!(matches!(err, Error::Coordinator(_)), "got {err}");
     }
 
@@ -643,7 +630,7 @@ mod tests {
         let plan = plan_blocks(18, 5).unwrap();
         let mut sink = TopKSink::global(4);
         let progress = Progress::new(plan.tasks.len());
-        execute_plan_sink(&ds, &plan, &provider, 3, &progress, &mut sink).unwrap();
+        run_plan(&ds, &plan, &provider, 3, &progress, &mut sink, CombineKind::Mi).unwrap();
         let SinkData::TopK(got) = sink.finish().unwrap().data else { panic!() };
         assert_eq!(got.len(), 4);
         assert_eq!((got[0].i, got[0].j), (2, 9));

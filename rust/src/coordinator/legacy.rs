@@ -1,0 +1,147 @@
+//! Deprecated wrapper pile, collected in one place. PRs 4–5 grew a
+//! family of Mi-defaulting and dataset-specific entry points
+//! (`execute_plan*`, `compute_native*`); the canonical surface is now
+//! the source-generic quartet in [`super::executor`]:
+//! [`run_plan`](super::executor::run_plan) /
+//! [`run_plan_serial`](super::executor::run_plan_serial) /
+//! [`run_plan_dense`](super::executor::run_plan_dense) /
+//! [`run_plan_dense_serial`](super::executor::run_plan_dense_serial),
+//! plus [`compute_source`](super::executor::compute_source) for
+//! whole-dataset runs. These aliases delegate verbatim (same plans,
+//! bit-identical results) and will be removed once downstream callers
+//! migrate; nothing inside the crate calls them.
+
+use super::executor::{
+    compute_source, run_plan, run_plan_dense, run_plan_dense_serial, run_plan_serial,
+    GramProvider, NativeKind,
+};
+use super::planner::BlockPlan;
+use super::progress::Progress;
+use crate::data::colstore::{ColumnSource, InMemorySource};
+use crate::data::dataset::BinaryDataset;
+use crate::mi::measure::CombineKind;
+use crate::mi::sink::MiSink;
+use crate::mi::MiMatrix;
+use crate::util::error::Result;
+
+#[deprecated(note = "use `coordinator::run_plan` with `CombineKind::Mi`")]
+pub fn execute_plan_sink<P: GramProvider + Sync>(
+    src: &dyn ColumnSource,
+    plan: &BlockPlan,
+    provider: &P,
+    workers: usize,
+    progress: &Progress,
+    sink: &mut dyn MiSink,
+) -> Result<()> {
+    run_plan(src, plan, provider, workers, progress, sink, CombineKind::Mi)
+}
+
+#[deprecated(note = "renamed to `coordinator::run_plan`")]
+pub fn execute_plan_sink_measure<P: GramProvider + Sync>(
+    src: &dyn ColumnSource,
+    plan: &BlockPlan,
+    provider: &P,
+    workers: usize,
+    progress: &Progress,
+    sink: &mut dyn MiSink,
+    measure: CombineKind,
+) -> Result<()> {
+    run_plan(src, plan, provider, workers, progress, sink, measure)
+}
+
+#[deprecated(note = "use `coordinator::run_plan_serial` with `CombineKind::Mi`")]
+pub fn execute_plan_sink_serial<P: GramProvider>(
+    src: &dyn ColumnSource,
+    plan: &BlockPlan,
+    provider: &P,
+    progress: &Progress,
+    sink: &mut dyn MiSink,
+) -> Result<()> {
+    run_plan_serial(src, plan, provider, progress, sink, CombineKind::Mi)
+}
+
+#[deprecated(note = "renamed to `coordinator::run_plan_serial`")]
+pub fn execute_plan_sink_serial_measure<P: GramProvider>(
+    src: &dyn ColumnSource,
+    plan: &BlockPlan,
+    provider: &P,
+    progress: &Progress,
+    sink: &mut dyn MiSink,
+    measure: CombineKind,
+) -> Result<()> {
+    run_plan_serial(src, plan, provider, progress, sink, measure)
+}
+
+#[deprecated(note = "use `coordinator::run_plan_dense` with `CombineKind::Mi`")]
+pub fn execute_plan<P: GramProvider + Sync>(
+    src: &dyn ColumnSource,
+    plan: &BlockPlan,
+    provider: &P,
+    workers: usize,
+    progress: &Progress,
+) -> Result<MiMatrix> {
+    run_plan_dense(src, plan, provider, workers, progress, CombineKind::Mi)
+}
+
+#[deprecated(note = "renamed to `coordinator::run_plan_dense`")]
+pub fn execute_plan_measure<P: GramProvider + Sync>(
+    src: &dyn ColumnSource,
+    plan: &BlockPlan,
+    provider: &P,
+    workers: usize,
+    progress: &Progress,
+    measure: CombineKind,
+) -> Result<MiMatrix> {
+    run_plan_dense(src, plan, provider, workers, progress, measure)
+}
+
+#[deprecated(note = "use `coordinator::run_plan_dense_serial` with `CombineKind::Mi`")]
+pub fn execute_plan_serial<P: GramProvider>(
+    src: &dyn ColumnSource,
+    plan: &BlockPlan,
+    provider: &P,
+    progress: &Progress,
+) -> Result<MiMatrix> {
+    run_plan_dense_serial(src, plan, provider, progress, CombineKind::Mi)
+}
+
+#[deprecated(note = "use `coordinator::compute_source` with `CombineKind::Mi`")]
+pub fn compute_native(ds: &BinaryDataset, kind: NativeKind, workers: usize) -> Result<MiMatrix> {
+    compute_source(&InMemorySource::new(ds), kind, workers, CombineKind::Mi)
+}
+
+#[deprecated(note = "use `coordinator::compute_source`")]
+pub fn compute_native_measure(
+    ds: &BinaryDataset,
+    kind: NativeKind,
+    workers: usize,
+    measure: CombineKind,
+) -> Result<MiMatrix> {
+    compute_source(&InMemorySource::new(ds), kind, workers, measure)
+}
+
+#[cfg(test)]
+mod tests {
+    // the aliases must stay call-compatible and bit-identical until
+    // they are removed
+    #![allow(deprecated)]
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    #[test]
+    fn aliases_match_canonical_entry_points() {
+        let ds = SynthSpec::new(120, 9).sparsity(0.6).seed(17).generate();
+        let want = compute_source(
+            &InMemorySource::new(&ds),
+            NativeKind::Bitpack,
+            2,
+            CombineKind::Mi,
+        )
+        .unwrap();
+        let via_native = compute_native(&ds, NativeKind::Bitpack, 2).unwrap();
+        assert_eq!(via_native.max_abs_diff(&want), 0.0);
+        let via_measure =
+            compute_native_measure(&ds, NativeKind::Bitpack, 2, CombineKind::Mi).unwrap();
+        assert_eq!(via_measure.max_abs_diff(&want), 0.0);
+    }
+}

@@ -18,30 +18,41 @@
 //! 4. [`blockcache`] — a bounded LRU over constructed block substrates
 //!   plus prefetch support, so out-of-core runs fetch each block
 //!   `O(1)` times instead of `O(n_blocks)` and reads overlap compute.
-//! 5. [`service`] — a long-lived job API (submit / poll / cancel)
-//!   with worker pool, progress reporting and admission control
-//!   ([`backpressure`]).
+//! 5. [`service`] — a long-lived job API (submit / poll / cancel /
+//!   drain) with worker pool, progress reporting and two admission
+//!   gates: a job-slot queue ([`backpressure`]) and an aggregate RAM
+//!   cap that prices every job up front ([`admission`]).
 //!
 //! The key exactness property (tested in `rust/tests/coordinator.rs`
 //! and `rust/tests/sinks.rs`): a blockwise run equals the monolithic
 //! computation *bit for bit*, because every block combines the same
 //! integer counts.
 
+pub mod admission;
 pub mod backpressure;
 pub mod blockcache;
 pub mod executor;
+pub mod legacy;
 pub mod planner;
 pub mod progress;
 pub mod scheduler;
 pub mod service;
 pub mod streaming;
 
+pub use admission::{AdmissionController, AdmissionPermit, Priority};
 pub use blockcache::{cache_plan, BlockCache, BlockKey, CacheHandle, CacheStats, Substrate};
 pub use executor::{
+    compute_source, run_plan, run_plan_dense, run_plan_dense_serial, run_plan_serial,
+    GramProvider, NativeProvider, XlaProvider,
+};
+// the deprecated wrapper pile re-exported from its one home, so
+// downstream `use bulkmi::coordinator::execute_plan` keeps resolving
+// (with a deprecation warning) until callers migrate
+#[allow(deprecated)]
+pub use legacy::{
     compute_native, compute_native_measure, execute_plan, execute_plan_measure,
     execute_plan_serial, execute_plan_sink, execute_plan_sink_measure,
-    execute_plan_sink_serial, execute_plan_sink_serial_measure, GramProvider,
-    NativeProvider, XlaProvider,
+    execute_plan_sink_serial, execute_plan_sink_serial_measure,
 };
 pub use planner::{plan_blocks, BlockPlan, BlockTask, PlannerConfig};
-pub use service::{JobHandle, JobService, JobStatus};
+pub use service::{JobHandle, JobInfo, JobService, JobSpec, JobSpecBuilder, JobStatus};

@@ -38,6 +38,18 @@ impl Schedule {
             Schedule::Panel => "panel",
         }
     }
+
+    /// Inverse of [`Schedule::name`]: parse a schedule from its stable
+    /// name (the wire schema and the config layer share this).
+    pub fn parse(s: &str) -> Option<Schedule> {
+        match s {
+            "sequential" => Some(Schedule::Sequential),
+            "largest-first" => Some(Schedule::LargestFirst),
+            "diagonal-first" => Some(Schedule::DiagonalFirst),
+            "panel" => Some(Schedule::Panel),
+            _ => None,
+        }
+    }
 }
 
 /// Order `tasks` in place according to `policy` (stable).
@@ -135,6 +147,19 @@ mod tests {
         assert_eq!(Schedule::LargestFirst.name(), "largest-first");
         assert_eq!(Schedule::DiagonalFirst.name(), "diagonal-first");
         assert_eq!(Schedule::Panel.name(), "panel");
+    }
+
+    #[test]
+    fn parse_round_trips_every_name() {
+        for s in [
+            Schedule::Sequential,
+            Schedule::LargestFirst,
+            Schedule::DiagonalFirst,
+            Schedule::Panel,
+        ] {
+            assert_eq!(Schedule::parse(s.name()), Some(s));
+        }
+        assert_eq!(Schedule::parse("zigzag"), None);
     }
 
     #[test]

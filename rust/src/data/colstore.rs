@@ -192,7 +192,7 @@ impl ColumnSource for InMemorySource {
 /// per fetch, not a memcpy. Fine for tests and one-shot monolithic
 /// plans; blockwise runs that fetch each block `O(n_blocks)` times
 /// must wrap the dataset in [`InMemorySource`] instead (one up-front
-/// pack — `compute_native_measure` and the job service both do) or
+/// pack — `compute_measure_with` and the job service both do) or
 /// attach the substrate cache (`crate::coordinator::blockcache`),
 /// which memoizes the packed block after the first fetch. Note the
 /// *inherent* `BinaryDataset::col_block` returns a `BinaryDataset` and

@@ -51,6 +51,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod mi;
 pub mod runtime;
+pub mod server;
 pub mod util;
 
 pub use util::error::{Error, Result};

@@ -8,8 +8,8 @@ use super::bulk_basic::measure_bulk_basic;
 use super::measure::{measure_pairwise, CombineKind};
 use super::xla::XlaMi;
 use super::MiMatrix;
-use crate::coordinator::executor::{compute_native_measure, NativeKind};
-use crate::data::colstore::ColumnSource;
+use crate::coordinator::executor::{compute_source, NativeKind};
+use crate::data::colstore::{ColumnSource, InMemorySource};
 use crate::data::dataset::BinaryDataset;
 use crate::util::error::{Error, Result};
 
@@ -203,17 +203,21 @@ pub fn compute_measure_with(
         // the deliberate Section-2 ablation baseline (4 Gram matmuls)
         Backend::BulkBasic => Ok(measure_bulk_basic(ds, measure)),
         // all optimized native backends are one engine, three substrates
-        Backend::BulkOpt => compute_native_measure(ds, NativeKind::Dense, workers, measure),
-        Backend::BulkSparse => compute_native_measure(ds, NativeKind::Sparse, workers, measure),
+        Backend::BulkOpt => {
+            compute_source(&InMemorySource::new(ds), NativeKind::Dense, workers, measure)
+        }
+        Backend::BulkSparse => {
+            compute_source(&InMemorySource::new(ds), NativeKind::Sparse, workers, measure)
+        }
         Backend::BulkBitpack => {
-            compute_native_measure(ds, NativeKind::Bitpack, workers, measure)
+            compute_source(&InMemorySource::new(ds), NativeKind::Bitpack, workers, measure)
         }
         Backend::Auto => {
             let (chosen, report) = backend.resolve(ds)?;
             if let Some(r) = &report {
                 crate::info!("{}", r.summary());
             }
-            compute_native_measure(ds, chosen.native_kind(), workers, measure)
+            compute_source(&InMemorySource::new(ds), chosen.native_kind(), workers, measure)
         }
         Backend::Xla => XlaMi::load_default()?.compute(ds),
         Backend::XlaPallas => XlaMi::load_default_pallas()?.compute(ds),

@@ -5,15 +5,17 @@
 //! integer-exact, cache-friendly column-major layout.
 //!
 //! Both entry points are thin wrappers over the blockwise engine
-//! ([`crate::coordinator::executor::compute_native`]): serial runs are a
+//! ([`crate::coordinator::executor::compute_source`]): serial runs are a
 //! one-block plan, parallel runs over-decompose into block tasks whose
 //! results are channeled to a single collector — there is no shared
 //! output lock anywhere on this path.
 
 use super::MiMatrix;
-use crate::coordinator::executor::{compute_native, NativeKind};
+use crate::coordinator::executor::{compute_source, NativeKind};
+use crate::data::colstore::InMemorySource;
 use crate::data::dataset::BinaryDataset;
 use crate::linalg::dense::Mat64;
+use crate::mi::measure::CombineKind;
 
 /// Full optimized bulk MI on the bit-packed Gram, single-threaded.
 pub fn mi_bulk_bitpack(ds: &BinaryDataset) -> MiMatrix {
@@ -26,7 +28,7 @@ pub fn mi_bulk_bitpack_threads(ds: &BinaryDataset, workers: usize) -> MiMatrix {
     if ds.n_cols() == 0 {
         return MiMatrix::from_mat(Mat64::zeros(0, 0));
     }
-    compute_native(ds, NativeKind::Bitpack, workers)
+    compute_source(&InMemorySource::new(ds), NativeKind::Bitpack, workers, CombineKind::Mi)
         .expect("block plan on non-empty columns")
 }
 

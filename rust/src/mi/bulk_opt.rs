@@ -10,12 +10,13 @@
 //! combine here is the shared implementation reused by the sparse,
 //! bit-packed and coordinator paths; the entry point itself is a
 //! one-block plan through the blockwise engine
-//! ([`crate::coordinator::executor::compute_native`]), so the
+//! ([`crate::coordinator::executor::compute_source`]), so the
 //! monolithic and blockwise paths are literally the same code.
 
 use super::measure::{combine_block, CombineKind};
 use super::MiMatrix;
-use crate::coordinator::executor::{compute_native, NativeKind};
+use crate::coordinator::executor::{compute_source, NativeKind};
+use crate::data::colstore::InMemorySource;
 use crate::data::dataset::BinaryDataset;
 use crate::linalg::dense::Mat64;
 
@@ -36,7 +37,8 @@ pub fn mi_bulk_opt(ds: &BinaryDataset) -> MiMatrix {
     if ds.n_cols() == 0 {
         return MiMatrix::from_mat(Mat64::zeros(0, 0));
     }
-    compute_native(ds, NativeKind::Dense, 1).expect("one-block plan on non-empty columns")
+    compute_source(&InMemorySource::new(ds), NativeKind::Dense, 1, CombineKind::Mi)
+        .expect("one-block plan on non-empty columns")
 }
 
 #[cfg(test)]

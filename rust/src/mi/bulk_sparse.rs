@@ -7,9 +7,11 @@
 //! decisively at ≥99% (reproduced by `benches/fig3_sparsity.rs`).
 
 use super::MiMatrix;
-use crate::coordinator::executor::{compute_native, NativeKind};
+use crate::coordinator::executor::{compute_source, NativeKind};
+use crate::data::colstore::InMemorySource;
 use crate::data::dataset::BinaryDataset;
 use crate::linalg::dense::Mat64;
+use crate::mi::measure::CombineKind;
 
 /// Full optimized bulk MI with a sparse (CSR row-pair expansion) Gram,
 /// routed through the blockwise engine as a one-block plan.
@@ -17,7 +19,8 @@ pub fn mi_bulk_sparse(ds: &BinaryDataset) -> MiMatrix {
     if ds.n_cols() == 0 {
         return MiMatrix::from_mat(Mat64::zeros(0, 0));
     }
-    compute_native(ds, NativeKind::Sparse, 1).expect("one-block plan on non-empty columns")
+    compute_source(&InMemorySource::new(ds), NativeKind::Sparse, 1, CombineKind::Mi)
+        .expect("one-block plan on non-empty columns")
 }
 
 #[cfg(test)]

@@ -158,6 +158,24 @@ pub struct SinkMeta {
     /// Task-ordering policy of the executed plan
     /// ([`crate::coordinator::scheduler::Schedule::name`]).
     pub schedule: Option<&'static str>,
+    /// How the job service's byte gate priced and queued the run
+    /// (`None` outside the service; see
+    /// `crate::coordinator::admission`).
+    pub admission: Option<AdmissionReport>,
+}
+
+/// Admission audit trail for one service job, recorded in [`SinkMeta`]:
+/// what the byte gate charged, how long the job queued behind the
+/// aggregate cap, and the class it queued in.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdmissionReport {
+    /// The gate's price for the job
+    /// (`crate::coordinator::admission::estimate_job_bytes`).
+    pub estimated_bytes: usize,
+    /// Wall time between entering the byte gate and being admitted.
+    pub queued_secs: f64,
+    /// Admission class name (`"interactive"` / `"batch"`).
+    pub priority: &'static str,
 }
 
 /// Read-side I/O of one run against an instrumented

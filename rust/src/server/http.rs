@@ -1,0 +1,443 @@
+//! The HTTP/JSON front end over [`JobService`], hand-rolled on
+//! `std::net::TcpListener` (the crate is dependency-free by design —
+//! no tokio/hyper). Requests are small control messages, so the server
+//! handles connections serially on the accept thread with short stream
+//! timeouts; the actual compute runs on the job service's worker pool,
+//! so a slow job never blocks status polls for longer than one
+//! request/response exchange.
+//!
+//! Routes (all bodies are the v1 wire schema of [`super::wire`]):
+//!
+//! | method & path            | action                                  |
+//! |--------------------------|-----------------------------------------|
+//! | `GET  /healthz`          | liveness probe                          |
+//! | `GET  /metrics`          | counters, timers, admission gate, cache |
+//! | `GET  /v1/datasets`      | list registered datasets                |
+//! | `POST /v1/datasets`      | register `{"v":1,"name":..,"path":..}`  |
+//! | `POST /v1/jobs`          | submit a [`super::wire::JobRequest`]    |
+//! | `GET  /v1/jobs/{id}`     | status + live progress                  |
+//! | `GET  /v1/jobs/{id}/result` | fetch + consume the result (one-shot) |
+//! | `POST /v1/jobs/{id}/cancel` | cancel a queued/running job          |
+//! | `POST /v1/admin/drain`   | finish all jobs, then exit the loop     |
+//!
+//! Shutdown: the accept loop polls [`super::signal::requested`] (set by
+//! SIGINT/SIGTERM) and the drain endpoint's flag between connections,
+//! then drains the job service so in-flight jobs complete before
+//! [`Server::run`] returns `Ok`.
+
+use std::collections::BTreeMap;
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::signal;
+use super::wire::{self, JobRequest};
+use crate::coordinator::service::{JobHandle, JobService};
+use crate::data::colstore::ColumnSource;
+use crate::util::error::{Error, Result};
+use crate::util::json::{escape, Json};
+
+/// How the server binds and sizes its job service.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// `ADDR:PORT` to listen on; port 0 picks a free port (the chosen
+    /// address is printed as `serving on http://...` for scripts).
+    pub listen: String,
+    /// Job service worker threads (concurrent jobs).
+    pub workers: usize,
+    /// Admission queue slots beyond the running jobs.
+    pub max_queued: usize,
+    /// Aggregate resident-byte cap across concurrent jobs
+    /// ([`crate::coordinator::admission`]); `None` = unbounded.
+    pub memory_budget: Option<usize>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            listen: "127.0.0.1:8371".to_string(),
+            workers: 2,
+            max_queued: 64,
+            memory_budget: None,
+        }
+    }
+}
+
+struct DatasetEntry {
+    path: PathBuf,
+    src: Arc<dyn ColumnSource>,
+}
+
+/// A bound-but-not-yet-running job server. [`Server::run`] executes the
+/// accept loop on the calling thread until shutdown is requested.
+pub struct Server {
+    listener: TcpListener,
+    addr: SocketAddr,
+    svc: JobService,
+    datasets: Mutex<BTreeMap<String, DatasetEntry>>,
+    shutdown: AtomicBool,
+}
+
+impl Server {
+    /// Bind the listen address and build the job service (with the
+    /// admission byte gate when `memory_budget` is set).
+    pub fn bind(cfg: &ServerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.listen)?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let svc = match cfg.memory_budget {
+            Some(budget) => JobService::with_budget(cfg.workers, cfg.max_queued, budget),
+            None => JobService::new(cfg.workers, cfg.max_queued),
+        };
+        Ok(Server {
+            listener,
+            addr,
+            svc,
+            datasets: Mutex::new(BTreeMap::new()),
+            shutdown: AtomicBool::new(false),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The underlying job service (tests submit/poll directly).
+    pub fn service(&self) -> &JobService {
+        &self.svc
+    }
+
+    /// Request the accept loop to exit (same effect as the drain
+    /// endpoint or a SIGTERM).
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Register a dataset under `name` so wire requests can target it.
+    /// Packed `.bmat` v2 files stream from disk; anything else is
+    /// loaded into memory once. Returns `(n_rows, n_cols)`.
+    pub fn register_dataset(&self, name: &str, path: &Path) -> Result<(usize, usize)> {
+        if name.is_empty() {
+            return Err(Error::Parse("dataset name must not be empty".into()));
+        }
+        let src = super::open_source(path)?;
+        let dims = (src.n_rows(), src.n_cols());
+        self.datasets
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), DatasetEntry { path: path.to_path_buf(), src });
+        Ok(dims)
+    }
+
+    /// Serve until SIGINT/SIGTERM or the drain endpoint fires, then
+    /// drain the job service (in-flight jobs finish) and return.
+    pub fn run(&self) -> Result<()> {
+        // scripts scrape this line to learn the port when listening on :0
+        println!("serving on http://{}", self.addr);
+        loop {
+            if self.shutdown.load(Ordering::SeqCst) || signal::requested() {
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    if let Err(err) = self.handle_conn(stream) {
+                        crate::info!("connection error: {err}");
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        crate::info!("draining {} tracked job(s) before exit", self.svc.job_count());
+        self.svc.drain();
+        Ok(())
+    }
+
+    fn handle_conn(&self, mut stream: TcpStream) -> Result<()> {
+        // accepted sockets may inherit the listener's non-blocking mode
+        // on some platforms; force blocking + bounded timeouts
+        stream.set_nonblocking(false)?;
+        stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+        stream.set_write_timeout(Some(Duration::from_secs(10)))?;
+        let (status, body) = match read_request(&mut stream) {
+            Ok((method, path, body)) => self.dispatch(&method, &path, &body),
+            Err(err) => (400, wire::error_json(&err.to_string())),
+        };
+        write_response(&mut stream, status, &body)
+    }
+
+    fn dispatch(&self, method: &str, path: &str, body: &str) -> (u16, String) {
+        let segs: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+        match (method, segs.as_slice()) {
+            ("GET", ["healthz"]) => (200, format!("{{\"v\":1,\"ok\":true,\"draining\":{}}}", self.svc.is_draining())),
+            ("GET", ["metrics"]) => (200, self.metrics_text()),
+            ("GET", ["v1", "datasets"]) => (200, self.datasets_json()),
+            ("POST", ["v1", "datasets"]) => self.handle_register(body),
+            ("POST", ["v1", "jobs"]) => self.handle_submit(body),
+            ("GET", ["v1", "jobs", id]) => self.with_job_id(id, |h| self.handle_status(h)),
+            ("GET", ["v1", "jobs", id, "result"]) => {
+                self.with_job_id(id, |h| self.handle_result(h))
+            }
+            ("POST", ["v1", "jobs", id, "cancel"]) => {
+                self.with_job_id(id, |h| self.handle_cancel(h))
+            }
+            ("POST", ["v1", "admin", "drain"]) => {
+                self.request_shutdown();
+                (200, "{\"v\":1,\"draining\":true}".to_string())
+            }
+            _ => (404, wire::error_json(&format!("no route for {method} {path}"))),
+        }
+    }
+
+    fn with_job_id(
+        &self,
+        raw: &str,
+        f: impl FnOnce(JobHandle) -> (u16, String),
+    ) -> (u16, String) {
+        match raw.parse::<u64>() {
+            Ok(id) => f(JobHandle::from_id(id)),
+            Err(_) => (400, wire::error_json(&format!("bad job id '{raw}'"))),
+        }
+    }
+
+    fn handle_register(&self, body: &str) -> (u16, String) {
+        let parsed = Json::parse(body).and_then(|doc| {
+            let name = doc
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Parse("register needs a \"name\" string".into()))?
+                .to_string();
+            let path = doc
+                .get("path")
+                .and_then(Json::as_str)
+                .ok_or_else(|| Error::Parse("register needs a \"path\" string".into()))?
+                .to_string();
+            Ok((name, path))
+        });
+        let (name, path) = match parsed {
+            Ok(v) => v,
+            Err(err) => return (400, wire::error_json(&err.to_string())),
+        };
+        match self.register_dataset(&name, Path::new(&path)) {
+            Ok((rows, cols)) => (
+                200,
+                format!(
+                    "{{\"v\":1,\"name\":\"{}\",\"rows\":{rows},\"cols\":{cols}}}",
+                    escape(&name)
+                ),
+            ),
+            Err(err) => (400, wire::error_json(&err.to_string())),
+        }
+    }
+
+    fn datasets_json(&self) -> String {
+        let datasets = self.datasets.lock().unwrap();
+        let items: Vec<String> = datasets
+            .iter()
+            .map(|(name, entry)| {
+                format!(
+                    "{{\"name\":\"{}\",\"path\":\"{}\",\"rows\":{},\"cols\":{},\
+                     \"out_of_core\":{}}}",
+                    escape(name),
+                    escape(&entry.path.display().to_string()),
+                    entry.src.n_rows(),
+                    entry.src.n_cols(),
+                    entry.src.out_of_core(),
+                )
+            })
+            .collect();
+        format!("{{\"v\":1,\"datasets\":[{}]}}", items.join(","))
+    }
+
+    fn handle_submit(&self, body: &str) -> (u16, String) {
+        let req = match JobRequest::parse(body) {
+            Ok(r) => r,
+            Err(err) => return (400, wire::error_json(&err.to_string())),
+        };
+        let src = {
+            let datasets = self.datasets.lock().unwrap();
+            match datasets.get(&req.dataset) {
+                Some(entry) => Arc::clone(&entry.src),
+                None => {
+                    let known: Vec<&str> = datasets.keys().map(String::as_str).collect();
+                    return (
+                        404,
+                        wire::error_json(&format!(
+                            "unknown dataset '{}' (registered: {})",
+                            req.dataset,
+                            if known.is_empty() { "none".to_string() } else { known.join(" ") }
+                        )),
+                    );
+                }
+            }
+        };
+        match self.svc.submit_source(src, req.spec) {
+            Ok(handle) => match self.svc.info(handle) {
+                Ok(info) => (202, wire::status_json(handle.id(), &info)),
+                Err(err) => error_response(&err),
+            },
+            Err(err) => error_response(&err),
+        }
+    }
+
+    fn handle_status(&self, handle: JobHandle) -> (u16, String) {
+        match self.svc.info(handle) {
+            Ok(info) => (200, wire::status_json(handle.id(), &info)),
+            Err(err) => error_response(&err),
+        }
+    }
+
+    fn handle_result(&self, handle: JobHandle) -> (u16, String) {
+        match self.svc.take(handle) {
+            Ok(out) => (200, wire::result_json(handle.id(), &out)),
+            Err(err) => error_response(&err),
+        }
+    }
+
+    fn handle_cancel(&self, handle: JobHandle) -> (u16, String) {
+        match self.svc.cancel(handle) {
+            Ok(()) => (
+                200,
+                format!("{{\"v\":1,\"job\":{},\"state\":\"cancelled\"}}", handle.id()),
+            ),
+            Err(err) => error_response(&err),
+        }
+    }
+
+    /// Text metrics: the service's counters/timers, the admission
+    /// gate's live state, and the shared substrate cache — per-tenant
+    /// counters (`tenant:NAME:...`) appear among the plain counters.
+    fn metrics_text(&self) -> String {
+        let mut out = self.svc.metrics().report();
+        let gate = self.svc.admission();
+        match gate.budget_bytes() {
+            Some(b) => out.push_str(&format!("admission budget_bytes = {b}\n")),
+            None => out.push_str("admission budget_bytes = unbounded\n"),
+        }
+        out.push_str(&format!("admission inflight_bytes = {}\n", gate.inflight_bytes()));
+        out.push_str(&format!("admission inflight_jobs = {}\n", gate.inflight_jobs()));
+        out.push_str(&format!("admission peak_bytes = {}\n", gate.peak_bytes()));
+        out.push_str(&format!("admission admitted = {}\n", gate.admitted()));
+        out.push_str(&format!("admission waiting = {}\n", gate.waiting()));
+        let cache = self.svc.shared_cache().stats();
+        out.push_str(&format!("cache shared hits = {}\n", cache.hits));
+        out.push_str(&format!("cache shared misses = {}\n", cache.misses));
+        out.push_str(&format!("cache shared evictions = {}\n", cache.evictions));
+        out.push_str(&format!("cache shared prefetched = {}\n", cache.prefetched));
+        out.push_str(&format!("cache shared inserted_bytes = {}\n", cache.inserted_bytes));
+        out.push_str(&format!("cache shared stall_secs = {}\n", cache.stall_secs));
+        out
+    }
+}
+
+/// Map a service error to an HTTP status + error envelope.
+fn error_response(err: &Error) -> (u16, String) {
+    let status = match err {
+        Error::JobCancelled(_) => 410,
+        Error::JobFailed(_) => 500,
+        Error::JobTerminal(_) => 409,
+        Error::Parse(_) => 400,
+        Error::Coordinator(msg) => {
+            if msg.contains("unknown job") {
+                404
+            } else if msg.contains("in flight") {
+                409
+            } else if msg.contains("draining") || msg.contains("queue full") {
+                503
+            } else {
+                400
+            }
+        }
+        _ => 500,
+    };
+    (status, wire::error_json(&err.to_string()))
+}
+
+const MAX_HEADER_BYTES: usize = 64 * 1024;
+const MAX_BODY_BYTES: usize = 16 * 1024 * 1024;
+
+/// Read one request: `(method, path, body)`. Query strings are
+/// stripped; the body is sized by `Content-Length` (no chunked
+/// encoding — every client we speak to sends sized bodies).
+fn read_request(stream: &mut TcpStream) -> Result<(String, String, String)> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let header_end = loop {
+        if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            break pos;
+        }
+        if buf.len() > MAX_HEADER_BYTES {
+            return Err(Error::Parse("http header too large".into()));
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(Error::Parse("connection closed mid-header".into()));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let header = String::from_utf8_lossy(&buf[..header_end]).into_owned();
+    let mut lines = header.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let raw_path = parts.next().unwrap_or("");
+    let path = raw_path.split('?').next().unwrap_or("").to_string();
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((key, value)) = line.split_once(':') {
+            if key.eq_ignore_ascii_case("content-length") {
+                content_length = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| Error::Parse("bad Content-Length".into()))?;
+            }
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err(Error::Parse("request body too large".into()));
+    }
+    let mut body = buf[header_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(Error::Parse("connection closed mid-body".into()));
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    Ok((method, path, String::from_utf8_lossy(&body).into_owned()))
+}
+
+fn write_response(stream: &mut TcpStream, status: u16, body: &str) -> Result<()> {
+    let reason = match status {
+        200 => "OK",
+        202 => "Accepted",
+        400 => "Bad Request",
+        404 => "Not Found",
+        409 => "Conflict",
+        410 => "Gone",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Error",
+    };
+    let content_type = if body.starts_with('{') || body.starts_with('[') {
+        "application/json"
+    } else {
+        "text/plain; charset=utf-8"
+    };
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()?;
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! The serving layer: an HTTP/JSON job server over the coordinator's
+//! [`JobService`](crate::coordinator::service::JobService), plus the
+//! versioned wire schema and signal handling it shares with the CLI's
+//! `serve` subcommand.
+//!
+//! - [`wire`] — the `"v":1` request/response schema. One parse path
+//!   from wire strings to typed specs; used by HTTP bodies, the
+//!   `serve --stdin` line protocol, and CLI flag parsing.
+//! - [`http`] — a dependency-free HTTP server on `std::net` (submit /
+//!   status / result / cancel / metrics / drain).
+//! - [`signal`] — SIGINT/SIGTERM latch driving graceful drain.
+//!
+//! Datasets are *server-registered*: jobs name a dataset the operator
+//! mounted (`--dataset NAME=PATH` or `POST /v1/datasets`), so clients
+//! never send bulk data through the control plane. [`open_source`] is
+//! the one spot deciding how a path becomes a
+//! [`ColumnSource`]: packed `.bmat` v2 streams from disk (the
+//! out-of-core path prices only resident blocks), anything else loads
+//! into memory once at registration.
+
+pub mod http;
+pub mod signal;
+pub mod wire;
+
+pub use http::{Server, ServerConfig};
+pub use wire::{JobRequest, WIRE_VERSION};
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::data::colstore::{ColumnSource, InMemorySource, PackedFileSource};
+use crate::data::io;
+use crate::util::error::Result;
+
+/// Open a dataset path as a [`ColumnSource`]: `.bmat` v2 files become
+/// streaming [`PackedFileSource`]s (column blocks read on demand),
+/// everything else ([`io::load`]-able CSV / legacy `.bmat`) is
+/// materialized into an [`InMemorySource`].
+pub fn open_source(path: &Path) -> Result<Arc<dyn ColumnSource>> {
+    if io::is_bmat_v2(path)? {
+        Ok(Arc::new(PackedFileSource::open(path)?))
+    } else {
+        Ok(Arc::new(InMemorySource::new(&io::load(path)?)))
+    }
+}

@@ -1,0 +1,68 @@
+//! Minimal SIGINT/SIGTERM latch for graceful drain, with no signal
+//! crate: on unix we register a trivial `extern "C"` handler through
+//! libc's `signal(2)` (already linked — std depends on libc) that flips
+//! one `AtomicBool`. The serve accept loop polls [`requested`] between
+//! connections and drains the job service before exiting, so a
+//! `kill -TERM` produces exit code 0 with no job left mid-flight.
+//!
+//! Atomics are async-signal-safe; the handler does nothing else. On
+//! non-unix targets [`install`] is a no-op and [`requested`] only
+//! reflects in-process shutdown requests via [`trigger`].
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn on_signal(_signum: i32) {
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+#[cfg(unix)]
+extern "C" {
+    fn signal(signum: i32, handler: extern "C" fn(i32)) -> isize;
+}
+
+/// Latch SIGINT (2) and SIGTERM (15) into the shutdown flag.
+#[cfg(unix)]
+pub fn install() {
+    unsafe {
+        signal(2, on_signal);
+        signal(15, on_signal);
+    }
+}
+
+/// No signals to latch on this platform; [`trigger`] still works.
+#[cfg(not(unix))]
+pub fn install() {}
+
+/// Has a shutdown been requested (signal or [`trigger`])?
+pub fn requested() -> bool {
+    SHUTDOWN.load(Ordering::SeqCst)
+}
+
+/// Request shutdown from inside the process (the `/v1/admin/drain`
+/// endpoint and tests use this; signals use the same flag).
+pub fn trigger() {
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+/// Clear the flag (test isolation only — the serve loop never resets).
+pub fn reset() {
+    SHUTDOWN.store(false, Ordering::SeqCst);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trigger_sets_and_reset_clears() {
+        reset();
+        assert!(!requested());
+        trigger();
+        assert!(requested());
+        reset();
+        assert!(!requested());
+    }
+}

@@ -1,0 +1,586 @@
+//! Versioned JSON wire schema (`"v": 1`) shared by every serving
+//! surface: the HTTP handlers in [`super::http`], `bulkmi serve
+//! --stdin`, and the CLI's option parsing. There is exactly one parse
+//! path from the wire strings (`backend` / `measure` / `sink` /
+//! `schedule` / `priority`) to the typed enums — the per-flag ad-hoc
+//! parsing that used to live in `cli/commands.rs` delegates here.
+//!
+//! A request names a server-registered dataset and carries the job
+//! knobs of [`JobSpec`]; unknown keys are rejected (typo protection,
+//! same policy as the config layer). Responses are hand-formatted JSON
+//! (the crate is serde-free); all floats render through Rust's shortest
+//! round-trip `Display`, so a value parsed back with
+//! [`Json::parse`] is bit-identical to what the engine computed.
+
+use crate::coordinator::admission::Priority;
+use crate::coordinator::scheduler::Schedule;
+use crate::coordinator::service::{JobInfo, JobSpec, JobStatus};
+use crate::mi::backend::Backend;
+use crate::mi::measure::CombineKind;
+use crate::mi::sink::{SinkData, SinkOutput, SinkSpec};
+use crate::util::error::{Error, Result};
+use crate::util::json::{escape, Json};
+
+/// The wire schema version every request and response carries.
+pub const WIRE_VERSION: u64 = 1;
+
+// ---------------------------------------------------------------------
+// the one parse path for wire-level option strings
+// ---------------------------------------------------------------------
+
+/// Parse a backend name, listing the valid names on failure.
+pub fn parse_backend(s: &str) -> Result<Backend> {
+    Backend::parse(s).ok_or_else(|| {
+        Error::Parse(format!(
+            "unknown backend '{s}' (expected one of: {})",
+            Backend::ALL.map(Backend::name).join(" ")
+        ))
+    })
+}
+
+/// [`parse_backend`] restricted to the native (always-available)
+/// backends — the job service cannot run XLA jobs.
+pub fn parse_native_backend(s: &str) -> Result<Backend> {
+    let backend = parse_backend(s)?;
+    if !backend.is_native() {
+        return Err(Error::Parse(format!(
+            "backend '{s}' is not native (expected one of: {})",
+            Backend::ALL
+                .iter()
+                .filter(|b| b.is_native())
+                .map(|b| b.name())
+                .collect::<Vec<_>>()
+                .join(" ")
+        )));
+    }
+    Ok(backend)
+}
+
+/// Parse a measure name, listing the valid names on failure.
+pub fn parse_measure(s: &str) -> Result<CombineKind> {
+    CombineKind::parse(s).ok_or_else(|| {
+        Error::Parse(format!(
+            "unknown measure '{s}' (expected one of: {})",
+            CombineKind::ALL.map(CombineKind::name).join(" ")
+        ))
+    })
+}
+
+/// Parse a schedule name, listing the valid names on failure.
+pub fn parse_schedule(s: &str) -> Result<Schedule> {
+    Schedule::parse(s).ok_or_else(|| {
+        Error::Parse(format!(
+            "unknown schedule '{s}' (expected one of: sequential largest-first \
+             diagonal-first panel)"
+        ))
+    })
+}
+
+/// Parse an admission priority, listing the valid names on failure.
+pub fn parse_priority(s: &str) -> Result<Priority> {
+    Priority::parse(s).ok_or_else(|| {
+        Error::Parse(format!(
+            "unknown priority '{s}' (expected one of: interactive batch)"
+        ))
+    })
+}
+
+/// Parse a sink spec (`--sink` syntax; delegates to
+/// [`SinkSpec::parse`], which already reports the valid forms).
+pub fn parse_sink(s: &str) -> Result<SinkSpec> {
+    SinkSpec::parse(s)
+}
+
+/// Render a [`SinkSpec`] back to its `--sink` string — the inverse of
+/// [`parse_sink`].
+pub fn sink_string(sink: &SinkSpec) -> String {
+    match sink {
+        SinkSpec::Dense => "dense".to_string(),
+        SinkSpec::TopK { k, per_column: false } => format!("topk:{k}"),
+        SinkSpec::TopK { k, per_column: true } => format!("topk-per-col:{k}"),
+        SinkSpec::ThresholdMi { threshold } => format!("threshold:{threshold}"),
+        SinkSpec::ThresholdPvalue { pvalue } => format!("pvalue:{pvalue}"),
+        SinkSpec::Spill { dir } => format!("spill:{}", dir.display()),
+    }
+}
+
+// ---------------------------------------------------------------------
+// JobRequest: the submit payload
+// ---------------------------------------------------------------------
+
+/// A wire-level job submission: which registered dataset to run over,
+/// plus the job knobs. Parsed by the HTTP `POST /v1/jobs` handler and
+/// by `bulkmi serve --stdin` (one request per line) through the same
+/// code.
+#[derive(Clone, Debug)]
+pub struct JobRequest {
+    /// Name of a server-registered dataset.
+    pub dataset: String,
+    /// The validated job spec ([`JobSpec::builder`] output).
+    pub spec: JobSpec,
+}
+
+/// Every key a v1 request may carry.
+const REQUEST_KEYS: &[&str] = &[
+    "v",
+    "dataset",
+    "tenant",
+    "backend",
+    "measure",
+    "sink",
+    "schedule",
+    "block_cols",
+    "workers",
+    "cache_bytes",
+    "readahead",
+    "task_latency_secs",
+    "priority",
+];
+
+fn req_str<'a>(obj: &'a Json, key: &str) -> Result<Option<&'a str>> {
+    match obj.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v
+            .as_str()
+            .map(Some)
+            .ok_or_else(|| Error::Parse(format!("request key '{key}' must be a string"))),
+    }
+}
+
+fn req_usize(obj: &Json, key: &str) -> Result<Option<usize>> {
+    match obj.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => {
+            let n = v
+                .as_f64()
+                .ok_or_else(|| Error::Parse(format!("request key '{key}' must be a number")))?;
+            if !n.is_finite() || n < 0.0 || n.fract() != 0.0 || n > 9.0e15 {
+                return Err(Error::Parse(format!(
+                    "request key '{key}' must be a non-negative integer, got {n}"
+                )));
+            }
+            Ok(Some(n as usize))
+        }
+    }
+}
+
+fn req_f64(obj: &Json, key: &str) -> Result<Option<f64>> {
+    match obj.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| Error::Parse(format!("request key '{key}' must be a number"))),
+    }
+}
+
+impl JobRequest {
+    /// Parse a request from JSON text (one HTTP body, one stdin line).
+    pub fn parse(text: &str) -> Result<JobRequest> {
+        Self::from_json(&Json::parse(text)?)
+    }
+
+    /// Build from a parsed JSON value, rejecting unknown keys and
+    /// validating the spec through [`JobSpec::builder`].
+    pub fn from_json(json: &Json) -> Result<JobRequest> {
+        let Json::Obj(fields) = json else {
+            return Err(Error::Parse("job request must be a JSON object".into()));
+        };
+        for (key, _) in fields {
+            if !REQUEST_KEYS.contains(&key.as_str()) {
+                return Err(Error::Parse(format!(
+                    "unknown request key '{key}' (expected: {})",
+                    REQUEST_KEYS.join(" ")
+                )));
+            }
+        }
+        let v = json
+            .get("v")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| Error::Parse("job request needs a numeric \"v\" field".into()))?;
+        if v != WIRE_VERSION as f64 {
+            return Err(Error::Parse(format!(
+                "unsupported wire version {v} (this server speaks v{WIRE_VERSION})"
+            )));
+        }
+        let dataset = req_str(json, "dataset")?
+            .ok_or_else(|| Error::Parse("job request needs a \"dataset\" name".into()))?
+            .to_string();
+
+        let mut builder = JobSpec::builder();
+        if let Some(s) = req_str(json, "backend")? {
+            builder = builder.backend(parse_native_backend(s)?);
+        }
+        if let Some(s) = req_str(json, "measure")? {
+            builder = builder.measure(parse_measure(s)?);
+        }
+        if let Some(s) = req_str(json, "sink")? {
+            builder = builder.sink(parse_sink(s)?);
+        }
+        if let Some(s) = req_str(json, "schedule")? {
+            builder = builder.schedule(parse_schedule(s)?);
+        }
+        if let Some(s) = req_str(json, "priority")? {
+            builder = builder.priority(parse_priority(s)?);
+        }
+        if let Some(s) = req_str(json, "tenant")? {
+            builder = builder.tenant(s);
+        }
+        if let Some(n) = req_usize(json, "block_cols")? {
+            builder = builder.block_cols(n);
+        }
+        if let Some(n) = req_usize(json, "workers")? {
+            builder = builder.inner_workers(n);
+        }
+        if let Some(n) = req_usize(json, "cache_bytes")? {
+            builder = builder.cache_bytes(Some(n));
+        }
+        if let Some(n) = req_usize(json, "readahead")? {
+            builder = builder.readahead(n);
+        }
+        if let Some(t) = req_f64(json, "task_latency_secs")? {
+            builder = builder.task_latency_secs(t);
+        }
+        Ok(JobRequest { dataset, spec: builder.build()? })
+    }
+
+    /// Render back to wire JSON — `parse(to_json(r))` reproduces the
+    /// request (round-trip tested below).
+    pub fn to_json(&self) -> String {
+        let s = &self.spec;
+        let mut out = format!(
+            "{{\"v\":{WIRE_VERSION},\"dataset\":\"{}\",\"backend\":\"{}\",\
+             \"measure\":\"{}\",\"sink\":\"{}\",\"block_cols\":{},\"workers\":{},\
+             \"readahead\":{},\"task_latency_secs\":{}",
+            escape(&self.dataset),
+            s.backend.name(),
+            s.measure.name(),
+            escape(&sink_string(&s.sink)),
+            s.block_cols,
+            s.inner_workers,
+            s.readahead,
+            s.task_latency_secs,
+        );
+        if let Some(schedule) = s.schedule {
+            out.push_str(&format!(",\"schedule\":\"{}\"", schedule.name()));
+        }
+        if let Some(cache) = s.cache_bytes {
+            out.push_str(&format!(",\"cache_bytes\":{cache}"));
+        }
+        if let Some(priority) = s.priority {
+            out.push_str(&format!(",\"priority\":\"{}\"", priority.name()));
+        }
+        if let Some(tenant) = &s.tenant {
+            out.push_str(&format!(",\"tenant\":\"{}\"", escape(tenant)));
+        }
+        out.push('}');
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// responses
+// ---------------------------------------------------------------------
+
+/// The status envelope for one job (`GET /v1/jobs/{id}` and the submit
+/// acknowledgement).
+pub fn status_json(id: u64, info: &JobInfo) -> String {
+    let progress = match &info.status {
+        JobStatus::Queued => 0.0,
+        JobStatus::Running(f) => *f,
+        _ => 1.0,
+    };
+    let error = match &info.status {
+        JobStatus::Failed(msg) => format!(",\"error\":\"{}\"", escape(msg)),
+        _ => String::new(),
+    };
+    format!(
+        "{{\"v\":{WIRE_VERSION},\"job\":{id},\"state\":\"{}\",\"progress\":{progress},\
+         \"priority\":\"{}\",\"estimated_bytes\":{}{error}}}",
+        info.status.name(),
+        info.priority.name(),
+        info.estimated_bytes,
+    )
+}
+
+fn pairs_json(pairs: &[crate::mi::topk::MiPair]) -> String {
+    let cells: Vec<String> = pairs
+        .iter()
+        .map(|p| format!("{{\"i\":{},\"j\":{},\"value\":{}}}", p.i, p.j, p.mi))
+        .collect();
+    format!("[{}]", cells.join(","))
+}
+
+fn opt_str_json(v: Option<&str>) -> String {
+    match v {
+        Some(s) => format!("\"{}\"", escape(s)),
+        None => "null".to_string(),
+    }
+}
+
+fn meta_json(out: &SinkOutput) -> String {
+    let m = &out.meta;
+    let admission = match &m.admission {
+        None => "null".to_string(),
+        Some(a) => format!(
+            "{{\"estimated_bytes\":{},\"queued_secs\":{},\"priority\":\"{}\"}}",
+            a.estimated_bytes, a.queued_secs, a.priority
+        ),
+    };
+    format!(
+        "{{\"backend\":{},\"requested_backend\":{},\"measure\":{},\"schedule\":{},\
+         \"admission\":{admission}}}",
+        opt_str_json(m.backend.as_deref()),
+        opt_str_json(m.requested_backend.as_deref()),
+        opt_str_json(m.measure.as_deref()),
+        opt_str_json(m.schedule),
+    )
+}
+
+/// The result envelope (`GET /v1/jobs/{id}/result`): the sink's payload
+/// rendered per kind, plus the run meta (backend, measure, admission
+/// audit). Dense results carry the full matrix row-major; spill results
+/// carry the manifest path instead of data.
+pub fn result_json(id: u64, out: &SinkOutput) -> String {
+    let result = match &out.data {
+        SinkData::Dense(mi) => {
+            let m = mi.dim();
+            let rows: Vec<String> = (0..m)
+                .map(|i| {
+                    let cells: Vec<String> =
+                        (0..m).map(|j| mi.get(i, j).to_string()).collect();
+                    format!("[{}]", cells.join(","))
+                })
+                .collect();
+            format!("{{\"kind\":\"dense\",\"dim\":{m},\"rows\":[{}]}}", rows.join(","))
+        }
+        SinkData::TopK(pairs) => {
+            format!("{{\"kind\":\"topk\",\"pairs\":{}}}", pairs_json(pairs))
+        }
+        SinkData::TopKPerColumn(cols) => {
+            let per_col: Vec<String> = cols.iter().map(|c| pairs_json(c)).collect();
+            format!(
+                "{{\"kind\":\"topk-per-col\",\"columns\":[{}]}}",
+                per_col.join(",")
+            )
+        }
+        SinkData::Sparse(sp) => {
+            let pvalue =
+                sp.pvalue.map_or("null".to_string(), |p| p.to_string());
+            format!(
+                "{{\"kind\":\"sparse\",\"threshold\":{},\"pvalue\":{pvalue},\"pairs\":{}}}",
+                sp.threshold,
+                pairs_json(&sp.pairs)
+            )
+        }
+        SinkData::Spilled(info) => format!(
+            "{{\"kind\":\"spill\",\"dir\":\"{}\",\"manifest\":\"{}\",\"m\":{},\
+             \"tiles\":{},\"bytes\":{}}}",
+            escape(&info.dir.display().to_string()),
+            escape(&info.dir.join("manifest.csv").display().to_string()),
+            info.m,
+            info.tiles,
+            info.bytes,
+        ),
+    };
+    format!(
+        "{{\"v\":{WIRE_VERSION},\"job\":{id},\"result\":{result},\"meta\":{}}}",
+        meta_json(out)
+    )
+}
+
+/// A uniform error envelope.
+pub fn error_json(msg: &str) -> String {
+    format!("{{\"v\":{WIRE_VERSION},\"error\":\"{}\"}}", escape(msg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mi::sink::{AdmissionReport, SinkMeta, SparsePairs};
+    use crate::mi::topk::MiPair;
+    use crate::mi::MiMatrix;
+
+    #[test]
+    fn request_round_trips_through_json() {
+        let spec = JobSpec::builder()
+            .backend(Backend::BulkSparse)
+            .measure(CombineKind::Jaccard)
+            .sink(SinkSpec::TopK { k: 7, per_column: false })
+            .schedule(Schedule::Panel)
+            .block_cols(16)
+            .inner_workers(3)
+            .cache_bytes(Some(1 << 20))
+            .readahead(2)
+            .task_latency_secs(0.5)
+            .priority(Priority::Interactive)
+            .tenant("acme")
+            .build()
+            .unwrap();
+        let req = JobRequest { dataset: "bg".into(), spec };
+        let back = JobRequest::parse(&req.to_json()).unwrap();
+        assert_eq!(back.dataset, "bg");
+        assert_eq!(back.spec.backend, Backend::BulkSparse);
+        assert_eq!(back.spec.measure, CombineKind::Jaccard);
+        assert_eq!(back.spec.sink, SinkSpec::TopK { k: 7, per_column: false });
+        assert_eq!(back.spec.schedule, Some(Schedule::Panel));
+        assert_eq!(back.spec.block_cols, 16);
+        assert_eq!(back.spec.inner_workers, 3);
+        assert_eq!(back.spec.cache_bytes, Some(1 << 20));
+        assert_eq!(back.spec.readahead, 2);
+        assert_eq!(back.spec.task_latency_secs, 0.5);
+        assert_eq!(back.spec.priority, Some(Priority::Interactive));
+        assert_eq!(back.spec.tenant.as_deref(), Some("acme"));
+    }
+
+    #[test]
+    fn minimal_request_uses_spec_defaults() {
+        let req = JobRequest::parse(r#"{"v":1,"dataset":"bg"}"#).unwrap();
+        let def = JobSpec::default();
+        assert_eq!(req.spec.backend, def.backend);
+        assert_eq!(req.spec.sink, def.sink);
+        assert_eq!(req.spec.measure, def.measure);
+        assert_eq!(req.spec.priority, None);
+    }
+
+    #[test]
+    fn version_is_checked() {
+        assert!(JobRequest::parse(r#"{"dataset":"bg"}"#).is_err());
+        let err = JobRequest::parse(r#"{"v":2,"dataset":"bg"}"#).unwrap_err();
+        assert!(err.to_string().contains("wire version"), "{err}");
+    }
+
+    #[test]
+    fn unknown_keys_and_bad_values_rejected() {
+        let err = JobRequest::parse(r#"{"v":1,"dataset":"bg","bogus":1}"#).unwrap_err();
+        assert!(err.to_string().contains("unknown request key 'bogus'"), "{err}");
+        assert!(JobRequest::parse(r#"{"v":1,"dataset":"bg","block_cols":1.5}"#).is_err());
+        assert!(JobRequest::parse(r#"{"v":1,"dataset":"bg","block_cols":-4}"#).is_err());
+        assert!(JobRequest::parse(r#"{"v":1,"dataset":"bg","backend":7}"#).is_err());
+        assert!(JobRequest::parse(r#"{"v":1}"#).is_err(), "dataset is required");
+        assert!(JobRequest::parse(r#"[1,2]"#).is_err(), "must be an object");
+    }
+
+    #[test]
+    fn wire_parsers_reject_with_the_valid_names() {
+        let err = parse_backend("warp").unwrap_err();
+        assert!(err.to_string().contains("bulk-bitpack"), "{err}");
+        let err = parse_native_backend("xla").unwrap_err();
+        assert!(err.to_string().contains("not native"), "{err}");
+        let err = parse_measure("pearson").unwrap_err();
+        assert!(err.to_string().contains("jaccard"), "{err}");
+        let err = parse_schedule("random").unwrap_err();
+        assert!(err.to_string().contains("panel"), "{err}");
+        let err = parse_priority("urgent").unwrap_err();
+        assert!(err.to_string().contains("interactive"), "{err}");
+        assert!(parse_sink("warp:1").is_err());
+    }
+
+    #[test]
+    fn sink_strings_round_trip() {
+        for s in ["dense", "topk:5", "topk-per-col:2", "threshold:0.25", "pvalue:0.001"] {
+            let spec = parse_sink(s).unwrap();
+            assert_eq!(sink_string(&spec), s);
+            assert_eq!(parse_sink(&sink_string(&spec)).unwrap(), spec);
+        }
+    }
+
+    #[test]
+    fn status_json_parses_back() {
+        let info = JobInfo {
+            status: JobStatus::Running(0.25),
+            priority: Priority::Batch,
+            estimated_bytes: 4096,
+        };
+        let doc = Json::parse(&status_json(7, &info)).unwrap();
+        assert_eq!(doc.get("v").unwrap().as_f64(), Some(1.0));
+        assert_eq!(doc.get("job").unwrap().as_f64(), Some(7.0));
+        assert_eq!(doc.get("state").unwrap().as_str(), Some("running"));
+        assert_eq!(doc.get("progress").unwrap().as_f64(), Some(0.25));
+        assert_eq!(doc.get("priority").unwrap().as_str(), Some("batch"));
+        assert_eq!(doc.get("estimated_bytes").unwrap().as_f64(), Some(4096.0));
+
+        let failed = JobInfo {
+            status: JobStatus::Failed("boom \"quoted\"".into()),
+            priority: Priority::Interactive,
+            estimated_bytes: 1,
+        };
+        let doc = Json::parse(&status_json(8, &failed)).unwrap();
+        assert_eq!(doc.get("error").unwrap().as_str(), Some("boom \"quoted\""));
+    }
+
+    #[test]
+    fn dense_result_round_trips_bit_identically() {
+        let mut mat = crate::linalg::dense::Mat64::zeros(2, 2);
+        mat.set(0, 1, 0.123456789012345678);
+        mat.set(1, 0, 0.123456789012345678);
+        mat.set(1, 1, 1.0 / 3.0);
+        let out = SinkOutput {
+            data: SinkData::Dense(MiMatrix::from_mat(mat)),
+            meta: SinkMeta {
+                backend: Some("bulk-bitpack".into()),
+                admission: Some(AdmissionReport {
+                    estimated_bytes: 100,
+                    queued_secs: 0.0,
+                    priority: "batch",
+                }),
+                ..SinkMeta::default()
+            },
+        };
+        let doc = Json::parse(&result_json(3, &out)).unwrap();
+        let result = doc.get("result").unwrap();
+        assert_eq!(result.get("kind").unwrap().as_str(), Some("dense"));
+        let rows = result.get("rows").unwrap().as_arr().unwrap();
+        // shortest round-trip Display -> parse reproduces the exact f64
+        assert_eq!(rows[0].as_arr().unwrap()[1].as_f64(), Some(0.123456789012345678));
+        assert_eq!(rows[1].as_arr().unwrap()[1].as_f64(), Some(1.0 / 3.0));
+        let meta = doc.get("meta").unwrap();
+        assert_eq!(meta.get("backend").unwrap().as_str(), Some("bulk-bitpack"));
+        let adm = meta.get("admission").unwrap();
+        assert_eq!(adm.get("estimated_bytes").unwrap().as_f64(), Some(100.0));
+        assert_eq!(adm.get("priority").unwrap().as_str(), Some("batch"));
+    }
+
+    #[test]
+    fn non_dense_results_render() {
+        let pairs = vec![MiPair { i: 0, j: 3, mi: 0.5 }, MiPair { i: 1, j: 2, mi: 0.25 }];
+        let topk = SinkOutput::from(SinkData::TopK(pairs.clone()));
+        let doc = Json::parse(&result_json(1, &topk)).unwrap();
+        let got = doc.get("result").unwrap().get("pairs").unwrap().as_arr().unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].get("i").unwrap().as_f64(), Some(0.0));
+        assert_eq!(got[0].get("value").unwrap().as_f64(), Some(0.5));
+
+        let sparse = SinkOutput::from(SinkData::Sparse(SparsePairs {
+            threshold: 0.1,
+            pvalue: Some(0.01),
+            pairs,
+        }));
+        let doc = Json::parse(&result_json(2, &sparse)).unwrap();
+        let result = doc.get("result").unwrap();
+        assert_eq!(result.get("kind").unwrap().as_str(), Some("sparse"));
+        assert_eq!(result.get("pvalue").unwrap().as_f64(), Some(0.01));
+
+        let spilled = SinkOutput::from(SinkData::Spilled(crate::mi::sink::SpillInfo {
+            dir: std::path::PathBuf::from("/tmp/tiles"),
+            m: 10,
+            tiles: 3,
+            bytes: 800,
+        }));
+        let doc = Json::parse(&result_json(4, &spilled)).unwrap();
+        let result = doc.get("result").unwrap();
+        assert_eq!(result.get("kind").unwrap().as_str(), Some("spill"));
+        assert!(result
+            .get("manifest")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .ends_with("manifest.csv"));
+    }
+
+    #[test]
+    fn error_json_escapes() {
+        let doc = Json::parse(&error_json("bad \"thing\"")).unwrap();
+        assert_eq!(doc.get("error").unwrap().as_str(), Some("bad \"thing\""));
+    }
+}

@@ -20,6 +20,12 @@ pub enum Error {
     Coordinator(String),
     /// Configuration errors.
     Config(String),
+    /// A job was cancelled (taking its result yields this, not a value).
+    JobCancelled(String),
+    /// A job failed; the payload is the underlying failure message.
+    JobFailed(String),
+    /// An operation needed a live job but the job is already terminal.
+    JobTerminal(String),
 }
 
 impl fmt::Display for Error {
@@ -32,6 +38,9 @@ impl fmt::Display for Error {
             Error::NoArtifact(s) => write!(f, "no artifact: {s}"),
             Error::Coordinator(s) => write!(f, "coordinator error: {s}"),
             Error::Config(s) => write!(f, "config error: {s}"),
+            Error::JobCancelled(s) => write!(f, "job cancelled: {s}"),
+            Error::JobFailed(s) => write!(f, "job failed: {s}"),
+            Error::JobTerminal(s) => write!(f, "job already terminal: {s}"),
         }
     }
 }
@@ -56,6 +65,13 @@ mod tests {
         assert!(Error::Shape("bad".into()).to_string().contains("shape"));
         assert!(Error::Parse("x".into()).to_string().contains("parse"));
         assert!(Error::Runtime("x".into()).to_string().contains("runtime"));
+    }
+
+    #[test]
+    fn job_variants_format() {
+        assert!(Error::JobCancelled("7".into()).to_string().contains("cancelled"));
+        assert!(Error::JobFailed("7".into()).to_string().contains("failed"));
+        assert!(Error::JobTerminal("7".into()).to_string().contains("terminal"));
     }
 
     #[test]

@@ -65,12 +65,12 @@ fn auto_job_records_choice_in_sink_meta() {
     let svc = JobService::new(2, 4);
     let ds = SynthSpec::new(500, 24).sparsity(0.9).seed(33).plant(1, 7, 0.02).generate();
     let full = compute_mi(&ds, Backend::BulkBitpack).unwrap();
-    let spec = JobSpec {
-        backend: Backend::Auto,
-        block_cols: 8,
-        sink: SinkSpec::TopK { k: 3, per_column: false },
-        ..Default::default()
-    };
+    let spec = JobSpec::builder()
+        .backend(Backend::Auto)
+        .block_cols(8)
+        .sink(SinkSpec::TopK { k: 3, per_column: false })
+        .build()
+        .unwrap();
     let h = svc.submit(ds, spec).unwrap();
     let JobStatus::Done(out) = svc.wait(h).unwrap() else {
         panic!("auto job failed")
@@ -104,11 +104,11 @@ fn probe_cache_reused_across_jobs() {
     let svc = JobService::new(1, 4);
     // shape unique to this test so parallel tests cannot pre-seed the key
     let ds = SynthSpec::new(777, 26).sparsity(0.8).seed(55).generate();
-    let spec = JobSpec {
-        backend: Backend::Auto,
-        sink: SinkSpec::TopK { k: 2, per_column: false },
-        ..Default::default()
-    };
+    let spec = JobSpec::builder()
+        .backend(Backend::Auto)
+        .sink(SinkSpec::TopK { k: 2, per_column: false })
+        .build()
+        .unwrap();
     let h1 = svc.submit(ds.clone(), spec.clone()).unwrap();
     let JobStatus::Done(first) = svc.wait(h1).unwrap() else { panic!() };
     let h2 = svc.submit(ds, spec).unwrap();
@@ -144,9 +144,9 @@ fn fixed_backend_jobs_record_plain_meta() {
 }
 
 #[test]
-fn xla_jobs_are_rejected_at_submit() {
-    let svc = JobService::new(1, 2);
-    let ds = SynthSpec::new(20, 4).seed(1).generate();
-    let err = svc.submit(ds, JobSpec { backend: Backend::Xla, ..Default::default() });
+fn xla_jobs_are_rejected_by_the_builder() {
+    // the validating builder is the only construction path for
+    // external callers, so non-native specs never reach submit
+    let err = JobSpec::builder().backend(Backend::Xla).build();
     assert!(err.is_err());
 }

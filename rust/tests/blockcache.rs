@@ -6,7 +6,7 @@
 
 use bulkmi::coordinator::blockcache::{BlockCache, CacheHandle};
 use bulkmi::coordinator::executor::{
-    execute_plan, execute_plan_sink, NativeKind, NativeProvider,
+    run_plan, run_plan_dense, NativeKind, NativeProvider,
 };
 use bulkmi::coordinator::planner::plan_blocks;
 use bulkmi::coordinator::progress::Progress;
@@ -15,6 +15,7 @@ use bulkmi::data::colstore::{ColumnSource, InMemorySource, PackedFileSource};
 use bulkmi::data::io::write_bmat_v2;
 use bulkmi::data::synth::SynthSpec;
 use bulkmi::linalg::bitmat::BitMatrix;
+use bulkmi::mi::measure::CombineKind;
 use bulkmi::mi::sink::{MiSink, SinkData, TopKSink};
 use bulkmi::util::error::Result;
 use std::path::PathBuf;
@@ -38,15 +39,23 @@ fn cached_runs_are_bit_identical_to_uncached() {
     for kind in [NativeKind::Bitpack, NativeKind::Dense, NativeKind::Sparse] {
         let plan = plan_blocks(48, 6).unwrap();
         let progress = Progress::new(plan.tasks.len());
-        let uncached =
-            execute_plan(&src, &plan, &NativeProvider::new(&src, kind), 2, &progress).unwrap();
+        let uncached = run_plan_dense(
+            &src,
+            &plan,
+            &NativeProvider::new(&src, kind),
+            2,
+            &progress,
+            CombineKind::Mi,
+        )
+        .unwrap();
 
         let mut plan = plan_blocks(48, 6).unwrap();
         order_tasks(&mut plan.tasks, Schedule::Panel);
         let handle = CacheHandle::fresh(Arc::new(BlockCache::new(32 << 20)));
         let provider = NativeProvider::with_cache(&src, kind, handle, 2);
         let progress = Progress::new(plan.tasks.len());
-        let cached = execute_plan(&src, &plan, &provider, 3, &progress).unwrap();
+        let cached =
+            run_plan_dense(&src, &plan, &provider, 3, &progress, CombineKind::Mi).unwrap();
         assert_eq!(cached.max_abs_diff(&uncached), 0.0, "{kind:?}");
     }
 
@@ -63,7 +72,7 @@ fn cached_runs_are_bit_identical_to_uncached() {
         };
         let mut sink = TopKSink::global(12);
         let progress = Progress::new(plan.tasks.len());
-        execute_plan_sink(&src, &plan, &provider, 2, &progress, &mut sink).unwrap();
+        run_plan(&src, &plan, &provider, 2, &progress, &mut sink, CombineKind::Mi).unwrap();
         match sink.finish().unwrap().data {
             SinkData::TopK(pairs) => topk_runs.push(pairs),
             other => panic!("unexpected sink output {}", other.kind_name()),
@@ -110,7 +119,7 @@ fn run_panel(ds: &bulkmi::data::dataset::BinaryDataset, cache: &Arc<BlockCache>)
     let provider =
         NativeProvider::with_cache(ds, NativeKind::Bitpack, CacheHandle::fresh(Arc::clone(cache)), 0);
     let progress = Progress::new(plan.tasks.len());
-    execute_plan(ds, &plan, &provider, 1, &progress).unwrap();
+    run_plan_dense(ds, &plan, &provider, 1, &progress, CombineKind::Mi).unwrap();
 }
 
 /// Positioned reads share one file handle with no seek state: many
@@ -193,7 +202,7 @@ fn diagonal_tasks_fetch_exactly_one_block() {
     let plan = plan_blocks(16, 4).unwrap(); // nb = 4, T = 10
     let provider = NativeProvider::new(&src, NativeKind::Bitpack);
     let progress = Progress::new(plan.tasks.len());
-    execute_plan(&src, &plan, &provider, 1, &progress).unwrap();
+    run_plan_dense(&src, &plan, &provider, 1, &progress, CombineKind::Mi).unwrap();
     let nb = 4;
     let t = plan.tasks.len();
     assert_eq!(src.calls.load(Ordering::Relaxed), nb + nb + 2 * (t - nb));

@@ -8,7 +8,7 @@
 use bulkmi::coordinator::executor::NativeKind;
 use bulkmi::coordinator::planner::{block_for_budget, plan_blocks, task_bytes};
 use bulkmi::coordinator::progress::Progress;
-use bulkmi::coordinator::{execute_plan_measure, execute_plan_sink, NativeProvider};
+use bulkmi::coordinator::{run_plan, run_plan_dense, NativeProvider};
 use bulkmi::data::colstore::{ColumnSource, InMemorySource, PackedFileSource};
 use bulkmi::data::dataset::BinaryDataset;
 use bulkmi::data::io;
@@ -161,7 +161,7 @@ fn out_of_core_run_bit_identical_on_every_backend() {
     let mem = InMemorySource::new(&ds);
     let plan = plan_blocks(m, block).unwrap();
     for kind in [NativeKind::Bitpack, NativeKind::Dense, NativeKind::Sparse] {
-        let from_disk = execute_plan_measure(
+        let from_disk = run_plan_dense(
             &packed,
             &plan,
             &NativeProvider::new(&packed, kind),
@@ -170,7 +170,7 @@ fn out_of_core_run_bit_identical_on_every_backend() {
             CombineKind::Mi,
         )
         .unwrap();
-        let from_mem = execute_plan_measure(
+        let from_mem = run_plan_dense(
             &mem,
             &plan,
             &NativeProvider::new(&mem, kind),
@@ -196,7 +196,7 @@ fn out_of_core_run_bit_identical_on_every_backend() {
     let (chosen, probe) = Backend::Auto.resolve_source(&packed).unwrap();
     assert!(chosen.is_native());
     assert!(probe.is_some(), "auto must carry its probe report");
-    let auto_run = execute_plan_measure(
+    let auto_run = run_plan_dense(
         &packed,
         &plan,
         &NativeProvider::new(&packed, chosen.native_kind()),
@@ -210,13 +210,14 @@ fn out_of_core_run_bit_identical_on_every_backend() {
     // a matrix-free sink over the same streamed plan matches post-hoc
     // extraction from the full matrix
     let mut sink = TopKSink::global(5);
-    execute_plan_sink(
+    run_plan(
         &packed,
         &plan,
         &NativeProvider::new(&packed, NativeKind::Bitpack),
         2,
         &Progress::new(plan.tasks.len()),
         &mut sink,
+        CombineKind::Mi,
     )
     .unwrap();
     let SinkData::TopK(got) = sink.finish().unwrap().data else { panic!() };

@@ -7,10 +7,11 @@ use bulkmi::coordinator::planner::{block_for_budget, plan_blocks, task_bytes};
 use bulkmi::coordinator::progress::Progress;
 use bulkmi::coordinator::scheduler::{order_tasks, Schedule};
 use bulkmi::coordinator::service::{JobService, JobSpec, JobStatus};
-use bulkmi::coordinator::{execute_plan, GramProvider, NativeProvider};
+use bulkmi::coordinator::{run_plan_dense, GramProvider, NativeProvider};
 use bulkmi::data::synth::SynthSpec;
 use bulkmi::linalg::dense::Mat64;
 use bulkmi::mi::backend::{compute_mi, Backend};
+use bulkmi::mi::measure::CombineKind;
 use bulkmi::util::error::Error;
 use bulkmi::util::prop::{gen, prop_check, Config};
 
@@ -66,7 +67,7 @@ fn prop_blockwise_equals_monolithic_bit_for_bit() {
             let plan = plan_blocks(*m, *block).unwrap();
             let provider = NativeProvider::new(&ds, NativeKind::Bitpack);
             let progress = Progress::new(plan.tasks.len());
-            let got = execute_plan(&ds, &plan, &provider, *workers, &progress)
+            let got = run_plan_dense(&ds, &plan, &provider, *workers, &progress, CombineKind::Mi)
                 .map_err(|e| e.to_string())?;
             if got.max_abs_diff(&mono) != 0.0 {
                 return Err(format!("diff {}", got.max_abs_diff(&mono)));
@@ -117,7 +118,8 @@ fn schedules_do_not_change_results() {
         let mut plan = plan_blocks(40, 7).unwrap();
         order_tasks(&mut plan.tasks, policy);
         let progress = Progress::new(plan.tasks.len());
-        let got = execute_plan(&ds, &plan, &provider, 2, &progress).unwrap();
+        let got =
+            run_plan_dense(&ds, &plan, &provider, 2, &progress, CombineKind::Mi).unwrap();
         assert_eq!(got.max_abs_diff(&mono), 0.0, "{policy:?}");
     }
 }
@@ -156,7 +158,8 @@ fn executor_surfaces_provider_errors() {
     };
     let plan = plan_blocks(20, 5).unwrap();
     let progress = Progress::new(plan.tasks.len());
-    let err = execute_plan(&ds, &plan, &provider, 2, &progress).unwrap_err();
+    let err =
+        run_plan_dense(&ds, &plan, &provider, 2, &progress, CombineKind::Mi).unwrap_err();
     assert!(matches!(err, Error::Runtime(_)), "got {err}");
 }
 
@@ -166,14 +169,15 @@ fn service_survives_many_small_jobs() {
     let mut handles = Vec::new();
     for seed in 0..20 {
         let ds = SynthSpec::new(40, 6).sparsity(0.5).seed(seed).generate();
-        handles.push((seed, svc.submit(ds, JobSpec { block_cols: 2, ..Default::default() }).unwrap()));
+        let spec = JobSpec::builder().block_cols(2).build().unwrap();
+        handles.push((seed, svc.submit(ds, spec).unwrap()));
     }
     for (seed, h) in handles {
         let status = svc.wait(h).unwrap();
         assert!(matches!(status, JobStatus::Done(_)), "job {seed}: {status:?}");
         let ds = SynthSpec::new(40, 6).sparsity(0.5).seed(seed).generate();
         let want = compute_mi(&ds, Backend::BulkBitpack).unwrap();
-        let got = svc.take(h).unwrap().unwrap().into_dense().unwrap();
+        let got = svc.take(h).unwrap().into_dense().unwrap();
         assert_eq!(got.max_abs_diff(&want), 0.0, "job {seed}");
     }
     assert_eq!(svc.metrics().counter("jobs_done").get(), 20);
@@ -183,7 +187,7 @@ fn service_survives_many_small_jobs() {
 fn service_progress_is_monotonic() {
     let svc = JobService::new(1, 2);
     let ds = SynthSpec::new(3000, 100).sparsity(0.7).seed(6).generate();
-    let h = svc.submit(ds, JobSpec { block_cols: 10, ..Default::default() }).unwrap();
+    let h = svc.submit(ds, JobSpec::builder().block_cols(10).build().unwrap()).unwrap();
     let mut last = 0.0f64;
     loop {
         match svc.poll(h).unwrap() {
@@ -204,7 +208,7 @@ fn cancelled_queued_job_never_runs() {
     // one worker busy with a big job; the queued one is cancelled
     let svc = JobService::new(1, 8);
     let big = SynthSpec::new(8000, 128).sparsity(0.5).seed(7).generate();
-    let h1 = svc.submit(big, JobSpec { block_cols: 16, ..Default::default() }).unwrap();
+    let h1 = svc.submit(big, JobSpec::builder().block_cols(16).build().unwrap()).unwrap();
     let small = SynthSpec::new(50, 5).seed(8).generate();
     let h2 = svc.submit(small, JobSpec::default()).unwrap();
     svc.cancel(h2).unwrap();

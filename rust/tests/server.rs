@@ -1,0 +1,287 @@
+//! HTTP job-server acceptance tests, driven over real TCP sockets with
+//! a hand-rolled client (the same zero-dependency discipline as the
+//! server):
+//!
+//! * submit → poll → result round trip for two concurrent jobs whose
+//!   aggregate estimate exceeds the admission budget — they serialize
+//!   under the cap, and both results come back **bit-identical** to the
+//!   library computation the CLI `compute` path uses;
+//! * admission facts (estimated bytes, priority) surface in the status
+//!   envelope, the result meta, and `/metrics`;
+//! * the error mapping: unknown dataset/job → 404, bad version/id →
+//!   400, cancelled result → 410, cancel-after-terminal → 409;
+//! * drain: the admin endpoint and the SIGTERM latch both stop the
+//!   accept loop, finish in-flight jobs, and return `Ok` (exit 0).
+//!
+//! Everything runs in ONE test function: the shutdown signal latch is
+//! process-global, so concurrent server tests would drain each other.
+
+use bulkmi::coordinator::admission::estimate_job_bytes;
+use bulkmi::coordinator::service::JobSpec;
+use bulkmi::data::io;
+use bulkmi::data::synth::SynthSpec;
+use bulkmi::mi::backend::{compute_mi, Backend};
+use bulkmi::mi::sink::SinkSpec;
+use bulkmi::mi::topk::top_k_pairs;
+use bulkmi::server::{signal, Server, ServerConfig};
+use bulkmi::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("bulkmi-server-it-{}-{name}", std::process::id()))
+}
+
+/// Minimal HTTP/1.1 client: one request, `Connection: close`, returns
+/// `(status, body)`.
+fn http(addr: SocketAddr, method: &str, path: &str, body: &str) -> (u16, String) {
+    let mut stream = TcpStream::connect(addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    stream.set_write_timeout(Some(Duration::from_secs(60))).unwrap();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: bulkmi-test\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut raw = String::new();
+    stream.read_to_string(&mut raw).unwrap();
+    let status: u16 = raw
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| panic!("bad status line in {raw:?}"));
+    let body = raw.split_once("\r\n\r\n").map(|(_, b)| b.to_string()).unwrap_or_default();
+    (status, body)
+}
+
+fn submit(addr: SocketAddr, body: &str) -> u64 {
+    let (code, resp) = http(addr, "POST", "/v1/jobs", body);
+    assert_eq!(code, 202, "submit failed: {resp}");
+    let doc = Json::parse(&resp).unwrap();
+    doc.get("job").and_then(Json::as_f64).expect("job id in ack") as u64
+}
+
+fn wait_done(addr: SocketAddr, id: u64) {
+    let mut last = String::new();
+    for _ in 0..6000 {
+        let (code, body) = http(addr, "GET", &format!("/v1/jobs/{id}"), "");
+        assert_eq!(code, 200, "{body}");
+        let doc = Json::parse(&body).unwrap();
+        match doc.get("state").and_then(Json::as_str).unwrap() {
+            "done" => return,
+            "failed" | "cancelled" => panic!("job {id} ended badly: {body}"),
+            _ => {
+                last = body;
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+    panic!("job {id} never finished; last status {last}");
+}
+
+#[test]
+fn http_server_end_to_end() {
+    // ---- the workload, and the answer the CLI compute path gives ----
+    let (n, m) = (3000usize, 32usize);
+    let ds = SynthSpec::new(n, m).sparsity(0.8).seed(5).plant(2, 9, 0.02).generate();
+    let path = tmp("panel.bmat");
+    io::write_bmat_v2(&ds, &path).unwrap();
+    let want = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+
+    // ---- admission cap: either job fits alone, both at once do not ----
+    let dense_spec = JobSpec::builder().block_cols(8).build().unwrap();
+    let topk_spec = JobSpec::builder()
+        .block_cols(8)
+        .sink(SinkSpec::TopK { k: 5, per_column: false })
+        .build()
+        .unwrap();
+    let dense_cost = estimate_job_bytes(n, m, true, &dense_spec);
+    let topk_cost = estimate_job_bytes(n, m, true, &topk_spec);
+    assert!(dense_cost > 0 && topk_cost > 0);
+    let budget = dense_cost.max(topk_cost) + dense_cost.min(topk_cost) / 2;
+    assert!(
+        budget < dense_cost + topk_cost,
+        "the cap ({budget}) must be smaller than both jobs resident together \
+         ({dense_cost} + {topk_cost})"
+    );
+    let server = Arc::new(
+        Server::bind(&ServerConfig {
+            listen: "127.0.0.1:0".into(),
+            workers: 2,
+            max_queued: 8,
+            memory_budget: Some(budget),
+        })
+        .unwrap(),
+    );
+    assert_eq!(server.register_dataset("panel", &path).unwrap(), (n, m));
+    let addr = server.addr();
+    assert_ne!(addr.port(), 0, "port 0 must resolve to a real port");
+    let runner = {
+        let server = Arc::clone(&server);
+        std::thread::spawn(move || server.run())
+    };
+
+    let (code, body) = http(addr, "GET", "/healthz", "");
+    assert_eq!(code, 200);
+    let doc = Json::parse(&body).unwrap();
+    assert_eq!(doc.get("ok").and_then(Json::as_bool), Some(true), "{body}");
+    assert_eq!(doc.get("draining").and_then(Json::as_bool), Some(false), "{body}");
+
+    let (code, body) = http(addr, "GET", "/v1/datasets", "");
+    assert_eq!(code, 200);
+    assert!(body.contains("\"name\":\"panel\""), "{body}");
+    assert!(body.contains("\"out_of_core\":true"), "{body}");
+
+    // ---- two concurrent jobs, aggregate estimate over the budget ----
+    let dense_id = submit(addr, r#"{"v":1,"dataset":"panel","block_cols":8}"#);
+    let topk_id = submit(
+        addr,
+        r#"{"v":1,"dataset":"panel","block_cols":8,"sink":"topk:5","priority":"interactive"}"#,
+    );
+    // the submit ack already carries the admission price
+    let (_, status) = http(addr, "GET", &format!("/v1/jobs/{dense_id}"), "");
+    let doc = Json::parse(&status).unwrap();
+    assert_eq!(
+        doc.get("estimated_bytes").and_then(Json::as_f64),
+        Some(dense_cost as f64),
+        "{status}"
+    );
+    wait_done(addr, dense_id);
+    wait_done(addr, topk_id);
+
+    // under the cap: the gate never held both jobs' bytes at once
+    let gate = server.service().admission();
+    assert_eq!(gate.budget_bytes(), Some(budget));
+    assert!(
+        gate.peak_bytes() >= dense_cost.min(topk_cost),
+        "at least one job was priced in"
+    );
+    assert!(
+        gate.peak_bytes() <= budget,
+        "aggregate resident bytes exceeded the cap: peak {} > budget {budget}",
+        gate.peak_bytes()
+    );
+    assert_eq!(gate.inflight_bytes(), 0, "all permits returned");
+    assert_eq!(gate.admitted(), 2);
+
+    // ---- results: bit-identical to the library/CLI computation ----
+    let (code, body) = http(addr, "GET", &format!("/v1/jobs/{dense_id}/result"), "");
+    assert_eq!(code, 200, "{body}");
+    let doc = Json::parse(&body).unwrap();
+    let result = doc.get("result").unwrap();
+    assert_eq!(result.get("kind").and_then(Json::as_str), Some("dense"));
+    assert_eq!(result.get("dim").and_then(Json::as_f64), Some(m as f64));
+    let rows = result.get("rows").and_then(Json::as_arr).unwrap();
+    assert_eq!(rows.len(), m);
+    for (i, row) in rows.iter().enumerate() {
+        let row = row.as_arr().unwrap();
+        assert_eq!(row.len(), m);
+        for (j, cell) in row.iter().enumerate() {
+            assert_eq!(
+                cell.as_f64(),
+                Some(want.get(i, j)),
+                "cell ({i},{j}) not bit-identical over the wire"
+            );
+        }
+    }
+    // admission facts recorded in the result meta
+    let meta = doc.get("meta").unwrap();
+    assert_eq!(meta.get("backend").and_then(Json::as_str), Some("bulk-bitpack"));
+    let adm = meta.get("admission").expect("admission meta present");
+    assert_eq!(adm.get("estimated_bytes").and_then(Json::as_f64), Some(dense_cost as f64));
+    assert_eq!(adm.get("priority").and_then(Json::as_str), Some("batch"));
+
+    let (code, body) = http(addr, "GET", &format!("/v1/jobs/{topk_id}/result"), "");
+    assert_eq!(code, 200, "{body}");
+    let doc = Json::parse(&body).unwrap();
+    let result = doc.get("result").unwrap();
+    assert_eq!(result.get("kind").and_then(Json::as_str), Some("topk"));
+    let got = result.get("pairs").and_then(Json::as_arr).unwrap();
+    let exp = top_k_pairs(&want, 5);
+    assert_eq!(got.len(), exp.len());
+    for (g, w) in got.iter().zip(&exp) {
+        assert_eq!(g.get("i").and_then(Json::as_f64), Some(w.i as f64));
+        assert_eq!(g.get("j").and_then(Json::as_f64), Some(w.j as f64));
+        assert_eq!(g.get("value").and_then(Json::as_f64), Some(w.mi), "not bit-identical");
+    }
+    let adm = doc.get("meta").unwrap().get("admission").expect("admission meta");
+    assert_eq!(adm.get("priority").and_then(Json::as_str), Some("interactive"));
+
+    // ---- error mapping ----
+    // result is one-shot: the second fetch finds no job
+    let (code, _) = http(addr, "GET", &format!("/v1/jobs/{dense_id}/result"), "");
+    assert_eq!(code, 404, "taken results are gone");
+    let (code, body) = http(addr, "POST", "/v1/jobs", r#"{"v":1,"dataset":"nope"}"#);
+    assert_eq!(code, 404, "{body}");
+    assert!(body.contains("registered: panel"), "{body}");
+    let (code, _) = http(addr, "POST", "/v1/jobs", r#"{"v":9,"dataset":"panel"}"#);
+    assert_eq!(code, 400, "bad wire version");
+    let (code, _) = http(addr, "GET", "/v1/jobs/xyz", "");
+    assert_eq!(code, 400, "bad job id");
+    let (code, _) = http(addr, "GET", "/v1/jobs/999999", "");
+    assert_eq!(code, 404, "unknown job");
+    let (code, _) = http(addr, "GET", "/v1/bogus", "");
+    assert_eq!(code, 404, "unknown route");
+
+    // ---- metrics expose the gate and the shared cache ----
+    let (code, metrics) = http(addr, "GET", "/metrics", "");
+    assert_eq!(code, 200);
+    assert!(metrics.contains(&format!("admission budget_bytes = {budget}")), "{metrics}");
+    assert!(metrics.contains("admission peak_bytes = "), "{metrics}");
+    assert!(metrics.contains("cache shared hits = "), "{metrics}");
+    assert!(metrics.contains("jobs_done"), "{metrics}");
+
+    // ---- drain endpoint: loop exits, in-flight work finishes, Ok ----
+    let (code, body) = http(addr, "POST", "/v1/admin/drain", "");
+    assert_eq!(code, 200);
+    assert!(body.contains("\"draining\":true"), "{body}");
+    runner.join().unwrap().expect("drained server exits cleanly");
+
+    // ---- cancel mapping needs a queued job: one worker, busy pool ----
+    let server = Arc::new(
+        Server::bind(&ServerConfig {
+            listen: "127.0.0.1:0".into(),
+            workers: 1,
+            max_queued: 8,
+            memory_budget: None,
+        })
+        .unwrap(),
+    );
+    // many tiny tasks (250 blocks -> ~31k tasks) keep the single worker
+    // busy long enough that the cancel below always lands first
+    let big = SynthSpec::new(512, 2000).sparsity(0.5).seed(7).generate();
+    let big_path = tmp("big.bmat");
+    io::write_bmat_v2(&big, &big_path).unwrap();
+    server.register_dataset("big", &big_path).unwrap();
+    server.register_dataset("panel", &path).unwrap();
+    let addr = server.addr();
+    let runner = {
+        let server = Arc::clone(&server);
+        std::thread::spawn(move || server.run())
+    };
+    let big_id = submit(addr, r#"{"v":1,"dataset":"big","block_cols":8}"#);
+    let queued_id = submit(addr, r#"{"v":1,"dataset":"panel","block_cols":8}"#);
+    let (code, body) = http(addr, "POST", &format!("/v1/jobs/{queued_id}/cancel"), "");
+    assert_eq!(code, 200, "{body}");
+    assert!(body.contains("\"state\":\"cancelled\""), "{body}");
+    let (code, body) = http(addr, "GET", &format!("/v1/jobs/{queued_id}/result"), "");
+    assert_eq!(code, 410, "cancelled result is Gone: {body}");
+    let (code, _) = http(addr, "POST", &format!("/v1/jobs/{queued_id}/cancel"), "");
+    assert_eq!(code, 409, "second cancel hits a terminal job");
+    wait_done(addr, big_id);
+    let (code, _) = http(addr, "POST", &format!("/v1/jobs/{big_id}/cancel"), "");
+    assert_eq!(code, 409, "cancel after done is Conflict");
+
+    // ---- SIGTERM latch: same graceful path as the admin endpoint ----
+    signal::reset();
+    signal::trigger();
+    runner.join().unwrap().expect("signalled server exits cleanly");
+    signal::reset();
+
+    let _ = std::fs::remove_file(&path);
+    let _ = std::fs::remove_file(&big_path);
+}

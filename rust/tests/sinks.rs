@@ -16,11 +16,12 @@
 use bulkmi::coordinator::executor::NativeKind;
 use bulkmi::coordinator::planner::{dense_output_bytes, matrix_free_block, plan_blocks, BlockTask};
 use bulkmi::coordinator::progress::Progress;
-use bulkmi::coordinator::{execute_plan_sink, NativeProvider};
+use bulkmi::coordinator::{run_plan, NativeProvider};
 use bulkmi::data::dataset::BinaryDataset;
 use bulkmi::data::synth::SynthSpec;
 use bulkmi::linalg::dense::Mat64;
 use bulkmi::mi::backend::{compute_mi, Backend};
+use bulkmi::mi::measure::CombineKind;
 use bulkmi::mi::sink::{
     assemble_spilled, DenseSink, MiSink, SinkData, SinkOutput, ThresholdSink, TileSpillSink,
     TopKSink,
@@ -40,7 +41,7 @@ fn run_sink(
     let plan = plan_blocks(ds.n_cols(), block)?;
     let provider = NativeProvider::new(ds, kind);
     let progress = Progress::new(plan.tasks.len());
-    execute_plan_sink(ds, &plan, &provider, workers, &progress, sink)?;
+    run_plan(ds, &plan, &provider, workers, &progress, sink, CombineKind::Mi)?;
     sink.finish()
 }
 
@@ -253,7 +254,7 @@ fn topk_20k_columns_without_dense_matrix() {
     let provider = NativeProvider::new(&ds, NativeKind::Bitpack);
     let mut audit = BlockAudit { inner: TopKSink::global(1000), max_cells: 0, blocks: 0 };
     let progress = Progress::new(plan.tasks.len());
-    execute_plan_sink(&ds, &plan, &provider, 4, &progress, &mut audit).unwrap();
+    run_plan(&ds, &plan, &provider, 4, &progress, &mut audit, CombineKind::Mi).unwrap();
 
     // matrix-free: nothing m x m sized ever existed on the result path
     assert_eq!(audit.blocks, plan.tasks.len());
