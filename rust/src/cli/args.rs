@@ -14,7 +14,8 @@ pub struct Args {
 }
 
 /// Names that take no value (everything else with `--` expects one).
-const FLAG_NAMES: &[&str] = &["with-xla", "header", "verbose", "quiet", "quick", "stdin"];
+const FLAG_NAMES: &[&str] =
+    &["with-xla", "header", "verbose", "quiet", "quick", "stdin", "tiles"];
 
 impl Args {
     pub fn parse(argv: &[String]) -> Result<Self> {
@@ -90,6 +91,12 @@ impl Args {
         }
     }
 
+    /// Bare (non `--`) arguments, in order — subcommand operands like
+    /// `bulkmi resume DIR`.
+    pub fn positionals(&self) -> &[String] {
+        &self.positional
+    }
+
     /// Error on options that were provided but never consumed (typos).
     pub fn reject_unknown(&self) -> Result<()> {
         let known = self.known.borrow();
@@ -122,6 +129,7 @@ mod tests {
         assert_eq!(a.get_usize("cols", 0).unwrap(), 5);
         assert!(a.flag("with-xla"));
         assert!(!a.flag("header"));
+        assert_eq!(a.positionals(), &["pos1".to_string()]);
     }
 
     #[test]

@@ -20,7 +20,14 @@
 //!   it (panel order + prefetch). These rows carry `bytes_read`, and
 //!   the cached row's `rel` is the uncached/cached bytes-read ratio —
 //!   the read-amplification win the cache exists to deliver (expected
-//!   well above 2x), gated like any other `rel`.
+//!   well above 2x), gated like any other `rel`;
+//! * `tile-cache/{cold,warm}@dX` — the content-addressed Gram-tile
+//!   result cache ([`crate::coordinator::tilecache`]), one run that
+//!   computes and persists every tile and one that must be served
+//!   entirely from disk. The warm row's `rel` is the hit *fraction*
+//!   (exactly 1.0 when the cache works), a deterministic number where
+//!   wall time on temp-file tiles would be flaky; the cold row carries
+//!   the tile bytes written in `bytes_read`.
 //!
 //! Every entry carries both absolute throughput (`cells_per_sec`, Gram
 //! output cells per second) and `rel`, the throughput normalized by the
@@ -215,6 +222,9 @@ pub fn bench(argv: &[String]) -> Result<()> {
     // column blocks with real positioned-read I/O
     entries.extend(bench_ooc(rows.min(8_192), cols, 0.5, seed)?);
 
+    // --- Gram-tile result cache (cold write vs warm read) ---------------
+    entries.extend(bench_tilecache(rows.min(8_192), cols, 0.5, seed)?);
+
     print_table(&entries);
     let path = out.unwrap_or_else(|| PathBuf::from(format!("BENCH_{}.json", host_id())));
     write_json(&entries, mode, seed, reps, &path)?;
@@ -317,6 +327,60 @@ fn bench_ooc(rows: usize, cols: usize, density: f64, seed: u64) -> Result<Vec<Be
         });
     }
     let _ = std::fs::remove_file(&path);
+    Ok(entries)
+}
+
+/// The content-addressed Gram-tile result cache, measured end to end
+/// through `run_plan_tiled`: a cold run that computes every tile and
+/// writes it to a fresh cache directory, then a warm run over the same
+/// plan that must be served entirely from disk. Wall time on temp-file
+/// tiles is not deterministic, so the gateable number is the warm
+/// row's `rel` — the hit fraction, exactly 1.0 when every lookup hits
+/// — and the cold row reports the tile bytes it wrote in `bytes_read`
+/// (the warm row reports 0 there: a pure-hit run writes nothing).
+fn bench_tilecache(rows: usize, cols: usize, density: f64, seed: u64) -> Result<Vec<BenchEntry>> {
+    use crate::coordinator::executor::{run_plan_tiled, NativeKind, NativeProvider};
+    use crate::coordinator::planner::plan_blocks;
+    use crate::coordinator::progress::Progress;
+    use crate::coordinator::tilecache::TileCache;
+    use crate::data::colstore::InMemorySource;
+    use crate::mi::sink::TopKSink;
+
+    let ds = SynthSpec::new(rows, cols).sparsity(1.0 - density).seed(seed).generate();
+    let src = InMemorySource::new(&ds);
+    let root = std::env::temp_dir()
+        .join(format!("bulkmi-bench-tiles-{}-{rows}x{cols}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let cache = TileCache::open(root.clone(), 1 << 30);
+    let block = cols.div_ceil(8).max(1);
+    let cells = (cols * cols) as f64;
+    let tag = format!("@d{density:.2}");
+    let mut entries = Vec::new();
+    for warm in [false, true] {
+        let plan = plan_blocks(cols, block)?;
+        let provider = NativeProvider::new(&src, NativeKind::Bitpack);
+        let mut sink = TopKSink::global(8);
+        let progress = Progress::new(plan.tasks.len());
+        let before = cache.stats();
+        let tiles = Some(&cache);
+        let t0 = Instant::now();
+        run_plan_tiled(&src, &plan, &provider, 2, &progress, &mut sink, CombineKind::Mi, tiles)?;
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        let delta = cache.stats().since(&before);
+        let looked_up = (delta.hits + delta.misses).max(1);
+        entries.push(BenchEntry {
+            name: format!("tile-cache/{}{tag}", if warm { "warm" } else { "cold" }),
+            rows,
+            cols,
+            density,
+            secs,
+            cells_per_sec: cells / secs,
+            rel: warm.then(|| delta.hits as f64 / looked_up as f64),
+            chosen: None,
+            bytes_read: Some(delta.inserted_bytes),
+        });
+    }
+    let _ = std::fs::remove_dir_all(&root);
     Ok(entries)
 }
 
@@ -759,6 +823,22 @@ mod tests {
         assert!(ub >= 2 * cb, "uncached {ub} vs cached {cb}");
         assert_eq!(cached.rel, Some(ub as f64 / cb as f64));
         assert_eq!(uncached.rel, None);
+    }
+
+    #[test]
+    fn tilecache_entries_report_hit_fraction() {
+        // 64 cols in 8 blocks: 36 tiles, cold writes all of them, warm
+        // serves every one from disk
+        let entries = bench_tilecache(256, 64, 0.5, 7).unwrap();
+        assert_eq!(entries.len(), 2);
+        let cold = &entries[0];
+        let warm = &entries[1];
+        assert_eq!(cold.name, "tile-cache/cold@d0.50");
+        assert_eq!(warm.name, "tile-cache/warm@d0.50");
+        assert_eq!(cold.rel, None, "the cold row is a reference, never gated");
+        assert_eq!(warm.rel, Some(1.0), "a warm run must be pure hits");
+        assert!(cold.bytes_read.unwrap() > 0, "the cold run writes tiles");
+        assert_eq!(warm.bytes_read, Some(0), "a pure-hit run writes nothing");
     }
 
     #[test]

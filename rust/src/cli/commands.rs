@@ -1,7 +1,7 @@
 //! Subcommand implementations.
 
 use super::args::Args;
-use crate::config::{RunConfig, ServeConfig};
+use crate::config::{RawConfig, RunConfig, ServeConfig};
 use crate::coordinator::blockcache::{cache_plan, run_reports, BlockCache, CacheHandle};
 use crate::coordinator::planner::{
     block_policy, matrix_free_block, plan_blocks, plan_with_config, PlannerConfig,
@@ -9,7 +9,10 @@ use crate::coordinator::planner::{
 use crate::coordinator::progress::Progress;
 use crate::coordinator::scheduler::{order_tasks, Schedule};
 use crate::coordinator::service::{JobService, JobSpec, JobStatus};
-use crate::coordinator::{run_plan, run_plan_dense, NativeProvider};
+use crate::coordinator::tilecache::{
+    default_tile_root, tile_report, TileCache, DEFAULT_TILE_BUDGET,
+};
+use crate::coordinator::{run_plan, run_plan_dense, run_plan_tiled, NativeProvider};
 use crate::data::colstore::{ColumnSource, InMemorySource, PackedFileSource};
 use crate::data::dataset::BinaryDataset;
 use crate::data::io;
@@ -87,6 +90,7 @@ pub fn compute(argv: &[String]) -> Result<()> {
         })?);
     }
     cfg.readahead = args.get_usize("readahead", cfg.readahead)?;
+    cfg.tiles = cfg.tiles || args.flag("tiles");
     let input = PathBuf::from(args.req("input")?);
     let top = args.get_usize("top", 10)?;
     let normalize = args.get("normalize").map(|s| s.to_string());
@@ -125,7 +129,7 @@ pub fn compute(argv: &[String]) -> Result<()> {
     if !sink.is_dense() {
         // matrix-free / out-of-core path: never builds the m x m matrix
         let src = InMemorySource::new(&ds);
-        return compute_into_sink(&src, &cfg, &sink, top, out.as_deref());
+        return compute_into_sink(&src, &input, &cfg, &sink, top, out.as_deref());
     }
 
     let (mi, secs) = compute_with_plan(&ds, &cfg)?;
@@ -222,7 +226,7 @@ fn compute_packed(
         src.payload_bytes()
     );
     if !sink.is_dense() {
-        return compute_into_sink(&src, cfg, sink, top, out);
+        return compute_into_sink(&src, input, cfg, sink, top, out);
     }
     // dense sink: blockwise through the source into the full matrix
     let (backend, probe) = cfg.backend.resolve_source(&src)?;
@@ -368,6 +372,7 @@ pub fn compute_with_plan(ds: &BinaryDataset, cfg: &RunConfig) -> Result<(MiMatri
 /// (or, with a [`PackedFileSource`], how many bytes) the input has.
 fn compute_into_sink(
     src: &dyn ColumnSource,
+    input: &Path,
     cfg: &RunConfig,
     spec: &SinkSpec,
     top: usize,
@@ -413,6 +418,15 @@ fn compute_into_sink(
         schedule.name()
     );
     let mut sink = spec.build_for(src.n_cols(), src.n_rows(), cfg.measure)?;
+    if let SinkSpec::Spill { dir } = spec {
+        // leave a resume descriptor next to the manifest so an
+        // interrupted run can be finished by `bulkmi resume DIR` with
+        // the exact same plan (same resolved backend and block size
+        // keep the remaining tiles bit-identical to an uninterrupted run)
+        write_resume_descriptor(dir, input, backend, cfg.measure, plan.block, cfg.workers)?;
+    }
+    let tiles = cfg.tiles.then(|| TileCache::open(default_tile_root(), DEFAULT_TILE_BUDGET));
+    let tiles0 = tiles.as_ref().map(|c| c.stats());
     let provider = match &cache {
         Some(c) => NativeProvider::with_cache(
             src,
@@ -426,7 +440,7 @@ fn compute_into_sink(
     let cache0 = cache.as_ref().map(|c| c.stats());
     let progress = Progress::new(plan.tasks.len());
     let t0 = std::time::Instant::now();
-    run_plan(
+    run_plan_tiled(
         src,
         &plan,
         &provider,
@@ -434,6 +448,7 @@ fn compute_into_sink(
         &progress,
         sink.as_mut(),
         cfg.measure,
+        tiles.as_ref(),
     )?;
     let mut output = sink.finish()?;
     output.meta.backend = Some(backend.name().to_string());
@@ -450,6 +465,18 @@ fn compute_into_sink(
     let (io, cache_report) = report_io(src, io0, cache.as_deref().zip(cache0));
     output.meta.io = io;
     output.meta.cache = cache_report;
+    if let (Some(tc), Some(before)) = (tiles.as_ref(), tiles0) {
+        let report = tile_report(tc, &before);
+        crate::info!(
+            "tiles: {} hits / {} misses ({} evictions, {} bytes written) in {}",
+            report.hits,
+            report.misses,
+            report.evictions,
+            report.inserted_bytes,
+            tc.root().display()
+        );
+        output.meta.tiles = Some(report);
+    }
     println!(
         "computed {} ({}) over {} columns in {}",
         output.summary(),
@@ -514,6 +541,119 @@ fn compute_into_sink(
         }
         SinkData::Dense(_) => unreachable!("dense handled by compute_with_plan"),
     }
+    Ok(())
+}
+
+/// Write the `job.toml` resume descriptor a spill run leaves next to
+/// its manifest: everything `bulkmi resume DIR` needs to rebuild the
+/// exact plan — input path, *resolved* backend (an `auto` run must not
+/// re-probe to a different winner mid-dataset), measure, resolved
+/// block width, and worker count.
+fn write_resume_descriptor(
+    dir: &Path,
+    input: &Path,
+    backend: Backend,
+    measure: CombineKind,
+    block_cols: usize,
+    workers: usize,
+) -> Result<()> {
+    use std::io::Write;
+    // absolute path: resume may run from a different working directory
+    let input = std::fs::canonicalize(input).unwrap_or_else(|_| input.to_path_buf());
+    let mut f = std::fs::File::create(dir.join("job.toml"))?;
+    writeln!(f, "# written by `bulkmi compute --sink spill:...`; read by `bulkmi resume`")?;
+    writeln!(f, "[resume]")?;
+    writeln!(f, "input = \"{}\"", input.display())?;
+    writeln!(f, "backend = \"{}\"", backend.name())?;
+    writeln!(f, "measure = \"{}\"", measure.name())?;
+    writeln!(f, "block_cols = {block_cols}")?;
+    writeln!(f, "workers = {workers}")?;
+    f.sync_all()?;
+    Ok(())
+}
+
+/// `bulkmi resume DIR`: finish an interrupted `--sink spill:DIR` run.
+/// Every tile already in the manifest is verified (length + checksum)
+/// and kept; only the missing tiles are computed, with the plan
+/// rebuilt from the `job.toml` descriptor so the completed directory
+/// is bit-identical to an uninterrupted run. A directory whose
+/// manifest already carries the completion trailer is a no-op success.
+pub fn resume(argv: &[String]) -> Result<()> {
+    use crate::mi::sink::{read_spill_manifest, TileSpillSink};
+    let args = Args::parse(argv)?;
+    let workers_override = args.get_usize("workers", 0)?;
+    args.reject_unknown()?;
+    let dir = match args.positionals() {
+        [d] => PathBuf::from(d),
+        _ => {
+            return Err(Error::Parse(
+                "usage: bulkmi resume DIR [--workers N] (DIR is a --sink spill:DIR directory)"
+                    .into(),
+            ))
+        }
+    };
+    let manifest = read_spill_manifest(&dir)?;
+    if manifest.complete {
+        println!(
+            "{}: already complete ({} tiles, m = {}) — nothing to resume",
+            dir.display(),
+            manifest.tiles.len(),
+            manifest.m
+        );
+        return Ok(());
+    }
+    let raw = RawConfig::load(&dir.join("job.toml")).map_err(|e| {
+        Error::Parse(format!(
+            "{}: interrupted spill run but no readable resume descriptor (job.toml): {e}",
+            dir.display()
+        ))
+    })?;
+    let missing = |key: &str| Error::Parse(format!("job.toml: missing resume.{key}"));
+    let input = raw.get("resume.input").ok_or_else(|| missing("input"))?.to_string();
+    let backend =
+        wire::parse_native_backend(raw.get("resume.backend").ok_or_else(|| missing("backend"))?)?;
+    let measure =
+        wire::parse_measure(raw.get("resume.measure").ok_or_else(|| missing("measure"))?)?;
+    let block_cols = raw.get_usize("resume.block_cols")?.ok_or_else(|| missing("block_cols"))?;
+    let workers = match workers_override {
+        0 => raw.get_usize("resume.workers")?.unwrap_or(1).max(1),
+        n => n,
+    };
+
+    let src = crate::server::open_source(Path::new(&input))?;
+    if src.n_cols() != manifest.m {
+        return Err(Error::Shape(format!(
+            "{input} has {} columns but the spill manifest says m = {} — wrong input?",
+            src.n_cols(),
+            manifest.m
+        )));
+    }
+    // verifies every completed tile (length + checksum) before trusting it
+    let (mut sink, done) = TileSpillSink::resume(&dir)?;
+    let mut plan = plan_blocks(manifest.m, block_cols)?;
+    let total = plan.tasks.len();
+    plan.tasks.retain(|t| !done.contains(t));
+    crate::info!(
+        "resuming {}: {}/{total} tiles verified on disk, {} to compute",
+        dir.display(),
+        total - plan.tasks.len(),
+        plan.tasks.len()
+    );
+    let t0 = std::time::Instant::now();
+    if !plan.tasks.is_empty() {
+        order_tasks(&mut plan.tasks, Schedule::LargestFirst);
+        let provider = NativeProvider::new(&*src, backend.native_kind());
+        let progress = Progress::new(plan.tasks.len());
+        run_plan(&*src, &plan, &provider, workers, &progress, &mut sink, measure)?;
+    }
+    let output = sink.finish()?;
+    println!(
+        "resumed {} ({}) in {}: {}",
+        dir.display(),
+        measure,
+        fmt_secs(t0.elapsed().as_secs_f64()),
+        output.summary()
+    );
     Ok(())
 }
 
@@ -1036,6 +1176,75 @@ mod tests {
             "--input", data.to_str().unwrap(), "--sink", "topk:3", "--backend", "xla",
         ]))
         .is_err());
+    }
+
+    #[test]
+    fn tiles_flag_warm_run_is_bit_identical_to_cold() {
+        let data = tmp("tiles.bmat");
+        generate(&sv(&[
+            "--rows", "250", "--cols", "11", "--sparsity", "0.8", "--seed", "23",
+            "--plant", "0:6:0.03", "--out", data.to_str().unwrap(),
+        ]))
+        .unwrap();
+        // no BULKMI_CACHE_DIR in tests, so the cache root is the
+        // per-process temp dir; content addressing keeps concurrent
+        // tests in this process from ever serving each other bad tiles
+        let cold = tmp("tiles-cold.csv");
+        let warm = tmp("tiles-warm.csv");
+        for out in [&cold, &warm] {
+            compute(&sv(&[
+                "--input", data.to_str().unwrap(), "--sink", "topk:5", "--tiles",
+                "--block-cols", "4", "--out", out.to_str().unwrap(),
+            ]))
+            .unwrap();
+        }
+        assert_eq!(
+            std::fs::read_to_string(&cold).unwrap(),
+            std::fs::read_to_string(&warm).unwrap(),
+            "tile-cache hits must not change any output bit"
+        );
+    }
+
+    #[test]
+    fn resume_command_finishes_an_interrupted_spill_run() {
+        let data = tmp("res.bmat");
+        generate(&sv(&[
+            "--rows", "220", "--cols", "9", "--sparsity", "0.7", "--seed", "31",
+            "--plant", "2:5:0.02", "--out", data.to_str().unwrap(),
+        ]))
+        .unwrap();
+        let spill = tmp("res-spill-dir");
+        let _ = std::fs::remove_dir_all(&spill);
+        compute(&sv(&[
+            "--input", data.to_str().unwrap(), "--sink",
+            &format!("spill:{}", spill.display()), "--block-cols", "4",
+        ]))
+        .unwrap();
+        let reference = crate::mi::sink::assemble_spilled(&spill).unwrap();
+
+        // a complete directory resumes as a no-op success
+        resume(&sv(&[spill.to_str().unwrap()])).unwrap();
+
+        // simulate a crash: strip the completion trailer and the last
+        // manifest row, and delete that row's tile file
+        let manifest_path = spill.join("manifest.csv");
+        let text = std::fs::read_to_string(&manifest_path).unwrap();
+        let mut lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.pop(), Some("complete,1"));
+        let lost = lines.pop().unwrap();
+        let tile_file = lost.rsplit(',').next().unwrap();
+        std::fs::remove_file(spill.join(tile_file)).unwrap();
+        std::fs::write(&manifest_path, format!("{}\n", lines.join("\n"))).unwrap();
+        assert!(crate::mi::sink::assemble_spilled(&spill).is_err(), "incomplete");
+
+        resume(&sv(&[spill.to_str().unwrap()])).unwrap();
+        let resumed = crate::mi::sink::assemble_spilled(&spill).unwrap();
+        assert_eq!(resumed.max_abs_diff(&reference), 0.0, "resume must be bit-identical");
+        let _ = std::fs::remove_dir_all(&spill);
+
+        // operand errors: no DIR, and a DIR that is not a spill run
+        assert!(resume(&sv(&[])).is_err());
+        assert!(resume(&sv(&[tmp("res-not-a-dir").to_str().unwrap()])).is_err());
     }
 
     #[test]

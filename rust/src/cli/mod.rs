@@ -31,7 +31,7 @@ COMMANDS:
         [--measure mi|nmi|vi|gstat|chi2|phi|jaccard|ochiai]
         [--workers N] [--block-cols B=0] [--memory-budget BYTES=0]
         [--task-latency SECS=2] [--top K=10]
-        [--cache-budget BYTES] [--readahead N=1]
+        [--cache-budget BYTES] [--readahead N=1] [--tiles]
         [--sink dense|topk:K|topk-per-col:K|threshold:T|pvalue:P|spill:DIR]
         [--normalize min|max|mean|joint] [--out FILE.csv]
         [--config FILE.toml]
@@ -46,7 +46,17 @@ COMMANDS:
         read once instead of once per task; --backend auto micro-probes
         the native substrates and commits to the fastest; every
         measure rides the same single Gram (sinks rank/threshold in
-        the measure's units; pvalue: composes with mi and gstat only)
+        the measure's units; pvalue: composes with mi and gstat only);
+        --tiles caches finished Gram tiles content-addressed under
+        BULKMI_CACHE_DIR (or a temp dir), so re-runs over the same
+        data skip the Gram stage entirely
+    resume      Resume an interrupted spill-sink run
+        bulkmi resume DIR
+        DIR is a spill:DIR directory from an interrupted compute run:
+        the incremental manifest is replayed, every completed tile is
+        verified (length + checksum), and only the missing tiles are
+        recomputed — zero finished work is repeated. Exits 0
+        immediately when the run is already complete.
     analyze     MI with statistical post-processing + edge-list export
         --input FILE [--backend NAME] [--top K=10]
         [--bias-correction miller-madow] [--permutations P=0]
@@ -99,6 +109,11 @@ MEASURES (--measure, all from the same one-Gram pipeline):
 ENVIRONMENT:
     BULKMI_LOG=error|warn|info|debug|trace    log level (default info)
     BULKMI_ARTIFACTS=DIR                      artifact directory
+    BULKMI_CACHE_DIR=DIR                      persistent cache root: Gram
+                                              tiles (DIR/tiles) and autotune
+                                              probe verdicts (guarded by a
+                                              hardware fingerprint) survive
+                                              across processes
     BULKMI_KERNEL=scalar|portable|avx2|avx512|neon
                                               force the Gram kernel (a name
                                               not eligible on this CPU is a
@@ -130,6 +145,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "generate" => commands::generate(rest),
         "pack" => commands::pack(rest),
         "compute" => commands::compute(rest),
+        "resume" => commands::resume(rest),
         "analyze" => commands::analyze(rest),
         "info" => commands::info(rest),
         "selftest" => commands::selftest(rest),

@@ -129,6 +129,11 @@ pub struct RunConfig {
     pub readahead: usize,
     /// Artifact directory override (None = default discovery).
     pub artifacts_dir: Option<String>,
+    /// Consult the content-addressed Gram-tile cache (`--tiles` /
+    /// `run.tiles`): finished tiles persist under `BULKMI_CACHE_DIR`
+    /// (or a temp dir) keyed by input-block fingerprints, so re-runs
+    /// over the same data skip the Gram stage. Off by default.
+    pub tiles: bool,
 }
 
 impl Default for RunConfig {
@@ -143,6 +148,7 @@ impl Default for RunConfig {
             cache_bytes: None,
             readahead: 1,
             artifacts_dir: None,
+            tiles: false,
         }
     }
 }
@@ -156,7 +162,8 @@ impl RunConfig {
             if let Some(name) = key.strip_prefix("run.") {
                 match name {
                     "backend" | "measure" | "workers" | "block_cols" | "memory_budget"
-                    | "task_latency_secs" | "cache_bytes" | "readahead" | "artifacts_dir" => {}
+                    | "task_latency_secs" | "cache_bytes" | "readahead" | "artifacts_dir"
+                    | "tiles" => {}
                     other => {
                         return Err(Error::Config(format!("unknown key run.{other}")));
                     }
@@ -196,6 +203,9 @@ impl RunConfig {
         }
         if let Some(d) = raw.get("run.artifacts_dir") {
             cfg.artifacts_dir = Some(d.to_string());
+        }
+        if let Some(t) = raw.get_bool("run.tiles")? {
+            cfg.tiles = t;
         }
         Ok(cfg)
     }
@@ -361,6 +371,15 @@ mod tests {
         let defaults = RunConfig::default();
         assert_eq!(defaults.cache_bytes, None);
         assert_eq!(defaults.readahead, 1);
+    }
+
+    #[test]
+    fn tiles_key_parses_and_defaults_off() {
+        assert!(!RunConfig::default().tiles);
+        let raw = RawConfig::parse("[run]\ntiles = true\n").unwrap();
+        assert!(RunConfig::from_raw(&raw).unwrap().tiles);
+        let bad = RawConfig::parse("[run]\ntiles = yes\n").unwrap();
+        assert!(RunConfig::from_raw(&bad).is_err());
     }
 
     #[test]

@@ -14,6 +14,7 @@
 use super::blockcache::{CacheHandle, Substrate};
 use super::planner::{matrix_free_block, plan_blocks, BlockPlan, BlockTask};
 use super::progress::Progress;
+use super::tilecache::{TileCache, TileKey};
 use crate::data::colstore::ColumnSource;
 use crate::data::dataset::BinaryDataset;
 use crate::linalg::dense::Mat64;
@@ -246,6 +247,30 @@ pub fn run_plan<P: GramProvider + Sync>(
     sink: &mut dyn MiSink,
     measure: CombineKind,
 ) -> Result<()> {
+    run_plan_tiled(src, plan, provider, workers, progress, sink, measure, None)
+}
+
+/// [`run_plan`] with an optional content-addressed Gram-tile cache
+/// ([`crate::coordinator::tilecache`]). Per task the worker derives the
+/// tile key from the two input blocks' content fingerprints
+/// ([`ColumnSource::block_fingerprint`]) and consults the cache first:
+/// a verified hit skips `block_gram` entirely and only the measure
+/// combine runs (the Gram is backend- and measure-independent, so one
+/// cached tile serves every configuration, bit-exactly). On a miss the
+/// freshly computed Gram rides the result channel to the collector,
+/// which inserts it only *after* the sink confirmed the block — a tile
+/// the sink rejected is never cached.
+#[allow(clippy::too_many_arguments)]
+pub fn run_plan_tiled<P: GramProvider + Sync>(
+    src: &dyn ColumnSource,
+    plan: &BlockPlan,
+    provider: &P,
+    workers: usize,
+    progress: &Progress,
+    sink: &mut dyn MiSink,
+    measure: CombineKind,
+    tiles: Option<&TileCache>,
+) -> Result<()> {
     let (n, colsums) = plan_inputs(src, plan)?;
     let n_tasks = plan.tasks.len();
     let abort = AtomicBool::new(false);
@@ -253,8 +278,11 @@ pub fn run_plan<P: GramProvider + Sync>(
     // so at most ~2 blocks per worker are ever in flight — the engine's
     // peak memory stays O(workers * block²) by construction. The sender
     // sits behind a Mutex so the shared `Fn` closure can send; the lock
-    // covers one send per *task*, not per cell.
-    let (tx, rx) = sync_channel::<(usize, Result<Mat64>)>(workers.max(1) * 2);
+    // covers one send per *task*, not per cell. Alongside each combined
+    // block rides the Gram to insert on a tile-cache miss (`None` on a
+    // hit or when no cache is attached).
+    type TaskResult = Result<(Mat64, Option<(TileKey, Mat64)>)>;
+    let (tx, rx) = sync_channel::<(usize, TaskResult)>(workers.max(1) * 2);
     let tx = Mutex::new(tx);
     let first_err = std::thread::scope(|scope| {
         let tasks = &plan.tasks;
@@ -289,9 +317,17 @@ pub fn run_plan<P: GramProvider + Sync>(
             let mut first_err: Option<Error> = None;
             for (idx, res) in rx.iter() {
                 match res {
-                    Ok(block) if first_err.is_none() => {
+                    Ok((block, fresh)) if first_err.is_none() => {
                         match sink.consume_block(&tasks[idx], &block) {
-                            Ok(()) => progress.task_done(),
+                            Ok(()) => {
+                                // insert only after the sink confirmed
+                                // the block — a rejected tile is never
+                                // cached
+                                if let (Some(cache), Some((key, gram))) = (tiles, fresh) {
+                                    cache.insert(key, &gram);
+                                }
+                                progress.task_done();
+                            }
                             Err(e) => {
                                 first_err = Some(e);
                                 abort.store(true, Ordering::Relaxed);
@@ -313,7 +349,8 @@ pub fn run_plan<P: GramProvider + Sync>(
             if progress.is_cancelled() || abort.load(Ordering::Relaxed) {
                 return;
             }
-            let res = compute_block(provider, &plan.tasks[idx], &colsums, n, measure);
+            let res =
+                compute_block_tiled(src, provider, &plan.tasks[idx], &colsums, n, measure, tiles);
             // a send can only fail if the consumer died; nothing to do
             let _ = tx.lock().unwrap().send((idx, res));
         });
@@ -461,6 +498,45 @@ fn compute_block<P: GramProvider + ?Sized>(
     let ca = &colsums[t.a_start..t.a_start + t.a_len];
     let cb = &colsums[t.b_start..t.b_start + t.b_len];
     Ok(combine_block(measure, &g, ca, cb, n))
+}
+
+/// [`compute_block`] with a tile-cache fast path: serve the Gram from
+/// the cache when a verified tile exists, compute it otherwise and
+/// hand it back for post-confirmation insertion. Fingerprinting uses
+/// the source directly (memoized by file-backed sources), so the key
+/// is identical whichever provider computes the Gram.
+fn compute_block_tiled<P: GramProvider + ?Sized>(
+    src: &dyn ColumnSource,
+    provider: &P,
+    t: &BlockTask,
+    colsums: &[f64],
+    n: f64,
+    measure: CombineKind,
+    tiles: Option<&TileCache>,
+) -> Result<(Mat64, Option<(TileKey, Mat64)>)> {
+    let Some(cache) = tiles else {
+        return Ok((compute_block(provider, t, colsums, n, measure)?, None));
+    };
+    let key = TileKey {
+        fp_a: src.block_fingerprint(t.a_start, t.a_len)?,
+        fp_b: src.block_fingerprint(t.b_start, t.b_len)?,
+    };
+    let ca = &colsums[t.a_start..t.a_start + t.a_len];
+    let cb = &colsums[t.b_start..t.b_start + t.b_len];
+    if let Some(g) = cache.get(key, t.a_len, t.b_len) {
+        return Ok((combine_block(measure, &g, ca, cb, n), None));
+    }
+    let g = provider.block_gram(t)?;
+    if (g.rows(), g.cols()) != (t.a_len, t.b_len) {
+        return Err(Error::Shape(format!(
+            "provider {} returned {}x{} block for task {t:?}",
+            provider.name(),
+            g.rows(),
+            g.cols()
+        )));
+    }
+    let block = combine_block(measure, &g, ca, cb, n);
+    Ok((block, Some((key, g))))
 }
 
 #[cfg(test)]
@@ -619,6 +695,56 @@ mod tests {
             run_plan(&ds, &plan, &provider, 2, &progress, &mut sink, CombineKind::Mi)
                 .unwrap_err();
         assert!(matches!(err, Error::Coordinator(_)), "got {err}");
+    }
+
+    #[test]
+    fn tiled_runs_hit_across_backends_and_stay_bit_identical() {
+        let dir = std::env::temp_dir()
+            .join(format!("bulkmi-executor-tiles-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let cache = TileCache::open(&dir, 1 << 20);
+        let ds = SynthSpec::new(220, 13).sparsity(0.7).seed(21).generate();
+        let plan = plan_blocks(13, 4).unwrap();
+        let n_tasks = plan.tasks.len() as u64;
+        let cold_provider = NativeProvider::new(&ds, NativeKind::Bitpack);
+        let mut cold = DenseSink::new(13);
+        run_plan_tiled(
+            &ds,
+            &plan,
+            &cold_provider,
+            2,
+            &Progress::new(plan.tasks.len()),
+            &mut cold,
+            CombineKind::Mi,
+            Some(&cache),
+        )
+        .unwrap();
+        let want = dense_result(&mut cold).unwrap();
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (0, n_tasks));
+        // warm runs hit every tile from *any* backend — the Gram is
+        // NativeKind-independent — and stay bit-identical
+        for kind in [NativeKind::Bitpack, NativeKind::Dense, NativeKind::Sparse] {
+            let before = cache.stats();
+            let provider = NativeProvider::new(&ds, kind);
+            let mut sink = DenseSink::new(13);
+            run_plan_tiled(
+                &ds,
+                &plan,
+                &provider,
+                2,
+                &Progress::new(plan.tasks.len()),
+                &mut sink,
+                CombineKind::Mi,
+                Some(&cache),
+            )
+            .unwrap();
+            let got = dense_result(&mut sink).unwrap();
+            assert_eq!(got.max_abs_diff(&want), 0.0, "{kind:?}");
+            let d = cache.stats().since(&before);
+            assert_eq!((d.hits, d.misses), (n_tasks, 0), "{kind:?}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

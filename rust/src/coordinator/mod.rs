@@ -38,12 +38,13 @@ pub mod progress;
 pub mod scheduler;
 pub mod service;
 pub mod streaming;
+pub mod tilecache;
 
 pub use admission::{AdmissionController, AdmissionPermit, Priority};
 pub use blockcache::{cache_plan, BlockCache, BlockKey, CacheHandle, CacheStats, Substrate};
 pub use executor::{
     compute_source, run_plan, run_plan_dense, run_plan_dense_serial, run_plan_serial,
-    GramProvider, NativeProvider, XlaProvider,
+    run_plan_tiled, GramProvider, NativeProvider, XlaProvider,
 };
 // the deprecated wrapper pile re-exported from its one home, so
 // downstream `use bulkmi::coordinator::execute_plan` keeps resolving
@@ -56,3 +57,4 @@ pub use legacy::{
 };
 pub use planner::{plan_blocks, BlockPlan, BlockTask, PlannerConfig};
 pub use service::{JobHandle, JobInfo, JobService, JobSpec, JobSpecBuilder, JobStatus};
+pub use tilecache::{fingerprint_words, fnv1a, TileCache, TileCacheStats, TileKey};

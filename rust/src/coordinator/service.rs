@@ -8,13 +8,14 @@
 use super::admission::{estimate_job_bytes, AdmissionController, Priority};
 use super::backpressure::Semaphore;
 use super::blockcache::{cache_plan, run_reports, BlockCache, CacheHandle};
-use super::executor::{run_plan, NativeProvider};
+use super::executor::{run_plan_tiled, NativeProvider};
 use super::planner::{
     block_policy, carve_cache_budget, matrix_free_block, plan_blocks, BlockPlan,
     DEFAULT_TASK_LATENCY_SECS,
 };
 use super::progress::Progress;
 use super::scheduler::{order_tasks, Schedule};
+use super::tilecache::{tile_report, TileCache};
 use crate::data::colstore::{ColumnSource, InMemorySource};
 use crate::data::dataset::BinaryDataset;
 use crate::metrics::Metrics;
@@ -26,8 +27,9 @@ use crate::util::error::{Error, Result};
 use crate::util::threadpool::WorkerPool;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::{Duration, Instant};
+
 
 /// Observable job state.
 #[derive(Clone, Debug)]
@@ -133,6 +135,14 @@ pub struct JobSpec {
     /// terminal counters, cache traffic, and probe-cache hits are
     /// mirrored under `tenant:<name>:*` in the service metrics.
     pub tenant: Option<String>,
+    /// Consult the service's shared content-addressed Gram-tile cache
+    /// ([`TileCache`]): finished tiles persist keyed by the input
+    /// blocks' content fingerprints, so a later job over the same data
+    /// (any backend, any measure, any sink) skips the Gram entirely and
+    /// only re-runs the cheap combine. Off by default because a hit
+    /// bypasses the block-substrate path — jobs auditing *that* cache's
+    /// traffic should leave this off.
+    pub tiles: bool,
 }
 
 impl Default for JobSpec {
@@ -149,6 +159,7 @@ impl Default for JobSpec {
             task_latency_secs: DEFAULT_TASK_LATENCY_SECS,
             priority: None,
             tenant: None,
+            tiles: false,
         }
     }
 }
@@ -220,6 +231,11 @@ impl JobSpecBuilder {
 
     pub fn tenant(mut self, tenant: impl Into<String>) -> Self {
         self.spec.tenant = Some(tenant.into());
+        self
+    }
+
+    pub fn tiles(mut self, tiles: bool) -> Self {
+        self.spec.tiles = tiles;
         self
     }
 
@@ -338,6 +354,12 @@ pub struct JobService {
     /// `Arc`'d source (the `serve --input` pattern) reuse each other's
     /// blocks. Sized by the default budget carve.
     cache: Arc<BlockCache>,
+    /// Shared content-addressed Gram-tile cache for jobs submitted with
+    /// [`JobSpec::tiles`]. Lazily opened on first use so services that
+    /// never run a tiled job touch no disk; rooted under
+    /// `$BULKMI_CACHE_DIR/tiles` when that is set (cross-process
+    /// reuse), else a per-process temp directory.
+    tile_cache: OnceLock<Arc<TileCache>>,
 }
 
 impl JobService {
@@ -363,6 +385,7 @@ impl JobService {
             next_id: AtomicU64::new(1),
             metrics: Arc::new(Metrics::new()),
             cache: Arc::new(BlockCache::new(carve_cache_budget(0).1)),
+            tile_cache: OnceLock::new(),
         }
     }
 
@@ -379,6 +402,17 @@ impl JobService {
     /// The service-wide shared substrate cache (metrics surface).
     pub fn shared_cache(&self) -> &BlockCache {
         &self.cache
+    }
+
+    /// The service-wide Gram-tile cache (metrics surface; populated by
+    /// jobs submitted with [`JobSpec::tiles`]). Opened on first call.
+    pub fn shared_tile_cache(&self) -> &Arc<TileCache> {
+        self.tile_cache.get_or_init(|| {
+            Arc::new(TileCache::open(
+                super::tilecache::default_tile_root(),
+                super::tilecache::DEFAULT_TILE_BUDGET,
+            ))
+        })
     }
 
     /// Submit a job over an in-memory dataset; fails fast with
@@ -441,6 +475,7 @@ impl JobService {
         let jobs = Arc::clone(&self.jobs);
         let metrics = Arc::clone(&self.metrics);
         let shared_cache = Arc::clone(&self.cache);
+        let tile_cache = spec.tiles.then(|| Arc::clone(self.shared_tile_cache()));
         let ram_gate = Arc::clone(&self.ram_gate);
         let set_status = move |jobs: &Mutex<HashMap<u64, JobEntry>>, status: JobStatus| {
             // the entry may already be gone: take() on a
@@ -507,9 +542,10 @@ impl JobService {
                     };
                     let io0 = src.io_stats();
                     let cache0 = cache.as_ref().map(|c| c.stats());
+                    let tiles0 = tile_cache.as_ref().map(|c| c.stats());
                     let mut sink = spec.sink.build_for(src.n_cols(), src.n_rows(), spec.measure)?;
                     metrics.time("job_secs", || {
-                        run_plan(
+                        run_plan_tiled(
                             &*src,
                             &plan,
                             &provider,
@@ -517,6 +553,7 @@ impl JobService {
                             &progress,
                             sink.as_mut(),
                             spec.measure,
+                            tile_cache.as_deref(),
                         )
                     })?;
                     let mut out = sink.finish()?;
@@ -547,6 +584,12 @@ impl JobService {
                     }
                     out.meta.io = io;
                     out.meta.cache = cache_report;
+                    if let (Some(tc), Some(t0)) = (tile_cache.as_ref(), tiles0) {
+                        let report = tile_report(tc, &t0);
+                        metrics.counter("tile_hits").add(report.hits);
+                        metrics.counter("tile_misses").add(report.misses);
+                        out.meta.tiles = Some(report);
+                    }
                     Ok(out)
                 });
                 let status = match result {
@@ -736,6 +779,8 @@ mod tests {
         assert_eq!(built.task_latency_secs, def.task_latency_secs);
         assert_eq!(built.priority, def.priority);
         assert_eq!(built.tenant, def.tenant);
+        assert_eq!(built.tiles, def.tiles);
+        assert!(!def.tiles, "tile cache is opt-in per job");
     }
 
     #[test]

@@ -1,0 +1,581 @@
+//! Content-addressed Gram-tile cache: the never-compute-a-tile-twice
+//! layer (ROADMAP direction 5).
+//!
+//! The paper's identity makes a Gram tile `G11[a, b] = Dᵀ_a D_b` a pure
+//! function of its two input column blocks — and since every native
+//! substrate (bit-packed, CSR, dense f32) produces the *bit-identical*
+//! integer-count Gram, the tile is also independent of the
+//! [`super::executor::NativeKind`] that computed it. That makes the
+//! Gram the perfect cache grain: one cached tile serves every backend
+//! and every measure (the measure combine runs fresh on top, so cached
+//! runs stay bit-exact, which is what the `pvalue:` sinks require).
+//!
+//! Keying is by *content*, not position: each column block is
+//! fingerprinted over its packed words ([`fingerprint_words`], an
+//! FNV-1a over the `u64` payload with the block shape mixed in), so a
+//! tile computed for one dataset file is hit by any other source whose
+//! blocks carry the same bits — including the same file re-registered
+//! under a new name, or a re-packed copy. A tile's key is the ordered
+//! pair `(fp_a, fp_b)`.
+//!
+//! On-disk format (versioned; the version is in both the file name and
+//! the header, so a format bump simply misses old tiles):
+//!
+//! ```text
+//! tile-v1-{fp_a:016x}-{fp_b:016x}.gram
+//!   8 B  magic  b"bmtile1\0"
+//!   8 B  rows   (u64 LE)
+//!   8 B  cols   (u64 LE)
+//!   rows*cols*8 B  payload (f64 LE, row-major)
+//!   8 B  FNV-1a checksum over the payload bytes (u64 LE)
+//! ```
+//!
+//! Every read re-verifies the dimensions and the checksum; a tile that
+//! fails either is deleted and reported as a miss, never served. The
+//! cache is therefore safe against truncation, bit-flips, and foreign
+//! files in the cache root.
+//!
+//! Retention is a byte-budget LRU in the style of
+//! [`super::blockcache::BlockCache`]: an in-RAM index (rebuilt by
+//! scanning the root on [`TileCache::open`]) tracks per-entry bytes and
+//! a monotone access clock; inserts evict least-recently-used tiles
+//! (removing their files) until the total fits the budget, and an
+//! entry larger than the whole budget is never retained. All
+//! operations are best-effort: an unwritable root yields a disabled
+//! cache with a warning, not an error — caching is an optimization,
+//! never a correctness dependency.
+
+use crate::linalg::dense::Mat64;
+use crate::mi::sink::TileCacheReport;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// File-format magic for tile files; bump together with the `v1` in
+/// the file name when the layout changes.
+const TILE_MAGIC: &[u8; 8] = b"bmtile1\0";
+/// Bytes of header + trailer around the payload.
+const TILE_OVERHEAD: usize = 8 + 8 + 8 + 8;
+
+/// Default byte budget for the shared tile caches opened by the CLI
+/// and the job service.
+pub const DEFAULT_TILE_BUDGET: usize = 256 << 20;
+
+/// The conventional shared cache root: `{BULKMI_CACHE_DIR}/tiles` when
+/// the persistent cache root is configured (so tiles are reused across
+/// processes, next to the autotune probe cache), else a per-process
+/// directory under the system temp dir.
+pub fn default_tile_root() -> PathBuf {
+    std::env::var_os(crate::mi::autotune::CACHE_DIR_ENV)
+        .filter(|v| !v.is_empty())
+        .map(|v| PathBuf::from(v).join("tiles"))
+        .unwrap_or_else(|| {
+            std::env::temp_dir().join(format!("bulkmi-tiles-{}", std::process::id()))
+        })
+}
+
+/// 64-bit FNV-1a over a byte slice — the crate's dependency-free
+/// content hash, used for block fingerprints, tile checksums, and the
+/// spill manifest's per-tile checksums.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Content fingerprint of a packed column block: FNV-1a over the
+/// block's `u64` words with the shape (`n_rows`, `n_cols`) mixed in
+/// first, so two blocks with equal padding words but different logical
+/// shapes never collide by construction.
+pub fn fingerprint_words(n_rows: usize, n_cols: usize, words: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |w: u64| {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    };
+    mix(n_rows as u64);
+    mix(n_cols as u64);
+    for &w in words {
+        mix(w);
+    }
+    h
+}
+
+/// A tile's identity: the ordered content fingerprints of its two
+/// input column blocks. Backend- and measure-independent (see the
+/// module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TileKey {
+    pub fp_a: u64,
+    pub fp_b: u64,
+}
+
+/// Snapshot of the cache's counters; the cache is process-wide, so
+/// take one before a run and [`TileCacheStats::since`] after it for
+/// per-run numbers.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TileCacheStats {
+    /// Lookups served from a verified on-disk tile.
+    pub hits: u64,
+    /// Lookups that had to compute the tile (including corrupt or
+    /// missing files, which are dropped and recomputed).
+    pub misses: u64,
+    /// Tiles deleted to stay under the byte budget.
+    pub evictions: u64,
+    /// Bytes of tile files written (lifetime, not resident).
+    pub inserted_bytes: u64,
+}
+
+impl TileCacheStats {
+    /// Counters accumulated since the `earlier` snapshot.
+    pub fn since(&self, earlier: &TileCacheStats) -> TileCacheStats {
+        TileCacheStats {
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+            evictions: self.evictions.saturating_sub(earlier.evictions),
+            inserted_bytes: self.inserted_bytes.saturating_sub(earlier.inserted_bytes),
+        }
+    }
+}
+
+struct Entry {
+    bytes: usize,
+    last_use: u64,
+}
+
+struct Inner {
+    map: HashMap<TileKey, Entry>,
+    total_bytes: usize,
+    /// Monotone access clock; unique per touch, so LRU has no ties.
+    tick: u64,
+}
+
+/// Byte-budget LRU over on-disk Gram tiles. Thread-safe; see the
+/// module docs for the format, verification, and retention model.
+pub struct TileCache {
+    root: PathBuf,
+    budget: usize,
+    enabled: bool,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    inserted_bytes: AtomicU64,
+}
+
+impl TileCache {
+    /// Open (or create) a cache rooted at `root`, scanning it to
+    /// rebuild the retention index — this is what makes tiles survive
+    /// across processes. Best-effort: an unusable root yields a
+    /// disabled cache (every `get` misses, every `insert` is a no-op)
+    /// with a warning on stderr.
+    pub fn open(root: impl Into<PathBuf>, budget_bytes: usize) -> TileCache {
+        let root = root.into();
+        if let Err(e) = std::fs::create_dir_all(&root) {
+            eprintln!("warning: tile cache disabled: cannot create {}: {e}", root.display());
+            return TileCache::disabled();
+        }
+        let cache = TileCache {
+            root,
+            budget: budget_bytes,
+            enabled: true,
+            inner: Mutex::new(Inner { map: HashMap::new(), total_bytes: 0, tick: 0 }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            inserted_bytes: AtomicU64::new(0),
+        };
+        cache.rescan();
+        cache
+    }
+
+    /// A cache that serves nothing and retains nothing.
+    pub fn disabled() -> TileCache {
+        TileCache {
+            root: PathBuf::new(),
+            budget: 0,
+            enabled: false,
+            inner: Mutex::new(Inner { map: HashMap::new(), total_bytes: 0, tick: 0 }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            inserted_bytes: AtomicU64::new(0),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    /// Tiles currently indexed.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes currently resident on disk (per the index).
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().unwrap().total_bytes
+    }
+
+    pub fn stats(&self) -> TileCacheStats {
+        TileCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            inserted_bytes: self.inserted_bytes.load(Ordering::Relaxed),
+        }
+    }
+
+    /// On-disk size of a `rows x cols` tile file — for sizing test
+    /// budgets to an exact tile count.
+    pub fn file_bytes(rows: usize, cols: usize) -> usize {
+        TILE_OVERHEAD + rows * cols * 8
+    }
+
+    fn path_for(&self, key: TileKey) -> PathBuf {
+        self.root.join(format!("tile-v1-{:016x}-{:016x}.gram", key.fp_a, key.fp_b))
+    }
+
+    /// Rebuild the index from the files present in the root, then
+    /// evict down to budget (oldest scan order first).
+    fn rescan(&self) {
+        let entries = match std::fs::read_dir(&self.root) {
+            Ok(e) => e,
+            Err(_) => return,
+        };
+        let mut inner = self.inner.lock().unwrap();
+        for ent in entries.flatten() {
+            let name = ent.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let Some(key) = parse_tile_name(name) else { continue };
+            let Ok(meta) = ent.metadata() else { continue };
+            let bytes = meta.len() as usize;
+            inner.tick += 1;
+            let tick = inner.tick;
+            if inner.map.insert(key, Entry { bytes, last_use: tick }).is_none() {
+                inner.total_bytes += bytes;
+            }
+        }
+        self.evict_to_budget(&mut inner);
+    }
+
+    /// Fetch and verify the tile for `key`, expecting a `rows x cols`
+    /// Gram. A missing, truncated, corrupt, or wrong-shape file is
+    /// removed and counted as a miss — the caller recomputes.
+    pub fn get(&self, key: TileKey, rows: usize, cols: usize) -> Option<Mat64> {
+        if !self.enabled {
+            return None;
+        }
+        {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            match inner.map.get_mut(&key) {
+                Some(e) => e.last_use = tick,
+                None => {
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    return None;
+                }
+            }
+        }
+        // read + verify outside the lock; tiles are small and
+        // immutable once written, so a racing evict at worst turns
+        // this hit into a miss
+        let verified = std::fs::read(self.path_for(key))
+            .ok()
+            .and_then(|raw| decode_tile(&raw, rows, cols));
+        match verified {
+            Some(gram) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(gram)
+            }
+            None => {
+                self.drop_entry(key);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Write the tile for `key` and retain it under the budget,
+    /// evicting LRU tiles as needed. A tile larger than the whole
+    /// budget is not written. Best-effort: I/O failures warn and skip.
+    pub fn insert(&self, key: TileKey, gram: &Mat64) {
+        if !self.enabled {
+            return;
+        }
+        let buf = encode_tile(gram);
+        let bytes = buf.len();
+        if bytes > self.budget {
+            return;
+        }
+        let path = self.path_for(key);
+        let tmp = path.with_extension("gram.tmp");
+        let written = std::fs::write(&tmp, &buf).and_then(|_| std::fs::rename(&tmp, &path));
+        if let Err(e) = written {
+            eprintln!("warning: tile cache write failed for {}: {e}", path.display());
+            let _ = std::fs::remove_file(&tmp);
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner.map.get_mut(&key) {
+            // racing insert of the same content: the rename above
+            // replaced the file with identical bytes
+            e.last_use = tick;
+            return;
+        }
+        inner.total_bytes += bytes;
+        inner.map.insert(key, Entry { bytes, last_use: tick });
+        self.inserted_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
+        self.evict_to_budget(&mut inner);
+    }
+
+    /// Drop one entry (index + file) without counting an eviction —
+    /// used when verification fails.
+    fn drop_entry(&self, key: TileKey) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(e) = inner.map.remove(&key) {
+            inner.total_bytes -= e.bytes;
+        }
+        drop(inner);
+        let _ = std::fs::remove_file(self.path_for(key));
+    }
+
+    fn evict_to_budget(&self, inner: &mut Inner) {
+        while inner.total_bytes > self.budget {
+            let victim = inner.map.iter().min_by_key(|(_, e)| e.last_use).map(|(k, _)| *k);
+            match victim {
+                Some(k) => {
+                    let e = inner.map.remove(&k).unwrap();
+                    inner.total_bytes -= e.bytes;
+                    self.evictions.fetch_add(1, Ordering::Relaxed);
+                    let _ = std::fs::remove_file(self.path_for(k));
+                }
+                None => break,
+            }
+        }
+    }
+}
+
+/// Build a run's [`TileCacheReport`] from a start-of-run snapshot —
+/// the tile-cache analogue of [`super::blockcache::run_reports`].
+pub fn tile_report(cache: &TileCache, before: &TileCacheStats) -> TileCacheReport {
+    let d = cache.stats().since(before);
+    TileCacheReport {
+        hits: d.hits,
+        misses: d.misses,
+        evictions: d.evictions,
+        inserted_bytes: d.inserted_bytes,
+        budget_bytes: cache.budget_bytes(),
+    }
+}
+
+fn parse_tile_name(name: &str) -> Option<TileKey> {
+    let hex = name.strip_prefix("tile-v1-")?.strip_suffix(".gram")?;
+    let (a, b) = hex.split_once('-')?;
+    if a.len() != 16 || b.len() != 16 {
+        return None;
+    }
+    Some(TileKey {
+        fp_a: u64::from_str_radix(a, 16).ok()?,
+        fp_b: u64::from_str_radix(b, 16).ok()?,
+    })
+}
+
+fn encode_tile(gram: &Mat64) -> Vec<u8> {
+    let payload_len = gram.data().len() * 8;
+    let mut buf = Vec::with_capacity(TILE_OVERHEAD + payload_len);
+    buf.extend_from_slice(TILE_MAGIC);
+    buf.extend_from_slice(&(gram.rows() as u64).to_le_bytes());
+    buf.extend_from_slice(&(gram.cols() as u64).to_le_bytes());
+    for v in gram.data() {
+        buf.extend_from_slice(&v.to_le_bytes());
+    }
+    let ck = fnv1a(&buf[24..]);
+    buf.extend_from_slice(&ck.to_le_bytes());
+    buf
+}
+
+fn decode_tile(raw: &[u8], rows: usize, cols: usize) -> Option<Mat64> {
+    let payload_len = rows.checked_mul(cols)?.checked_mul(8)?;
+    if raw.len() != TILE_OVERHEAD + payload_len || &raw[..8] != TILE_MAGIC {
+        return None;
+    }
+    let u64_at = |off: usize| u64::from_le_bytes(raw[off..off + 8].try_into().unwrap());
+    if u64_at(8) != rows as u64 || u64_at(16) != cols as u64 {
+        return None;
+    }
+    let payload = &raw[24..24 + payload_len];
+    if fnv1a(payload) != u64_at(24 + payload_len) {
+        return None;
+    }
+    let data: Vec<f64> = payload
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Mat64::from_vec(rows, cols, data).ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("bulkmi-tilecache-unit-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn gram(seed: u64, rows: usize, cols: usize) -> Mat64 {
+        let data = (0..rows * cols).map(|i| (seed * 31 + i as u64) as f64).collect();
+        Mat64::from_vec(rows, cols, data).unwrap()
+    }
+
+    fn key(a: u64, b: u64) -> TileKey {
+        TileKey { fp_a: a, fp_b: b }
+    }
+
+    #[test]
+    fn fnv1a_is_the_reference_function() {
+        // reference vectors for 64-bit FNV-1a
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn fingerprints_separate_content_and_shape() {
+        let w1 = [1u64, 2, 3];
+        let w2 = [1u64, 2, 4];
+        assert_eq!(fingerprint_words(64, 3, &w1), fingerprint_words(64, 3, &w1));
+        assert_ne!(fingerprint_words(64, 3, &w1), fingerprint_words(64, 3, &w2));
+        assert_ne!(fingerprint_words(64, 3, &w1), fingerprint_words(128, 3, &w1));
+        assert_ne!(fingerprint_words(64, 3, &w1), fingerprint_words(64, 2, &w1));
+    }
+
+    #[test]
+    fn insert_then_get_round_trips_bit_identically() {
+        let cache = TileCache::open(tmp("roundtrip"), 1 << 20);
+        let g = gram(7, 3, 5);
+        cache.insert(key(1, 2), &g);
+        let back = cache.get(key(1, 2), 3, 5).expect("tile must be served");
+        assert_eq!(back.data(), g.data());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses), (1, 0));
+        assert_eq!(s.inserted_bytes, TileCache::file_bytes(3, 5) as u64);
+        assert!(cache.get(key(9, 9), 3, 5).is_none());
+        assert_eq!(cache.stats().misses, 1);
+    }
+
+    #[test]
+    fn wrong_shape_is_dropped_not_served() {
+        let cache = TileCache::open(tmp("shape"), 1 << 20);
+        cache.insert(key(1, 2), &gram(7, 3, 5));
+        assert!(cache.get(key(1, 2), 5, 3).is_none(), "shape mismatch must miss");
+        assert_eq!(cache.len(), 0, "bad entry must be dropped");
+        assert!(cache.get(key(1, 2), 3, 5).is_none(), "the file is gone");
+    }
+
+    #[test]
+    fn corrupt_payload_is_dropped_not_served() {
+        let root = tmp("corrupt");
+        let cache = TileCache::open(&root, 1 << 20);
+        cache.insert(key(1, 2), &gram(7, 3, 5));
+        // flip one payload byte on disk
+        let path = root.join(format!("tile-v1-{:016x}-{:016x}.gram", 1, 2));
+        let mut raw = std::fs::read(&path).unwrap();
+        raw[30] ^= 0x40;
+        std::fs::write(&path, &raw).unwrap();
+        assert!(cache.get(key(1, 2), 3, 5).is_none(), "checksum must catch the flip");
+        assert_eq!(cache.stats().misses, 1);
+        assert!(!path.exists(), "corrupt tile must be deleted");
+    }
+
+    #[test]
+    fn lru_evicts_by_last_use_and_removes_files() {
+        let one = TileCache::file_bytes(2, 2);
+        let root = tmp("lru");
+        let cache = TileCache::open(&root, 2 * one);
+        cache.insert(key(0, 0), &gram(1, 2, 2));
+        cache.insert(key(0, 1), &gram(2, 2, 2));
+        cache.get(key(0, 0), 2, 2).unwrap(); // 0 is now MRU
+        cache.insert(key(0, 2), &gram(3, 2, 2)); // evicts (0, 1)
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().evictions, 1);
+        assert!(cache.get(key(0, 0), 2, 2).is_some());
+        assert!(cache.get(key(0, 1), 2, 2).is_none(), "LRU victim must be (0,1)");
+        assert_eq!(cache.resident_bytes(), 2 * one);
+        let files = std::fs::read_dir(&root).unwrap().count();
+        assert_eq!(files, 2, "evicted tile file must be removed");
+    }
+
+    #[test]
+    fn oversized_tiles_are_not_retained() {
+        let root = tmp("oversized");
+        let cache = TileCache::open(&root, 8);
+        cache.insert(key(1, 1), &gram(1, 4, 4));
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.resident_bytes(), 0);
+        assert_eq!(std::fs::read_dir(&root).unwrap().count(), 0);
+    }
+
+    #[test]
+    fn open_rescans_tiles_from_a_prior_instance() {
+        let root = tmp("rescan");
+        let g = gram(5, 3, 3);
+        {
+            let cache = TileCache::open(&root, 1 << 20);
+            cache.insert(key(10, 20), &g);
+        }
+        let cache = TileCache::open(&root, 1 << 20);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.resident_bytes(), TileCache::file_bytes(3, 3));
+        let back = cache.get(key(10, 20), 3, 3).expect("persisted tile must be served");
+        assert_eq!(back.data(), g.data());
+        // foreign files in the root are ignored by the scan
+        std::fs::write(root.join("notes.txt"), b"x").unwrap();
+        let cache = TileCache::open(&root, 1 << 20);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let cache = TileCache::disabled();
+        assert!(!cache.enabled());
+        cache.insert(key(1, 2), &gram(1, 2, 2));
+        assert!(cache.get(key(1, 2), 2, 2).is_none());
+        assert_eq!(cache.stats(), TileCacheStats::default());
+    }
+
+    #[test]
+    fn stats_since_subtracts() {
+        let cache = TileCache::open(tmp("since"), 1 << 20);
+        cache.insert(key(1, 1), &gram(1, 2, 2));
+        cache.get(key(1, 1), 2, 2).unwrap();
+        let before = cache.stats();
+        cache.get(key(1, 1), 2, 2).unwrap();
+        cache.get(key(2, 2), 2, 2);
+        let d = cache.stats().since(&before);
+        assert_eq!((d.hits, d.misses, d.inserted_bytes), (1, 1, 0));
+    }
+}

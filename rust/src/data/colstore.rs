@@ -123,6 +123,24 @@ pub trait ColumnSource: Send + Sync {
         None
     }
 
+    /// Content fingerprint of the block `[start, start + len)` — the
+    /// tile-cache key half for this block
+    /// ([`crate::coordinator::tilecache`]). Defined as FNV-1a over the
+    /// block's packed words with the shape mixed in, so every source
+    /// serving identical bits (the `colstore.rs` round-trip property)
+    /// reports identical fingerprints. The default fetches the block
+    /// and hashes it; sources with real I/O should memoize
+    /// ([`PackedFileSource`] does), keeping the cost one extra read
+    /// per block per process.
+    fn block_fingerprint(&self, start: usize, len: usize) -> Result<u64> {
+        let block = self.col_block(start, len)?;
+        Ok(crate::coordinator::tilecache::fingerprint_words(
+            self.n_rows(),
+            len,
+            block.words(),
+        ))
+    }
+
     /// All column counts, fetched in `chunk_cols`-sized blocks so no
     /// more than one block of columns is ever resident (`0` = one fetch
     /// for everything).
@@ -328,6 +346,9 @@ pub struct PackedFileSource {
     bytes_read: AtomicU64,
     reads: AtomicU64,
     read_nanos: AtomicU64,
+    /// Memoized block fingerprints, so tile-cache keying costs one
+    /// extra read per block per process, not one per task.
+    fingerprints: std::sync::Mutex<std::collections::HashMap<(usize, usize), u64>>,
 }
 
 impl PackedFileSource {
@@ -363,6 +384,7 @@ impl PackedFileSource {
             bytes_read: AtomicU64::new(0),
             reads: AtomicU64::new(0),
             read_nanos: AtomicU64::new(0),
+            fingerprints: std::sync::Mutex::new(std::collections::HashMap::new()),
         })
     }
 
@@ -442,6 +464,17 @@ impl ColumnSource for PackedFileSource {
     fn payload_bytes_hint(&self) -> Option<u64> {
         Some(self.payload_bytes())
     }
+
+    fn block_fingerprint(&self, start: usize, len: usize) -> Result<u64> {
+        if let Some(&fp) = self.fingerprints.lock().unwrap().get(&(start, len)) {
+            return Ok(fp);
+        }
+        let block = self.col_block(start, len)?;
+        let fp =
+            crate::coordinator::tilecache::fingerprint_words(self.n_rows, len, block.words());
+        self.fingerprints.lock().unwrap().insert((start, len), fp);
+        Ok(fp)
+    }
 }
 
 #[cfg(test)]
@@ -506,6 +539,32 @@ mod tests {
         assert_eq!(src.all_col_counts(3).unwrap(), ds.col_counts());
         assert_eq!(src.to_dataset().unwrap().bytes(), ds.bytes());
         assert!(src.col_block(13, 1).is_err());
+    }
+
+    #[test]
+    fn block_fingerprints_agree_across_sources_and_memoize() {
+        let ds = SynthSpec::new(201, 9).sparsity(0.6).seed(13).generate();
+        let path = tmpdir().join("fps.bmat");
+        io::write_bmat_v2(&ds, &path).unwrap();
+        let file = PackedFileSource::open(&path).unwrap();
+        let mem = InMemorySource::new(&ds);
+        for (start, len) in [(0usize, 9usize), (0, 4), (4, 4), (8, 1)] {
+            let a = file.block_fingerprint(start, len).unwrap();
+            let b = mem.block_fingerprint(start, len).unwrap();
+            let c = ColumnSource::block_fingerprint(&ds, start, len).unwrap();
+            assert_eq!(a, b, "[{start}, {start}+{len})");
+            assert_eq!(a, c, "[{start}, {start}+{len})");
+        }
+        assert_ne!(
+            file.block_fingerprint(0, 4).unwrap(),
+            file.block_fingerprint(4, 4).unwrap(),
+            "distinct content must fingerprint differently"
+        );
+        // memoized: repeating a fingerprint issues no new read
+        let before = file.io_stats().unwrap();
+        file.block_fingerprint(0, 4).unwrap();
+        assert_eq!(file.io_stats().unwrap().since(&before).reads, 0);
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

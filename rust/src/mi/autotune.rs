@@ -28,6 +28,17 @@
 //! report with [`ProbeReport::cached`] set and skips all timing.
 //! [`autotune_uncached`] bypasses the cache (the bench harness uses it
 //! so `backend-auto` entries always time a real probe).
+//!
+//! **Persistent probe cache.** When the `BULKMI_CACHE_DIR` environment
+//! variable names a directory, probe verdicts also persist across
+//! *processes*: a RAM miss consults `probe-cache.v1` under that root
+//! before timing anything, and a fresh probe rewrites it (merged with
+//! the valid entries already on disk). Because a verdict is a hardware
+//! property, the file is guarded by `hardware.fpr` — a fingerprint of
+//! the CPU brand string, the CPU feature flags, and the active SIMD
+//! kernel — and the whole cache is ignored (then rewritten) when the
+//! fingerprint changes. A corrupt cache file is ignored with a warning,
+//! never an error: the worst case is one redundant probe.
 
 use super::backend::Backend;
 use super::measure::{combine_block, CombineKind};
@@ -36,6 +47,7 @@ use crate::data::colstore::ColumnSource;
 use crate::data::dataset::BinaryDataset;
 use crate::util::error::{Error, Result};
 use std::collections::HashMap;
+use std::path::{Path, PathBuf};
 use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
@@ -202,7 +214,9 @@ pub fn autotune_source(src: &dyn ColumnSource) -> Result<ProbeReport> {
     autotune_probe_cached(probe_block_source(src)?, src.n_rows(), src.n_cols())
 }
 
-/// Shared cache-consulting tail of [`autotune`] / [`autotune_source`].
+/// Shared cache-consulting tail of [`autotune`] / [`autotune_source`]:
+/// RAM cache first, then (when `BULKMI_CACHE_DIR` is set) the on-disk
+/// cache, then a fresh probe that populates both layers.
 fn autotune_probe_cached(
     probe: BinaryDataset,
     n_rows: usize,
@@ -215,9 +229,241 @@ fn autotune_probe_cached(
         report.cached = true;
         return Ok(report);
     }
+    let dir = persistent_cache_dir();
+    let mut disk_entries = None;
+    if let Some(d) = &dir {
+        disk_entries = load_probe_cache(d);
+        if let Some(hit) = disk_entries.as_ref().and_then(|m| m.get(&key)) {
+            // Promote to RAM so later probes in this process skip the
+            // disk read; the file itself is left untouched (a byte-
+            // identical cache file is how tests prove no re-probe and
+            // no rewrite happened).
+            probe_cache().lock().unwrap().insert(key, hit.clone());
+            let mut report = hit.clone();
+            report.cached = true;
+            return Ok(report);
+        }
+    }
     let report = probe_candidates(&probe, density)?;
     probe_cache().lock().unwrap().insert(key, report.clone());
+    if let Some(d) = &dir {
+        let mut entries = disk_entries.unwrap_or_default();
+        entries.insert(key, report.clone());
+        save_probe_cache(d, &entries);
+    }
     Ok(report)
+}
+
+/// Environment variable naming the persistent cache root shared by the
+/// probe cache (`probe-cache.v1` + `hardware.fpr`) and, by convention,
+/// the tile cache. Unset (the default, and the state every in-process
+/// test runs under) means the probe cache is RAM-only.
+pub const CACHE_DIR_ENV: &str = "BULKMI_CACHE_DIR";
+
+const PROBE_CACHE_FILE: &str = "probe-cache.v1";
+const PROBE_CACHE_MAGIC: &str = "bulkmi-probe-cache,v1";
+const FINGERPRINT_FILE: &str = "hardware.fpr";
+
+fn persistent_cache_dir() -> Option<PathBuf> {
+    std::env::var_os(CACHE_DIR_ENV)
+        .filter(|v| !v.is_empty())
+        .map(PathBuf::from)
+}
+
+/// The hardware identity a probe verdict is valid for: CPU brand
+/// string, an FNV digest of the CPU feature flags, the active SIMD
+/// kernel's name, and the arch/OS pair. Any component changing (new
+/// machine, kernel dispatch picking a different path after a binary
+/// upgrade) must invalidate persisted verdicts — timings from other
+/// hardware are not merely stale, they are misleading.
+pub fn hardware_fingerprint() -> String {
+    format!(
+        "{}|flags:{}|kernel:{}|{}-{}",
+        cpu_brand(),
+        cpu_flags_digest(),
+        crate::linalg::kernels::active().name(),
+        std::env::consts::ARCH,
+        std::env::consts::OS
+    )
+}
+
+fn cpu_brand() -> String {
+    if let Ok(text) = std::fs::read_to_string("/proc/cpuinfo") {
+        for line in text.lines() {
+            // x86 calls it "model name"; some aarch64 kernels expose
+            // "Hardware" or nothing useful — fall through in that case.
+            if line.starts_with("model name") || line.starts_with("Hardware") {
+                if let Some((_, v)) = line.split_once(':') {
+                    return v.trim().to_string();
+                }
+            }
+        }
+    }
+    "unknown-cpu".to_string()
+}
+
+fn cpu_flags_digest() -> String {
+    if let Ok(text) = std::fs::read_to_string("/proc/cpuinfo") {
+        for line in text.lines() {
+            if line.starts_with("flags") || line.starts_with("Features") {
+                if let Some((_, v)) = line.split_once(':') {
+                    let fp = crate::coordinator::tilecache::fnv1a(v.trim().as_bytes());
+                    return format!("{fp:016x}");
+                }
+            }
+        }
+    }
+    "none".to_string()
+}
+
+/// Load the persisted probe cache under `dir`, returning `None` when
+/// there is nothing usable: no fingerprint file yet, a fingerprint that
+/// does not match this hardware (silent invalidation — the next save
+/// rewrites both files), or a cache file that fails to parse (warned,
+/// because it indicates corruption rather than a hardware change).
+pub fn load_probe_cache(dir: &Path) -> Option<HashMap<ProbeKey, ProbeReport>> {
+    let stored = std::fs::read_to_string(dir.join(FINGERPRINT_FILE)).ok()?;
+    if stored.trim_end() != hardware_fingerprint() {
+        return None;
+    }
+    let text = match std::fs::read_to_string(dir.join(PROBE_CACHE_FILE)) {
+        Ok(t) => t,
+        // fingerprint present but no cache yet: valid, empty
+        Err(_) => return Some(HashMap::new()),
+    };
+    match parse_probe_cache(&text) {
+        Some(map) => Some(map),
+        None => {
+            eprintln!(
+                "warning: ignoring corrupt probe cache at {} (will be rewritten by the next probe)",
+                dir.join(PROBE_CACHE_FILE).display()
+            );
+            None
+        }
+    }
+}
+
+/// Persist `entries` (plus the current hardware fingerprint) under
+/// `dir`, creating it if needed. Failures warn and return — a machine
+/// with a read-only or missing cache root just re-probes next time.
+pub fn save_probe_cache(dir: &Path, entries: &HashMap<ProbeKey, ProbeReport>) {
+    if let Err(e) = try_save_probe_cache(dir, entries) {
+        eprintln!("warning: could not persist probe cache to {}: {e}", dir.display());
+    }
+}
+
+fn try_save_probe_cache(
+    dir: &Path,
+    entries: &HashMap<ProbeKey, ProbeReport>,
+) -> std::io::Result<()> {
+    use std::io::Write;
+    std::fs::create_dir_all(dir)?;
+    let stamp = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos())
+        .unwrap_or(0);
+    let mut out = String::new();
+    out.push_str(PROBE_CACHE_MAGIC);
+    out.push('\n');
+    out.push_str(&format!("stamp,{stamp}\n"));
+    // deterministic entry order so diffs between saves are meaningful
+    let mut keys: Vec<&ProbeKey> = entries.keys().collect();
+    keys.sort_by_key(|k| (k.n_rows, k.n_cols, k.density_bucket));
+    for key in keys {
+        let r = &entries[key];
+        out.push_str(&format!(
+            "entry,{},{},{},{},{},{},{}\n",
+            key.n_rows,
+            key.n_cols,
+            key.density_bucket,
+            r.chosen.name(),
+            r.density,
+            r.probe_rows,
+            r.probe_cols
+        ));
+        for c in &r.candidates {
+            out.push_str(&format!("cand,{},{},{}\n", c.backend.name(), c.secs, c.throughput));
+        }
+        for c in &r.combine {
+            out.push_str(&format!("comb,{},{},{}\n", c.measure.name(), c.secs, c.cells_per_sec));
+        }
+        out.push_str("end\n");
+    }
+    // tmp + rename so a crash mid-write never leaves a torn cache file
+    let write_atomic = |name: &str, body: &str| -> std::io::Result<()> {
+        let tmp = dir.join(format!("{name}.tmp"));
+        {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(body.as_bytes())?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, dir.join(name))
+    };
+    write_atomic(PROBE_CACHE_FILE, &out)?;
+    write_atomic(FINGERPRINT_FILE, &format!("{}\n", hardware_fingerprint()))
+}
+
+/// Parse a `probe-cache.v1` body; `None` on any structural defect
+/// (wrong magic, torn entry, malformed number) — the caller treats the
+/// whole file as corrupt rather than trusting a readable prefix.
+fn parse_probe_cache(text: &str) -> Option<HashMap<ProbeKey, ProbeReport>> {
+    let mut lines = text.lines();
+    if lines.next()? != PROBE_CACHE_MAGIC {
+        return None;
+    }
+    if !lines.next()?.starts_with("stamp,") {
+        return None;
+    }
+    let mut map = HashMap::new();
+    let mut cur: Option<(ProbeKey, ProbeReport)> = None;
+    for line in lines {
+        let mut f = line.split(',');
+        match f.next()? {
+            "entry" => {
+                if cur.is_some() {
+                    return None; // previous entry never reached "end"
+                }
+                let key = ProbeKey {
+                    n_rows: f.next()?.parse().ok()?,
+                    n_cols: f.next()?.parse().ok()?,
+                    density_bucket: f.next()?.parse().ok()?,
+                };
+                let report = ProbeReport {
+                    chosen: Backend::parse(f.next()?)?,
+                    density: f.next()?.parse().ok()?,
+                    probe_rows: f.next()?.parse().ok()?,
+                    probe_cols: f.next()?.parse().ok()?,
+                    candidates: Vec::new(),
+                    combine: Vec::new(),
+                    cached: false,
+                };
+                cur = Some((key, report));
+            }
+            "cand" => {
+                cur.as_mut()?.1.candidates.push(ProbeMeasurement {
+                    backend: Backend::parse(f.next()?)?,
+                    secs: f.next()?.parse().ok()?,
+                    throughput: f.next()?.parse().ok()?,
+                });
+            }
+            "comb" => {
+                cur.as_mut()?.1.combine.push(CombineMeasurement {
+                    measure: CombineKind::parse(f.next()?)?,
+                    secs: f.next()?.parse().ok()?,
+                    cells_per_sec: f.next()?.parse().ok()?,
+                });
+            }
+            "end" => {
+                let (key, report) = cur.take()?;
+                map.insert(key, report);
+            }
+            _ => return None,
+        }
+    }
+    if cur.is_some() {
+        return None; // truncated mid-entry
+    }
+    Some(map)
 }
 
 /// [`autotune`] bypassing the probe cache: always times a fresh probe
@@ -490,6 +736,125 @@ mod tests {
             assert!(c.cells_per_sec > 0.0, "{m}");
             assert_eq!(report.combine_secs(*m), Some(c.secs));
         }
+    }
+
+    fn tmp_cache_dir(name: &str) -> PathBuf {
+        let dir =
+            std::env::temp_dir().join(format!("bulkmi-probecache-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn hardware_fingerprint_is_stable_and_structured() {
+        let a = hardware_fingerprint();
+        let b = hardware_fingerprint();
+        assert_eq!(a, b, "fingerprint must be deterministic within a process");
+        assert!(a.contains("|kernel:"), "{a}");
+        assert!(a.contains("|flags:"), "{a}");
+        assert!(a.contains(std::env::consts::ARCH), "{a}");
+        assert!(!a.contains('\n'));
+    }
+
+    #[test]
+    fn probe_cache_round_trips_through_disk_exactly() {
+        let dir = tmp_cache_dir("roundtrip");
+        let ds = SynthSpec::new(800, 16).sparsity(0.6).seed(41).generate();
+        let report = autotune_uncached(&ds).unwrap();
+        let key = ProbeKey {
+            n_rows: ds.n_rows(),
+            n_cols: ds.n_cols(),
+            density_bucket: density_bucket(report.density),
+        };
+        let mut entries = HashMap::new();
+        entries.insert(key, report.clone());
+        save_probe_cache(&dir, &entries);
+        let loaded = load_probe_cache(&dir).expect("matching fingerprint must load");
+        let got = loaded.get(&key).expect("saved entry present");
+        assert_eq!(got.chosen, report.chosen);
+        assert_eq!(got.density, report.density, "f64 Display must round-trip exactly");
+        assert_eq!(got.probe_rows, report.probe_rows);
+        assert_eq!(got.probe_cols, report.probe_cols);
+        assert!(!got.cached, "loaded entries start uncached");
+        assert_eq!(got.candidates.len(), report.candidates.len());
+        for (a, b) in report.candidates.iter().zip(&got.candidates) {
+            assert_eq!(a.backend, b.backend);
+            assert_eq!(a.secs, b.secs);
+            assert_eq!(a.throughput, b.throughput);
+        }
+        assert_eq!(got.combine.len(), CombineKind::ALL.len());
+        for (a, b) in report.combine.iter().zip(&got.combine) {
+            assert_eq!(a.measure, b.measure);
+            assert_eq!(a.secs, b.secs);
+            assert_eq!(a.cells_per_sec, b.cells_per_sec);
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn fingerprint_mismatch_invalidates_disk_cache() {
+        let dir = tmp_cache_dir("fpr-mismatch");
+        save_probe_cache(&dir, &HashMap::new());
+        assert!(load_probe_cache(&dir).is_some(), "fresh save must load");
+        std::fs::write(dir.join("hardware.fpr"), "some-other-machine\n").unwrap();
+        assert!(
+            load_probe_cache(&dir).is_none(),
+            "a foreign fingerprint must invalidate every entry"
+        );
+        // the next save restores the real fingerprint
+        save_probe_cache(&dir, &HashMap::new());
+        assert!(load_probe_cache(&dir).is_some());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corrupt_or_missing_disk_cache_never_panics() {
+        let dir = tmp_cache_dir("corrupt");
+        // no directory at all
+        assert!(load_probe_cache(&dir).is_none());
+        save_probe_cache(&dir, &HashMap::new());
+        // garbage body
+        std::fs::write(dir.join("probe-cache.v1"), "not a cache file\n").unwrap();
+        assert!(load_probe_cache(&dir).is_none(), "garbage must be ignored");
+        // right magic, torn entry (no "end")
+        std::fs::write(
+            dir.join("probe-cache.v1"),
+            "bulkmi-probe-cache,v1\nstamp,0\nentry,10,10,5,bulk-bitpack,0.5,10,10\n",
+        )
+        .unwrap();
+        assert!(load_probe_cache(&dir).is_none(), "torn entries must be ignored");
+        // bad backend name inside an otherwise well-formed entry
+        std::fs::write(
+            dir.join("probe-cache.v1"),
+            "bulkmi-probe-cache,v1\nstamp,0\nentry,10,10,5,no-such-backend,0.5,10,10\nend\n",
+        )
+        .unwrap();
+        assert!(load_probe_cache(&dir).is_none());
+        // fingerprint present but cache file absent: valid empty cache
+        std::fs::remove_file(dir.join("probe-cache.v1")).unwrap();
+        let empty = load_probe_cache(&dir).expect("fingerprint alone is a valid empty cache");
+        assert!(empty.is_empty());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn disk_cache_merges_entries_across_saves() {
+        let dir = tmp_cache_dir("merge");
+        let ds = SynthSpec::new(700, 12).sparsity(0.5).seed(42).generate();
+        let report = autotune_uncached(&ds).unwrap();
+        let k1 = ProbeKey { n_rows: 700, n_cols: 12, density_bucket: density_bucket(0.5) };
+        let k2 = ProbeKey { n_rows: 900, n_cols: 31, density_bucket: density_bucket(0.1) };
+        let mut first = HashMap::new();
+        first.insert(k1, report.clone());
+        save_probe_cache(&dir, &first);
+        // a second process would load, add its entry, and save the union
+        let mut merged = load_probe_cache(&dir).unwrap();
+        merged.insert(k2, report.clone());
+        save_probe_cache(&dir, &merged);
+        let last = load_probe_cache(&dir).unwrap();
+        assert_eq!(last.len(), 2);
+        assert!(last.contains_key(&k1) && last.contains_key(&k2));
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -155,6 +155,10 @@ pub struct SinkMeta {
     pub io: Option<IoReport>,
     /// Block-substrate cache behaviour, when a cache was attached.
     pub cache: Option<CacheReport>,
+    /// Gram-tile result-cache behaviour, when the run consulted the
+    /// content-addressed tile cache
+    /// (`crate::coordinator::tilecache`).
+    pub tiles: Option<TileCacheReport>,
     /// Task-ordering policy of the executed plan
     /// ([`crate::coordinator::scheduler::Schedule::name`]).
     pub schedule: Option<&'static str>,
@@ -217,6 +221,25 @@ pub struct CacheReport {
     /// stall the cache and prefetch exist to hide.
     pub stall_secs: f64,
     /// The cache's byte budget for the run.
+    pub budget_bytes: usize,
+}
+
+/// Content-addressed Gram-tile cache behaviour over one run (deltas,
+/// not process totals), recorded in [`SinkMeta`]. A hit means the
+/// task's Gram tile was served verified from disk and only the measure
+/// combine ran. See `crate::coordinator::tilecache`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TileCacheReport {
+    /// Tasks whose Gram tile was served from the cache.
+    pub hits: u64,
+    /// Tasks that computed their Gram (including dropped corrupt
+    /// tiles).
+    pub misses: u64,
+    /// Tiles deleted to stay under the byte budget.
+    pub evictions: u64,
+    /// Bytes of tile files written during the run.
+    pub inserted_bytes: u64,
+    /// The cache's byte budget.
     pub budget_bytes: usize,
 }
 
@@ -631,22 +654,69 @@ impl MiSink for ThresholdSink {
 // TileSpillSink
 // ---------------------------------------------------------------------
 
+/// First line of a resumable (v2) spill manifest.
+const SPILL_MANIFEST_V2: &str = "bulkmi-spill,v2";
+/// v2 per-tile row header.
+const SPILL_HEADER_V2: &str = "a_start,a_len,b_start,b_len,bytes,checksum,file";
+/// Trailer line a finished run appends; its absence means a crash.
+const SPILL_COMPLETE: &str = "complete,1";
+
 /// Writes each combined block to disk as a raw little-endian f64 tile
-/// plus a `manifest.csv`, keeping only O(block²) bytes in memory — the
-/// out-of-core path for m far beyond RAM. Reassemble (for m that fits)
-/// with [`assemble_spilled`].
+/// plus an *incremental* `manifest.csv`: the version + `m` headers go
+/// out at construction, and each tile's row — byte length, FNV-1a
+/// checksum, file name — is appended and flushed right after the tile
+/// file lands. A crash therefore leaves a manifest that lists exactly
+/// the durable tiles (a torn final row is tolerated by the parser);
+/// only a clean [`MiSink::finish`] appends the `complete,1` trailer.
+/// That is what makes spilled runs resumable: [`TileSpillSink::resume`]
+/// replays the manifest, verifies the surviving tiles, and reports
+/// which tasks are already done. Keeps only O(block²) bytes in memory —
+/// the out-of-core path for m far beyond RAM. Reassemble (for m that
+/// fits) with [`assemble_spilled`].
 pub struct TileSpillSink {
     dir: PathBuf,
     m: usize,
-    tiles: Vec<(BlockTask, String)>,
+    manifest: std::io::BufWriter<std::fs::File>,
+    tiles: usize,
     bytes: u64,
 }
 
 impl TileSpillSink {
     pub fn new(dir: impl Into<PathBuf>, m: usize) -> Result<Self> {
+        use std::io::Write;
         let dir = dir.into();
         std::fs::create_dir_all(&dir)?;
-        Ok(TileSpillSink { dir, m, tiles: Vec::new(), bytes: 0 })
+        let mut manifest =
+            std::io::BufWriter::new(std::fs::File::create(dir.join("manifest.csv"))?);
+        writeln!(manifest, "{SPILL_MANIFEST_V2}")?;
+        writeln!(manifest, "m,{m}")?;
+        writeln!(manifest, "{SPILL_HEADER_V2}")?;
+        manifest.flush()?;
+        Ok(TileSpillSink { dir, m, manifest, tiles: 0, bytes: 0 })
+    }
+
+    /// Reopen a crashed (or finished) spill directory: parse its v2
+    /// manifest, verify every listed tile's length and checksum
+    /// (corruption is a clean [`Error::Parse`] naming the tile), and
+    /// return the sink in append mode plus the tasks whose tiles are
+    /// already durable — the caller schedules only the rest and calls
+    /// `finish()` as usual.
+    pub fn resume(dir: impl Into<PathBuf>) -> Result<(Self, Vec<BlockTask>)> {
+        let dir = dir.into();
+        let man = read_spill_manifest(&dir)?;
+        let mut done = Vec::with_capacity(man.tiles.len());
+        let mut bytes = 0u64;
+        for tile in &man.tiles {
+            verify_spill_tile(&dir, tile)?;
+            done.push(tile.task);
+            bytes += tile.bytes;
+        }
+        let file = std::fs::OpenOptions::new()
+            .append(true)
+            .open(dir.join("manifest.csv"))?;
+        let manifest = std::io::BufWriter::new(file);
+        let sink = TileSpillSink { dir, m: man.m, manifest, tiles: done.len(), bytes };
+        Ok((sink, done))
     }
 }
 
@@ -656,6 +726,7 @@ impl MiSink for TileSpillSink {
     }
 
     fn consume_block(&mut self, t: &BlockTask, block: &Mat64) -> Result<()> {
+        use std::io::Write;
         check_block_shape(t, block)?;
         let file = format!("tile_{}_{}.f64", t.a_start, t.b_start);
         let mut buf = Vec::with_capacity(block.data().len() * 8);
@@ -663,37 +734,209 @@ impl MiSink for TileSpillSink {
             buf.extend_from_slice(&v.to_le_bytes());
         }
         std::fs::write(self.dir.join(&file), &buf)?;
+        // the tile is durable before its row is: a crash in between
+        // leaves an unlisted file that resume simply overwrites
+        let ck = crate::coordinator::tilecache::fnv1a(&buf);
+        writeln!(
+            self.manifest,
+            "{},{},{},{},{},{ck:016x},{file}",
+            t.a_start,
+            t.a_len,
+            t.b_start,
+            t.b_len,
+            buf.len()
+        )?;
+        self.manifest.flush()?;
         self.bytes += buf.len() as u64;
-        self.tiles.push((*t, file));
+        self.tiles += 1;
         Ok(())
     }
 
     fn finish(&mut self) -> Result<SinkOutput> {
         use std::io::Write;
-        let tiles = std::mem::take(&mut self.tiles);
-        let mut w = std::io::BufWriter::new(std::fs::File::create(
-            self.dir.join("manifest.csv"),
-        )?);
-        writeln!(w, "m,{}", self.m)?;
-        writeln!(w, "a_start,a_len,b_start,b_len,file")?;
-        for (t, file) in &tiles {
-            writeln!(w, "{},{},{},{},{file}", t.a_start, t.a_len, t.b_start, t.b_len)?;
-        }
-        w.flush()?;
+        writeln!(self.manifest, "{SPILL_COMPLETE}")?;
+        self.manifest.flush()?;
         Ok(SinkData::Spilled(SpillInfo {
             dir: self.dir.clone(),
             m: self.m,
-            tiles: tiles.len(),
+            tiles: self.tiles,
             bytes: self.bytes,
         })
         .into())
     }
 }
 
+/// One tile row of a v2 spill manifest.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpillTile {
+    pub task: BlockTask,
+    /// Tile file length in bytes (must equal `a_len * b_len * 8`).
+    pub bytes: u64,
+    /// FNV-1a checksum of the tile file's bytes.
+    pub checksum: u64,
+}
+
+impl SpillTile {
+    /// The tile's file name inside the spill directory.
+    pub fn file(&self) -> String {
+        format!("tile_{}_{}.f64", self.task.a_start, self.task.b_start)
+    }
+}
+
+/// A parsed v2 spill manifest.
+#[derive(Clone, Debug)]
+pub struct SpillManifest {
+    pub m: usize,
+    /// Whether the run's `finish()` appended the completion trailer.
+    pub complete: bool,
+    pub tiles: Vec<SpillTile>,
+}
+
+/// Parse a spill directory's v2 `manifest.csv`. Legacy v1 manifests
+/// (no version line, no checksums) are a clean error — they predate
+/// resumability. An incomplete manifest may end in one torn row (a
+/// crash mid-append), which is dropped; any other malformed line is an
+/// [`Error::Parse`].
+pub fn read_spill_manifest(dir: &Path) -> Result<SpillManifest> {
+    let path = dir.join("manifest.csv");
+    let text = std::fs::read_to_string(&path)?;
+    parse_spill_manifest(&text)
+        .map_err(|e| Error::Parse(format!("{}: {e}", path.display())))
+}
+
+fn parse_spill_manifest(text: &str) -> std::result::Result<SpillManifest, String> {
+    let lines: Vec<&str> = text.lines().collect();
+    if lines.first().copied() != Some(SPILL_MANIFEST_V2) {
+        return Err(format!(
+            "not a resumable v2 spill manifest (first line is {:?})",
+            lines.first().copied().unwrap_or("")
+        ));
+    }
+    let m: usize = lines
+        .get(1)
+        .and_then(|l| l.strip_prefix("m,"))
+        .and_then(|v| v.parse().ok())
+        .ok_or("missing m header")?;
+    if lines.get(2).copied() != Some(SPILL_HEADER_V2) {
+        return Err(format!("bad header '{}'", lines.get(2).copied().unwrap_or("")));
+    }
+    let complete = lines.iter().any(|l| *l == SPILL_COMPLETE);
+    let mut tiles = Vec::new();
+    let rows = &lines[3..];
+    let last_row = rows.iter().rposition(|l| !l.trim().is_empty());
+    for (idx, line) in rows.iter().enumerate() {
+        if line.trim().is_empty() || *line == SPILL_COMPLETE {
+            continue;
+        }
+        match parse_spill_row(line, m) {
+            Some(tile) => tiles.push(tile),
+            // a torn final row is the expected residue of a crash
+            // mid-append; anywhere else it is corruption
+            None if !complete && Some(idx) == last_row => break,
+            None => return Err(format!("bad row '{line}'")),
+        }
+    }
+    Ok(SpillManifest { m, complete, tiles })
+}
+
+fn parse_spill_row(line: &str, m: usize) -> Option<SpillTile> {
+    let parts: Vec<&str> = line.split(',').collect();
+    if parts.len() != 7 {
+        return None;
+    }
+    let nums: Vec<usize> = parts[..4].iter().map(|s| s.parse().ok()).collect::<Option<_>>()?;
+    let (a_start, a_len, b_start, b_len) = (nums[0], nums[1], nums[2], nums[3]);
+    if a_start.checked_add(a_len)? > m || b_start.checked_add(b_len)? > m {
+        return None;
+    }
+    let bytes: u64 = parts[4].parse().ok()?;
+    let checksum = u64::from_str_radix(parts[5], 16).ok()?;
+    let tile = SpillTile {
+        task: BlockTask { a_start, a_len, b_start, b_len },
+        bytes,
+        checksum,
+    };
+    if parts[6] != tile.file() {
+        return None;
+    }
+    Some(tile)
+}
+
+/// Read and verify one spilled tile against its manifest row: the file
+/// must exist, match the recorded byte length (which must itself match
+/// the tile's shape), and match the recorded checksum. Every failure is
+/// an [`Error::Parse`] naming the tile — a corrupt spill can never
+/// silently assemble into a wrong matrix.
+pub fn verify_spill_tile(dir: &Path, tile: &SpillTile) -> Result<Vec<u8>> {
+    let file = tile.file();
+    let want = (tile.task.a_len as u64) * (tile.task.b_len as u64) * 8;
+    if tile.bytes != want {
+        return Err(Error::Parse(format!(
+            "tile {file}: manifest says {} bytes but the tile shape implies {want}",
+            tile.bytes
+        )));
+    }
+    let raw = std::fs::read(dir.join(&file))
+        .map_err(|e| Error::Parse(format!("tile {file}: {e}")))?;
+    if raw.len() as u64 != want {
+        return Err(Error::Parse(format!(
+            "tile {file}: {} bytes, expected {want} (truncated?)",
+            raw.len()
+        )));
+    }
+    let ck = crate::coordinator::tilecache::fnv1a(&raw);
+    if ck != tile.checksum {
+        return Err(Error::Parse(format!(
+            "tile {file}: checksum {ck:016x} != manifest {:016x} (corrupt tile)",
+            tile.checksum
+        )));
+    }
+    Ok(raw)
+}
+
 /// Load a spilled run back into a dense matrix (requires m² x 8 bytes
 /// of RAM — intended for tests and for tiles small enough to revisit).
+/// v2 manifests get every tile length- and checksum-verified
+/// ([`verify_spill_tile`]), and an incomplete manifest (crashed run) is
+/// a clean error pointing at `bulkmi resume`; legacy v1 manifests
+/// assemble with the historical length-only check.
 pub fn assemble_spilled(dir: &Path) -> Result<MiMatrix> {
     let manifest = std::fs::read_to_string(dir.join("manifest.csv"))?;
+    if manifest.starts_with(SPILL_MANIFEST_V2) {
+        let man = parse_spill_manifest(&manifest)
+            .map_err(|e| Error::Parse(format!("{}: {e}", dir.join("manifest.csv").display())))?;
+        if !man.complete {
+            return Err(Error::Parse(format!(
+                "{}: manifest has no completion marker (crashed run?) — finish it \
+                 with `bulkmi resume {}`",
+                dir.join("manifest.csv").display(),
+                dir.display()
+            )));
+        }
+        let mut mat = Mat64::zeros(man.m, man.m);
+        for tile in &man.tiles {
+            let raw = verify_spill_tile(dir, tile)?;
+            fill_tile(&mut mat, &tile.task, &raw);
+        }
+        return Ok(MiMatrix::from_mat(mat));
+    }
+    assemble_spilled_v1(dir, &manifest)
+}
+
+fn fill_tile(mat: &mut Mat64, t: &BlockTask, raw: &[u8]) {
+    let diagonal = t.a_start == t.b_start && t.a_len == t.b_len;
+    for (idx, chunk) in raw.chunks_exact(8).enumerate() {
+        let v = f64::from_le_bytes(chunk.try_into().expect("8-byte chunk"));
+        let (i, j) = (t.a_start + idx / t.b_len, t.b_start + idx % t.b_len);
+        mat.set(i, j, v);
+        if !diagonal {
+            mat.set(j, i, v);
+        }
+    }
+}
+
+/// The pre-resume (v1) assembly path: no checksums, length check only.
+fn assemble_spilled_v1(dir: &Path, manifest: &str) -> Result<MiMatrix> {
     let mut lines = manifest.lines();
     let m: usize = lines
         .next()
@@ -730,15 +973,8 @@ pub fn assemble_spilled(dir: &Path) -> Result<MiMatrix> {
                 a_len * b_len * 8
             )));
         }
-        let diagonal = a_start == b_start && a_len == b_len;
-        for (idx, chunk) in raw.chunks_exact(8).enumerate() {
-            let v = f64::from_le_bytes(chunk.try_into().expect("8-byte chunk"));
-            let (i, j) = (a_start + idx / b_len, b_start + idx % b_len);
-            mat.set(i, j, v);
-            if !diagonal {
-                mat.set(j, i, v);
-            }
-        }
+        let t = BlockTask { a_start, a_len, b_start, b_len };
+        fill_tile(&mut mat, &t, &raw);
     }
     Ok(MiMatrix::from_mat(mat))
 }
@@ -962,6 +1198,103 @@ mod tests {
                 assert_eq!(mi.get(i, j), (i.min(j) * 10 + i.max(j)) as f64);
             }
         }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn spill_manifest_is_incremental_and_resumable() {
+        let dir = std::env::temp_dir()
+            .join(format!("bulkmi-spill-resume-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let tasks = [
+            BlockTask { a_start: 0, a_len: 2, b_start: 0, b_len: 2 },
+            BlockTask { a_start: 0, a_len: 2, b_start: 2, b_len: 2 },
+            BlockTask { a_start: 2, a_len: 2, b_start: 2, b_len: 2 },
+        ];
+        let value = |i: usize, j: usize| (i.min(j) * 10 + i.max(j)) as f64;
+        // write only the first two tiles, then "crash" (drop the sink
+        // without finish): the manifest must already list both
+        {
+            let mut sink = TileSpillSink::new(&dir, 4).unwrap();
+            for t in &tasks[..2] {
+                sink.consume_block(t, &block(t, value)).unwrap();
+            }
+        }
+        let man = read_spill_manifest(&dir).unwrap();
+        assert_eq!((man.m, man.complete, man.tiles.len()), (4, false, 2));
+        // assembling a crashed run must refuse, pointing at resume
+        let err = assemble_spilled(&dir).unwrap_err().to_string();
+        assert!(err.contains("resume"), "{err}");
+        // resume: the done tiles verify and come back; finish the rest
+        let (mut sink, done) = TileSpillSink::resume(&dir).unwrap();
+        assert_eq!(done, tasks[..2]);
+        sink.consume_block(&tasks[2], &block(&tasks[2], value)).unwrap();
+        let SinkData::Spilled(info) = sink.finish().unwrap().data else { panic!() };
+        assert_eq!((info.tiles, info.bytes), (3, 3 * 4 * 8));
+        let mi = assemble_spilled(&dir).unwrap();
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(mi.get(i, j), value(i, j));
+            }
+        }
+        // a torn final row (crash mid-append) is tolerated when the
+        // manifest is incomplete
+        let manifest = std::fs::read_to_string(dir.join("manifest.csv")).unwrap();
+        let torn = manifest.replace(&format!("{SPILL_COMPLETE}\n"), "") + "2,2,0";
+        std::fs::write(dir.join("manifest.csv"), torn).unwrap();
+        let man = read_spill_manifest(&dir).unwrap();
+        assert_eq!((man.complete, man.tiles.len()), (false, 3));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_spill_tiles_are_named_not_assembled() {
+        let dir = std::env::temp_dir()
+            .join(format!("bulkmi-spill-corrupt-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut sink = TileSpillSink::new(&dir, 4).unwrap();
+        feed(&mut sink);
+        sink.finish().unwrap();
+        // truncate one tile
+        let t0 = dir.join("tile_0_0.f64");
+        let raw = std::fs::read(&t0).unwrap();
+        std::fs::write(&t0, &raw[..raw.len() - 8]).unwrap();
+        let err = assemble_spilled(&dir).unwrap_err().to_string();
+        assert!(err.contains("tile_0_0.f64"), "{err}");
+        std::fs::write(&t0, &raw).unwrap();
+        // flip one byte in another: the length check passes, the
+        // checksum must catch it
+        let t1 = dir.join("tile_0_2.f64");
+        let mut raw = std::fs::read(&t1).unwrap();
+        raw[3] ^= 0x01;
+        std::fs::write(&t1, &raw).unwrap();
+        let err = assemble_spilled(&dir).unwrap_err().to_string();
+        assert!(err.contains("tile_0_2.f64") && err.contains("checksum"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn legacy_v1_spill_manifests_still_assemble() {
+        let dir = std::env::temp_dir()
+            .join(format!("bulkmi-spill-v1-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let t = BlockTask { a_start: 0, a_len: 2, b_start: 0, b_len: 2 };
+        let b = block(&t, |i, j| (i * 10 + j) as f64);
+        let mut buf = Vec::new();
+        for v in b.data() {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(dir.join("tile_0_0.f64"), &buf).unwrap();
+        std::fs::write(
+            dir.join("manifest.csv"),
+            "m,2\na_start,a_len,b_start,b_len,file\n0,2,0,2,tile_0_0.f64\n",
+        )
+        .unwrap();
+        let mi = assemble_spilled(&dir).unwrap();
+        assert_eq!(mi.get(1, 1), 11.0);
+        // v1 dirs predate resumability: a clean error, not a panic
+        assert!(read_spill_manifest(&dir).is_err());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

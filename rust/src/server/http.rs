@@ -332,6 +332,11 @@ impl Server {
         out.push_str(&format!("cache shared prefetched = {}\n", cache.prefetched));
         out.push_str(&format!("cache shared inserted_bytes = {}\n", cache.inserted_bytes));
         out.push_str(&format!("cache shared stall_secs = {}\n", cache.stall_secs));
+        let tiles = self.svc.shared_tile_cache().stats();
+        out.push_str(&format!("cache tile hits = {}\n", tiles.hits));
+        out.push_str(&format!("cache tile misses = {}\n", tiles.misses));
+        out.push_str(&format!("cache tile evictions = {}\n", tiles.evictions));
+        out.push_str(&format!("cache tile inserted_bytes = {}\n", tiles.inserted_bytes));
         out
     }
 }

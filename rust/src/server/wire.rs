@@ -135,6 +135,7 @@ const REQUEST_KEYS: &[&str] = &[
     "readahead",
     "task_latency_secs",
     "priority",
+    "tiles",
 ];
 
 fn req_str<'a>(obj: &'a Json, key: &str) -> Result<Option<&'a str>> {
@@ -241,6 +242,16 @@ impl JobRequest {
         if let Some(t) = req_f64(json, "task_latency_secs")? {
             builder = builder.task_latency_secs(t);
         }
+        // numeric 0/1 like every other wire flag (the schema has no
+        // boolean type yet)
+        if let Some(n) = req_usize(json, "tiles")? {
+            if n > 1 {
+                return Err(Error::Parse(format!(
+                    "request key 'tiles' must be 0 or 1, got {n}"
+                )));
+            }
+            builder = builder.tiles(n == 1);
+        }
         Ok(JobRequest { dataset, spec: builder.build()? })
     }
 
@@ -272,6 +283,9 @@ impl JobRequest {
         }
         if let Some(tenant) = &s.tenant {
             out.push_str(&format!(",\"tenant\":\"{}\"", escape(tenant)));
+        }
+        if s.tiles {
+            out.push_str(",\"tiles\":1");
         }
         out.push('}');
         out
@@ -327,9 +341,17 @@ fn meta_json(out: &SinkOutput) -> String {
             a.estimated_bytes, a.queued_secs, a.priority
         ),
     };
+    let tiles = match &m.tiles {
+        None => "null".to_string(),
+        Some(t) => format!(
+            "{{\"hits\":{},\"misses\":{},\"evictions\":{},\"inserted_bytes\":{},\
+             \"budget_bytes\":{}}}",
+            t.hits, t.misses, t.evictions, t.inserted_bytes, t.budget_bytes
+        ),
+    };
     format!(
         "{{\"backend\":{},\"requested_backend\":{},\"measure\":{},\"schedule\":{},\
-         \"admission\":{admission}}}",
+         \"admission\":{admission},\"tiles\":{tiles}}}",
         opt_str_json(m.backend.as_deref()),
         opt_str_json(m.requested_backend.as_deref()),
         opt_str_json(m.measure.as_deref()),
@@ -415,6 +437,7 @@ mod tests {
             .task_latency_secs(0.5)
             .priority(Priority::Interactive)
             .tenant("acme")
+            .tiles(true)
             .build()
             .unwrap();
         let req = JobRequest { dataset: "bg".into(), spec };
@@ -431,6 +454,11 @@ mod tests {
         assert_eq!(back.spec.task_latency_secs, 0.5);
         assert_eq!(back.spec.priority, Some(Priority::Interactive));
         assert_eq!(back.spec.tenant.as_deref(), Some("acme"));
+        assert!(back.spec.tiles);
+        // default-off requests omit the key entirely
+        let plain = JobRequest { dataset: "bg".into(), spec: JobSpec::default() };
+        assert!(!plain.to_json().contains("tiles"));
+        assert!(!JobRequest::parse(&plain.to_json()).unwrap().spec.tiles);
     }
 
     #[test]
@@ -457,6 +485,8 @@ mod tests {
         assert!(JobRequest::parse(r#"{"v":1,"dataset":"bg","block_cols":1.5}"#).is_err());
         assert!(JobRequest::parse(r#"{"v":1,"dataset":"bg","block_cols":-4}"#).is_err());
         assert!(JobRequest::parse(r#"{"v":1,"dataset":"bg","backend":7}"#).is_err());
+        assert!(JobRequest::parse(r#"{"v":1,"dataset":"bg","tiles":2}"#).is_err());
+        assert!(JobRequest::parse(r#"{"v":1,"dataset":"bg","tiles":0}"#).is_ok());
         assert!(JobRequest::parse(r#"{"v":1}"#).is_err(), "dataset is required");
         assert!(JobRequest::parse(r#"[1,2]"#).is_err(), "must be an object");
     }

@@ -155,6 +155,86 @@ fn config_rejects_typos() {
     assert!(RunConfig::from_raw(&raw).is_err());
 }
 
+/// Persistent autotune probe cache, exercised the only way it can be:
+/// across real processes (the in-process suites never set
+/// `BULKMI_CACHE_DIR`, so the disk layer stays inert there). Two
+/// spawned `bulkmi` runs probe once total; a doctored hardware
+/// fingerprint forces a re-probe; a corrupted cache file is ignored
+/// with a warning, never a panic.
+#[test]
+fn persistent_probe_cache_across_processes() {
+    let bin = env!("CARGO_BIN_EXE_bulkmi");
+    let cache_dir = tmp("probe-cache-root");
+    let _ = std::fs::remove_dir_all(&cache_dir);
+    let data = tmp("probe-src.bmat");
+    assert_eq!(
+        cli::run(&sv(&[
+            "generate", "--rows", "400", "--cols", "24", "--sparsity", "0.85",
+            "--seed", "17", "--out", data.to_str().unwrap(),
+        ])),
+        0
+    );
+    let run = || {
+        std::process::Command::new(bin)
+            .args([
+                "compute", "--input", data.to_str().unwrap(), "--backend", "auto",
+                "--sink", "topk:3", "--top", "0",
+            ])
+            .env("BULKMI_CACHE_DIR", &cache_dir)
+            .output()
+            .expect("spawn bulkmi")
+    };
+
+    // first process probes and persists verdict + hardware fingerprint
+    let out1 = run();
+    assert!(out1.status.success(), "run 1: {}", String::from_utf8_lossy(&out1.stderr));
+    let cache_file = cache_dir.join("probe-cache.v1");
+    let fpr_file = cache_dir.join("hardware.fpr");
+    assert!(cache_file.exists(), "probe verdicts must persist");
+    assert!(fpr_file.exists(), "hardware fingerprint must persist");
+    let cached1 = std::fs::read(&cache_file).unwrap();
+    let fpr1 = std::fs::read_to_string(&fpr_file).unwrap();
+
+    // second process hits the disk cache: no re-probe, and the proof is
+    // that the cache file is byte-identical (a probe would rewrite it
+    // with a fresh stamp)
+    let out2 = run();
+    assert!(out2.status.success(), "run 2: {}", String::from_utf8_lossy(&out2.stderr));
+    assert_eq!(
+        std::fs::read(&cache_file).unwrap(),
+        cached1,
+        "a disk hit must not rewrite the probe cache"
+    );
+
+    // a different machine's fingerprint invalidates every verdict: the
+    // next run re-probes and rewrites both files for this machine
+    std::fs::write(&fpr_file, "some-other-machine\n").unwrap();
+    let out3 = run();
+    assert!(out3.status.success(), "run 3: {}", String::from_utf8_lossy(&out3.stderr));
+    assert_eq!(
+        std::fs::read_to_string(&fpr_file).unwrap(),
+        fpr1,
+        "re-probe must restore this machine's fingerprint"
+    );
+    assert_ne!(
+        std::fs::read(&cache_file).unwrap(),
+        cached1,
+        "re-probe must rewrite the cache (fresh stamp)"
+    );
+
+    // a corrupt cache file is a warning and a fresh probe, never a
+    // panic or a failure
+    std::fs::write(&cache_file, b"bulkmi-probe-cache,v1\nentry,garbage\n").unwrap();
+    let out4 = run();
+    assert!(out4.status.success(), "run 4: {}", String::from_utf8_lossy(&out4.stderr));
+    assert!(
+        String::from_utf8_lossy(&out4.stderr).contains("warning"),
+        "corrupt cache must warn on stderr: {}",
+        String::from_utf8_lossy(&out4.stderr)
+    );
+    let _ = std::fs::remove_dir_all(&cache_dir);
+}
+
 #[test]
 fn genomics_chain_recovers_ld() {
     let panel = GenomicsSpec { n_samples: 1500, n_markers: 120, seed: 31, ..Default::default() }

@@ -1,0 +1,208 @@
+//! Fault-injection suite for crash-resumable spill runs: a run killed
+//! after K tiles must resume with zero completed tiles recomputed and
+//! assemble bit-identically to an uninterrupted run, on every native
+//! backend; a corrupted tile (truncation or bit flip) must be a clean
+//! `Error::Parse` naming the tile, never a silently wrong matrix.
+
+use bulkmi::coordinator::executor::{run_plan, GramProvider, NativeKind, NativeProvider};
+use bulkmi::coordinator::planner::{plan_blocks, BlockTask};
+use bulkmi::coordinator::progress::Progress;
+use bulkmi::data::colstore::InMemorySource;
+use bulkmi::data::dataset::BinaryDataset;
+use bulkmi::data::synth::SynthSpec;
+use bulkmi::linalg::dense::Mat64;
+use bulkmi::mi::measure::CombineKind;
+use bulkmi::mi::sink::{
+    assemble_spilled, read_spill_manifest, MiSink, SinkOutput, TileSpillSink,
+};
+use bulkmi::mi::MiMatrix;
+use bulkmi::util::error::{Error, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+const M: usize = 30;
+const BLOCK: usize = 7;
+const CRASH_AFTER: usize = 6;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bulkmi-faults-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn dataset() -> BinaryDataset {
+    SynthSpec::new(380, M).sparsity(0.85).seed(77).plant(2, 19, 0.03).generate()
+}
+
+/// A sink wrapper that errors on the (K+1)-th block *before* delegating
+/// — the injected crash: tile K+1 is never written, the manifest holds
+/// exactly K rows and no completion trailer.
+struct FaultSink {
+    inner: TileSpillSink,
+    remaining: usize,
+}
+
+impl MiSink for FaultSink {
+    fn name(&self) -> &'static str {
+        "fault"
+    }
+
+    fn consume_block(&mut self, t: &BlockTask, block: &Mat64) -> Result<()> {
+        if self.remaining == 0 {
+            return Err(Error::Coordinator("injected crash".into()));
+        }
+        self.remaining -= 1;
+        self.inner.consume_block(t, block)
+    }
+
+    fn finish(&mut self) -> Result<SinkOutput> {
+        panic!("a crashed run must never reach finish()");
+    }
+}
+
+/// A provider wrapper counting `block_gram` calls — the proof that a
+/// resume recomputes exactly the missing tiles and nothing else.
+struct CountingProvider<'a> {
+    inner: NativeProvider<'a>,
+    grams: AtomicUsize,
+}
+
+impl GramProvider for CountingProvider<'_> {
+    fn name(&self) -> &'static str {
+        "counting"
+    }
+
+    fn block_gram(&self, t: &BlockTask) -> Result<Mat64> {
+        self.grams.fetch_add(1, Ordering::SeqCst);
+        self.inner.block_gram(t)
+    }
+}
+
+/// Uninterrupted spill run: the reference directory and matrix.
+fn run_complete(ds: &BinaryDataset, kind: NativeKind, dir: &Path) -> MiMatrix {
+    let src = InMemorySource::new(ds);
+    let plan = plan_blocks(M, BLOCK).unwrap();
+    let provider = NativeProvider::new(&src, kind);
+    let progress = Progress::new(plan.tasks.len());
+    let mut sink = TileSpillSink::new(dir, M).unwrap();
+    run_plan(&src, &plan, &provider, 2, &progress, &mut sink, CombineKind::Mi).unwrap();
+    sink.finish().unwrap();
+    assemble_spilled(dir).unwrap()
+}
+
+/// Spill run that crashes after `CRASH_AFTER` tiles (single worker, so
+/// exactly the first K tiles in plan order are durable).
+fn run_interrupted(ds: &BinaryDataset, kind: NativeKind, dir: &Path) {
+    let src = InMemorySource::new(ds);
+    let plan = plan_blocks(M, BLOCK).unwrap();
+    let provider = NativeProvider::new(&src, kind);
+    let progress = Progress::new(plan.tasks.len());
+    let mut sink =
+        FaultSink { inner: TileSpillSink::new(dir, M).unwrap(), remaining: CRASH_AFTER };
+    let err = run_plan(&src, &plan, &provider, 1, &progress, &mut sink, CombineKind::Mi)
+        .expect_err("the injected crash must surface");
+    assert!(err.to_string().contains("injected crash"), "unexpected error: {err}");
+}
+
+#[test]
+fn resume_recomputes_zero_completed_tiles_on_every_backend() {
+    let ds = dataset();
+    let total = plan_blocks(M, BLOCK).unwrap().tasks.len();
+    for kind in [NativeKind::Bitpack, NativeKind::Dense, NativeKind::Sparse] {
+        let ref_dir = tmp(&format!("ref-{kind:?}"));
+        let reference = run_complete(&ds, kind, &ref_dir);
+
+        let dir = tmp(&format!("crash-{kind:?}"));
+        run_interrupted(&ds, kind, &dir);
+        let man = read_spill_manifest(&dir).unwrap();
+        assert!(!man.complete, "{kind:?}: crashed manifest must lack the trailer");
+        assert_eq!(man.tiles.len(), CRASH_AFTER, "{kind:?}: exactly K tiles durable");
+
+        // resume: verify survivors, schedule only the rest
+        let (mut sink, done) = TileSpillSink::resume(&dir).unwrap();
+        assert_eq!(done.len(), CRASH_AFTER, "{kind:?}");
+        let src = InMemorySource::new(&ds);
+        let mut plan = plan_blocks(M, BLOCK).unwrap();
+        plan.tasks.retain(|t| !done.contains(t));
+        assert_eq!(plan.tasks.len(), total - CRASH_AFTER, "{kind:?}");
+        let provider = CountingProvider {
+            inner: NativeProvider::new(&src, kind),
+            grams: AtomicUsize::new(0),
+        };
+        let progress = Progress::new(plan.tasks.len());
+        run_plan(&src, &plan, &provider, 2, &progress, &mut sink, CombineKind::Mi).unwrap();
+        sink.finish().unwrap();
+        assert_eq!(
+            provider.grams.load(Ordering::SeqCst),
+            total - CRASH_AFTER,
+            "{kind:?}: resume must recompute exactly the missing tiles"
+        );
+
+        let man = read_spill_manifest(&dir).unwrap();
+        assert!(man.complete, "{kind:?}: resumed manifest must carry the trailer");
+        assert_eq!(man.tiles.len(), total, "{kind:?}");
+        let resumed = assemble_spilled(&dir).unwrap();
+        assert_eq!(
+            resumed.max_abs_diff(&reference),
+            0.0,
+            "{kind:?}: resumed assembly must be bit-identical to uninterrupted"
+        );
+        let _ = std::fs::remove_dir_all(&ref_dir);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn corrupt_tiles_are_clean_parse_errors_naming_the_tile() {
+    let ds = dataset();
+    let dir = tmp("corrupt");
+    run_complete(&ds, NativeKind::Bitpack, &dir);
+    let man = read_spill_manifest(&dir).unwrap();
+    let victim_a = man.tiles[1].file();
+    let victim_b = man.tiles[3].file();
+    let orig_a = std::fs::read(dir.join(&victim_a)).unwrap();
+    let orig_b = std::fs::read(dir.join(&victim_b)).unwrap();
+
+    // truncation: detected by the manifest length
+    std::fs::write(dir.join(&victim_a), &orig_a[..orig_a.len() - 8]).unwrap();
+    let err = assemble_spilled(&dir).expect_err("truncated tile must not assemble");
+    assert!(matches!(&err, Error::Parse(m) if m.contains(&victim_a)), "{err}");
+    assert!(err.to_string().contains("truncated"), "{err}");
+    std::fs::write(dir.join(&victim_a), &orig_a).unwrap();
+
+    // single-bit flip: detected by the manifest checksum
+    let mut flipped = orig_b.clone();
+    flipped[5] ^= 0x10;
+    std::fs::write(dir.join(&victim_b), &flipped).unwrap();
+    let err = assemble_spilled(&dir).expect_err("bit-flipped tile must not assemble");
+    assert!(matches!(&err, Error::Parse(m) if m.contains(&victim_b)), "{err}");
+    assert!(err.to_string().contains("checksum"), "{err}");
+
+    // resume refuses the same corruption instead of trusting the tile:
+    // strip the completion trailer so the directory reads as crashed
+    let manifest_path = dir.join("manifest.csv");
+    let text = std::fs::read_to_string(&manifest_path).unwrap();
+    let truncated = text.strip_suffix("complete,1\n").expect("trailer last");
+    std::fs::write(&manifest_path, truncated).unwrap();
+    let err = TileSpillSink::resume(&dir).map(|_| ()).expect_err("resume must verify");
+    assert!(matches!(&err, Error::Parse(m) if m.contains(&victim_b)), "{err}");
+
+    // healed tile + restored trailer assemble again
+    std::fs::write(dir.join(&victim_b), &orig_b).unwrap();
+    std::fs::write(&manifest_path, &text).unwrap();
+    assemble_spilled(&dir).unwrap();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn assembling_a_crashed_directory_points_at_resume() {
+    let ds = dataset();
+    let dir = tmp("incomplete");
+    run_interrupted(&ds, NativeKind::Bitpack, &dir);
+    let err = assemble_spilled(&dir).expect_err("incomplete run must not assemble");
+    assert!(
+        err.to_string().contains("resume"),
+        "the error must point at `bulkmi resume`: {err}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

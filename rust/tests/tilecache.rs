@@ -1,0 +1,239 @@
+//! Tile-cache integration: warm-cache runs must be bit-identical to
+//! cold runs for every native backend x measure x sink shape on dense,
+//! sparse, and tail-column datasets; hit/miss/eviction counts must be
+//! exactly predictable under a capacity-bounded cache; and a second
+//! identical job through the `JobService` must be served almost
+//! entirely from cache.
+
+use bulkmi::coordinator::executor::{run_plan_tiled, NativeKind, NativeProvider};
+use bulkmi::coordinator::planner::plan_blocks;
+use bulkmi::coordinator::progress::Progress;
+use bulkmi::coordinator::service::{JobService, JobSpec, JobStatus};
+use bulkmi::coordinator::tilecache::TileCache;
+use bulkmi::data::colstore::{ColumnSource, InMemorySource};
+use bulkmi::data::dataset::BinaryDataset;
+use bulkmi::data::synth::SynthSpec;
+use bulkmi::mi::backend::Backend;
+use bulkmi::mi::measure::CombineKind;
+use bulkmi::mi::sink::{DenseSink, MiSink, SinkData, SinkSpec, TopKSink};
+use bulkmi::util::error::Result;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bulkmi-tilecache-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// One plan execution through `run_plan_tiled` into `sink`.
+fn run_into(
+    src: &dyn ColumnSource,
+    kind: NativeKind,
+    measure: CombineKind,
+    block: usize,
+    workers: usize,
+    tiles: Option<&TileCache>,
+    sink: &mut dyn MiSink,
+) -> Result<()> {
+    let plan = plan_blocks(src.n_cols(), block)?;
+    let provider = NativeProvider::new(src, kind);
+    let progress = Progress::new(plan.tasks.len());
+    run_plan_tiled(src, &plan, &provider, workers, &progress, sink, measure, tiles)
+}
+
+fn dense_run(
+    src: &dyn ColumnSource,
+    kind: NativeKind,
+    measure: CombineKind,
+    block: usize,
+    tiles: Option<&TileCache>,
+) -> Vec<f64> {
+    let mut sink = DenseSink::new(src.n_cols());
+    run_into(src, kind, measure, block, 2, tiles, &mut sink).unwrap();
+    match sink.finish().unwrap().data {
+        SinkData::Dense(mi) => (0..mi.dim())
+            .flat_map(|i| (0..mi.dim()).map(move |j| (i, j)))
+            .map(|(i, j)| mi.get(i, j))
+            .collect(),
+        other => panic!("dense sink returned {other:?}"),
+    }
+}
+
+fn topk_run(
+    src: &dyn ColumnSource,
+    kind: NativeKind,
+    measure: CombineKind,
+    block: usize,
+    tiles: Option<&TileCache>,
+) -> Vec<(usize, usize, f64)> {
+    let mut sink = TopKSink::global(8);
+    run_into(src, kind, measure, block, 2, tiles, &mut sink).unwrap();
+    match sink.finish().unwrap().data {
+        SinkData::TopK(pairs) => pairs.iter().map(|p| (p.i, p.j, p.mi)).collect(),
+        other => panic!("topk sink returned {other:?}"),
+    }
+}
+
+/// dense (~0.3), sparse (~0.95), and a shape whose last column block is
+/// a short tail (m not a multiple of the block width).
+fn datasets() -> Vec<(&'static str, BinaryDataset, usize)> {
+    vec![
+        ("dense", SynthSpec::new(260, 20).sparsity(0.3).seed(5).generate(), 5),
+        ("sparse", SynthSpec::new(260, 20).sparsity(0.95).seed(6).generate(), 5),
+        ("tail", SynthSpec::new(260, 18).sparsity(0.6).seed(7).generate(), 5),
+    ]
+}
+
+#[test]
+fn warm_runs_are_bit_identical_to_cold_everywhere() {
+    for (label, ds, block) in datasets() {
+        let src = InMemorySource::new(&ds);
+        let n_tasks = plan_blocks(ds.n_cols(), block).unwrap().tasks.len() as u64;
+        for kind in [NativeKind::Bitpack, NativeKind::Dense, NativeKind::Sparse] {
+            for measure in [CombineKind::Mi, CombineKind::GStat] {
+                let cache =
+                    TileCache::open(tmp(&format!("warm-{label}-{kind:?}-{measure:?}")), 1 << 30);
+                let plain = dense_run(&src, kind, measure, block, None);
+                let cold = dense_run(&src, kind, measure, block, Some(&cache));
+                let s = cache.stats();
+                assert_eq!((s.hits, s.misses), (0, n_tasks), "{label}/{kind:?}/{measure:?} cold");
+                let warm = dense_run(&src, kind, measure, block, Some(&cache));
+                let s = cache.stats();
+                assert_eq!(
+                    (s.hits, s.misses),
+                    (n_tasks, n_tasks),
+                    "{label}/{kind:?}/{measure:?} warm"
+                );
+                assert_eq!(plain, cold, "{label}/{kind:?}/{measure:?}: caching changed bits");
+                assert_eq!(cold, warm, "{label}/{kind:?}/{measure:?}: a hit changed bits");
+                // the same cached Grams serve a different sink shape
+                let plain_top = topk_run(&src, kind, measure, block, None);
+                let warm_top = topk_run(&src, kind, measure, block, Some(&cache));
+                assert_eq!(plain_top, warm_top, "{label}/{kind:?}/{measure:?} topk");
+                assert_eq!(cache.stats().hits, 2 * n_tasks, "topk run must be all hits");
+            }
+        }
+    }
+}
+
+#[test]
+fn tiles_are_shared_across_backends() {
+    // the Gram is substrate-independent, so one backend's cold run
+    // warms every other backend
+    let ds = SynthSpec::new(300, 15).sparsity(0.8).seed(9).generate();
+    let src = InMemorySource::new(&ds);
+    let n_tasks = plan_blocks(15, 4).unwrap().tasks.len() as u64;
+    let cache = TileCache::open(tmp("xbackend"), 1 << 30);
+    let cold = dense_run(&src, NativeKind::Bitpack, CombineKind::Mi, 4, Some(&cache));
+    assert_eq!(cache.stats().misses, n_tasks);
+    for kind in [NativeKind::Dense, NativeKind::Sparse] {
+        let warm = dense_run(&src, kind, CombineKind::Mi, 4, Some(&cache));
+        assert_eq!(warm, cold, "{kind:?} must be served the bit-identical Gram");
+    }
+    let s = cache.stats();
+    assert_eq!((s.hits, s.misses), (2 * n_tasks, n_tasks));
+}
+
+#[test]
+fn capacity_bounded_cache_has_exact_hit_miss_eviction_counts() {
+    // m = 8, block = 2: 4 equal column blocks, 10 uniform 2x2 tiles.
+    // Budget holds exactly 3 tiles, single worker, deterministic plan
+    // order t0..t9, LRU retention.
+    let ds = SynthSpec::new(200, 8).sparsity(0.7).seed(13).generate();
+    let src = InMemorySource::new(&ds);
+    let one = TileCache::file_bytes(2, 2);
+    let cache = TileCache::open(tmp("capacity"), 3 * one);
+
+    // cold: every task misses and inserts; the first 7 inserts get
+    // evicted again as later tiles arrive
+    let cold = dense_run_serial(&src, &cache);
+    let s = cache.stats();
+    assert_eq!((s.hits, s.misses, s.evictions), (0, 10, 7));
+    assert_eq!(cache.len(), 3, "exactly 3 tiles fit the budget");
+    assert_eq!(cache.resident_bytes(), 3 * one);
+    assert_eq!(s.inserted_bytes, 10 * one as u64);
+
+    // warm, same order: the cache holds {t7, t8, t9}, but t7 was
+    // already evicted by the warm insert of t0 by the time the plan
+    // reaches it again — with LRU and in-order traversal every lookup
+    // misses and every insert evicts exactly one tile
+    let warm = dense_run_serial(&src, &cache);
+    let s = cache.stats();
+    assert_eq!((s.hits, s.misses, s.evictions), (0, 20, 17));
+    assert_eq!(warm, cold, "thrashing must never change results");
+
+    // a budget that fits the whole plan turns the third run into pure
+    // hits with zero evictions
+    let big = TileCache::open(tmp("capacity-big"), 1 << 30);
+    let third = dense_run_serial(&src, &big);
+    let fourth = dense_run_serial(&src, &big);
+    let s = big.stats();
+    assert_eq!((s.hits, s.misses, s.evictions), (10, 10, 0));
+    assert_eq!(third, fourth);
+}
+
+/// Single-worker block-2 dense run: the deterministic traversal the
+/// capacity test's exact counts rely on.
+fn dense_run_serial(src: &dyn ColumnSource, cache: &TileCache) -> Vec<f64> {
+    let mut sink = DenseSink::new(src.n_cols());
+    run_into(src, NativeKind::Bitpack, CombineKind::Mi, 2, 1, Some(cache), &mut sink).unwrap();
+    match sink.finish().unwrap().data {
+        SinkData::Dense(mi) => (0..mi.dim())
+            .flat_map(|i| (0..mi.dim()).map(move |j| (i, j)))
+            .map(|(i, j)| mi.get(i, j))
+            .collect(),
+        other => panic!("dense sink returned {other:?}"),
+    }
+}
+
+#[test]
+fn second_identical_service_job_is_served_from_cache() {
+    // JobService-level acceptance: two identical `tiles: true` jobs —
+    // the second must report >= 90% tile-cache hits (in fact: all hits)
+    let ds = SynthSpec::new(400, 24).sparsity(0.85).seed(21).generate();
+    let src: Arc<dyn ColumnSource> = Arc::new(InMemorySource::new(&ds));
+    let n_tasks = plan_blocks(24, 6).unwrap().tasks.len() as u64;
+    let svc = JobService::new(2, 8);
+    let spec = JobSpec::builder()
+        .backend(Backend::BulkBitpack)
+        .block_cols(6)
+        .sink(SinkSpec::parse("topk:5").unwrap())
+        .tiles(true)
+        .build()
+        .unwrap();
+
+    let run = |spec: JobSpec| {
+        let h = svc.submit_source(Arc::clone(&src), spec).unwrap();
+        match svc.wait(h).unwrap() {
+            JobStatus::Done(out) => out,
+            other => panic!("job did not finish: {other:?}"),
+        }
+    };
+    let first = run(spec.clone());
+    let report = first.meta.tiles.expect("tiles: true must report cache stats");
+    assert_eq!(report.hits + report.misses, n_tasks, "one lookup per task");
+
+    let second = run(spec);
+    let report = second.meta.tiles.expect("tiles: true must report cache stats");
+    assert_eq!((report.hits, report.misses), (n_tasks, 0), "second job must be all hits");
+    assert!(
+        report.hits * 10 >= (report.hits + report.misses) * 9,
+        ">= 90% hits required, got {report:?}"
+    );
+    assert_eq!(
+        format!("{:?}", first.data),
+        format!("{:?}", second.data),
+        "cached job must produce identical output"
+    );
+
+    // without the opt-in there is no tile consultation and no report
+    let off = JobSpec::builder()
+        .backend(Backend::BulkBitpack)
+        .block_cols(6)
+        .sink(SinkSpec::parse("topk:5").unwrap())
+        .build()
+        .unwrap();
+    assert!(run(off).meta.tiles.is_none(), "tiles default off must not report");
+    svc.drain();
+}
