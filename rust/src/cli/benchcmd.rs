@@ -29,6 +29,16 @@
 //!   wall time on temp-file tiles would be flaky; the cold row carries
 //!   the tile bytes written in `bytes_read`.
 //!
+//! A separate subcommand, `bulkmi cluster bench` ([`cluster_bench`]),
+//! measures the distributed path: one dataset, a single-process
+//! reference, then 1/2/4 in-process workers served over real TCP
+//! loopback through the cluster wire protocol. Its `cluster/...` rows
+//! merge into the same `BENCH_<host>.json` but carry no `rel` — a
+//! `--baseline` gate warns-and-skips them instead of failing a run on
+//! loopback scheduling noise — and each row is recorded only after the
+//! sharded result proves bit-identical to the single-process
+//! reference.
+//!
 //! Every entry carries both absolute throughput (`cells_per_sec`, Gram
 //! output cells per second) and `rel`, the throughput normalized by the
 //! same-dataset scalar-kernel run (combine rows normalize by the
@@ -382,6 +392,207 @@ fn bench_tilecache(rows: usize, cols: usize, density: f64, seed: u64) -> Result<
     }
     let _ = std::fs::remove_dir_all(&root);
     Ok(entries)
+}
+
+/// `bulkmi cluster bench`: the local-loopback scaling suite. One
+/// dataset, a single-process reference row, then 1/2/4 in-process
+/// workers served over real TCP loopback through the cluster wire
+/// protocol — the cheapest honest answer to "does sharding this
+/// workload scale" before renting machines. Rows merge into the same
+/// `BENCH_<host>.json` the main bench writes (prior `cluster/` rows
+/// are replaced, everything else survives) and carry no `rel`, so a
+/// `--baseline` gate warns-and-skips them instead of failing a run on
+/// loopback scheduling noise.
+pub fn cluster_bench(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    let rows = args.get_usize("rows", 4_096)?;
+    let cols = args.get_usize("cols", 256)?;
+    let sparsity = args.get_f64("sparsity", 0.9)?;
+    let seed = args.get_u64("seed", 42)?;
+    let out = args.get("out").map(PathBuf::from);
+    let baseline = args.get("baseline").map(PathBuf::from);
+    args.reject_unknown()?;
+    if !(0.0..=1.0).contains(&sparsity) {
+        return Err(Error::Parse(format!(
+            "--sparsity must be in [0, 1], got {sparsity}"
+        )));
+    }
+    if rows == 0 || cols < 2 {
+        return Err(Error::Parse(format!(
+            "need --rows >= 1 and --cols >= 2, got {rows}x{cols}"
+        )));
+    }
+    let density = 1.0 - sparsity;
+    println!(
+        "cluster-bench: {rows}x{cols} @ density {density:.2}, seed {seed}, \
+         single-process reference + 1/2/4 loopback workers"
+    );
+    let entries = bench_cluster(rows, cols, density, seed)?;
+    print_table(&entries);
+    let path = out.unwrap_or_else(|| PathBuf::from(format!("BENCH_{}.json", host_id())));
+    let merged = merge_entries(entries, &path)?;
+    write_json(&merged, "cluster", seed, 1, &path)?;
+    println!("wrote {}", path.display());
+    if let Some(base) = baseline {
+        check_baseline(&merged, &base, 0.30)?;
+    }
+    Ok(())
+}
+
+/// Measure the distributed path on loopback: a single-process
+/// reference over the same backend, then `run_cluster` against 1, 2,
+/// and 4 workers running [`crate::cluster::worker::serve_conn`] on
+/// in-process threads behind real `127.0.0.1` sockets — the full wire
+/// protocol (framing, heartbeats, f64 round-trip), none of the
+/// network. Every workers-K row is verified cell-for-cell bit-exact
+/// against the reference before it is recorded: a scaling number for
+/// a wrong answer is worse than no number.
+fn bench_cluster(rows: usize, cols: usize, density: f64, seed: u64) -> Result<Vec<BenchEntry>> {
+    use crate::cluster::worker::serve_conn;
+    use crate::cluster::{run_cluster, ClusterRun};
+    use crate::coordinator::executor::{compute_source, NativeKind};
+    use crate::coordinator::planner::plan_blocks;
+    use crate::coordinator::scheduler::{order_tasks, Schedule};
+    use crate::data::colstore::InMemorySource;
+    use crate::mi::backend::Backend;
+    use crate::mi::sink::{SinkData, SinkSpec};
+    use std::net::{TcpListener, TcpStream};
+
+    let ds = SynthSpec::new(rows, cols).sparsity(1.0 - density).seed(seed).generate();
+    let src = InMemorySource::new(&ds);
+    let cells = (cols * cols) as f64;
+    let tag = format!("@d{density:.2}");
+    let mut entries = Vec::new();
+
+    // the reference: same bitpack substrate, one compute thread — the
+    // denominator a reader scales the workers-K rows against
+    let t0 = Instant::now();
+    let reference = compute_source(&src, NativeKind::Bitpack, 1, CombineKind::Mi)?;
+    let secs = t0.elapsed().as_secs_f64().max(1e-9);
+    entries.push(BenchEntry {
+        name: format!("cluster/single-process{tag}"),
+        rows,
+        cols,
+        density,
+        secs,
+        cells_per_sec: cells / secs,
+        rel: None,
+        chosen: None,
+        bytes_read: None,
+    });
+
+    let block = cols.div_ceil(8).max(1);
+    for workers in [1usize, 2, 4] {
+        let mut plan = plan_blocks(cols, block)?;
+        order_tasks(&mut plan.tasks, Schedule::LargestFirst);
+        let sink = SinkSpec::Dense;
+        // bind every listener before the scope: an address in hand is
+        // what lets the coordinator dial, and a bind failure here must
+        // not strand acceptor threads
+        let mut listeners = Vec::with_capacity(workers);
+        let mut addrs = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let l = TcpListener::bind("127.0.0.1:0")?;
+            addrs.push(l.local_addr()?.to_string());
+            listeners.push(l);
+        }
+        let t0 = Instant::now();
+        let out = std::thread::scope(|s| {
+            for l in listeners {
+                let src = &src;
+                s.spawn(move || {
+                    if let Ok((stream, _)) = l.accept() {
+                        let _ = serve_conn(stream, src);
+                    }
+                });
+            }
+            let result = run_cluster(&ClusterRun {
+                workers: &addrs,
+                backend: Backend::BulkBitpack,
+                measure: CombineKind::Mi,
+                plan: &plan,
+                n_rows: rows,
+                sink: &sink,
+            });
+            if result.is_err() {
+                // unblock any acceptor the coordinator never dialed,
+                // so the scope can join instead of hanging
+                for addr in &addrs {
+                    drop(TcpStream::connect(addr));
+                }
+            }
+            result
+        })?;
+        let secs = t0.elapsed().as_secs_f64().max(1e-9);
+        let SinkData::Dense(mi) = out.data else {
+            return Err(Error::Runtime("cluster bench expected a dense result".into()));
+        };
+        let exact = mi
+            .data()
+            .iter()
+            .zip(reference.data())
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        if !exact {
+            return Err(Error::Runtime(format!(
+                "{workers}-worker loopback result diverged from the single-process \
+                 reference — refusing to record a scaling row for a wrong answer"
+            )));
+        }
+        entries.push(BenchEntry {
+            name: format!("cluster/workers-{workers}{tag}"),
+            rows,
+            cols,
+            density,
+            secs,
+            cells_per_sec: cells / secs,
+            rel: None,
+            chosen: None,
+            bytes_read: None,
+        });
+    }
+    Ok(entries)
+}
+
+/// Fold freshly measured rows into whatever bench JSON `path` already
+/// holds: existing rows survive untouched, except prior `cluster/`
+/// rows, which the new measurements replace. A missing file starts
+/// fresh; a file that exists but does not parse is a hard error —
+/// silently clobbering a bench history is how baselines get lost.
+fn merge_entries(new: Vec<BenchEntry>, path: &Path) -> Result<Vec<BenchEntry>> {
+    let text = match std::fs::read_to_string(path) {
+        Ok(text) => text,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(new),
+        Err(e) => return Err(e.into()),
+    };
+    let doc = Json::parse(&text).map_err(|e| {
+        Error::Parse(format!(
+            "{}: existing bench file unreadable, not overwriting: {e}",
+            path.display()
+        ))
+    })?;
+    let mut merged = Vec::new();
+    for row in doc.get("results").and_then(|r| r.as_arr()).unwrap_or(&[]) {
+        let Some(name) = row.get("name").and_then(|n| n.as_str()) else {
+            continue;
+        };
+        if name.starts_with("cluster/") {
+            continue; // replaced by this run's measurements
+        }
+        let f = |key: &str| row.get(key).and_then(|v| v.as_f64());
+        merged.push(BenchEntry {
+            name: name.to_string(),
+            rows: f("rows").unwrap_or(0.0) as usize,
+            cols: f("cols").unwrap_or(0.0) as usize,
+            density: f("density").unwrap_or(0.0),
+            secs: f("secs").unwrap_or(0.0),
+            cells_per_sec: f("cells_per_sec").unwrap_or(0.0),
+            rel: f("rel"),
+            chosen: row.get("chosen").and_then(|v| v.as_str()).map(str::to_string),
+            bytes_read: f("bytes_read").map(|b| b as u64),
+        });
+    }
+    merged.extend(new);
+    Ok(merged)
 }
 
 fn print_table(entries: &[BenchEntry]) {
@@ -839,6 +1050,77 @@ mod tests {
         assert_eq!(warm.rel, Some(1.0), "a warm run must be pure hits");
         assert!(cold.bytes_read.unwrap() > 0, "the cold run writes tiles");
         assert_eq!(warm.bytes_read, Some(0), "a pure-hit run writes nothing");
+    }
+
+    #[test]
+    fn cluster_bench_rows_are_exact_and_ungated() {
+        // small but real: 36 tasks over loopback TCP, 1/2/4 workers,
+        // each row recorded only after bit-exact verification inside
+        // bench_cluster itself
+        let entries = bench_cluster(256, 64, 0.5, 7).unwrap();
+        let names: Vec<&str> = entries.iter().map(|e| e.name.as_str()).collect();
+        assert_eq!(
+            names,
+            [
+                "cluster/single-process@d0.50",
+                "cluster/workers-1@d0.50",
+                "cluster/workers-2@d0.50",
+                "cluster/workers-4@d0.50",
+            ]
+        );
+        // warn-only by construction: no rel means check_baseline never
+        // gates on a scaling row
+        assert!(entries.iter().all(|e| e.rel.is_none()));
+        assert!(entries.iter().all(|e| e.secs > 0.0 && e.cells_per_sec > 0.0));
+    }
+
+    #[test]
+    fn merge_entries_replaces_cluster_rows_and_keeps_the_rest() {
+        let path = tmp("merge.json");
+        let old = vec![
+            gate_entry(),
+            BenchEntry {
+                name: "cluster/workers-2@d0.50".into(),
+                cells_per_sec: 1.0,
+                ..gate_entry()
+            },
+        ];
+        write_json(&old, "quick", 1, 3, &path).unwrap();
+        let fresh = vec![BenchEntry {
+            name: "cluster/workers-2@d0.50".into(),
+            cells_per_sec: 999.0,
+            rel: None,
+            ..gate_entry()
+        }];
+        let merged = merge_entries(fresh, &path).unwrap();
+        assert_eq!(merged.len(), 2);
+        // the non-cluster row survives with its fields intact
+        assert_eq!(merged[0].name, "gram-kernel/portable@d0.50");
+        assert_eq!(merged[0].rel, Some(1.0));
+        assert_eq!(merged[0].rows, 64);
+        // the stale cluster row is replaced, not duplicated
+        assert_eq!(merged[1].name, "cluster/workers-2@d0.50");
+        assert_eq!(merged[1].cells_per_sec, 999.0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn merge_entries_starts_fresh_without_a_file_and_rejects_garbage() {
+        let missing = tmp("merge-missing.json");
+        let _ = std::fs::remove_file(&missing);
+        let merged = merge_entries(vec![gate_entry()], &missing).unwrap();
+        assert_eq!(merged.len(), 1);
+        let garbage = tmp("merge-garbage.json");
+        std::fs::write(&garbage, "not json {").unwrap();
+        assert!(merge_entries(vec![gate_entry()], &garbage).is_err());
+        let _ = std::fs::remove_file(&garbage);
+    }
+
+    #[test]
+    fn cluster_bench_rejects_bad_args() {
+        assert!(cluster_bench(&sv(&["--sparsity", "1.5"])).is_err());
+        assert!(cluster_bench(&sv(&["--cols", "1"])).is_err());
+        assert!(cluster_bench(&sv(&["--bogus", "1"])).is_err());
     }
 
     #[test]

@@ -75,7 +75,18 @@ pub fn compute(argv: &[String]) -> Result<()> {
     if let Some(m) = args.get("measure") {
         cfg.measure = wire::parse_measure(m)?;
     }
-    cfg.workers = args.get_usize("workers", cfg.workers)?;
+    // --workers is overloaded: a plain number is the local thread
+    // count, a comma-separated host:port list is a distributed run
+    // against `bulkmi worker` processes (crate::cluster)
+    let cluster_workers: Vec<String> = match args.get("workers") {
+        Some(v) if v.contains(':') => {
+            v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+        }
+        _ => {
+            cfg.workers = args.get_usize("workers", cfg.workers)?;
+            Vec::new()
+        }
+    };
     cfg.block_cols = args.get_usize("block-cols", cfg.block_cols)?;
     cfg.memory_budget = args.get_usize("memory-budget", cfg.memory_budget)?;
     cfg.task_latency_secs = args.get_f64("task-latency", cfg.task_latency_secs)?;
@@ -107,6 +118,18 @@ pub fn compute(argv: &[String]) -> Result<()> {
     }
     if !sink.is_dense() && normalize.is_some() {
         return Err(Error::Parse("--normalize requires --sink dense".into()));
+    }
+
+    if !cluster_workers.is_empty() {
+        return compute_cluster(
+            &input,
+            &cfg,
+            &cluster_workers,
+            &sink,
+            top,
+            normalize.as_deref(),
+            out.as_deref(),
+        );
     }
 
     if io::is_bmat_v2(&input)? && cfg.backend.is_native() {
@@ -485,12 +508,24 @@ fn compute_into_sink(
         fmt_secs(t0.elapsed().as_secs_f64())
     );
 
+    print_sink_results(&output.data, src, cfg.measure, top, out)
+}
+
+/// Shared tail of the matrix-free paths (local and cluster): the
+/// per-sink-kind console listing and CSV export.
+fn print_sink_results(
+    data: &SinkData,
+    src: &dyn ColumnSource,
+    measure: CombineKind,
+    top: usize,
+    out: Option<&Path>,
+) -> Result<()> {
     let print_pairs = |pairs: &[MiPair], limit: usize| {
         for p in pairs.iter().take(limit) {
             println!("  {:<20} {:<20} {:.6}", src.col_name(p.i), src.col_name(p.j), p.mi);
         }
     };
-    match &output.data {
+    match data {
         SinkData::TopK(pairs) => {
             print_pairs(pairs, top);
             if let Some(path) = out {
@@ -520,7 +555,7 @@ fn compute_into_sink(
             println!(
                 "{} pairs at or above {} {:.6}{}",
                 sp.nnz(),
-                cfg.measure,
+                measure,
                 sp.threshold,
                 sp.pvalue.map(|p| format!(" (p <= {p})")).unwrap_or_default()
             );
@@ -539,9 +574,123 @@ fn compute_into_sink(
                 info.dir.display()
             );
         }
-        SinkData::Dense(_) => unreachable!("dense handled by compute_with_plan"),
+        // both callers route dense output through finish_dense instead
+        SinkData::Dense(_) => unreachable!("dense results print via finish_dense"),
     }
     Ok(())
+}
+
+/// `compute --workers a:p,b:p`: the distributed path. The coordinator
+/// resolves the run exactly once (backend probe included), plans the
+/// same blockwise task set the local path would execute, and drives
+/// the `bulkmi worker` processes at the given addresses; it never
+/// reads a column block itself. Every sink kind works — results merge
+/// shard-by-shard through `MiSink::merge` — and the output is
+/// bit-identical to the single-process run.
+fn compute_cluster(
+    input: &Path,
+    cfg: &RunConfig,
+    addrs: &[String],
+    spec: &SinkSpec,
+    top: usize,
+    normalize: Option<&str>,
+    out: Option<&Path>,
+) -> Result<()> {
+    use crate::cluster::ClusterRun;
+    if !cfg.backend.is_native() {
+        return Err(Error::Parse(format!(
+            "--workers HOST:PORT,... needs a native backend, not '{}'",
+            cfg.backend
+        )));
+    }
+    if matches!(spec, SinkSpec::Spill { .. }) && out.is_some() {
+        return Err(Error::Parse(
+            "--out is not supported with --sink spill (tiles + manifest.csv go to DIR)".into(),
+        ));
+    }
+    let src = crate::server::open_source(input)?;
+    if src.n_rows() == 0 || src.n_cols() == 0 {
+        return Err(Error::Shape("empty dataset".into()));
+    }
+    // resolve once at the coordinator: workers receive the winner and
+    // never re-probe (per-worker probes could pick different backends)
+    let (backend, probe) = cfg.backend.resolve_source(&*src)?;
+    if let Some(report) = &probe {
+        crate::info!("{}", report.summary());
+    }
+    let (block, sizing_source) = block_policy(
+        cfg.block_cols,
+        probe.as_ref().map(|r| r.chosen_throughput()),
+        src.n_rows(),
+        src.n_cols(),
+        cfg.memory_budget,
+        cfg.task_latency_secs,
+        (matrix_free_block(src.n_rows(), src.n_cols(), cfg.memory_budget), "budget"),
+    );
+    let mut plan = plan_blocks(src.n_cols(), block)?;
+    let schedule = Schedule::LargestFirst;
+    order_tasks(&mut plan.tasks, schedule);
+    crate::info!(
+        "cluster plan: {} tasks, block {} cols ({sizing_source}), {} workers",
+        plan.tasks.len(),
+        plan.block,
+        addrs.len()
+    );
+    let t0 = std::time::Instant::now();
+    let mut output = crate::cluster::run_cluster(&ClusterRun {
+        workers: addrs,
+        backend,
+        measure: cfg.measure,
+        plan: &plan,
+        n_rows: src.n_rows(),
+        sink: spec,
+    })?;
+    output.meta.backend = Some(backend.name().to_string());
+    output.meta.requested_backend = Some(cfg.backend.name().to_string());
+    output.meta.measure = Some(cfg.measure.name().to_string());
+    output.meta.probe = probe;
+    output.meta.sizing = Some(BlockSizing {
+        block_cols: plan.block,
+        source: sizing_source,
+        task_latency_secs: cfg.task_latency_secs,
+    });
+    output.meta.schedule = Some(schedule.name());
+    let report = output.meta.cluster.clone().expect("cluster runs fill their report");
+    println!(
+        "computed {} ({}) across {} workers in {} ({} tasks, {} retried, {} worker failures)",
+        output.summary(),
+        cfg.measure,
+        report.workers,
+        fmt_secs(t0.elapsed().as_secs_f64()),
+        report.tasks,
+        report.retried,
+        report.worker_failures
+    );
+    match output.data {
+        SinkData::Dense(mi) => finish_dense(mi, &*src, normalize, plan.block, top, out),
+        other => print_sink_results(&other, &*src, cfg.measure, top, out),
+    }
+}
+
+/// `bulkmi worker --connect ADDR --input FILE`: serve block tasks to
+/// one cluster coordinator, then exit (see [`crate::cluster::worker`]).
+pub fn worker(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    let addr = args.req("connect")?.to_string();
+    let input = PathBuf::from(args.req("input")?);
+    args.reject_unknown()?;
+    crate::cluster::worker::serve(&addr, &input)
+}
+
+/// `bulkmi cluster <sub>`: cluster tooling (currently `bench`).
+pub fn cluster(argv: &[String]) -> Result<()> {
+    match argv.first().map(String::as_str) {
+        Some("bench") => super::benchcmd::cluster_bench(&argv[1..]),
+        other => Err(Error::Parse(format!(
+            "unknown cluster subcommand {:?} (try `bulkmi cluster bench`)",
+            other.unwrap_or("<none>")
+        ))),
+    }
 }
 
 /// Write the `job.toml` resume descriptor a spill run leaves next to

@@ -29,7 +29,8 @@ COMMANDS:
     compute     Compute MI (or any measure) for a dataset
         --input FILE.{csv,bmat} [--backend NAME=bulk-bitpack]
         [--measure mi|nmi|vi|gstat|chi2|phi|jaccard|ochiai]
-        [--workers N] [--block-cols B=0] [--memory-budget BYTES=0]
+        [--workers N | --workers HOST:PORT,...] [--block-cols B=0]
+        [--memory-budget BYTES=0]
         [--task-latency SECS=2] [--top K=10]
         [--cache-budget BYTES] [--readahead N=1] [--tiles]
         [--sink dense|topk:K|topk-per-col:K|threshold:T|pvalue:P|spill:DIR]
@@ -49,7 +50,12 @@ COMMANDS:
         the measure's units; pvalue: composes with mi and gstat only);
         --tiles caches finished Gram tiles content-addressed under
         BULKMI_CACHE_DIR (or a temp dir), so re-runs over the same
-        data skip the Gram stage entirely
+        data skip the Gram stage entirely; --workers HOST:PORT,...
+        runs distributed instead: start a `bulkmi worker` per address
+        over the same input file, the coordinator resolves the run
+        once, shards the task schedule, merges sink states, and
+        retries tasks whose worker dies — output stays bit-identical
+        to the single-process run
     resume      Resume an interrupted spill-sink run
         bulkmi resume DIR
         DIR is a spill:DIR directory from an interrupted compute run:
@@ -89,6 +95,20 @@ COMMANDS:
             with --input every job runs over that file (a .bmat v2 file
             is streamed blockwise off disk); without it, demo datasets
             are generated per job
+    worker      Serve block tasks to a cluster coordinator, then exit
+        --connect ADDR:PORT --input FILE.{csv,bmat}
+        binds ADDR:PORT (port 0 picks a free port, logged on bind),
+        accepts one coordinator connection, computes each dispatched
+        (col-block, col-block) task with the single-process core, and
+        streams only its own blocks from FILE — point every worker
+        and the coordinator at the same dataset
+    cluster     Cluster tooling
+        bench [--rows N=4096] [--cols M=256] [--sparsity S=0.9]
+            [--seed K=42] [--out FILE.json] [--baseline FILE.json]
+            local-loopback scaling suite: one dataset, single-process
+            baseline plus 1/2/4 in-process workers; appends
+            cluster/workers-K rows to the bench JSON (warn-only: rows
+            carry no rel value, so --baseline never gates on them)
     bench       Deterministic Gram/kernel perf suite (alias: pallas-bench)
         [--quick] [--seed K=42] [--reps R] [--out FILE.json]
         [--baseline FILE.json] [--tolerance F=0.30] [--measure NAME ...]
@@ -150,6 +170,8 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "info" => commands::info(rest),
         "selftest" => commands::selftest(rest),
         "serve" => commands::serve(rest),
+        "worker" => commands::worker(rest),
+        "cluster" => commands::cluster(rest),
         "bench" | "pallas-bench" => benchcmd::bench(rest),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");

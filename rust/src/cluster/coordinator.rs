@@ -1,0 +1,516 @@
+//! The cluster coordinator: shard a block plan across workers, merge
+//! sink states, retry on death.
+//!
+//! The coordinator never reads the dataset itself — it resolves the
+//! run exactly once (backend, measure, block width), connects to each
+//! worker, and drives one in-flight task per connection. Tasks come
+//! from [`shard_tasks`] affinity queues cut over the schedule order,
+//! so each worker's preferred run keeps whatever locality the policy
+//! established; a worker whose queue runs dry steals from the deepest
+//! remaining queue, and a worker that dies (dropped connection, or
+//! [`DEATH_TIMEOUT`](super::messages::DEATH_TIMEOUT) with neither
+//! result nor heartbeat) has its in-flight task re-queued for the
+//! survivors. Gram blocks are pure functions of the input, so a retry
+//! recomputes the identical cells — the audit trail lands in
+//! [`ClusterReport`], correctness never depends on it.
+//!
+//! Each connection thread feeds results into its *own* shard sink
+//! (built from the same [`SinkSpec`] as the run); finished shard
+//! states fold into the primary through [`MiSink::merge`] after every
+//! thread joins. Exactly-once cell coverage (each task completes on
+//! exactly one worker) plus partition-independent sink state is what
+//! makes the merged output bit-identical to a single-process run.
+
+use super::messages::{
+    read_frame, write_frame, FromWorker, JobDesc, ToWorker, DEATH_TIMEOUT,
+};
+use crate::coordinator::planner::{BlockPlan, BlockTask};
+use crate::coordinator::scheduler::shard_tasks;
+use crate::linalg::dense::Mat64;
+use crate::mi::backend::Backend;
+use crate::mi::measure::CombineKind;
+use crate::mi::sink::{ClusterReport, SinkData, SinkOutput, SinkSpec};
+use crate::util::error::{Error, Result};
+use std::collections::VecDeque;
+use std::net::TcpStream;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// One distributed run, fully resolved. The caller owns resolution
+/// (`auto` must already be probed down to a native backend) and task
+/// ordering (`plan.tasks` is dispatched in the order given).
+pub struct ClusterRun<'a> {
+    /// Worker addresses (`host:port`), one connection each.
+    pub workers: &'a [String],
+    /// Resolved native backend every worker computes with.
+    pub backend: Backend,
+    pub measure: CombineKind,
+    /// The shared plan; workers rebuild it from `plan.block`.
+    pub plan: &'a BlockPlan,
+    /// Row count of the dataset (sink construction + hello check).
+    pub n_rows: usize,
+    pub sink: &'a SinkSpec,
+}
+
+/// Shared dispatch state: affinity queues, the retry pool, and the
+/// run's completion / failure accounting.
+struct Dispatch {
+    shards: Vec<VecDeque<BlockTask>>,
+    retry: VecDeque<BlockTask>,
+    /// Tasks not yet completed anywhere (in a queue, or in flight).
+    remaining: usize,
+    retried: u64,
+    failures: u64,
+    /// A worker reported a systematic error: abort, don't retry.
+    fatal: Option<Error>,
+}
+
+impl Dispatch {
+    /// Next task for worker `me`: retries first (they are the oldest
+    /// work), then the own affinity queue, then steal from the deepest
+    /// other queue — from its *back*, where the locality loss is
+    /// smallest.
+    fn next_task(&mut self, me: usize) -> Option<BlockTask> {
+        if let Some(t) = self.retry.pop_front() {
+            return Some(t);
+        }
+        if let Some(t) = self.shards[me].pop_front() {
+            return Some(t);
+        }
+        let victim = (0..self.shards.len())
+            .filter(|&i| i != me)
+            .max_by_key(|&i| self.shards[i].len())
+            .filter(|&i| !self.shards[i].is_empty())?;
+        self.shards[victim].pop_back()
+    }
+}
+
+/// Execute `run` across its workers and return the merged output with
+/// [`ClusterReport`] filled in. Errors when a worker address cannot be
+/// dialed or handshaken (a config problem, before any work starts),
+/// when a worker reports a fatal error, or when every worker has died
+/// with tasks unfinished.
+pub fn run_cluster(run: &ClusterRun<'_>) -> Result<SinkOutput> {
+    if run.workers.is_empty() {
+        return Err(Error::Coordinator("cluster run needs at least one worker".into()));
+    }
+    if run.backend == Backend::Auto || !run.backend.is_native() {
+        return Err(Error::Coordinator(format!(
+            "cluster runs need a resolved native backend, not '{}'",
+            run.backend
+        )));
+    }
+    let m = run.plan.m;
+    let job = JobDesc {
+        backend: run.backend.name().to_string(),
+        measure: run.measure.name().to_string(),
+        block_cols: run.plan.block,
+        n_rows: run.n_rows,
+        n_cols: m,
+    };
+    // connect + handshake every worker up front: an unreachable or
+    // mismatched worker is a configuration error, not a retry case
+    let mut conns = Vec::with_capacity(run.workers.len());
+    for addr in run.workers {
+        conns.push(connect(addr, &job)?);
+    }
+
+    let total = run.plan.tasks.len();
+    let state = Mutex::new(Dispatch {
+        shards: shard_tasks(&run.plan.tasks, conns.len()).into_iter().map(Into::into).collect(),
+        retry: VecDeque::new(),
+        remaining: total,
+        retried: 0,
+        failures: 0,
+        fatal: None,
+    });
+    let cv = Condvar::new();
+
+    let shard_results: Vec<Result<SinkData>> = std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(conns.len());
+        for (me, conn) in conns.into_iter().enumerate() {
+            let state = &state;
+            let cv = &cv;
+            let spec = shard_spec(run.sink, me);
+            let (n_rows, measure) = (run.n_rows, run.measure);
+            handles.push(scope.spawn(move || {
+                let mut sink = spec.build_for(m, n_rows, measure)?;
+                shard_loop(me, conn, sink.as_mut(), state, cv);
+                Ok(sink.finish()?.data)
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(Error::Coordinator("cluster connection thread panicked".into()))))
+            .collect()
+    });
+
+    let mut st = state.into_inner().map_err(|_| Error::Coordinator("dispatch state poisoned".into()))?;
+    if let Some(e) = st.fatal.take() {
+        return Err(e);
+    }
+    if st.remaining > 0 {
+        return Err(Error::Coordinator(format!(
+            "all {} workers died with {} of {total} tasks unfinished ({} retried)",
+            run.workers.len(),
+            st.remaining,
+            st.retried
+        )));
+    }
+    let mut primary = run.sink.build_for(m, run.n_rows, run.measure)?;
+    for data in shard_results {
+        primary.merge(data?)?;
+    }
+    let mut out = primary.finish()?;
+    out.meta.cluster = Some(ClusterReport {
+        workers: run.workers.len(),
+        tasks: total,
+        retried: st.retried,
+        worker_failures: st.failures,
+    });
+    Ok(out)
+}
+
+/// Shard sinks must not collide on shared resources: a spill run gives
+/// each shard its own sub-directory (merge adopts the tiles and
+/// removes it); every other sink kind is pure in-memory state.
+fn shard_spec(spec: &SinkSpec, me: usize) -> SinkSpec {
+    match spec {
+        SinkSpec::Spill { dir } => SinkSpec::Spill { dir: dir.join(format!("shard-{me}")) },
+        other => other.clone(),
+    }
+}
+
+fn connect(addr: &str, job: &JobDesc) -> Result<TcpStream> {
+    let mut stream = TcpStream::connect(addr)
+        .map_err(|e| Error::Coordinator(format!("cannot reach worker {addr}: {e}")))?;
+    stream.set_nodelay(true).ok();
+    // heartbeats arrive every second; silence for DEATH_TIMEOUT means
+    // the worker is gone, not slow
+    stream.set_read_timeout(Some(DEATH_TIMEOUT))?;
+    match FromWorker::parse(&read_frame(&mut stream)?)? {
+        FromWorker::Hello { n_rows, n_cols } => {
+            if (n_rows, n_cols) != (job.n_rows, job.n_cols) {
+                return Err(Error::Shape(format!(
+                    "worker {addr} serves a {n_rows}x{n_cols} input but the run is \
+                     {}x{} — point every worker at the same file",
+                    job.n_rows, job.n_cols
+                )));
+            }
+        }
+        other => {
+            return Err(Error::Coordinator(format!(
+                "worker {addr} opened with {other:?} instead of hello"
+            )))
+        }
+    }
+    write_frame(&mut stream, &ToWorker::Job(job.clone()).to_json())?;
+    Ok(stream)
+}
+
+/// Drive one worker connection until the run completes, a fatal error
+/// aborts it, or this worker dies. The shard sink accumulates every
+/// result this connection delivered; on death the in-flight task goes
+/// back to the pool and the sink's completed state still merges.
+fn shard_loop(
+    me: usize,
+    mut conn: TcpStream,
+    sink: &mut dyn crate::mi::sink::MiSink,
+    state: &Mutex<Dispatch>,
+    cv: &Condvar,
+) {
+    let mut next_id: u64 = (me as u64) << 32;
+    loop {
+        // acquire a task (or learn the run is over)
+        let task = {
+            let mut st = match state.lock() {
+                Ok(g) => g,
+                Err(_) => return,
+            };
+            loop {
+                if st.fatal.is_some() || st.remaining == 0 {
+                    let _ = write_frame(&mut conn, &ToWorker::Shutdown.to_json());
+                    return;
+                }
+                if let Some(t) = st.next_task(me) {
+                    break t;
+                }
+                // every queue is empty but tasks are in flight on other
+                // workers — one of them may die and re-queue, so wait
+                let (g, _) = match cv.wait_timeout(st, Duration::from_millis(100)) {
+                    Ok(r) => r,
+                    Err(_) => return,
+                };
+                st = g;
+            }
+        };
+
+        next_id += 1;
+        match attempt(&mut conn, next_id, &task) {
+            Ok(block) => {
+                let consumed = sink.consume_block(&task, &block);
+                let mut st = match state.lock() {
+                    Ok(g) => g,
+                    Err(_) => return,
+                };
+                match consumed {
+                    Ok(()) => st.remaining -= 1,
+                    Err(e) => {
+                        st.fatal.get_or_insert(e);
+                    }
+                }
+                cv.notify_all();
+            }
+            Err(Attempt::Fatal(e)) => {
+                if let Ok(mut st) = state.lock() {
+                    st.fatal.get_or_insert(e);
+                    cv.notify_all();
+                }
+                return;
+            }
+            Err(Attempt::Dead(e)) => {
+                // the worker is gone: re-queue the in-flight task for
+                // the survivors and fold this shard's completed results
+                crate::warn_!("cluster worker {me} died mid-run ({e}); re-queueing task");
+                if let Ok(mut st) = state.lock() {
+                    st.retry.push_back(task);
+                    st.retried += 1;
+                    st.failures += 1;
+                    cv.notify_all();
+                }
+                return;
+            }
+        }
+    }
+}
+
+enum Attempt {
+    /// The connection failed or misbehaved: retry the task elsewhere.
+    Dead(Error),
+    /// The worker reported a systematic failure: abort the run.
+    Fatal(Error),
+}
+
+fn attempt(conn: &mut TcpStream, id: u64, task: &BlockTask) -> std::result::Result<Mat64, Attempt> {
+    write_frame(conn, &ToWorker::Task { id, task: *task }.to_json()).map_err(Attempt::Dead)?;
+    loop {
+        // a read error here is either death (EOF / reset) or silence
+        // past DEATH_TIMEOUT (the socket's read timeout) — both Dead
+        let frame = read_frame(conn).map_err(Attempt::Dead)?;
+        match FromWorker::parse(&frame).map_err(Attempt::Dead)? {
+            FromWorker::Heartbeat => continue,
+            FromWorker::Result { id: got, rows, cols, data } => {
+                if got != id || (rows, cols) != (task.a_len, task.b_len) {
+                    return Err(Attempt::Dead(Error::Coordinator(format!(
+                        "worker answered task {id} ({}x{}) with id {got} ({rows}x{cols})",
+                        task.a_len, task.b_len
+                    ))));
+                }
+                return Mat64::from_vec(rows, cols, data).map_err(Attempt::Dead);
+            }
+            FromWorker::Error { message } => {
+                return Err(Attempt::Fatal(Error::Coordinator(format!(
+                    "worker failed: {message}"
+                ))))
+            }
+            FromWorker::Hello { .. } => {
+                return Err(Attempt::Dead(Error::Coordinator(
+                    "unexpected hello mid-run".into(),
+                )))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::executor::{compute_source, NativeKind};
+    use crate::coordinator::planner::plan_blocks;
+    use crate::coordinator::scheduler::{order_tasks, Schedule};
+    use crate::data::colstore::InMemorySource;
+    use crate::data::synth::SynthSpec;
+    use crate::mi::sink::SinkData;
+    use std::net::TcpListener;
+
+    /// Spawn `k` in-process workers on loopback and return their
+    /// addresses plus the serving threads.
+    fn spawn_workers(
+        scope_src: &'static InMemorySource,
+        k: usize,
+    ) -> (Vec<String>, Vec<std::thread::JoinHandle<Result<()>>>) {
+        let mut addrs = Vec::new();
+        let mut threads = Vec::new();
+        for _ in 0..k {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            addrs.push(l.local_addr().unwrap().to_string());
+            threads.push(std::thread::spawn(move || {
+                let (stream, _) = l.accept().map_err(Error::Io)?;
+                super::super::worker::serve_conn(stream, scope_src)
+            }));
+        }
+        (addrs, threads)
+    }
+
+    fn leak_source(rows: usize, cols: usize, seed: u64) -> &'static InMemorySource {
+        let ds = SynthSpec::new(rows, cols).sparsity(0.85).seed(seed).generate();
+        Box::leak(Box::new(InMemorySource::new(&ds)))
+    }
+
+    #[test]
+    fn two_workers_match_single_process_on_every_native_backend() {
+        let src = leak_source(300, 24, 7);
+        for (backend, kind) in [
+            (Backend::BulkBitpack, NativeKind::Bitpack),
+            (Backend::BulkOpt, NativeKind::Dense),
+            (Backend::BulkSparse, NativeKind::Sparse),
+        ] {
+            let reference = compute_source(src, kind, 1, CombineKind::Mi).unwrap();
+            let mut plan = plan_blocks(24, 8).unwrap();
+            order_tasks(&mut plan.tasks, Schedule::LargestFirst);
+            let (addrs, threads) = spawn_workers(src, 2);
+            let out = run_cluster(&ClusterRun {
+                workers: &addrs,
+                backend,
+                measure: CombineKind::Mi,
+                plan: &plan,
+                n_rows: 300,
+                sink: &SinkSpec::Dense,
+            })
+            .unwrap();
+            for t in threads {
+                t.join().unwrap().unwrap();
+            }
+            let report = out.meta.cluster.clone().unwrap();
+            assert_eq!(report.workers, 2);
+            assert_eq!(report.tasks, plan.tasks.len());
+            assert_eq!(report.retried, 0);
+            let SinkData::Dense(mi) = out.data else { panic!("dense run") };
+            for i in 0..24 {
+                for j in 0..24 {
+                    assert_eq!(
+                        mi.get(i, j).to_bits(),
+                        reference.get(i, j).to_bits(),
+                        "{backend}: cell ({i},{j}) must be bit-identical"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn topk_sink_matches_single_process_exactly() {
+        use crate::mi::topk::top_k_pairs;
+        let src = leak_source(250, 20, 11);
+        let reference = compute_source(src, NativeKind::Bitpack, 1, CombineKind::Mi).unwrap();
+        let want = top_k_pairs(&reference, 6);
+        let mut plan = plan_blocks(20, 6).unwrap();
+        order_tasks(&mut plan.tasks, Schedule::LargestFirst);
+        let (addrs, threads) = spawn_workers(src, 2);
+        let out = run_cluster(&ClusterRun {
+            workers: &addrs,
+            backend: Backend::BulkBitpack,
+            measure: CombineKind::Mi,
+            plan: &plan,
+            n_rows: 250,
+            sink: &SinkSpec::TopK { k: 6, per_column: false },
+        })
+        .unwrap();
+        for t in threads {
+            t.join().unwrap().unwrap();
+        }
+        let SinkData::TopK(got) = out.data else { panic!("topk run") };
+        assert_eq!(got.len(), want.len());
+        for (g, w) in got.iter().zip(&want) {
+            assert_eq!((g.i, g.j, g.mi.to_bits()), (w.i, w.j, w.mi.to_bits()));
+        }
+    }
+
+    /// A worker that handshakes, accepts exactly one task, and drops
+    /// the connection with it in flight — a deterministic stand-in for
+    /// a SIGKILLed process (the e2e suite kills a real one).
+    fn spawn_dying_worker(
+        src: &'static InMemorySource,
+    ) -> (String, std::thread::JoinHandle<()>) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        let t = std::thread::spawn(move || {
+            let (mut stream, _) = l.accept().unwrap();
+            let hello =
+                FromWorker::Hello { n_rows: src.n_rows(), n_cols: src.n_cols() };
+            write_frame(&mut stream, &hello.to_json()).unwrap();
+            let _job = read_frame(&mut stream).unwrap();
+            let _task = read_frame(&mut stream).unwrap();
+            // die with the task accepted but unanswered
+        });
+        (addr, t)
+    }
+
+    #[test]
+    fn dead_worker_task_is_retried_bit_identically() {
+        let src = leak_source(280, 24, 13);
+        let reference = compute_source(src, NativeKind::Bitpack, 1, CombineKind::Mi).unwrap();
+        let mut plan = plan_blocks(24, 6).unwrap();
+        order_tasks(&mut plan.tasks, Schedule::LargestFirst);
+        let (mut addrs, threads) = spawn_workers(src, 1);
+        let (dead_addr, dead_thread) = spawn_dying_worker(src);
+        addrs.push(dead_addr);
+        let out = run_cluster(&ClusterRun {
+            workers: &addrs,
+            backend: Backend::BulkBitpack,
+            measure: CombineKind::Mi,
+            plan: &plan,
+            n_rows: 280,
+            sink: &SinkSpec::Dense,
+        })
+        .unwrap();
+        for t in threads {
+            t.join().unwrap().unwrap();
+        }
+        dead_thread.join().unwrap();
+        let report = out.meta.cluster.clone().unwrap();
+        assert_eq!(report.worker_failures, 1, "exactly one worker died");
+        assert!(report.retried >= 1, "the in-flight task must be re-queued");
+        let SinkData::Dense(mi) = out.data else { panic!("dense run") };
+        for i in 0..24 {
+            for j in 0..24 {
+                assert_eq!(
+                    mi.get(i, j).to_bits(),
+                    reference.get(i, j).to_bits(),
+                    "retried cell ({i},{j}) must stay bit-identical"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unreachable_worker_is_a_clean_config_error() {
+        let plan = plan_blocks(8, 4).unwrap();
+        let err = run_cluster(&ClusterRun {
+            // reserved port on loopback nobody listens on
+            workers: &["127.0.0.1:1".to_string()],
+            backend: Backend::BulkBitpack,
+            measure: CombineKind::Mi,
+            plan: &plan,
+            n_rows: 10,
+            sink: &SinkSpec::Dense,
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("cannot reach worker"), "{err}");
+    }
+
+    #[test]
+    fn auto_backend_is_rejected() {
+        let plan = plan_blocks(8, 4).unwrap();
+        let err = run_cluster(&ClusterRun {
+            workers: &["127.0.0.1:1".to_string()],
+            backend: Backend::Auto,
+            measure: CombineKind::Mi,
+            plan: &plan,
+            n_rows: 10,
+            sink: &SinkSpec::Dense,
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("resolved native backend"), "{err}");
+    }
+}

@@ -1,0 +1,408 @@
+//! The cluster wire protocol: length-prefixed JSON frames.
+//!
+//! Every message is one *frame*: a 4-byte little-endian `u32` byte
+//! length followed by that many bytes of UTF-8 JSON, parsed with the
+//! same serde-free [`crate::util::json`] reader the job server's wire
+//! schema uses. JSON keeps the protocol debuggable (a frame body is
+//! one readable object) and — because Rust's shortest `Display`
+//! rendering of an `f64` parses back to the identical bits — lets
+//! result blocks ship as plain number arrays without losing the
+//! bit-exactness the distributed path promises. The rare non-finite
+//! cell (a degenerate measure on a constant column) is not valid JSON
+//! and travels as a `"bits:<hex>"` string instead.
+//!
+//! Direction and types (protocol `v1`):
+//!
+//! | direction | `type` | payload |
+//! |-----------|--------|---------|
+//! | worker → coordinator | `hello` | `n_rows`, `n_cols` of the worker's input |
+//! | coordinator → worker | `job` | resolved `backend`, `measure`, `block_cols`, expected `n_rows`/`n_cols` |
+//! | coordinator → worker | `task` | `id` plus the [`BlockTask`] coordinates |
+//! | worker → coordinator | `result` | echoed `id`, block shape, row-major `data` |
+//! | worker → coordinator | `heartbeat` | none (liveness while a task computes) |
+//! | worker → coordinator | `error` | `message` (fatal: the run aborts, no retry) |
+//! | coordinator → worker | `shutdown` | none (clean end of run) |
+//!
+//! The `job` frame is the same resolved descriptor `bulkmi resume`
+//! persists in `job.toml`: backend and block width are fixed once at
+//! the coordinator, so an `auto` run never re-probes per worker and
+//! every worker rebuilds the exact same plan.
+
+use crate::coordinator::planner::BlockTask;
+use crate::util::error::{Error, Result};
+use crate::util::json::{escape, Json};
+use std::io::{Read, Write};
+use std::time::Duration;
+
+/// Cluster protocol version (the `"v"` field of every frame).
+pub const PROTO_VERSION: u64 = 1;
+
+/// How often a busy worker proves liveness.
+pub const HEARTBEAT_INTERVAL: Duration = Duration::from_secs(1);
+
+/// How long the coordinator waits without hearing *anything* (result
+/// or heartbeat) before declaring a worker dead and re-queueing its
+/// in-flight task. Ten missed heartbeats is unambiguous death, not a
+/// long task.
+pub const DEATH_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Refuse frames above this size: the largest legitimate frame is a
+/// result block, and a 256 MiB body is a 4M-cell f64 tile rendered at
+/// maximum decimal width — far past any plan the block sizer emits.
+const MAX_FRAME_BYTES: u32 = 256 << 20;
+
+// ---------------------------------------------------------------------
+// framing
+// ---------------------------------------------------------------------
+
+/// Write one frame: `u32` little-endian length, then the JSON bytes.
+pub fn write_frame(w: &mut impl Write, body: &str) -> Result<()> {
+    let len = u32::try_from(body.len())
+        .ok()
+        .filter(|&l| l <= MAX_FRAME_BYTES)
+        .ok_or_else(|| {
+            Error::Coordinator(format!("cluster frame of {} bytes exceeds limit", body.len()))
+        })?;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(body.as_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame's JSON body. EOF mid-frame (a dead peer) surfaces as
+/// the underlying [`Error::Io`].
+pub fn read_frame(r: &mut impl Read) -> Result<String> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len);
+    if len > MAX_FRAME_BYTES {
+        return Err(Error::Parse(format!(
+            "cluster frame announces {len} bytes (limit {MAX_FRAME_BYTES}) — corrupt stream?"
+        )));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    String::from_utf8(body).map_err(|_| Error::Parse("cluster frame is not UTF-8".into()))
+}
+
+// ---------------------------------------------------------------------
+// f64 encoding (bit-exact both ways)
+// ---------------------------------------------------------------------
+
+/// Render one cell: shortest round-trip decimal for finite values
+/// (including `-0.0`, whose `"-0"` parses back to negative zero), a
+/// quoted `bits:` hex bit pattern for the non-finite rest.
+fn fmt_cell(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        format!("\"bits:{:016x}\"", v.to_bits())
+    }
+}
+
+fn parse_cell(j: &Json) -> Result<f64> {
+    match j {
+        Json::Num(v) => Ok(*v),
+        Json::Str(s) => {
+            let hex = s
+                .strip_prefix("bits:")
+                .ok_or_else(|| Error::Parse(format!("bad cell encoding '{s}'")))?;
+            let bits = u64::from_str_radix(hex, 16)
+                .map_err(|_| Error::Parse(format!("bad cell bit pattern '{s}'")))?;
+            Ok(f64::from_bits(bits))
+        }
+        _ => Err(Error::Parse("result cell must be a number or bits string".into())),
+    }
+}
+
+// ---------------------------------------------------------------------
+// typed messages
+// ---------------------------------------------------------------------
+
+/// The run descriptor the coordinator resolves exactly once and ships
+/// to every worker — the wire twin of the `job.toml` resume descriptor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct JobDesc {
+    /// Resolved *native* backend name (never `auto`: the coordinator
+    /// probes once; workers must not re-probe to different winners).
+    pub backend: String,
+    /// Measure name ([`crate::mi::measure::CombineKind::name`]).
+    pub measure: String,
+    /// Column-block width of the shared plan.
+    pub block_cols: usize,
+    /// Expected dataset shape — workers refuse a mismatched input file
+    /// before any task runs.
+    pub n_rows: usize,
+    pub n_cols: usize,
+}
+
+/// Coordinator → worker messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ToWorker {
+    /// First frame after the worker's hello: the resolved run.
+    Job(JobDesc),
+    /// One block task to compute; `id` is echoed in the result.
+    Task { id: u64, task: BlockTask },
+    /// Clean end of run.
+    Shutdown,
+}
+
+/// Worker → coordinator messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FromWorker {
+    /// First frame on connect: the shape of the worker's input file.
+    Hello { n_rows: usize, n_cols: usize },
+    /// The combined measure block for task `id`, row-major.
+    Result { id: u64, rows: usize, cols: usize, data: Vec<f64> },
+    /// Liveness while a long task computes.
+    Heartbeat,
+    /// Fatal worker-side failure: the coordinator aborts the run with
+    /// this message instead of retrying (a systematic error would fail
+    /// identically on every worker).
+    Error { message: String },
+}
+
+fn field(doc: &Json, key: &str) -> Result<f64> {
+    doc.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| Error::Parse(format!("cluster message needs numeric '{key}'")))
+}
+
+fn field_usize(doc: &Json, key: &str) -> Result<usize> {
+    let v = field(doc, key)?;
+    if !v.is_finite() || v < 0.0 || v.fract() != 0.0 || v > 9.0e15 {
+        return Err(Error::Parse(format!(
+            "cluster message key '{key}' must be a non-negative integer, got {v}"
+        )));
+    }
+    Ok(v as usize)
+}
+
+fn field_str<'a>(doc: &'a Json, key: &str) -> Result<&'a str> {
+    doc.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::Parse(format!("cluster message needs string '{key}'")))
+}
+
+fn parse_envelope<'a>(doc: &'a Json) -> Result<&'a str> {
+    let v = field(doc, "v")?;
+    if v != PROTO_VERSION as f64 {
+        return Err(Error::Parse(format!(
+            "unsupported cluster protocol version {v} (this build speaks v{PROTO_VERSION})"
+        )));
+    }
+    field_str(doc, "type")
+}
+
+impl ToWorker {
+    pub fn to_json(&self) -> String {
+        match self {
+            ToWorker::Job(job) => format!(
+                "{{\"v\":{PROTO_VERSION},\"type\":\"job\",\"backend\":\"{}\",\
+                 \"measure\":\"{}\",\"block_cols\":{},\"n_rows\":{},\"n_cols\":{}}}",
+                escape(&job.backend),
+                escape(&job.measure),
+                job.block_cols,
+                job.n_rows,
+                job.n_cols
+            ),
+            ToWorker::Task { id, task } => format!(
+                "{{\"v\":{PROTO_VERSION},\"type\":\"task\",\"id\":{id},\
+                 \"a_start\":{},\"a_len\":{},\"b_start\":{},\"b_len\":{}}}",
+                task.a_start, task.a_len, task.b_start, task.b_len
+            ),
+            ToWorker::Shutdown => {
+                format!("{{\"v\":{PROTO_VERSION},\"type\":\"shutdown\"}}")
+            }
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<ToWorker> {
+        let doc = Json::parse(text)?;
+        match parse_envelope(&doc)? {
+            "job" => Ok(ToWorker::Job(JobDesc {
+                backend: field_str(&doc, "backend")?.to_string(),
+                measure: field_str(&doc, "measure")?.to_string(),
+                block_cols: field_usize(&doc, "block_cols")?,
+                n_rows: field_usize(&doc, "n_rows")?,
+                n_cols: field_usize(&doc, "n_cols")?,
+            })),
+            "task" => Ok(ToWorker::Task {
+                id: field(&doc, "id")? as u64,
+                task: BlockTask {
+                    a_start: field_usize(&doc, "a_start")?,
+                    a_len: field_usize(&doc, "a_len")?,
+                    b_start: field_usize(&doc, "b_start")?,
+                    b_len: field_usize(&doc, "b_len")?,
+                },
+            }),
+            "shutdown" => Ok(ToWorker::Shutdown),
+            other => Err(Error::Parse(format!("unknown coordinator message type '{other}'"))),
+        }
+    }
+}
+
+impl FromWorker {
+    pub fn to_json(&self) -> String {
+        match self {
+            FromWorker::Hello { n_rows, n_cols } => format!(
+                "{{\"v\":{PROTO_VERSION},\"type\":\"hello\",\"n_rows\":{n_rows},\
+                 \"n_cols\":{n_cols}}}"
+            ),
+            FromWorker::Result { id, rows, cols, data } => {
+                let mut out = String::with_capacity(data.len() * 20 + 80);
+                out.push_str(&format!(
+                    "{{\"v\":{PROTO_VERSION},\"type\":\"result\",\"id\":{id},\
+                     \"rows\":{rows},\"cols\":{cols},\"data\":["
+                ));
+                for (k, v) in data.iter().enumerate() {
+                    if k > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(&fmt_cell(*v));
+                }
+                out.push_str("]}");
+                out
+            }
+            FromWorker::Heartbeat => {
+                format!("{{\"v\":{PROTO_VERSION},\"type\":\"heartbeat\"}}")
+            }
+            FromWorker::Error { message } => format!(
+                "{{\"v\":{PROTO_VERSION},\"type\":\"error\",\"message\":\"{}\"}}",
+                escape(message)
+            ),
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<FromWorker> {
+        let doc = Json::parse(text)?;
+        match parse_envelope(&doc)? {
+            "hello" => Ok(FromWorker::Hello {
+                n_rows: field_usize(&doc, "n_rows")?,
+                n_cols: field_usize(&doc, "n_cols")?,
+            }),
+            "result" => {
+                let rows = field_usize(&doc, "rows")?;
+                let cols = field_usize(&doc, "cols")?;
+                let arr = doc
+                    .get("data")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| Error::Parse("result message needs a 'data' array".into()))?;
+                if arr.len() != rows * cols {
+                    return Err(Error::Parse(format!(
+                        "result data has {} cells for a {rows}x{cols} block",
+                        arr.len()
+                    )));
+                }
+                let data = arr.iter().map(parse_cell).collect::<Result<Vec<f64>>>()?;
+                Ok(FromWorker::Result { id: field(&doc, "id")? as u64, rows, cols, data })
+            }
+            "heartbeat" => Ok(FromWorker::Heartbeat),
+            "error" => Ok(FromWorker::Error { message: field_str(&doc, "message")?.to_string() }),
+            other => Err(Error::Parse(format!("unknown worker message type '{other}'"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn frames_round_trip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, "{\"a\":1}").unwrap();
+        write_frame(&mut buf, "{}").unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r).unwrap(), "{\"a\":1}");
+        assert_eq!(read_frame(&mut r).unwrap(), "{}");
+        // clean EOF (no more frames) is an Io error the caller maps
+        assert!(read_frame(&mut r).is_err());
+    }
+
+    #[test]
+    fn torn_frame_is_an_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, "{\"v\":1,\"type\":\"heartbeat\"}").unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(read_frame(&mut Cursor::new(buf)).is_err());
+    }
+
+    #[test]
+    fn oversized_announcement_rejected() {
+        let mut buf = (u32::MAX).to_le_bytes().to_vec();
+        buf.extend_from_slice(b"xx");
+        assert!(matches!(read_frame(&mut Cursor::new(buf)), Err(Error::Parse(_))));
+    }
+
+    #[test]
+    fn to_worker_messages_round_trip() {
+        let msgs = [
+            ToWorker::Job(JobDesc {
+                backend: "bulk-bitpack".into(),
+                measure: "mi".into(),
+                block_cols: 64,
+                n_rows: 1000,
+                n_cols: 256,
+            }),
+            ToWorker::Task {
+                id: 7,
+                task: BlockTask { a_start: 0, a_len: 64, b_start: 64, b_len: 32 },
+            },
+            ToWorker::Shutdown,
+        ];
+        for m in msgs {
+            assert_eq!(ToWorker::parse(&m.to_json()).unwrap(), m, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn from_worker_messages_round_trip_bit_exactly() {
+        // finite values exercise shortest-Display round-tripping;
+        // -0.0, NaN and infinities exercise the bits: escape hatch
+        let data = vec![
+            0.0,
+            -0.0,
+            1.0 / 3.0,
+            0.123456789012345678,
+            f64::NAN,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::MIN_POSITIVE,
+        ];
+        let msg = FromWorker::Result { id: 3, rows: 2, cols: 4, data: data.clone() };
+        let FromWorker::Result { id, rows, cols, data: got } =
+            FromWorker::parse(&msg.to_json()).unwrap()
+        else {
+            panic!("wrong type");
+        };
+        assert_eq!((id, rows, cols), (3, 2, 4));
+        let want: Vec<u64> = data.iter().map(|v| v.to_bits()).collect();
+        let got: Vec<u64> = got.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(got, want, "every cell must round-trip bit-identically");
+
+        for m in [
+            FromWorker::Hello { n_rows: 10, n_cols: 4 },
+            FromWorker::Heartbeat,
+            FromWorker::Error { message: "disk \"gone\"".into() },
+        ] {
+            assert_eq!(FromWorker::parse(&m.to_json()).unwrap(), m, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn bad_version_type_and_shape_rejected() {
+        assert!(ToWorker::parse("{\"v\":2,\"type\":\"shutdown\"}").is_err());
+        assert!(ToWorker::parse("{\"v\":1,\"type\":\"warp\"}").is_err());
+        assert!(ToWorker::parse("{\"type\":\"shutdown\"}").is_err());
+        assert!(FromWorker::parse(
+            "{\"v\":1,\"type\":\"result\",\"id\":0,\"rows\":2,\"cols\":2,\"data\":[1.0]}"
+        )
+        .is_err());
+        assert!(FromWorker::parse(
+            "{\"v\":1,\"type\":\"result\",\"id\":0,\"rows\":1,\"cols\":1,\"data\":[\"x\"]}"
+        )
+        .is_err());
+    }
+}

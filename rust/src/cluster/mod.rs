@@ -1,0 +1,37 @@
+//! Distributed block-plan execution: one coordinator, many workers.
+//!
+//! The paper's matrix formulation makes all-pairs MI a set of
+//! independent Gram-block tasks, each a pure function of two column
+//! blocks — embarrassingly parallel and idempotent. This module turns
+//! that into a rack-scale path without giving up exactness: the
+//! coordinator resolves the run once (backend, measure, block width —
+//! the same descriptor `bulkmi resume` persists), shards the
+//! schedule-ordered task list into per-worker affinity queues
+//! ([`crate::coordinator::scheduler::shard_tasks`]), and drives one
+//! in-flight task per `bulkmi worker` connection over the
+//! length-prefixed JSON protocol in [`messages`]. Workers stream
+//! their own column blocks from the shared input file (positioned
+//! reads — no dataset broadcast), run the *single-process* compute
+//! core ([`crate::coordinator::executor::compute_block`]) per task,
+//! and ship the combined measure block back with every `f64`
+//! round-tripping bit-exactly.
+//!
+//! Results land in per-connection shard sinks and fold into the
+//! primary through [`crate::mi::sink::MiSink::merge`]; a worker that
+//! dies (dropped connection or heartbeat silence) has its in-flight
+//! task re-queued for the survivors. Because every task is
+//! idempotent, sink state is partition-independent, and each cell
+//! completes exactly once, the merged result is bit-identical to the
+//! single-process run — retries are an audit number
+//! ([`crate::mi::sink::ClusterReport`] in `SinkMeta`), not a
+//! correctness concern.
+//!
+//! Entry points: `bulkmi worker --connect ADDR --input FILE` on each
+//! machine, then `bulkmi compute --workers a:p,b:p ...` (or a job
+//! request with a `"workers": "a:p,b:p"` string) at the coordinator.
+
+pub mod coordinator;
+pub mod messages;
+pub mod worker;
+
+pub use coordinator::{run_cluster, ClusterRun};

@@ -1,0 +1,194 @@
+//! The cluster worker: serve block tasks to one coordinator.
+//!
+//! `bulkmi worker --connect ADDR --input x.bmat` binds ADDR, accepts a
+//! single coordinator connection, and then runs a strict loop: say
+//! hello (input shape), receive the resolved job descriptor, and
+//! compute each dispatched task with the *same* single-process core
+//! ([`crate::coordinator::executor::compute_block`]) the local path
+//! uses — which is what makes a sharded run bit-identical to a
+//! monolithic one by construction. A `.bmat` v2 input is positioned-
+//! read per task, so a worker touches only the column blocks of the
+//! tasks it is handed, never the whole file.
+//!
+//! While a task computes, a background thread writes a heartbeat frame
+//! every [`HEARTBEAT_INTERVAL`](super::messages::HEARTBEAT_INTERVAL)
+//! so the coordinator can tell a long task from a dead worker. The
+//! write side is shared through a mutex over a cloned stream handle;
+//! the task loop owns the read side alone.
+
+use super::messages::{
+    read_frame, write_frame, FromWorker, ToWorker, HEARTBEAT_INTERVAL,
+};
+use crate::coordinator::executor::{compute_block, plan_inputs, NativeProvider};
+use crate::coordinator::planner::plan_blocks;
+use crate::data::colstore::ColumnSource;
+use crate::mi::backend::Backend;
+use crate::server::wire;
+use crate::util::error::{Error, Result};
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Bind `addr` and serve exactly one coordinator connection over
+/// `input`, then return. Port 0 picks a free port (logged on bind).
+pub fn serve(addr: &str, input: &Path) -> Result<()> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| Error::Coordinator(format!("worker cannot bind {addr}: {e}")))?;
+    crate::info!(
+        "worker listening on {} (input {})",
+        listener.local_addr()?,
+        input.display()
+    );
+    serve_listener(listener, input)
+}
+
+/// [`serve`] over an already-bound listener (tests and `cluster bench`
+/// bind port 0 first so they know the address before spawning).
+pub fn serve_listener(listener: TcpListener, input: &Path) -> Result<()> {
+    let src = crate::server::open_source(input)?;
+    let (stream, peer) = listener.accept()?;
+    crate::info!("worker serving coordinator at {peer}");
+    serve_conn(stream, &*src)
+}
+
+/// Serve one accepted coordinator connection from `src`. Public so
+/// in-process tests and the scaling bench can run workers on threads
+/// over any [`ColumnSource`] without touching the filesystem.
+pub fn serve_conn(stream: TcpStream, src: &dyn ColumnSource) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let writer = Arc::new(Mutex::new(stream.try_clone()?));
+    let mut reader = stream;
+    send(&writer, &FromWorker::Hello { n_rows: src.n_rows(), n_cols: src.n_cols() })?;
+
+    // the first frame must be the resolved job descriptor
+    let job = match ToWorker::parse(&read_frame(&mut reader)?)? {
+        ToWorker::Job(job) => job,
+        other => {
+            return Err(Error::Coordinator(format!(
+                "worker expected a job frame first, got {other:?}"
+            )))
+        }
+    };
+    // a failure from here on is reported to the coordinator as a fatal
+    // error frame before the worker exits: a systematic problem (bad
+    // descriptor, mismatched input) must abort the run, not retry
+    match run_job(&writer, &mut reader, src, &job) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let _ = send(&writer, &FromWorker::Error { message: e.to_string() });
+            Err(e)
+        }
+    }
+}
+
+fn run_job(
+    writer: &Arc<Mutex<TcpStream>>,
+    reader: &mut TcpStream,
+    src: &dyn ColumnSource,
+    job: &super::messages::JobDesc,
+) -> Result<()> {
+    if (job.n_rows, job.n_cols) != (src.n_rows(), src.n_cols()) {
+        return Err(Error::Shape(format!(
+            "worker input is {}x{} but the coordinator's dataset is {}x{} — \
+             workers must share the coordinator's input file",
+            src.n_rows(),
+            src.n_cols(),
+            job.n_rows,
+            job.n_cols
+        )));
+    }
+    let backend = wire::parse_native_backend(&job.backend)?;
+    if backend == Backend::Auto {
+        return Err(Error::Coordinator(
+            "job descriptor names backend 'auto' — the coordinator must resolve \
+             the backend once before dispatching"
+                .into(),
+        ));
+    }
+    let measure = wire::parse_measure(&job.measure)?;
+    // the shared plan: same m, same block width -> same task set and,
+    // through plan_inputs, the same column sums every worker computes
+    let plan = plan_blocks(src.n_cols(), job.block_cols)?;
+    let (n, colsums) = plan_inputs(src, &plan)?;
+    let provider = NativeProvider::new(src, backend.native_kind());
+
+    // heartbeat: proves liveness while block_gram grinds
+    let stop = Arc::new(AtomicBool::new(false));
+    let hb = {
+        let writer = Arc::clone(writer);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let slice = std::time::Duration::from_millis(50);
+            'beat: loop {
+                // sleep in short slices so a finished run joins fast
+                let mut slept = std::time::Duration::ZERO;
+                while slept < HEARTBEAT_INTERVAL {
+                    if stop.load(Ordering::Relaxed) {
+                        break 'beat;
+                    }
+                    std::thread::sleep(slice);
+                    slept += slice;
+                }
+                if send(&writer, &FromWorker::Heartbeat).is_err() {
+                    break; // coordinator gone; the task loop will see EOF
+                }
+            }
+        })
+    };
+
+    let served = serve_tasks(writer, reader, &provider, &colsums, n, measure);
+    stop.store(true, Ordering::Relaxed);
+    let _ = hb.join();
+    served
+}
+
+fn serve_tasks(
+    writer: &Arc<Mutex<TcpStream>>,
+    reader: &mut TcpStream,
+    provider: &NativeProvider<'_>,
+    colsums: &[f64],
+    n: f64,
+    measure: crate::mi::measure::CombineKind,
+) -> Result<()> {
+    let mut served = 0u64;
+    loop {
+        match ToWorker::parse(&read_frame(reader)?)? {
+            ToWorker::Task { id, task } => {
+                if task.a_start + task.a_len > colsums.len()
+                    || task.b_start + task.b_len > colsums.len()
+                {
+                    return Err(Error::Shape(format!(
+                        "task {task:?} out of bounds for m = {}",
+                        colsums.len()
+                    )));
+                }
+                let block = compute_block(provider, &task, colsums, n, measure)?;
+                send(
+                    writer,
+                    &FromWorker::Result {
+                        id,
+                        rows: block.rows(),
+                        cols: block.cols(),
+                        data: block.data().to_vec(),
+                    },
+                )?;
+                served += 1;
+            }
+            ToWorker::Shutdown => {
+                crate::info!("worker done: served {served} tasks");
+                return Ok(());
+            }
+            ToWorker::Job(_) => {
+                return Err(Error::Coordinator("unexpected second job frame".into()))
+            }
+        }
+    }
+}
+
+fn send(writer: &Arc<Mutex<TcpStream>>, msg: &FromWorker) -> Result<()> {
+    let mut w = writer.lock().map_err(|_| {
+        Error::Coordinator("worker write lock poisoned".into())
+    })?;
+    write_frame(&mut *w, &msg.to_json())
+}

@@ -460,8 +460,9 @@ fn dense_result(sink: &mut DenseSink) -> Result<MiMatrix> {
 /// Shared validation + sufficient statistics for a plan execution. The
 /// column sums are fetched through the source in plan-block-sized
 /// chunks, so even this pass never holds more than one block of
-/// columns.
-fn plan_inputs(src: &dyn ColumnSource, plan: &BlockPlan) -> Result<(f64, Vec<f64>)> {
+/// columns. Public for the cluster worker (`crate::cluster`), which
+/// resolves the same inputs once per job before running tasks.
+pub fn plan_inputs(src: &dyn ColumnSource, plan: &BlockPlan) -> Result<(f64, Vec<f64>)> {
     if src.n_cols() != plan.m {
         return Err(Error::Shape(format!(
             "plan is over {} columns but the source has {}",
@@ -478,8 +479,11 @@ fn plan_inputs(src: &dyn ColumnSource, plan: &BlockPlan) -> Result<(f64, Vec<f64
     Ok((n, colsums))
 }
 
-/// Gram + combine for one task.
-fn compute_block<P: GramProvider + ?Sized>(
+/// Gram + combine for one task. Public for the cluster worker
+/// (`crate::cluster`), which runs exactly this per dispatched task —
+/// the distributed path shares the single-process compute core, which
+/// is what makes sharded runs bit-identical by construction.
+pub fn compute_block<P: GramProvider + ?Sized>(
     provider: &P,
     t: &BlockTask,
     colsums: &[f64],

@@ -83,6 +83,30 @@ pub fn order_tasks(tasks: &mut [BlockTask], policy: Schedule) {
     }
 }
 
+/// Partition schedule-ordered tasks into `shards` affinity queues for
+/// distributed dispatch (`crate::cluster`): contiguous runs of
+/// near-equal total output cells, so each worker's preferred queue
+/// keeps the locality the policy established (a panel-ordered shard
+/// still sweeps panels) while the cut points balance work, not task
+/// counts — the triangle's diagonal tasks are half the size of
+/// off-diagonal ones. Workers steal across shards when their own runs
+/// dry, so the split biases locality without fencing work in.
+pub fn shard_tasks(tasks: &[BlockTask], shards: usize) -> Vec<Vec<BlockTask>> {
+    let shards = shards.max(1);
+    let total: u128 = tasks.iter().map(|t| t.cells() as u128).sum();
+    let mut out: Vec<Vec<BlockTask>> = vec![Vec::new(); shards];
+    let mut acc: u128 = 0;
+    for (idx, t) in tasks.iter().enumerate() {
+        // cells consumed *before* this task decide its shard, so every
+        // shard gets a contiguous, non-empty-when-possible run
+        let s = ((acc * shards as u128) / total.max(1)) as usize;
+        let s = s.min(shards - 1).min(idx);
+        out[s].push(*t);
+        acc += t.cells() as u128;
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,6 +184,21 @@ mod tests {
             assert_eq!(Schedule::parse(s.name()), Some(s));
         }
         assert_eq!(Schedule::parse("zigzag"), None);
+    }
+
+    #[test]
+    fn shard_tasks_partitions_in_schedule_order() {
+        let mut t = plan_blocks(16, 4).unwrap().tasks; // 10 equal-cell tasks
+        order_tasks(&mut t, Schedule::Panel);
+        let shards = shard_tasks(&t, 3);
+        let flat: Vec<BlockTask> = shards.iter().flatten().copied().collect();
+        assert_eq!(flat, t, "concatenated shards must be the schedule order");
+        let sizes: Vec<usize> = shards.iter().map(|s| s.len()).collect();
+        assert_eq!(sizes, vec![4, 3, 3], "equal-cell tasks split near-evenly");
+        assert_eq!(shard_tasks(&t, 1), vec![t.clone()]);
+        // more shards than tasks: nothing lost, some shards empty
+        assert_eq!(shard_tasks(&t, 100).iter().flatten().count(), t.len());
+        assert!(shard_tasks(&[], 4).iter().all(|s| s.is_empty()));
     }
 
     #[test]

@@ -143,6 +143,16 @@ pub struct JobSpec {
     /// bypasses the block-substrate path — jobs auditing *that* cache's
     /// traffic should leave this off.
     pub tiles: bool,
+    /// Worker addresses (`host:port`) for a distributed run. Non-empty
+    /// turns the job into a cluster coordinator: the backend is
+    /// resolved once here, the schedule-ordered plan is sharded across
+    /// `bulkmi worker` processes over the wire protocol in
+    /// [`crate::cluster`], and merged sink states come back
+    /// bit-identical to a local run (the retry audit lands in the
+    /// output meta's [`crate::mi::sink::ClusterReport`]). Every worker
+    /// must serve the same dataset as this job's source. Empty
+    /// (default) = run locally.
+    pub cluster_workers: Vec<String>,
 }
 
 impl Default for JobSpec {
@@ -160,6 +170,7 @@ impl Default for JobSpec {
             priority: None,
             tenant: None,
             tiles: false,
+            cluster_workers: Vec::new(),
         }
     }
 }
@@ -236,6 +247,11 @@ impl JobSpecBuilder {
 
     pub fn tiles(mut self, tiles: bool) -> Self {
         self.spec.tiles = tiles;
+        self
+    }
+
+    pub fn cluster_workers(mut self, workers: Vec<String>) -> Self {
+        self.spec.cluster_workers = workers;
         self
     }
 
@@ -509,6 +525,48 @@ impl JobService {
                 let _ram_permit = ram_permit;
                 set_status(&jobs, JobStatus::Running(0.0));
                 let result = spec.backend.resolve_source(&*src).and_then(|(resolved, probe)| {
+                    if !spec.cluster_workers.is_empty() {
+                        // distributed job: same resolve / plan /
+                        // schedule as a local run, but the tasks ship
+                        // to cluster workers instead of the local
+                        // executor (no block cache or tile cache —
+                        // workers stream their own blocks)
+                        let (_, task_budget) =
+                            cache_plan(spec.cache_bytes, src.out_of_core(), 0);
+                        let (mut plan, sizing) =
+                            plan_for_job(&*src, &spec, probe.as_ref(), task_budget)?;
+                        let schedule = spec.schedule.unwrap_or(Schedule::LargestFirst);
+                        order_tasks(&mut plan.tasks, schedule);
+                        progress.set_total(plan.tasks.len());
+                        let mut out = metrics.time("job_secs", || {
+                            crate::cluster::run_cluster(&crate::cluster::ClusterRun {
+                                workers: &spec.cluster_workers,
+                                backend: resolved,
+                                measure: spec.measure,
+                                plan: &plan,
+                                n_rows: src.n_rows(),
+                                sink: &spec.sink,
+                            })
+                        })?;
+                        if let Some(cr) = &out.meta.cluster {
+                            metrics.counter("cluster_task_retries").add(cr.retried);
+                            metrics
+                                .counter("cluster_worker_failures")
+                                .add(cr.worker_failures);
+                        }
+                        out.meta.backend = Some(resolved.name().to_string());
+                        out.meta.requested_backend = Some(spec.backend.name().to_string());
+                        out.meta.measure = Some(spec.measure.name().to_string());
+                        out.meta.probe = probe;
+                        out.meta.sizing = Some(sizing);
+                        out.meta.schedule = Some(schedule.name());
+                        out.meta.admission = Some(AdmissionReport {
+                            estimated_bytes,
+                            queued_secs,
+                            priority: priority.name(),
+                        });
+                        return Ok(out);
+                    }
                     // cache decision first: the carve shrinks the task
                     // budget the plan is sized under
                     let (cache_budget, task_budget) =
@@ -781,6 +839,52 @@ mod tests {
         assert_eq!(built.tenant, def.tenant);
         assert_eq!(built.tiles, def.tiles);
         assert!(!def.tiles, "tile cache is opt-in per job");
+        assert_eq!(built.cluster_workers, def.cluster_workers);
+        assert!(def.cluster_workers.is_empty(), "jobs run locally by default");
+    }
+
+    #[test]
+    fn cluster_job_through_the_service_matches_local() {
+        use crate::data::colstore::InMemorySource;
+
+        let ds = SynthSpec::new(300, 16).sparsity(0.7).seed(21).plant(1, 5, 0.05).generate();
+        let want = compute_mi(&ds, Backend::BulkBitpack).unwrap();
+        // two loopback workers over the same dataset; leaked source so
+        // plain spawned threads can serve it
+        let src: &'static InMemorySource = Box::leak(Box::new(InMemorySource::new(&ds)));
+        let mut addrs = Vec::new();
+        for _ in 0..2 {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            addrs.push(l.local_addr().unwrap().to_string());
+            std::thread::spawn(move || {
+                if let Ok((stream, _)) = l.accept() {
+                    let _ = crate::cluster::worker::serve_conn(stream, src);
+                }
+            });
+        }
+        let svc = JobService::new(1, 2);
+        let spec = JobSpec::builder()
+            .block_cols(4)
+            .cluster_workers(addrs)
+            .build()
+            .unwrap();
+        let h = svc.submit(ds, spec).unwrap();
+        let JobStatus::Done(out) = svc.wait(h).unwrap() else {
+            panic!("cluster job failed");
+        };
+        let report = out.meta.cluster.clone().expect("cluster jobs report their run");
+        assert_eq!(report.workers, 2);
+        assert_eq!(report.retried, 0);
+        let mi = svc.take(h).unwrap().into_dense().expect("dense sink");
+        for i in 0..want.dim() {
+            for j in 0..want.dim() {
+                assert_eq!(
+                    mi.get(i, j).to_bits(),
+                    want.get(i, j).to_bits(),
+                    "cell ({i},{j}) must be bit-identical to the local run"
+                );
+            }
+        }
     }
 
     #[test]

@@ -47,7 +47,7 @@
 
 use crate::linalg::dense::Mat64;
 use crate::mi::sink::TileCacheReport;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -110,7 +110,7 @@ pub fn fingerprint_words(n_rows: usize, n_cols: usize, words: &[u64]) -> u64 {
 /// A tile's identity: the ordered content fingerprints of its two
 /// input column blocks. Backend- and measure-independent (see the
 /// module docs).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct TileKey {
     pub fp_a: u64,
     pub fp_b: u64,
@@ -151,9 +151,56 @@ struct Entry {
 
 struct Inner {
     map: HashMap<TileKey, Entry>,
+    /// Recency index mirroring `map`: one `(last_use, key)` entry per
+    /// tile, so the LRU victim is always the first key — eviction is
+    /// `O(log n)` instead of a full min-scan per evicted tile.
+    order: BTreeMap<(u64, TileKey), ()>,
     total_bytes: usize,
     /// Monotone access clock; unique per touch, so LRU has no ties.
     tick: u64,
+}
+
+impl Inner {
+    fn empty() -> Inner {
+        Inner { map: HashMap::new(), order: BTreeMap::new(), total_bytes: 0, tick: 0 }
+    }
+
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Refresh `key`'s clock position; `false` when absent.
+    fn touch(&mut self, key: TileKey, tick: u64) -> bool {
+        match self.map.get_mut(&key) {
+            Some(e) => {
+                self.order.remove(&(e.last_use, key));
+                e.last_use = tick;
+                self.order.insert((tick, key), ());
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Insert `key` at clock position `tick`, replacing any stale
+    /// entry, keeping `order` and `total_bytes` in step with `map`.
+    fn add(&mut self, key: TileKey, bytes: usize, tick: u64) {
+        if let Some(old) = self.map.insert(key, Entry { bytes, last_use: tick }) {
+            self.order.remove(&(old.last_use, key));
+            self.total_bytes -= old.bytes;
+        }
+        self.order.insert((tick, key), ());
+        self.total_bytes += bytes;
+    }
+
+    /// Remove `key` from both indexes; `None` when absent.
+    fn remove(&mut self, key: TileKey) -> Option<usize> {
+        let e = self.map.remove(&key)?;
+        self.order.remove(&(e.last_use, key));
+        self.total_bytes -= e.bytes;
+        Some(e.bytes)
+    }
 }
 
 /// Byte-budget LRU over on-disk Gram tiles. Thread-safe; see the
@@ -185,7 +232,7 @@ impl TileCache {
             root,
             budget: budget_bytes,
             enabled: true,
-            inner: Mutex::new(Inner { map: HashMap::new(), total_bytes: 0, tick: 0 }),
+            inner: Mutex::new(Inner::empty()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
@@ -201,7 +248,7 @@ impl TileCache {
             root: PathBuf::new(),
             budget: 0,
             enabled: false,
-            inner: Mutex::new(Inner { map: HashMap::new(), total_bytes: 0, tick: 0 }),
+            inner: Mutex::new(Inner::empty()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
             evictions: AtomicU64::new(0),
@@ -255,24 +302,37 @@ impl TileCache {
     }
 
     /// Rebuild the index from the files present in the root, then
-    /// evict down to budget (oldest scan order first).
+    /// evict down to budget. `last_use` is seeded from file mtime
+    /// (ties broken by name), so the post-restart eviction pass drops
+    /// the genuinely least-recently-used tiles, not arbitrary ones —
+    /// `read_dir` order carries no recency information. Orphaned
+    /// `*.gram.tmp` files (a crash between the tmp write and the
+    /// rename in [`TileCache::insert`]) are swept here: nothing else
+    /// ever indexes or deletes them, so they would otherwise
+    /// accumulate outside the budget forever.
     fn rescan(&self) {
         let entries = match std::fs::read_dir(&self.root) {
             Ok(e) => e,
             Err(_) => return,
         };
-        let mut inner = self.inner.lock().unwrap();
+        let mut found: Vec<(std::time::SystemTime, String, TileKey, usize)> = Vec::new();
         for ent in entries.flatten() {
             let name = ent.file_name();
             let Some(name) = name.to_str() else { continue };
+            if name.ends_with(".gram.tmp") {
+                let _ = std::fs::remove_file(ent.path());
+                continue;
+            }
             let Some(key) = parse_tile_name(name) else { continue };
             let Ok(meta) = ent.metadata() else { continue };
-            let bytes = meta.len() as usize;
-            inner.tick += 1;
-            let tick = inner.tick;
-            if inner.map.insert(key, Entry { bytes, last_use: tick }).is_none() {
-                inner.total_bytes += bytes;
-            }
+            let mtime = meta.modified().unwrap_or(std::time::SystemTime::UNIX_EPOCH);
+            found.push((mtime, name.to_string(), key, meta.len() as usize));
+        }
+        found.sort();
+        let mut inner = self.inner.lock().unwrap();
+        for (_, _, key, bytes) in found {
+            let tick = inner.next_tick();
+            inner.add(key, bytes, tick);
         }
         self.evict_to_budget(&mut inner);
     }
@@ -286,14 +346,10 @@ impl TileCache {
         }
         {
             let mut inner = self.inner.lock().unwrap();
-            inner.tick += 1;
-            let tick = inner.tick;
-            match inner.map.get_mut(&key) {
-                Some(e) => e.last_use = tick,
-                None => {
-                    self.misses.fetch_add(1, Ordering::Relaxed);
-                    return None;
-                }
+            let tick = inner.next_tick();
+            if !inner.touch(key, tick) {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                return None;
             }
         }
         // read + verify outside the lock; tiles are small and
@@ -336,16 +392,13 @@ impl TileCache {
             return;
         }
         let mut inner = self.inner.lock().unwrap();
-        inner.tick += 1;
-        let tick = inner.tick;
-        if let Some(e) = inner.map.get_mut(&key) {
+        let tick = inner.next_tick();
+        if inner.touch(key, tick) {
             // racing insert of the same content: the rename above
             // replaced the file with identical bytes
-            e.last_use = tick;
             return;
         }
-        inner.total_bytes += bytes;
-        inner.map.insert(key, Entry { bytes, last_use: tick });
+        inner.add(key, bytes, tick);
         self.inserted_bytes.fetch_add(bytes as u64, Ordering::Relaxed);
         self.evict_to_budget(&mut inner);
     }
@@ -354,25 +407,18 @@ impl TileCache {
     /// used when verification fails.
     fn drop_entry(&self, key: TileKey) {
         let mut inner = self.inner.lock().unwrap();
-        if let Some(e) = inner.map.remove(&key) {
-            inner.total_bytes -= e.bytes;
-        }
+        inner.remove(key);
         drop(inner);
         let _ = std::fs::remove_file(self.path_for(key));
     }
 
     fn evict_to_budget(&self, inner: &mut Inner) {
         while inner.total_bytes > self.budget {
-            let victim = inner.map.iter().min_by_key(|(_, e)| e.last_use).map(|(k, _)| *k);
-            match victim {
-                Some(k) => {
-                    let e = inner.map.remove(&k).unwrap();
-                    inner.total_bytes -= e.bytes;
-                    self.evictions.fetch_add(1, Ordering::Relaxed);
-                    let _ = std::fs::remove_file(self.path_for(k));
-                }
-                None => break,
-            }
+            // the recency index makes the LRU victim its first key
+            let Some(&(_, k)) = inner.order.keys().next() else { break };
+            inner.remove(k);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+            let _ = std::fs::remove_file(self.path_for(k));
         }
     }
 }
@@ -565,6 +611,92 @@ mod tests {
         cache.insert(key(1, 2), &gram(1, 2, 2));
         assert!(cache.get(key(1, 2), 2, 2).is_none());
         assert_eq!(cache.stats(), TileCacheStats::default());
+    }
+
+    fn set_mtime(path: &Path, secs: u64) {
+        let t = std::time::SystemTime::UNIX_EPOCH + std::time::Duration::from_secs(secs);
+        let f = std::fs::OpenOptions::new().write(true).open(path).unwrap();
+        f.set_times(std::fs::FileTimes::new().set_modified(t)).unwrap();
+    }
+
+    #[test]
+    fn rescan_seeds_lru_from_mtime_not_scan_order() {
+        let one = TileCache::file_bytes(2, 2);
+        let root = tmp("rescan-mtime");
+        {
+            let cache = TileCache::open(&root, 1 << 20);
+            cache.insert(key(0, 0), &gram(1, 2, 2));
+            cache.insert(key(0, 1), &gram(2, 2, 2));
+            cache.insert(key(0, 2), &gram(3, 2, 2));
+        }
+        // on-disk recency says (0,1) is coldest regardless of what
+        // order the directory scan yields
+        let p = |a: u64, b: u64| root.join(format!("tile-v1-{a:016x}-{b:016x}.gram"));
+        set_mtime(&p(0, 1), 1_000);
+        set_mtime(&p(0, 0), 2_000);
+        set_mtime(&p(0, 2), 3_000);
+        let cache = TileCache::open(&root, 2 * one);
+        assert_eq!(cache.stats().evictions, 1);
+        assert!(cache.get(key(0, 1), 2, 2).is_none(), "coldest tile must be the victim");
+        assert!(cache.get(key(0, 0), 2, 2).is_some());
+        assert!(cache.get(key(0, 2), 2, 2).is_some());
+        // equal mtimes fall back to name order for determinism: the
+        // lexicographically smaller file name counts as older
+        let root = tmp("rescan-mtime-tie");
+        {
+            let cache = TileCache::open(&root, 1 << 20);
+            cache.insert(key(0, 1), &gram(2, 2, 2));
+            cache.insert(key(0, 2), &gram(3, 2, 2));
+        }
+        let p = |a: u64, b: u64| root.join(format!("tile-v1-{a:016x}-{b:016x}.gram"));
+        set_mtime(&p(0, 1), 5_000);
+        set_mtime(&p(0, 2), 5_000);
+        let cache = TileCache::open(&root, one);
+        assert!(cache.get(key(0, 1), 2, 2).is_none(), "name tie-break: (0,1) is older");
+        assert!(cache.get(key(0, 2), 2, 2).is_some());
+    }
+
+    #[test]
+    fn rescan_sweeps_stale_tmp_files() {
+        let root = tmp("rescan-tmp");
+        let g = gram(5, 2, 2);
+        {
+            let cache = TileCache::open(&root, 1 << 20);
+            cache.insert(key(1, 2), &g);
+        }
+        // simulate a crash between the tmp write and the rename
+        let stale = root.join(format!("tile-v1-{:016x}-{:016x}.gram.tmp", 7u64, 8u64));
+        std::fs::write(&stale, b"half-written").unwrap();
+        let cache = TileCache::open(&root, 1 << 20);
+        assert!(!stale.exists(), "orphaned tmp file must be swept");
+        assert_eq!(cache.len(), 1, "tmp files never become index entries");
+        assert_eq!(cache.get(key(1, 2), 2, 2).unwrap().data(), g.data());
+    }
+
+    #[test]
+    fn ordered_index_keeps_eviction_counts_and_victims() {
+        // many small tiles over budget: the BTreeMap-backed eviction
+        // must evict exactly the same count and the same victims as
+        // the min-scan it replaced
+        let one = TileCache::file_bytes(2, 2);
+        let cache = TileCache::open(tmp("ordered-index"), 3 * one);
+        for s in 0..6u64 {
+            cache.insert(key(0, s), &gram(s, 2, 2));
+        }
+        assert_eq!(cache.stats().evictions, 3, "6 inserts into a 3-tile budget evict 3");
+        assert_eq!(cache.len(), 3);
+        for s in 0..3u64 {
+            assert!(cache.get(key(0, s), 2, 2).is_none(), "oldest three evicted");
+        }
+        // re-touch the now-coldest survivor so it outlives a new insert
+        assert!(cache.get(key(0, 3), 2, 2).is_some());
+        cache.insert(key(0, 6), &gram(6, 2, 2));
+        assert_eq!(cache.stats().evictions, 4);
+        assert!(cache.get(key(0, 4), 2, 2).is_none(), "untouched LRU tile is the victim");
+        assert!(cache.get(key(0, 3), 2, 2).is_some());
+        assert!(cache.get(key(0, 5), 2, 2).is_some());
+        assert!(cache.get(key(0, 6), 2, 2).is_some());
+        assert_eq!(cache.resident_bytes(), 3 * one);
     }
 
     #[test]

@@ -44,6 +44,7 @@
 #![allow(clippy::needless_range_loop)]
 
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -50,6 +50,25 @@ pub trait MiSink: Send {
     /// Consume the combined MI block for `task` (shape `a_len x b_len`).
     fn consume_block(&mut self, task: &BlockTask, block: &Mat64) -> Result<()>;
 
+    /// Fold another sink's *finished* state into this one, before this
+    /// sink's own [`MiSink::finish`]. This is the distributed-run
+    /// contract ([`crate::cluster`]): the coordinator retains one shard
+    /// sink per worker connection and merges them into the primary, so
+    /// correctness rests on the planner's exactly-once coverage — two
+    /// shards never retain the same `(i, j)` cell, and every sink's
+    /// retained state is a pure function of the cell set it saw (the
+    /// top-k rank order is partition-independent, threshold/COO
+    /// concatenates and sorts at finish, dense regions are disjoint).
+    /// The default refuses: a sink that cannot merge must not silently
+    /// drop a shard's results.
+    fn merge(&mut self, other: SinkData) -> Result<()> {
+        Err(Error::Coordinator(format!(
+            "sink {} cannot merge {} shard state",
+            self.name(),
+            other.kind_name()
+        )))
+    }
+
     /// Finalize and return whatever the sink retained.
     fn finish(&mut self) -> Result<SinkOutput>;
 }
@@ -166,6 +185,26 @@ pub struct SinkMeta {
     /// (`None` outside the service; see
     /// `crate::coordinator::admission`).
     pub admission: Option<AdmissionReport>,
+    /// How a distributed run was sharded across workers and recovered
+    /// from worker deaths (`None` for single-process runs; see
+    /// `crate::cluster`).
+    pub cluster: Option<ClusterReport>,
+}
+
+/// Shard-and-retry audit trail of one distributed run, recorded in
+/// [`SinkMeta`] by the cluster coordinator (`crate::cluster`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClusterReport {
+    /// Worker connections the coordinator opened.
+    pub workers: usize,
+    /// Unique block tasks dispatched (not attempts).
+    pub tasks: usize,
+    /// Task attempts re-queued after a worker died or timed out —
+    /// idempotence makes every retry bit-exact, so this is an audit
+    /// number, not a correctness concern.
+    pub retried: u64,
+    /// Worker connections lost before the run finished.
+    pub worker_failures: u64,
 }
 
 /// Admission audit trail for one service job, recorded in [`SinkMeta`]:
@@ -477,6 +516,41 @@ impl MiSink for DenseSink {
         Ok(())
     }
 
+    fn merge(&mut self, other: SinkData) -> Result<()> {
+        let SinkData::Dense(shard) = other else {
+            return Err(Error::Coordinator(format!(
+                "dense sink cannot merge {} shard state",
+                other.kind_name()
+            )));
+        };
+        if shard.dim() != self.m {
+            return Err(Error::Shape(format!(
+                "dense merge: shard is {0} x {0} but the run is {1} x {1}",
+                shard.dim(),
+                self.m
+            )));
+        }
+        let mat = self
+            .mat
+            .as_mut()
+            .ok_or_else(|| Error::Coordinator("DenseSink already finished".into()))?;
+        // Shards cover disjoint cell sets (planner exactly-once), so a
+        // cell is either untouched in `shard` (still +0.0) or the final
+        // value. Copying only bit-nonzero cells keeps the merge
+        // bit-exact: a *computed* +0.0 is skipped, but the destination
+        // already holds +0.0, and a computed -0.0 has nonzero bits and
+        // is copied.
+        for i in 0..self.m {
+            for j in 0..self.m {
+                let v = shard.get(i, j);
+                if v.to_bits() != 0 {
+                    mat.set(i, j, v);
+                }
+            }
+        }
+        Ok(())
+    }
+
     fn finish(&mut self) -> Result<SinkOutput> {
         let mat = self
             .mat
@@ -551,6 +625,41 @@ impl MiSink for TopKSink {
             }
         }
         Ok(())
+    }
+
+    fn merge(&mut self, other: SinkData) -> Result<()> {
+        // rank_cmp is a total order and offer() is insertion-order
+        // independent for distinct (mi, i, j), so merging shard top-k
+        // lists reproduces the single-process result exactly
+        let other_kind = other.kind_name();
+        match (&mut self.state, other) {
+            (TopKState::Global(heap), SinkData::TopK(pairs)) => {
+                for p in pairs {
+                    heap.offer(p);
+                }
+                Ok(())
+            }
+            (TopKState::PerColumn(heaps), SinkData::TopKPerColumn(cols)) => {
+                if cols.len() != heaps.len() {
+                    return Err(Error::Shape(format!(
+                        "per-column merge: shard has {} columns, run has {}",
+                        cols.len(),
+                        heaps.len()
+                    )));
+                }
+                // each pair already appears under both endpoint columns
+                // in the shard, so column i's list feeds heap i only
+                for (heap, col) in heaps.iter_mut().zip(cols) {
+                    for p in col {
+                        heap.offer(p);
+                    }
+                }
+                Ok(())
+            }
+            _ => Err(Error::Coordinator(format!(
+                "top-k sink cannot merge {other_kind} shard state"
+            ))),
+        }
     }
 
     fn finish(&mut self) -> Result<SinkOutput> {
@@ -635,6 +744,24 @@ impl MiSink for ThresholdSink {
                 pairs.push(MiPair { i, j, mi });
             }
         });
+        Ok(())
+    }
+
+    fn merge(&mut self, other: SinkData) -> Result<()> {
+        let SinkData::Sparse(sp) = other else {
+            return Err(Error::Coordinator(format!(
+                "threshold sink cannot merge {} shard state",
+                other.kind_name()
+            )));
+        };
+        if sp.threshold != self.threshold {
+            return Err(Error::Coordinator(format!(
+                "threshold merge: shard cutoff {} != run cutoff {}",
+                sp.threshold, self.threshold
+            )));
+        }
+        // order is irrelevant here: finish() sorts by (i, j)
+        self.pairs.extend(sp.pairs);
         Ok(())
     }
 
@@ -749,6 +876,43 @@ impl MiSink for TileSpillSink {
         self.manifest.flush()?;
         self.bytes += buf.len() as u64;
         self.tiles += 1;
+        Ok(())
+    }
+
+    fn merge(&mut self, other: SinkData) -> Result<()> {
+        use std::io::Write;
+        let SinkData::Spilled(info) = other else {
+            return Err(Error::Coordinator(format!(
+                "spill sink cannot merge {} shard state",
+                other.kind_name()
+            )));
+        };
+        if info.m != self.m {
+            return Err(Error::Shape(format!(
+                "spill merge: shard manifest has m = {}, run has m = {}",
+                info.m, self.m
+            )));
+        }
+        // adopt the shard directory's verified tiles: each file moves
+        // into this sink's directory and its manifest row is appended
+        // only after the moved tile is durable — the same
+        // crash-ordering discipline consume_block keeps
+        let man = read_spill_manifest(&info.dir)?;
+        for tile in &man.tiles {
+            let raw = verify_spill_tile(&info.dir, tile)?;
+            let file = tile.file();
+            std::fs::write(self.dir.join(&file), &raw)?;
+            let t = &tile.task;
+            writeln!(
+                self.manifest,
+                "{},{},{},{},{},{:016x},{file}",
+                t.a_start, t.a_len, t.b_start, t.b_len, tile.bytes, tile.checksum
+            )?;
+            self.manifest.flush()?;
+            self.bytes += tile.bytes;
+            self.tiles += 1;
+        }
+        let _ = std::fs::remove_dir_all(&info.dir);
         Ok(())
     }
 
@@ -1355,6 +1519,81 @@ mod tests {
                 SinkSpec::parse(s).unwrap().build_for(4, 100, k).unwrap();
             }
         }
+    }
+
+    #[test]
+    fn merge_matches_single_process_for_every_sink_kind() {
+        let tasks = [
+            BlockTask { a_start: 0, a_len: 2, b_start: 0, b_len: 2 },
+            BlockTask { a_start: 0, a_len: 2, b_start: 2, b_len: 2 },
+            BlockTask { a_start: 2, a_len: 2, b_start: 2, b_len: 2 },
+        ];
+        let value = |i: usize, j: usize| (i.min(j) * 10 + i.max(j)) as f64;
+        let feed_some = |sink: &mut dyn MiSink, idxs: &[usize]| {
+            for &k in idxs {
+                let t = &tasks[k];
+                sink.consume_block(t, &block(t, value)).unwrap();
+            }
+        };
+        for s in ["dense", "topk:3", "topk-per-col:1", "threshold:2.0"] {
+            let spec = SinkSpec::parse(s).unwrap();
+            let mut whole = spec.build(4, 100).unwrap();
+            feed_some(whole.as_mut(), &[0, 1, 2]);
+            let want = format!("{:?}", whole.finish().unwrap().data);
+
+            // shard the same cell set over three sinks and merge
+            let mut primary = spec.build(4, 100).unwrap();
+            feed_some(primary.as_mut(), &[0]);
+            for shard_tasks in [&[1usize][..], &[2][..]] {
+                let mut shard = spec.build(4, 100).unwrap();
+                feed_some(shard.as_mut(), shard_tasks);
+                primary.merge(shard.finish().unwrap().data).unwrap();
+            }
+            let got = format!("{:?}", primary.finish().unwrap().data);
+            assert_eq!(got, want, "{s}");
+        }
+    }
+
+    #[test]
+    fn spill_merge_adopts_shard_tiles() {
+        let base = std::env::temp_dir()
+            .join(format!("bulkmi-spill-merge-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let tasks = [
+            BlockTask { a_start: 0, a_len: 2, b_start: 0, b_len: 2 },
+            BlockTask { a_start: 0, a_len: 2, b_start: 2, b_len: 2 },
+            BlockTask { a_start: 2, a_len: 2, b_start: 2, b_len: 2 },
+        ];
+        let value = |i: usize, j: usize| (i.min(j) * 10 + i.max(j)) as f64;
+        let mut primary = TileSpillSink::new(base.join("run"), 4).unwrap();
+        primary.consume_block(&tasks[0], &block(&tasks[0], value)).unwrap();
+        let shard_dir = base.join("shard-0");
+        let mut shard = TileSpillSink::new(&shard_dir, 4).unwrap();
+        for t in &tasks[1..] {
+            shard.consume_block(t, &block(t, value)).unwrap();
+        }
+        primary.merge(shard.finish().unwrap().data).unwrap();
+        let SinkData::Spilled(info) = primary.finish().unwrap().data else { panic!() };
+        assert_eq!(info.tiles, 3);
+        assert!(!shard_dir.exists(), "adopted shard dir must be removed");
+        let mi = assemble_spilled(&base.join("run")).unwrap();
+        for i in 0..4 {
+            for j in 0..4 {
+                assert_eq!(mi.get(i, j), value(i, j));
+            }
+        }
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn merge_kind_mismatch_is_a_clean_error() {
+        assert!(DenseSink::new(4).merge(SinkData::TopK(Vec::new())).is_err());
+        assert!(TopKSink::global(2).merge(SinkData::TopKPerColumn(Vec::new())).is_err());
+        assert!(TopKSink::per_column(3, 1).merge(SinkData::TopK(Vec::new())).is_err());
+        assert!(ThresholdSink::by_mi(1.0).merge(SinkData::TopK(Vec::new())).is_err());
+        // shard/run cutoff mismatch is refused, not silently mixed
+        let sp = SparsePairs { threshold: 0.5, pvalue: None, pairs: Vec::new() };
+        assert!(ThresholdSink::by_mi(1.0).merge(SinkData::Sparse(sp)).is_err());
     }
 
     #[test]

@@ -230,8 +230,31 @@ impl JobRequest {
         if let Some(n) = req_usize(json, "block_cols")? {
             builder = builder.block_cols(n);
         }
-        if let Some(n) = req_usize(json, "workers")? {
-            builder = builder.inner_workers(n);
+        // "workers" is overloaded exactly like the CLI flag: a number
+        // is the local thread count, a "host:port,..." string turns
+        // the job into a cluster run over those workers
+        match json.get("workers") {
+            None | Some(Json::Null) => {}
+            Some(Json::Str(s)) => {
+                let addrs: Vec<String> = s
+                    .split(',')
+                    .map(str::trim)
+                    .filter(|a| !a.is_empty())
+                    .map(str::to_string)
+                    .collect();
+                if addrs.is_empty() || addrs.iter().any(|a| !a.contains(':')) {
+                    return Err(Error::Parse(format!(
+                        "request key 'workers' as a string must be a comma-separated \
+                         host:port list, got '{s}'"
+                    )));
+                }
+                builder = builder.cluster_workers(addrs);
+            }
+            Some(_) => {
+                if let Some(n) = req_usize(json, "workers")? {
+                    builder = builder.inner_workers(n);
+                }
+            }
         }
         if let Some(n) = req_usize(json, "cache_bytes")? {
             builder = builder.cache_bytes(Some(n));
@@ -261,17 +284,25 @@ impl JobRequest {
         let s = &self.spec;
         let mut out = format!(
             "{{\"v\":{WIRE_VERSION},\"dataset\":\"{}\",\"backend\":\"{}\",\
-             \"measure\":\"{}\",\"sink\":\"{}\",\"block_cols\":{},\"workers\":{},\
+             \"measure\":\"{}\",\"sink\":\"{}\",\"block_cols\":{},\
              \"readahead\":{},\"task_latency_secs\":{}",
             escape(&self.dataset),
             s.backend.name(),
             s.measure.name(),
             escape(&sink_string(&s.sink)),
             s.block_cols,
-            s.inner_workers,
             s.readahead,
             s.task_latency_secs,
         );
+        // the overloaded key renders in whichever form the spec uses
+        if s.cluster_workers.is_empty() {
+            out.push_str(&format!(",\"workers\":{}", s.inner_workers));
+        } else {
+            out.push_str(&format!(
+                ",\"workers\":\"{}\"",
+                escape(&s.cluster_workers.join(","))
+            ));
+        }
         if let Some(schedule) = s.schedule {
             out.push_str(&format!(",\"schedule\":\"{}\"", schedule.name()));
         }
@@ -349,9 +380,16 @@ fn meta_json(out: &SinkOutput) -> String {
             t.hits, t.misses, t.evictions, t.inserted_bytes, t.budget_bytes
         ),
     };
+    let cluster = match &m.cluster {
+        None => "null".to_string(),
+        Some(c) => format!(
+            "{{\"workers\":{},\"tasks\":{},\"retried\":{},\"worker_failures\":{}}}",
+            c.workers, c.tasks, c.retried, c.worker_failures
+        ),
+    };
     format!(
         "{{\"backend\":{},\"requested_backend\":{},\"measure\":{},\"schedule\":{},\
-         \"admission\":{admission},\"tiles\":{tiles}}}",
+         \"admission\":{admission},\"tiles\":{tiles},\"cluster\":{cluster}}}",
         opt_str_json(m.backend.as_deref()),
         opt_str_json(m.requested_backend.as_deref()),
         opt_str_json(m.measure.as_deref()),
@@ -459,6 +497,54 @@ mod tests {
         let plain = JobRequest { dataset: "bg".into(), spec: JobSpec::default() };
         assert!(!plain.to_json().contains("tiles"));
         assert!(!JobRequest::parse(&plain.to_json()).unwrap().spec.tiles);
+    }
+
+    #[test]
+    fn workers_key_is_overloaded_by_json_type() {
+        // a number stays the local thread count
+        let req = JobRequest::parse(r#"{"v":1,"dataset":"bg","workers":3}"#).unwrap();
+        assert_eq!(req.spec.inner_workers, 3);
+        assert!(req.spec.cluster_workers.is_empty());
+        // a host:port string list turns the job into a cluster run
+        let req = JobRequest::parse(
+            r#"{"v":1,"dataset":"bg","workers":"10.0.0.1:7070, 10.0.0.2:7070"}"#,
+        )
+        .unwrap();
+        assert_eq!(req.spec.cluster_workers, ["10.0.0.1:7070", "10.0.0.2:7070"]);
+        // and the cluster form round-trips through to_json
+        let back = JobRequest::parse(&req.to_json()).unwrap();
+        assert_eq!(back.spec.cluster_workers, req.spec.cluster_workers);
+        // strings that are not address lists are rejected, not ignored
+        for bad in [r#""""#, r#""threads""#, r#""a:1,,b""#] {
+            let body = format!(r#"{{"v":1,"dataset":"bg","workers":{bad}}}"#);
+            assert!(JobRequest::parse(&body).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn cluster_meta_renders_in_results() {
+        let out = SinkOutput {
+            data: SinkData::TopK(vec![]),
+            meta: SinkMeta {
+                cluster: Some(crate::mi::sink::ClusterReport {
+                    workers: 2,
+                    tasks: 10,
+                    retried: 3,
+                    worker_failures: 1,
+                }),
+                ..SinkMeta::default()
+            },
+        };
+        let doc = Json::parse(&result_json(5, &out)).unwrap();
+        let cluster = doc.get("meta").unwrap().get("cluster").unwrap();
+        assert_eq!(cluster.get("workers").unwrap().as_f64(), Some(2.0));
+        assert_eq!(cluster.get("tasks").unwrap().as_f64(), Some(10.0));
+        assert_eq!(cluster.get("retried").unwrap().as_f64(), Some(3.0));
+        assert_eq!(cluster.get("worker_failures").unwrap().as_f64(), Some(1.0));
+        // single-process runs render null, not a zeroed report
+        let local = SinkOutput::from(SinkData::TopK(vec![]));
+        let doc = Json::parse(&result_json(6, &local)).unwrap();
+        assert!(matches!(doc.get("meta").unwrap().get("cluster"), Some(Json::Null)));
     }
 
     #[test]

@@ -1,0 +1,209 @@
+//! End-to-end cluster integration over real processes and real
+//! sockets: `bulkmi worker` subprocesses driven by `bulkmi compute
+//! --workers`, including SIGKILL fault injection mid-run. The in-crate
+//! tests in `src/cluster/` cover the protocol and retry machinery
+//! deterministically on loopback threads; this suite proves the same
+//! guarantees hold across process boundaries — bit-identical CSV
+//! output, clean exit codes, and a retried-task audit after a worker
+//! is killed with work in flight.
+
+use std::io::{BufRead, BufReader};
+use std::path::PathBuf;
+use std::process::{Child, ChildStderr, Command, Stdio};
+
+fn bin() -> &'static str {
+    env!("CARGO_BIN_EXE_bulkmi")
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("bulkmi-cluster-{}-{name}", std::process::id()))
+}
+
+/// Reserve a free loopback port: bind port 0, read the assignment
+/// back, drop the listener. The race against other processes grabbing
+/// it before the worker re-binds is negligible for a test.
+fn free_addr() -> String {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    l.local_addr().unwrap().to_string()
+}
+
+fn generate(data: &PathBuf, rows: &str, cols: &str) {
+    let status = Command::new(bin())
+        .args([
+            "generate", "--rows", rows, "--cols", cols, "--sparsity", "0.85",
+            "--seed", "5", "--plant", "1:7:0.05", "--out", data.to_str().unwrap(),
+        ])
+        .status()
+        .unwrap();
+    assert!(status.success(), "generate failed");
+}
+
+/// A `bulkmi worker` subprocess with its stderr held open so tests can
+/// synchronize on the worker's own log lines instead of sleeping.
+struct Worker {
+    child: Child,
+    stderr: BufReader<ChildStderr>,
+}
+
+fn spawn_worker(addr: &str, data: &PathBuf) -> Worker {
+    let mut child = Command::new(bin())
+        .args(["worker", "--connect", addr, "--input", data.to_str().unwrap()])
+        .env("BULKMI_LOG", "info")
+        .stderr(Stdio::piped())
+        .spawn()
+        .unwrap();
+    let stderr = BufReader::new(child.stderr.take().unwrap());
+    Worker { child, stderr }
+}
+
+impl Worker {
+    /// Block until the worker logs a line containing `needle` (bind
+    /// and accept are both logged at info level).
+    fn wait_for_log(&mut self, needle: &str) {
+        let mut line = String::new();
+        loop {
+            line.clear();
+            let n = self.stderr.read_line(&mut line).unwrap();
+            assert!(n > 0, "worker stderr closed before logging '{needle}'");
+            if line.contains(needle) {
+                return;
+            }
+        }
+    }
+}
+
+/// The count preceding a labelled field in the coordinator's summary
+/// line, e.g. `field_count("... 3 retried, ...", "retried,")` -> 3.
+fn field_count(stdout: &str, label: &str) -> u64 {
+    let tokens: Vec<&str> = stdout.split_whitespace().collect();
+    let at = tokens
+        .iter()
+        .position(|t| *t == label)
+        .unwrap_or_else(|| panic!("no '{label}' in coordinator output:\n{stdout}"));
+    tokens[at - 1].parse().unwrap()
+}
+
+#[test]
+fn two_worker_processes_match_single_process_bit_for_bit() {
+    let data = tmp("basic.bmat");
+    generate(&data, "500", "32");
+
+    // the single-process answer, via the same CLI surface
+    let want = tmp("basic-want.csv");
+    let status = Command::new(bin())
+        .args([
+            "compute", "--input", data.to_str().unwrap(), "--backend", "bulk-bitpack",
+            "--block-cols", "8", "--out", want.to_str().unwrap(),
+        ])
+        .status()
+        .unwrap();
+    assert!(status.success());
+
+    let (a, b) = (free_addr(), free_addr());
+    let mut w1 = spawn_worker(&a, &data);
+    let mut w2 = spawn_worker(&b, &data);
+    w1.wait_for_log("listening");
+    w2.wait_for_log("listening");
+
+    let got = tmp("basic-got.csv");
+    let out = Command::new(bin())
+        .args([
+            "compute", "--input", data.to_str().unwrap(), "--backend", "bulk-bitpack",
+            "--block-cols", "8", "--workers", &format!("{a},{b}"),
+            "--out", got.to_str().unwrap(),
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "cluster compute failed: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    assert!(stdout.contains("across 2 workers"), "{stdout}");
+    assert_eq!(field_count(&stdout, "retried,"), 0, "{stdout}");
+
+    // byte-for-byte equal CSV: floats render through shortest
+    // round-trip Display, so equal text means bit-identical values
+    let want_text = std::fs::read_to_string(&want).unwrap();
+    let got_text = std::fs::read_to_string(&got).unwrap();
+    assert_eq!(want_text, got_text, "cluster CSV must equal the single-process CSV");
+
+    // workers shut down cleanly after the coordinator's shutdown frame
+    assert!(w1.child.wait().unwrap().success());
+    assert!(w2.child.wait().unwrap().success());
+    for p in [data, want, got] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn sigkilled_worker_tasks_are_retried_to_a_bit_identical_result() {
+    // many cheap tasks stretch the run (~1000 round trips) so the kill
+    // below lands mid-dispatch, not before the handshake or after the
+    // last task
+    let data = tmp("faults.bmat");
+    generate(&data, "6000", "360");
+
+    let want = tmp("faults-want.csv");
+    let status = Command::new(bin())
+        .args([
+            "compute", "--input", data.to_str().unwrap(), "--backend", "bulk-bitpack",
+            "--block-cols", "6", "--out", want.to_str().unwrap(),
+        ])
+        .status()
+        .unwrap();
+    assert!(status.success());
+
+    let (a, b) = (free_addr(), free_addr());
+    let mut w1 = spawn_worker(&a, &data);
+    let mut w2 = spawn_worker(&b, &data);
+    w1.wait_for_log("listening");
+    w2.wait_for_log("listening");
+
+    let got = tmp("faults-got.csv");
+    let mut coordinator = Command::new(bin())
+        .args([
+            "compute", "--input", data.to_str().unwrap(), "--backend", "bulk-bitpack",
+            "--block-cols", "6", "--workers", &format!("{a},{b}"),
+            "--out", got.to_str().unwrap(),
+        ])
+        .stdout(Stdio::piped())
+        .spawn()
+        .unwrap();
+
+    // kill worker 2 the moment it has accepted the coordinator (plus a
+    // beat for the handshake to clear) — with ~1000 tasks in the plan
+    // the run is guaranteed to still be in flight
+    w2.wait_for_log("serving coordinator");
+    std::thread::sleep(std::time::Duration::from_millis(25));
+    w2.child.kill().unwrap();
+    let _ = w2.child.wait();
+
+    let out = coordinator.wait_with_output().unwrap();
+    assert!(out.status.success(), "coordinator must survive a worker death");
+    let stdout = String::from_utf8(out.stdout).unwrap();
+    assert_eq!(field_count(&stdout, "worker"), 1, "exactly one failure: {stdout}");
+    assert!(
+        field_count(&stdout, "retried,") >= 1,
+        "the killed worker's in-flight task must be retried: {stdout}"
+    );
+
+    let want_text = std::fs::read_to_string(&want).unwrap();
+    let got_text = std::fs::read_to_string(&got).unwrap();
+    assert_eq!(want_text, got_text, "retried run must stay bit-identical");
+
+    assert!(w1.child.wait().unwrap().success(), "the survivor exits cleanly");
+    for p in [data, want, got] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn worker_cli_validates_its_arguments() {
+    let out = Command::new(bin()).args(["worker", "--connect", "127.0.0.1:0"]).output().unwrap();
+    assert!(!out.status.success(), "worker needs --input");
+    let out = Command::new(bin())
+        .args(["worker", "--input", "/nonexistent.bmat"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success(), "worker needs --connect");
+    let out = Command::new(bin()).args(["cluster", "frobnicate"]).output().unwrap();
+    assert!(!out.status.success(), "unknown cluster subcommand is an error");
+}
