@@ -260,6 +260,7 @@ fn compute_packed(
     let (block, sizing_source) = block_policy(
         cfg.block_cols,
         probe.as_ref().map(|r| r.chosen_throughput()),
+        probe.as_ref().and_then(|r| r.combine_throughput(cfg.measure)),
         src.n_rows(),
         src.n_cols(),
         task_budget,
@@ -422,9 +423,11 @@ fn compute_into_sink(
     // use the memory-budget rule (shrunk by the cache carve on
     // out-of-core runs, so cache + task working set share the budget).
     let (cache, task_budget) = cache_setup(cfg, src);
+    let combine_tput = probe.as_ref().and_then(|r| r.combine_throughput(cfg.measure));
     let (block, sizing_source) = block_policy(
         cfg.block_cols,
         probe.as_ref().map(|r| r.chosen_throughput()),
+        combine_tput,
         src.n_rows(),
         src.n_cols(),
         task_budget,
@@ -483,6 +486,11 @@ fn compute_into_sink(
         block_cols: plan.block,
         source: sizing_source,
         task_latency_secs: cfg.task_latency_secs,
+        combine_cells_per_sec: if sizing_source == "probe-throughput" {
+            combine_tput
+        } else {
+            None
+        },
     });
     output.meta.schedule = Some(schedule.name());
     let (io, cache_report) = report_io(src, io0, cache.as_deref().zip(cache0));
@@ -618,9 +626,11 @@ fn compute_cluster(
     if let Some(report) = &probe {
         crate::info!("{}", report.summary());
     }
+    let combine_tput = probe.as_ref().and_then(|r| r.combine_throughput(cfg.measure));
     let (block, sizing_source) = block_policy(
         cfg.block_cols,
         probe.as_ref().map(|r| r.chosen_throughput()),
+        combine_tput,
         src.n_rows(),
         src.n_cols(),
         cfg.memory_budget,
@@ -653,6 +663,11 @@ fn compute_cluster(
         block_cols: plan.block,
         source: sizing_source,
         task_latency_secs: cfg.task_latency_secs,
+        combine_cells_per_sec: if sizing_source == "probe-throughput" {
+            combine_tput
+        } else {
+            None
+        },
     });
     output.meta.schedule = Some(schedule.name());
     let report = output.meta.cluster.clone().expect("cluster runs fill their report");

@@ -20,6 +20,7 @@ use super::messages::{
     read_frame, write_frame, FromWorker, ToWorker, HEARTBEAT_INTERVAL,
 };
 use crate::coordinator::executor::{compute_block, plan_inputs, NativeProvider};
+use crate::mi::combine_kernels::LogTable;
 use crate::coordinator::planner::plan_blocks;
 use crate::data::colstore::ColumnSource;
 use crate::mi::backend::Backend;
@@ -111,6 +112,9 @@ fn run_job(
     // through plan_inputs, the same column sums every worker computes
     let plan = plan_blocks(src.n_cols(), job.block_cols)?;
     let (n, colsums) = plan_inputs(src, &plan)?;
+    // one log table per job, shared by every task this worker serves —
+    // the cluster-side analogue of the executor's once-per-run build
+    let lt = LogTable::new(src.n_rows());
     let provider = NativeProvider::new(src, backend.native_kind());
 
     // heartbeat: proves liveness while block_gram grinds
@@ -137,7 +141,7 @@ fn run_job(
         })
     };
 
-    let served = serve_tasks(writer, reader, &provider, &colsums, n, measure);
+    let served = serve_tasks(writer, reader, &provider, &colsums, n, measure, &lt);
     stop.store(true, Ordering::Relaxed);
     let _ = hb.join();
     served
@@ -150,6 +154,7 @@ fn serve_tasks(
     colsums: &[f64],
     n: f64,
     measure: crate::mi::measure::CombineKind,
+    lt: &LogTable,
 ) -> Result<()> {
     let mut served = 0u64;
     loop {
@@ -163,7 +168,7 @@ fn serve_tasks(
                         colsums.len()
                     )));
                 }
-                let block = compute_block(provider, &task, colsums, n, measure)?;
+                let block = compute_block(provider, &task, colsums, n, measure, lt)?;
                 send(
                     writer,
                     &FromWorker::Result {

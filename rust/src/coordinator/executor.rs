@@ -18,7 +18,8 @@ use super::tilecache::{TileCache, TileKey};
 use crate::data::colstore::ColumnSource;
 use crate::data::dataset::BinaryDataset;
 use crate::linalg::dense::Mat64;
-use crate::mi::measure::{combine_block, CombineKind};
+use crate::mi::combine_kernels::{combine_block_with, LogTable};
+use crate::mi::measure::CombineKind;
 use crate::mi::sink::{DenseSink, MiSink, SinkData};
 use crate::mi::xla::XlaMi;
 use crate::mi::MiMatrix;
@@ -272,6 +273,10 @@ pub fn run_plan_tiled<P: GramProvider + Sync>(
     tiles: Option<&TileCache>,
 ) -> Result<()> {
     let (n, colsums) = plan_inputs(src, plan)?;
+    // One log table for the whole run, shared read-only by every worker
+    // lane: the combine kernels replace their per-cell log2 calls with
+    // lookups into it (see crate::mi::combine_kernels).
+    let lt = LogTable::new(src.n_rows());
     let n_tasks = plan.tasks.len();
     let abort = AtomicBool::new(false);
     // Bounded channel: workers block when the collector falls behind,
@@ -349,8 +354,16 @@ pub fn run_plan_tiled<P: GramProvider + Sync>(
             if progress.is_cancelled() || abort.load(Ordering::Relaxed) {
                 return;
             }
-            let res =
-                compute_block_tiled(src, provider, &plan.tasks[idx], &colsums, n, measure, tiles);
+            let res = compute_block_tiled(
+                src,
+                provider,
+                &plan.tasks[idx],
+                &colsums,
+                n,
+                measure,
+                &lt,
+                tiles,
+            );
             // a send can only fail if the consumer died; nothing to do
             let _ = tx.lock().unwrap().send((idx, res));
         });
@@ -377,11 +390,12 @@ pub fn run_plan_serial<P: GramProvider>(
     measure: CombineKind,
 ) -> Result<()> {
     let (n, colsums) = plan_inputs(src, plan)?;
+    let lt = LogTable::new(src.n_rows());
     for t in &plan.tasks {
         if progress.is_cancelled() {
             return Err(Error::Coordinator("job cancelled".into()));
         }
-        let block = compute_block(provider, t, &colsums, n, measure)?;
+        let block = compute_block(provider, t, &colsums, n, measure, &lt)?;
         sink.consume_block(t, &block)?;
         progress.task_done();
     }
@@ -482,13 +496,17 @@ pub fn plan_inputs(src: &dyn ColumnSource, plan: &BlockPlan) -> Result<(f64, Vec
 /// Gram + combine for one task. Public for the cluster worker
 /// (`crate::cluster`), which runs exactly this per dispatched task —
 /// the distributed path shares the single-process compute core, which
-/// is what makes sharded runs bit-identical by construction.
+/// is what makes sharded runs bit-identical by construction. `lt` is
+/// the run's shared [`LogTable`]; callers build it once per run/job
+/// (table and direct modes produce identical bits, so a caller may
+/// also pass [`LogTable::direct`]).
 pub fn compute_block<P: GramProvider + ?Sized>(
     provider: &P,
     t: &BlockTask,
     colsums: &[f64],
     n: f64,
     measure: CombineKind,
+    lt: &LogTable,
 ) -> Result<Mat64> {
     let g = provider.block_gram(t)?;
     if (g.rows(), g.cols()) != (t.a_len, t.b_len) {
@@ -501,7 +519,7 @@ pub fn compute_block<P: GramProvider + ?Sized>(
     }
     let ca = &colsums[t.a_start..t.a_start + t.a_len];
     let cb = &colsums[t.b_start..t.b_start + t.b_len];
-    Ok(combine_block(measure, &g, ca, cb, n))
+    Ok(combine_block_with(measure, lt, &g, ca, cb, n))
 }
 
 /// [`compute_block`] with a tile-cache fast path: serve the Gram from
@@ -509,6 +527,7 @@ pub fn compute_block<P: GramProvider + ?Sized>(
 /// hand it back for post-confirmation insertion. Fingerprinting uses
 /// the source directly (memoized by file-backed sources), so the key
 /// is identical whichever provider computes the Gram.
+#[allow(clippy::too_many_arguments)]
 fn compute_block_tiled<P: GramProvider + ?Sized>(
     src: &dyn ColumnSource,
     provider: &P,
@@ -516,10 +535,11 @@ fn compute_block_tiled<P: GramProvider + ?Sized>(
     colsums: &[f64],
     n: f64,
     measure: CombineKind,
+    lt: &LogTable,
     tiles: Option<&TileCache>,
 ) -> Result<(Mat64, Option<(TileKey, Mat64)>)> {
     let Some(cache) = tiles else {
-        return Ok((compute_block(provider, t, colsums, n, measure)?, None));
+        return Ok((compute_block(provider, t, colsums, n, measure, lt)?, None));
     };
     let key = TileKey {
         fp_a: src.block_fingerprint(t.a_start, t.a_len)?,
@@ -528,7 +548,7 @@ fn compute_block_tiled<P: GramProvider + ?Sized>(
     let ca = &colsums[t.a_start..t.a_start + t.a_len];
     let cb = &colsums[t.b_start..t.b_start + t.b_len];
     if let Some(g) = cache.get(key, t.a_len, t.b_len) {
-        return Ok((combine_block(measure, &g, ca, cb, n), None));
+        return Ok((combine_block_with(measure, lt, &g, ca, cb, n), None));
     }
     let g = provider.block_gram(t)?;
     if (g.rows(), g.cols()) != (t.a_len, t.b_len) {
@@ -539,7 +559,7 @@ fn compute_block_tiled<P: GramProvider + ?Sized>(
             g.cols()
         )));
     }
-    let block = combine_block(measure, &g, ca, cb, n);
+    let block = combine_block_with(measure, lt, &g, ca, cb, n);
     Ok((block, Some((key, g))))
 }
 

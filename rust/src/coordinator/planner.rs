@@ -153,25 +153,34 @@ pub fn carve_cache_budget(budget: usize) -> (usize, usize) {
 /// progress reporting and cancellation stay responsive.
 pub const DEFAULT_TASK_LATENCY_SECS: f64 = 2.0;
 
-/// Fold probed Gram throughput into block sizing: the largest block
-/// whose estimated single-task Gram latency stays under `target_secs`,
-/// additionally capped by the [`matrix_free_block`] memory rule for
-/// `budget` (0 = its 256 MiB default).
+/// Fold probed Gram (and optionally combine) throughput into block
+/// sizing: the largest block whose estimated single-task latency stays
+/// under `target_secs`, additionally capped by the
+/// [`matrix_free_block`] memory rule for `budget` (0 = its 256 MiB
+/// default).
 ///
-/// `cell_rows_per_sec` is the autotuner's throughput measure
+/// `cell_rows_per_sec` is the autotuner's Gram throughput measure
 /// ([`crate::mi::autotune::ProbeReport::chosen_throughput`]): Gram
 /// output cells x rows per second. A diagonal block task computes
-/// ~`b² · n` cell-rows, so the latency cap is
-/// `b = sqrt(throughput · target / n)` — **faster substrates get
-/// larger blocks under the same latency budget**, which amortizes
-/// per-task overhead exactly where the hardware can afford it. A
-/// non-finite or non-positive throughput falls back to the memory rule
-/// alone.
+/// ~`b² · n` cell-rows of Gram plus `b²` element-wise combine cells,
+/// so with a probed combine throughput `T_c`
+/// ([`crate::mi::autotune::ProbeReport::combine_throughput`], cells
+/// per second) the latency model is
+/// `b² · (n / T_gram + 1 / T_c) <= target` — entropy-heavy measures
+/// (`nmi`, `vi`) size blocks against Gram **+** combine rather than
+/// Gram alone. Without a combine figure the historical pure-Gram cap
+/// `b = sqrt(T_gram · target / n)` applies unchanged. **Faster
+/// substrates get larger blocks under the same latency budget**, which
+/// amortizes per-task overhead exactly where the hardware can afford
+/// it. A non-finite or non-positive Gram throughput falls back to the
+/// memory rule alone; a non-finite or non-positive combine throughput
+/// is ignored.
 pub fn throughput_block(
     n: usize,
     m: usize,
     budget: usize,
     cell_rows_per_sec: f64,
+    combine_cells_per_sec: Option<f64>,
     target_secs: f64,
 ) -> usize {
     let mem_cap = matrix_free_block(n, m, budget);
@@ -182,8 +191,14 @@ pub fn throughput_block(
     {
         return mem_cap;
     }
-    let cell_rows = cell_rows_per_sec * target_secs / n.max(1) as f64;
-    let latency_cap = cell_rows.sqrt().floor() as usize;
+    let combine = combine_cells_per_sec.filter(|c| c.is_finite() && *c > 0.0);
+    let cells = match combine {
+        // b² · (n/T_gram + 1/T_combine) <= target
+        Some(tc) => target_secs / (n.max(1) as f64 / cell_rows_per_sec + 1.0 / tc),
+        // pure-Gram model: b² · n / T_gram <= target
+        None => cell_rows_per_sec * target_secs / n.max(1) as f64,
+    };
+    let latency_cap = cells.sqrt().floor() as usize;
     latency_cap.clamp(1, m.max(1)).min(mem_cap)
 }
 
@@ -196,9 +211,17 @@ pub fn throughput_block(
 /// or the CLI's memory-budget rule. Returns the width together with
 /// its `BlockSizing::source` tag (`"explicit"` / `"probe-throughput"`
 /// / the fallback's own tag).
+///
+/// `combine_cells_per_sec` is the probed per-measure combine-stage
+/// throughput ([`crate::mi::autotune::ProbeReport::combine_throughput`]);
+/// when present it is folded into the latency model alongside the Gram
+/// throughput, so entropy-heavy measures get smaller blocks under the
+/// same latency target. It only participates when a Gram throughput is
+/// also present (the combine probe never sizes blocks on its own).
 pub fn block_policy(
     explicit_cols: usize,
     probe_cell_rows_per_sec: Option<f64>,
+    combine_cells_per_sec: Option<f64>,
     n: usize,
     m: usize,
     budget: usize,
@@ -210,7 +233,7 @@ pub fn block_policy(
     }
     if let Some(tput) = probe_cell_rows_per_sec {
         return (
-            throughput_block(n, m, budget, tput, target_secs),
+            throughput_block(n, m, budget, tput, combine_cells_per_sec, target_secs),
             "probe-throughput",
         );
     }
@@ -318,24 +341,24 @@ mod tests {
     fn throughput_block_scales_with_substrate_speed() {
         let (n, m) = (10_000usize, 5_000usize);
         // faster probed substrates get blocks at least as large
-        let slow = throughput_block(n, m, 0, 1e6, DEFAULT_TASK_LATENCY_SECS);
-        let fast = throughput_block(n, m, 0, 1e9, DEFAULT_TASK_LATENCY_SECS);
+        let slow = throughput_block(n, m, 0, 1e6, None, DEFAULT_TASK_LATENCY_SECS);
+        let fast = throughput_block(n, m, 0, 1e9, None, DEFAULT_TASK_LATENCY_SECS);
         assert!(fast >= slow, "fast {fast} < slow {slow}");
         assert!(slow >= 1);
         // the latency model itself: b^2 * n / throughput <= target
         // (when the latency cap, not the memory cap, binds)
-        let b = throughput_block(n, m, usize::MAX, 1e8, 1.0);
+        let b = throughput_block(n, m, usize::MAX, 1e8, None, 1.0);
         if b < m {
             assert!((b * b) as f64 * n as f64 / 1e8 <= 1.0 + 1e-9, "b={b}");
             assert!(((b + 1) * (b + 1)) as f64 * n as f64 / 1e8 > 1.0, "b={b} not maximal");
         }
         // the memory rule still caps an arbitrarily fast substrate
-        let capped = throughput_block(100_000, 1_000_000, 0, f64::MAX, 1e9);
+        let capped = throughput_block(100_000, 1_000_000, 0, f64::MAX, None, 1e9);
         assert!(task_bytes(100_000, capped) <= 256 << 20 || capped == 1);
         // degenerate throughput falls back to the memory rule
         for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
             assert_eq!(
-                throughput_block(n, m, 0, bad, DEFAULT_TASK_LATENCY_SECS),
+                throughput_block(n, m, 0, bad, None, DEFAULT_TASK_LATENCY_SECS),
                 matrix_free_block(n, m, 0),
                 "throughput={bad}"
             );
@@ -343,29 +366,66 @@ mod tests {
     }
 
     #[test]
+    fn combine_throughput_shrinks_blocks() {
+        let (n, m) = (10_000usize, 5_000usize);
+        // a slow combine stage shrinks the block against Gram-only sizing
+        let gram_only = throughput_block(n, m, usize::MAX, 1e8, None, 1.0);
+        let with_combine = throughput_block(n, m, usize::MAX, 1e8, Some(1e6), 1.0);
+        assert!(with_combine <= gram_only, "{with_combine} > {gram_only}");
+        // the combined latency model: b^2 * (n/Tg + 1/Tc) <= target
+        let b = with_combine;
+        let per_cell = n as f64 / 1e8 + 1.0 / 1e6;
+        if b < m {
+            assert!((b * b) as f64 * per_cell <= 1.0 + 1e-9, "b={b}");
+            assert!(((b + 1) * (b + 1)) as f64 * per_cell > 1.0, "b={b} not maximal");
+        }
+        // an arbitrarily fast combine stage converges to Gram-only sizing
+        assert_eq!(throughput_block(n, m, usize::MAX, 1e8, Some(f64::MAX), 1.0), gram_only);
+        // degenerate combine figures are ignored, not fatal
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            assert_eq!(
+                throughput_block(n, m, usize::MAX, 1e8, Some(bad), 1.0),
+                gram_only,
+                "combine={bad}"
+            );
+        }
+        assert!(throughput_block(n, m, usize::MAX, 1e8, Some(1e6), 1.0) >= 1);
+    }
+
+    #[test]
     fn block_policy_precedence() {
         let t = DEFAULT_TASK_LATENCY_SECS;
         // explicit width wins over everything
         assert_eq!(
-            block_policy(7, Some(1e9), 1000, 100, 0, t, (3, "budget")),
+            block_policy(7, Some(1e9), Some(1e7), 1000, 100, 0, t, (3, "budget")),
             (7, "explicit")
         );
         // probed throughput next
-        let (b, src) = block_policy(0, Some(1e9), 1000, 100, 0, t, (3, "budget"));
+        let (b, src) = block_policy(0, Some(1e9), None, 1000, 100, 0, t, (3, "budget"));
         assert_eq!(src, "probe-throughput");
-        assert_eq!(b, throughput_block(1000, 100, 0, 1e9, t));
+        assert_eq!(b, throughput_block(1000, 100, 0, 1e9, None, t));
+        // a combine figure folds into the throughput rule, same tag
+        let (bc, src) = block_policy(0, Some(1e9), Some(1e6), 1000, 100, 0, t, (3, "budget"));
+        assert_eq!(src, "probe-throughput");
+        assert_eq!(bc, throughput_block(1000, 100, 0, 1e9, Some(1e6), t));
+        assert!(bc <= b);
+        // ...but never sizes on its own: no Gram figure -> fallback
+        assert_eq!(
+            block_policy(0, None, Some(1e6), 1000, 100, 0, t, (3, "budget")),
+            (3, "budget")
+        );
         // the caller's fallback last
-        assert_eq!(block_policy(0, None, 1000, 100, 0, t, (3, "budget")), (3, "budget"));
+        assert_eq!(block_policy(0, None, None, 1000, 100, 0, t, (3, "budget")), (3, "budget"));
     }
 
     #[test]
     fn block_policy_honors_the_latency_target() {
         // a longer target affords blocks at least as large
-        let (short, _) = block_policy(0, Some(1e8), 10_000, 5_000, 0, 0.5, (1, "budget"));
-        let (long, _) = block_policy(0, Some(1e8), 10_000, 5_000, 0, 8.0, (1, "budget"));
+        let (short, _) = block_policy(0, Some(1e8), None, 10_000, 5_000, 0, 0.5, (1, "budget"));
+        let (long, _) = block_policy(0, Some(1e8), None, 10_000, 5_000, 0, 8.0, (1, "budget"));
         assert!(long >= short, "long {long} < short {short}");
         // a degenerate target falls back to the memory rule
-        let (b, src) = block_policy(0, Some(1e8), 10_000, 5_000, 0, 0.0, (1, "budget"));
+        let (b, src) = block_policy(0, Some(1e8), None, 10_000, 5_000, 0, 0.0, (1, "budget"));
         assert_eq!(src, "probe-throughput");
         assert_eq!(b, matrix_free_block(10_000, 5_000, 0));
     }

@@ -319,9 +319,11 @@ fn plan_for_job(
     } else {
         (0, "monolithic")
     };
+    let combine = probe.and_then(|r| r.combine_throughput(spec.measure));
     let (block, source) = block_policy(
         spec.block_cols,
         probe.map(ProbeReport::chosen_throughput),
+        combine,
         n_rows,
         m,
         task_budget,
@@ -333,6 +335,8 @@ fn plan_for_job(
         block_cols: plan.block,
         source,
         task_latency_secs: spec.task_latency_secs,
+        // record the combine figure only when it actually participated
+        combine_cells_per_sec: if source == "probe-throughput" { combine } else { None },
     }))
 }
 
@@ -982,6 +986,7 @@ mod tests {
                 block_cols: 4,
                 source: "explicit",
                 task_latency_secs: DEFAULT_TASK_LATENCY_SECS,
+                combine_cells_per_sec: None,
             })
         );
 
@@ -1001,6 +1006,12 @@ mod tests {
         assert_eq!(sizing.task_latency_secs, DEFAULT_TASK_LATENCY_SECS);
         assert!(sizing.block_cols >= 1 && sizing.block_cols <= 16);
         assert!(out.meta.probe.is_some(), "auto jobs carry the probe report");
+        // the probe recorded a combine timing for the measure, so the
+        // sizing must have folded it in
+        assert!(
+            sizing.combine_cells_per_sec.is_some_and(|c| c > 0.0),
+            "probe-sized jobs record the combine throughput they used"
+        );
     }
 
     #[test]

@@ -258,6 +258,29 @@ mod tests {
     }
 
     #[test]
+    fn drained_blocks_bit_match_snapshot_for_every_measure() {
+        use crate::mi::measure::CombineKind;
+        use crate::mi::sink::{DenseSink, MiSink, SinkData};
+        // snapshot (one monolithic combine) and drain (block-tiled
+        // combines through a sink) must agree to the bit for every
+        // measure — both run the same table-driven kernels over the
+        // same streamed sufficient statistics
+        let ds = SynthSpec::new(350, 13).sparsity(0.65).seed(11).plant(0, 9, 0.04).generate();
+        let mut acc = StreamingAccumulator::new(13, ChunkGram::Bitpack).unwrap();
+        for start in (0..350).step_by(97) {
+            let len = 97.min(350 - start);
+            acc.push_chunk(&ds.row_chunk(start, len).unwrap()).unwrap();
+        }
+        for measure in CombineKind::ALL {
+            let want = acc.snapshot_measure(measure).unwrap();
+            let mut dense = DenseSink::new(13);
+            acc.drain_into_measure(&mut dense, 4, measure).unwrap();
+            let SinkData::Dense(got) = dense.finish().unwrap().data else { panic!() };
+            assert_eq!(got.max_abs_diff(&want), 0.0, "{measure}");
+        }
+    }
+
+    #[test]
     fn drain_into_measure_ranks_by_the_selected_measure() {
         use crate::mi::measure::CombineKind;
         use crate::mi::sink::{SinkData, TopKSink};

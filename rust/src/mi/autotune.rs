@@ -41,7 +41,8 @@
 //! never an error: the worst case is one redundant probe.
 
 use super::backend::Backend;
-use super::measure::{combine_block, CombineKind};
+use super::combine_kernels::{combine_block_with, LogTable};
+use super::measure::CombineKind;
 use crate::coordinator::executor::NativeKind;
 use crate::data::colstore::ColumnSource;
 use crate::data::dataset::BinaryDataset;
@@ -138,6 +139,16 @@ impl ProbeReport {
     /// recorded one (always present on freshly probed reports).
     pub fn combine_secs(&self, measure: CombineKind) -> Option<f64> {
         self.combine.iter().find(|c| c.measure == measure).map(|c| c.secs)
+    }
+
+    /// The probed combine throughput (output cells/sec) for `measure` —
+    /// what [`crate::coordinator::planner::block_policy`] folds into
+    /// the latency model alongside [`Self::chosen_throughput`], so
+    /// entropy-heavy measures size blocks against Gram + combine.
+    /// `None` when the report carries no entry for the measure (e.g. a
+    /// persisted report from before combine probing existed).
+    pub fn combine_throughput(&self, measure: CombineKind) -> Option<f64> {
+        self.combine.iter().find(|c| c.measure == measure).map(|c| c.cells_per_sec)
     }
 }
 
@@ -515,16 +526,23 @@ fn probe_candidates(probe: &BinaryDataset, density: f64) -> Result<ProbeReport> 
 /// as the shared input). Cells are tiny (≤ 48x48), so this adds
 /// microseconds to the probe while making the per-measure combine cost
 /// auditable in the report.
+///
+/// Times the table-driven block kernels
+/// ([`crate::mi::combine_kernels::combine_block_with`]) — the exact
+/// code the executor runs per task — with the [`LogTable`] built once
+/// *outside* the timed region, matching production where the table is
+/// amortized across a whole run rather than paid per block.
 fn probe_combine(probe: &BinaryDataset) -> Vec<CombineMeasurement> {
     let g11 = probe.to_bitmatrix().gram();
     let colsums: Vec<f64> = probe.col_counts().iter().map(|&v| v as f64).collect();
     let n = probe.n_rows() as f64;
+    let lt = LogTable::new(probe.n_rows());
     let cells = (probe.n_cols() * probe.n_cols()) as f64;
     CombineKind::ALL
         .iter()
         .map(|&measure| {
             let secs = best_of(|| {
-                std::hint::black_box(combine_block(measure, &g11, &colsums, &colsums, n));
+                std::hint::black_box(combine_block_with(measure, &lt, &g11, &colsums, &colsums, n));
             });
             CombineMeasurement { measure, secs, cells_per_sec: cells / secs.max(1e-12) }
         })
@@ -735,6 +753,7 @@ mod tests {
             assert!(c.secs > 0.0, "{m}: non-positive combine time");
             assert!(c.cells_per_sec > 0.0, "{m}");
             assert_eq!(report.combine_secs(*m), Some(c.secs));
+            assert_eq!(report.combine_throughput(*m), Some(c.cells_per_sec));
         }
     }
 

@@ -1,0 +1,690 @@
+//! Table-driven, monomorphized combine kernels: the element-wise
+//! measure map at Gram speed.
+//!
+//! The blockwise engine spends its inner loop mapping each Gram cell
+//! `n11` (plus the block colsums) to a measure value. Before this
+//! module that map was a scalar call per cell — an enum `match` plus up
+//! to four transcendental `log2` evaluations (`CombineKind::combine`
+//! via `mi_from_counts_f64`), ~2·m² of them per run: exactly the
+//! per-element cost profile the paper's Section-3 bulk formulation
+//! eliminates for the Gram itself. Two observations fix it:
+//!
+//! 1. **Every `log2` argument is an integral count in `[0, n]`.**
+//!    Decompose each MI/entropy term into integer-argument logs,
+//!    `(nxy/n)·log2(nxy·n/(nx·ny))
+//!       = (nxy/n)·((log2 nxy + log2 n) − (log2 nx + log2 ny))`,
+//!    and serve them from a once-per-job [`LogTable`] of `log2 k` for
+//!    `k = 0..=n` (~8·(n+1) bytes, capped — see
+//!    [`LogTable::MAX_ENTRIES`] — with a direct-`log2` fallback for
+//!    huge `n` or non-integral arguments). The table is built once per
+//!    run ([`crate::coordinator::executor`]) or per cluster job
+//!    ([`crate::cluster::worker`]) and shared read-only across thread
+//!    lanes.
+//! 2. **The measure is loop-invariant.** A per-measure kernel struct
+//!    ([`BlockKernel`]) lifts the `match` out of the inner loop and
+//!    hoists every per-row/per-column invariant — the marginal, its
+//!    log, the Nmi/Vi marginal-entropy values, Chi2's constant-column
+//!    precheck — so the column loop is a branch-light map over `n11`.
+//!
+//! # The bit-identity contract
+//!
+//! All counts and marginals off a Gram are exact integers in f64
+//! (`< 2^53`), so any algebraically-equal *integer* derivation of them
+//! is bitwise equal; only divisions by `n`, `log2`, and the final
+//! sums/products round. The kernels therefore evaluate the *same*
+//! expression tree as the scalar core — [`CombineKind::combine`]
+//! delegates to [`combine_cell`], which runs the identical kernel cell
+//! in direct-log mode — and `table[k] = (k as f64).log2()` at build
+//! time is bit-identical to evaluating `x.log2()` at `x == k as f64`,
+//! so table mode ≡ direct mode. Consequence: scalar ≡ block ≡ streamed
+//! for every measure, bitwise, and the swap-invariant summation tree
+//! `(t11 + t00) + (t10 + t01)` (see [`crate::mi::counts`]) survives
+//! unchanged, preserving the engine's mirror-write exactness.
+//!
+//! The one number this decomposition moves: exactly-independent counts
+//! no longer cancel to ±0.0 inside each term (the old
+//! `log2(nxy·n/(nx·ny)) = log2(1) = 0` cancellation), so MI at exact
+//! independence is ~1e-15 instead of 0.0 — still far inside the 1e-12
+//! oracle tolerance every measure is validated against.
+
+use super::measure::CombineKind;
+use crate::linalg::dense::Mat64;
+use std::f64::consts::LN_2;
+
+/// Precomputed `log2 k` for integral counts `k = 0..=n`, the shared
+/// lookup the combine kernels replace transcendental calls with.
+///
+/// `table[0]` is `-inf`, exactly like `(0.0).log2()`; every use is
+/// behind the `nxy > 0` / `0 < c < n` guards the measures already
+/// carry, so no infinity ever reaches a result. An empty table
+/// ([`LogTable::direct`]) makes every lookup fall through to
+/// `x.log2()` — bit-identical by construction, just slower — which is
+/// also the capacity fallback for `n` past [`LogTable::MAX_ENTRIES`].
+pub struct LogTable {
+    table: Vec<f64>,
+}
+
+impl LogTable {
+    /// Capacity cap: 2²² entries = 32 MiB. Datasets with more rows than
+    /// this fall back to direct `log2` (the table would stop fitting in
+    /// cache long before, so nothing of value is lost).
+    pub const MAX_ENTRIES: usize = 1 << 22;
+
+    /// Build the table covering every count a run over `n_rows` rows
+    /// can produce (`0..=n_rows`), or the direct fallback when that
+    /// would exceed [`LogTable::MAX_ENTRIES`].
+    pub fn new(n_rows: usize) -> LogTable {
+        if n_rows >= Self::MAX_ENTRIES {
+            return LogTable::direct();
+        }
+        LogTable { table: (0..=n_rows).map(|k| (k as f64).log2()).collect() }
+    }
+
+    /// The no-allocation fallback: every lookup computes `x.log2()`
+    /// directly. Bit-identical to table mode for integral arguments.
+    pub fn direct() -> LogTable {
+        LogTable { table: Vec::new() }
+    }
+
+    /// Build a table only when the block is large enough to amortize
+    /// it: constructing `n+1` logs to serve fewer than `n` cells is a
+    /// net loss, so small one-shot maps (streaming snapshots of a few
+    /// columns, tiny blocks) stay on the direct path. Either choice
+    /// yields identical bits.
+    pub fn sized_for(n: f64, cells: usize) -> LogTable {
+        if !(n.is_finite() && n >= 0.0) {
+            return LogTable::direct();
+        }
+        let k = n as usize;
+        if cells >= k { LogTable::new(k) } else { LogTable::direct() }
+    }
+
+    pub fn is_direct(&self) -> bool {
+        self.table.is_empty()
+    }
+
+    /// Table memory in bytes (0 for the direct fallback) — the
+    /// `~8·(n+1)` term the planner's `task_bytes` model footnotes.
+    pub fn bytes(&self) -> usize {
+        self.table.len() * std::mem::size_of::<f64>()
+    }
+
+    /// `log2 x`, from the table when `x` is an in-range integer, else
+    /// computed directly. (The float→int cast saturates, so negative,
+    /// NaN and huge inputs all take the `x.log2()` branch or fail the
+    /// round-trip check — never an out-of-bounds read.)
+    #[inline]
+    pub fn log2(&self, x: f64) -> f64 {
+        let i = x as usize;
+        if i < self.table.len() && i as f64 == x {
+            self.table[i]
+        } else {
+            x.log2()
+        }
+    }
+}
+
+/// Per-marginal logs hoisted once per row/column: `l1 = log2 c`,
+/// `l0 = log2 (n − c)`.
+#[derive(Clone, Copy)]
+struct MargLogs {
+    l1: f64,
+    l0: f64,
+}
+
+#[inline]
+fn marg_logs(lt: &LogTable, n: f64, c1: f64) -> MargLogs {
+    MargLogs { l1: lt.log2(c1), l0: lt.log2(n - c1) }
+}
+
+/// The decomposed MI sum (bits). `ln = log2 n`; `r`/`c` carry the
+/// marginal logs. The summation tree `(t11 + t00) + (t10 + t01)` and
+/// the commutative `(lx + ly)` pairing keep the result bitwise
+/// invariant under the `(i, j) -> (j, i)` swap, exactly like the
+/// pre-decomposition form in [`crate::mi::counts`].
+#[inline]
+fn mi_bits(
+    lt: &LogTable,
+    n: f64,
+    ln: f64,
+    r: MargLogs,
+    c: MargLogs,
+    n11: f64,
+    n10: f64,
+    n01: f64,
+    n00: f64,
+) -> f64 {
+    let term = |nxy: f64, lx: f64, ly: f64| -> f64 {
+        if nxy > 0.0 {
+            (nxy / n) * ((lt.log2(nxy) + ln) - (lx + ly))
+        } else {
+            0.0
+        }
+    };
+    (term(n11, r.l1, c.l1) + term(n00, r.l0, c.l0)) + (term(n10, r.l1, c.l0) + term(n01, r.l0, c.l1))
+}
+
+/// Marginal entropy in bits from the *count* `c1` (not the
+/// probability): `H = (c1/n)·(log2 n − log2 c1) + (c0/n)·(log2 n −
+/// log2 c0)` — the same integer-argument decomposition as [`mi_bits`],
+/// so Nmi/Vi stay on table lookups. Constant columns (`c1 <= 0` or
+/// `c1 >= n`) contribute exactly 0, matching
+/// [`crate::mi::counts::entropy_bits`]'s convention.
+#[inline]
+fn entropy_from_count(lt: &LogTable, n: f64, ln: f64, c1: f64) -> f64 {
+    if c1 <= 0.0 || c1 >= n {
+        return 0.0;
+    }
+    let c0 = n - c1;
+    (c1 / n) * (ln - lt.log2(c1)) + (c0 / n) * (ln - lt.log2(c0))
+}
+
+/// One measure's block kernel: `row`/`col` hoist per-marginal
+/// invariants, `cell` is the branch-light inner-loop body. Kernels are
+/// monomorphized through [`map_block`], so the measure `match` runs
+/// once per block, not once per cell.
+trait BlockKernel {
+    type Row: Copy;
+    type Col: Copy;
+    fn row(&self, c1: f64) -> Self::Row;
+    fn col(&self, c1: f64) -> Self::Col;
+    fn cell(&self, r: Self::Row, c: Self::Col, n11: f64, n10: f64, n01: f64, n00: f64) -> f64;
+}
+
+struct MiKernel<'a> {
+    lt: &'a LogTable,
+    n: f64,
+    ln: f64,
+}
+
+impl<'a> MiKernel<'a> {
+    fn new(lt: &'a LogTable, n: f64) -> MiKernel<'a> {
+        MiKernel { lt, n, ln: lt.log2(n) }
+    }
+}
+
+impl BlockKernel for MiKernel<'_> {
+    type Row = MargLogs;
+    type Col = MargLogs;
+    fn row(&self, c1: f64) -> MargLogs {
+        marg_logs(self.lt, self.n, c1)
+    }
+    fn col(&self, c1: f64) -> MargLogs {
+        marg_logs(self.lt, self.n, c1)
+    }
+    #[inline]
+    fn cell(&self, r: MargLogs, c: MargLogs, n11: f64, n10: f64, n01: f64, n00: f64) -> f64 {
+        mi_bits(self.lt, self.n, self.ln, r, c, n11, n10, n01, n00)
+    }
+}
+
+/// Marginal logs plus the marginal entropy — the Nmi/Vi row/col state.
+#[derive(Clone, Copy)]
+struct EntMarg {
+    logs: MargLogs,
+    h: f64,
+}
+
+struct NmiKernel<'a> {
+    lt: &'a LogTable,
+    n: f64,
+    ln: f64,
+}
+
+impl<'a> NmiKernel<'a> {
+    fn new(lt: &'a LogTable, n: f64) -> NmiKernel<'a> {
+        NmiKernel { lt, n, ln: lt.log2(n) }
+    }
+    fn marg(&self, c1: f64) -> EntMarg {
+        EntMarg {
+            logs: marg_logs(self.lt, self.n, c1),
+            h: entropy_from_count(self.lt, self.n, self.ln, c1),
+        }
+    }
+}
+
+impl BlockKernel for NmiKernel<'_> {
+    type Row = EntMarg;
+    type Col = EntMarg;
+    fn row(&self, c1: f64) -> EntMarg {
+        self.marg(c1)
+    }
+    fn col(&self, c1: f64) -> EntMarg {
+        self.marg(c1)
+    }
+    #[inline]
+    fn cell(&self, r: EntMarg, c: EntMarg, n11: f64, n10: f64, n01: f64, n00: f64) -> f64 {
+        let mi = mi_bits(self.lt, self.n, self.ln, r.logs, c.logs, n11, n10, n01, n00);
+        // min of non-negative entropies: symmetric bitwise (no NaN, no -0.0)
+        let denom = r.h.min(c.h);
+        if denom > 0.0 { (mi / denom).clamp(0.0, 1.0) } else { 0.0 }
+    }
+}
+
+struct ViKernel<'a> {
+    inner: NmiKernel<'a>,
+}
+
+impl BlockKernel for ViKernel<'_> {
+    type Row = EntMarg;
+    type Col = EntMarg;
+    fn row(&self, c1: f64) -> EntMarg {
+        self.inner.marg(c1)
+    }
+    fn col(&self, c1: f64) -> EntMarg {
+        self.inner.marg(c1)
+    }
+    #[inline]
+    fn cell(&self, r: EntMarg, c: EntMarg, n11: f64, n10: f64, n01: f64, n00: f64) -> f64 {
+        let k = &self.inner;
+        let mi = mi_bits(k.lt, k.n, k.ln, r.logs, c.logs, n11, n10, n01, n00);
+        // hx + hy is a commutative add: swap-invariant
+        (r.h + c.h - 2.0 * mi).max(0.0)
+    }
+}
+
+struct GStatKernel<'a> {
+    inner: MiKernel<'a>,
+    scale: f64,
+}
+
+impl<'a> GStatKernel<'a> {
+    fn new(lt: &'a LogTable, n: f64) -> GStatKernel<'a> {
+        // same tree as the scalar `2.0 * n * LN_2 * mi`: ((2·n)·ln2)·mi
+        GStatKernel { inner: MiKernel::new(lt, n), scale: 2.0 * n * LN_2 }
+    }
+}
+
+impl BlockKernel for GStatKernel<'_> {
+    type Row = MargLogs;
+    type Col = MargLogs;
+    fn row(&self, c1: f64) -> MargLogs {
+        self.inner.row(c1)
+    }
+    fn col(&self, c1: f64) -> MargLogs {
+        self.inner.col(c1)
+    }
+    #[inline]
+    fn cell(&self, r: MargLogs, c: MargLogs, n11: f64, n10: f64, n01: f64, n00: f64) -> f64 {
+        self.scale * self.inner.cell(r, c, n11, n10, n01, n00)
+    }
+}
+
+/// Chi2/Phi marginal state: both counts plus the constant-column flag,
+/// checked once per row/column instead of once per cell.
+#[derive(Clone, Copy)]
+struct ChiMarg {
+    m1: f64,
+    m0: f64,
+    ok: bool,
+}
+
+struct Chi2Kernel {
+    n: f64,
+}
+
+impl Chi2Kernel {
+    fn marg(&self, c1: f64) -> ChiMarg {
+        let m0 = self.n - c1;
+        ChiMarg { m1: c1, m0, ok: c1 > 0.0 && m0 > 0.0 }
+    }
+}
+
+impl BlockKernel for Chi2Kernel {
+    type Row = ChiMarg;
+    type Col = ChiMarg;
+    fn row(&self, c1: f64) -> ChiMarg {
+        self.marg(c1)
+    }
+    fn col(&self, c1: f64) -> ChiMarg {
+        self.marg(c1)
+    }
+    #[inline]
+    fn cell(&self, r: ChiMarg, c: ChiMarg, n11: f64, n10: f64, n01: f64, n00: f64) -> f64 {
+        if !(r.ok && c.ok) {
+            return 0.0; // a constant column: no deviation possible
+        }
+        let n = self.n;
+        let term = |obs: f64, nx: f64, ny: f64| -> f64 {
+            let e = nx * ny / n;
+            let d = obs - e;
+            d * d / e
+        };
+        // swap-invariant tree, mirroring mi_bits
+        (term(n11, r.m1, c.m1) + term(n00, r.m0, c.m0))
+            + (term(n10, r.m1, c.m0) + term(n01, r.m0, c.m1))
+    }
+}
+
+struct PhiKernel {
+    n: f64,
+}
+
+impl BlockKernel for PhiKernel {
+    /// `r1 · r0`, the row half of the denominator product.
+    type Row = f64;
+    type Col = f64;
+    fn row(&self, c1: f64) -> f64 {
+        c1 * (self.n - c1)
+    }
+    fn col(&self, c1: f64) -> f64 {
+        c1 * (self.n - c1)
+    }
+    #[inline]
+    fn cell(&self, rr: f64, kk: f64, n11: f64, n10: f64, n01: f64, n00: f64) -> f64 {
+        let denom = (rr * kk).sqrt();
+        if denom > 0.0 { (n11 * n00 - n10 * n01) / denom } else { 0.0 }
+    }
+}
+
+struct JaccardKernel;
+
+impl BlockKernel for JaccardKernel {
+    type Row = ();
+    type Col = ();
+    fn row(&self, _c1: f64) {}
+    fn col(&self, _c1: f64) {}
+    #[inline]
+    fn cell(&self, _r: (), _c: (), n11: f64, n10: f64, n01: f64, _n00: f64) -> f64 {
+        let union = n11 + (n10 + n01);
+        if union > 0.0 { n11 / union } else { 0.0 }
+    }
+}
+
+struct OchiaiKernel;
+
+impl BlockKernel for OchiaiKernel {
+    /// The ones-marginal itself.
+    type Row = f64;
+    type Col = f64;
+    fn row(&self, c1: f64) -> f64 {
+        c1
+    }
+    fn col(&self, c1: f64) -> f64 {
+        c1
+    }
+    #[inline]
+    fn cell(&self, r1: f64, k1: f64, n11: f64, _n10: f64, _n01: f64, _n00: f64) -> f64 {
+        let denom = (r1 * k1).sqrt();
+        if denom > 0.0 { n11 / denom } else { 0.0 }
+    }
+}
+
+/// The monomorphized block loop: hoists the `n <= 0` guard, the row
+/// marginal and `r0 = n − r1`, and the kernel's row/column state out of
+/// the inner loop; the cell-count derivation keeps the exact expression
+/// tree of the historical scalar loop (`n00 = ((n − ci) − cj) + n11`),
+/// which is integer-exact anyway.
+fn map_block<K: BlockKernel>(k: &K, g11: &Mat64, ca: &[f64], cb: &[f64], n: f64) -> Mat64 {
+    let (ma, mb) = (g11.rows(), g11.cols());
+    assert_eq!(ca.len(), ma, "colsums_a length");
+    assert_eq!(cb.len(), mb, "colsums_b length");
+    let mut out = Mat64::zeros(ma, mb);
+    if n <= 0.0 {
+        return out; // the scalar core's n <= 0 guard, hoisted
+    }
+    let cols: Vec<K::Col> = cb.iter().map(|&c| k.col(c)).collect();
+    for i in 0..ma {
+        let ci = ca[i];
+        let r = k.row(ci);
+        let r0 = n - ci;
+        let grow = g11.row(i);
+        let orow = &mut out.data_mut()[i * mb..(i + 1) * mb];
+        for j in 0..mb {
+            let n11 = grow[j];
+            let cj = cb[j];
+            let n10 = ci - n11;
+            let n01 = cj - n11;
+            let n00 = (r0 - cj) + n11;
+            orow[j] = k.cell(r, cols[j], n11, n10, n01, n00);
+        }
+    }
+    out
+}
+
+/// Element-wise combine of a Gram block through the table-driven
+/// kernels. The workhorse behind
+/// [`crate::mi::measure::combine_block`]; callers that amortize one
+/// [`LogTable`] across many blocks (the executor, cluster workers, the
+/// autotune prober) invoke this directly.
+pub fn combine_block_with(
+    kind: CombineKind,
+    lt: &LogTable,
+    g11: &Mat64,
+    ca: &[f64],
+    cb: &[f64],
+    n: f64,
+) -> Mat64 {
+    match kind {
+        CombineKind::Mi => map_block(&MiKernel::new(lt, n), g11, ca, cb, n),
+        CombineKind::Nmi => map_block(&NmiKernel::new(lt, n), g11, ca, cb, n),
+        CombineKind::Vi => map_block(&ViKernel { inner: NmiKernel::new(lt, n) }, g11, ca, cb, n),
+        CombineKind::GStat => map_block(&GStatKernel::new(lt, n), g11, ca, cb, n),
+        CombineKind::Chi2 => map_block(&Chi2Kernel { n }, g11, ca, cb, n),
+        CombineKind::Phi => map_block(&PhiKernel { n }, g11, ca, cb, n),
+        CombineKind::Jaccard => map_block(&JaccardKernel, g11, ca, cb, n),
+        CombineKind::Ochiai => map_block(&OchiaiKernel, g11, ca, cb, n),
+    }
+}
+
+/// The shared scalar core: one cell of `kind` from the four joint
+/// counts, evaluated through the same kernel `cell` bodies as the block
+/// path, in direct-log mode — which is what makes scalar ≡ block
+/// bit-identical. [`CombineKind::combine`] is a thin wrapper over this.
+#[inline]
+pub fn combine_cell(kind: CombineKind, n: f64, c00: f64, c01: f64, c10: f64, c11: f64) -> f64 {
+    if n <= 0.0 {
+        return 0.0;
+    }
+    let lt = LogTable::direct();
+    let r1 = c11 + c10; // X = 1 marginal
+    let k1 = c11 + c01; // Y = 1 marginal
+    macro_rules! via {
+        ($k:expr) => {{
+            let k = $k;
+            k.cell(k.row(r1), k.col(k1), c11, c10, c01, c00)
+        }};
+    }
+    match kind {
+        CombineKind::Mi => via!(MiKernel::new(&lt, n)),
+        CombineKind::Nmi => via!(NmiKernel::new(&lt, n)),
+        CombineKind::Vi => via!(ViKernel { inner: NmiKernel::new(&lt, n) }),
+        CombineKind::GStat => via!(GStatKernel::new(&lt, n)),
+        CombineKind::Chi2 => via!(Chi2Kernel { n }),
+        CombineKind::Phi => via!(PhiKernel { n }),
+        CombineKind::Jaccard => via!(JaccardKernel),
+        CombineKind::Ochiai => via!(OchiaiKernel),
+    }
+}
+
+/// The decomposed MI cell in direct-log mode — the single expression
+/// every MI path in the crate now evaluates
+/// ([`crate::mi::counts::mi_from_counts_f64`] and
+/// [`crate::mi::counts::mi_from_counts_u64`] delegate here).
+#[inline]
+pub fn mi_cell_direct(n11: f64, n10: f64, n01: f64, n00: f64, n: f64) -> f64 {
+    if n <= 0.0 {
+        return 0.0;
+    }
+    let lt = LogTable::direct();
+    let k = MiKernel::new(&lt, n);
+    k.cell(k.row(n11 + n10), k.col(n11 + n01), n11, n10, n01, n00)
+}
+
+/// The pre-kernel combine shape — per-cell marginal derivation plus the
+/// enum-dispatched scalar [`CombineKind::combine`] — kept as the
+/// reference loop benches and tests measure the block kernels against.
+/// Bit-identical to [`combine_block_with`] (same cell cores, direct-log
+/// mode), just slower.
+pub fn combine_block_scalar(
+    kind: CombineKind,
+    g11: &Mat64,
+    ca: &[f64],
+    cb: &[f64],
+    n: f64,
+) -> Mat64 {
+    let (ma, mb) = (g11.rows(), g11.cols());
+    assert_eq!(ca.len(), ma, "colsums_a length");
+    assert_eq!(cb.len(), mb, "colsums_b length");
+    let mut out = Mat64::zeros(ma, mb);
+    for i in 0..ma {
+        let ci = ca[i];
+        let grow = g11.row(i);
+        let orow = &mut out.data_mut()[i * mb..(i + 1) * mb];
+        for j in 0..mb {
+            let n11 = grow[j];
+            let n10 = ci - n11;
+            let n01 = cb[j] - n11;
+            let n00 = n - ci - cb[j] + n11;
+            orow[j] = kind.combine(n, n00, n01, n10, n11);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::SynthSpec;
+
+    #[test]
+    fn table_lookup_is_bit_identical_to_direct() {
+        let lt = LogTable::new(1000);
+        assert!(!lt.is_direct());
+        assert_eq!(lt.bytes(), 1001 * 8);
+        for k in 0..=1000usize {
+            let x = k as f64;
+            assert_eq!(lt.log2(x).to_bits(), x.log2().to_bits(), "k = {k}");
+        }
+        // out-of-range, non-integral, negative, NaN: all fall through
+        for x in [1001.0, 1e9, 2.5, -3.0, -0.0, f64::NAN, f64::INFINITY] {
+            assert_eq!(lt.log2(x).to_bits(), x.log2().to_bits(), "x = {x}");
+        }
+        assert_eq!(lt.log2(0.0), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn capacity_cap_falls_back_to_direct() {
+        let lt = LogTable::new(LogTable::MAX_ENTRIES);
+        assert!(lt.is_direct());
+        assert_eq!(lt.bytes(), 0);
+        // direct mode still answers everything
+        assert_eq!(lt.log2(8.0), 3.0);
+        // sized_for: too few cells to amortize -> direct; enough -> table
+        assert!(LogTable::sized_for(1000.0, 99).is_direct());
+        assert!(!LogTable::sized_for(1000.0, 10_000).is_direct());
+        assert!(LogTable::sized_for(f64::NAN, 10_000).is_direct());
+        assert!(LogTable::sized_for(-5.0, 10_000).is_direct());
+    }
+
+    /// The tentpole property: for every measure, the table-driven block
+    /// kernel, the direct-mode block kernel and the per-cell scalar
+    /// loop produce the same bits — on a square Gram with edge-case
+    /// columns (all-zero, all-one) baked in.
+    #[test]
+    fn block_kernels_bit_match_scalar_on_edge_columns() {
+        // hand-built 97x10 dataset: col 0 all-zero (c = 0), col 1
+        // all-one (c = n), the rest pseudo-random
+        let (n_rows, n_cols) = (97usize, 10usize);
+        let mut data = vec![0u8; n_rows * n_cols];
+        let mut state = 0xD1CEu64;
+        for r in 0..n_rows {
+            for c in 2..n_cols {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                data[r * n_cols + c] = ((state >> 60) & 1) as u8;
+            }
+            data[r * n_cols + 1] = 1;
+        }
+        let ds = crate::data::dataset::BinaryDataset::new(n_rows, n_cols, data).unwrap();
+        let g = ds.to_bitmatrix().gram();
+        let c: Vec<f64> = ds.col_counts().iter().map(|&v| v as f64).collect();
+        let n = 97.0;
+        let table = LogTable::new(97);
+        let direct = LogTable::direct();
+        for kind in CombineKind::ALL {
+            let fast = combine_block_with(kind, &table, &g, &c, &c, n);
+            let fallback = combine_block_with(kind, &direct, &g, &c, &c, n);
+            let scalar = combine_block_scalar(kind, &g, &c, &c, n);
+            assert_eq!(fast.max_abs_diff(&fallback), 0.0, "{kind}: table vs direct");
+            assert_eq!(fast.max_abs_diff(&scalar), 0.0, "{kind}: block vs scalar");
+        }
+    }
+
+    /// Same property on a rectangular cross-block (distinct row/col
+    /// column sets, distinct marginals on each axis).
+    #[test]
+    fn rectangular_cross_blocks_bit_match_scalar() {
+        let ds = SynthSpec::new(64, 12).sparsity(0.4).seed(23).generate();
+        let bits = ds.to_bitmatrix();
+        let a = bits.col_block(0, 5).unwrap();
+        let b = bits.col_block(5, 7).unwrap();
+        let g = a.gram_cross(&b).unwrap();
+        let c: Vec<f64> = ds.col_counts().iter().map(|&v| v as f64).collect();
+        let (ca, cb) = (&c[0..5], &c[5..12]);
+        let lt = LogTable::new(64);
+        for kind in CombineKind::ALL {
+            let fast = combine_block_with(kind, &lt, &g, ca, cb, 64.0);
+            let scalar = combine_block_scalar(kind, &g, ca, cb, 64.0);
+            assert_eq!(fast.max_abs_diff(&scalar), 0.0, "{kind}");
+            assert_eq!(fast.rows(), 5);
+            assert_eq!(fast.cols(), 7);
+        }
+    }
+
+    /// Random integral 2x2 tables, including degenerate totals
+    /// `n ∈ {0, 1}`: the scalar wrapper and the 1x1-block kernel agree
+    /// bitwise cell by cell.
+    #[test]
+    fn random_tables_and_tiny_n_bit_match() {
+        let mut state = 0x9E3779B97F4A7C15u64;
+        let mut next = move |m: u64| {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 33) % (m + 1)
+        };
+        let mut tables: Vec<[f64; 5]> = vec![
+            [0.0, 0.0, 0.0, 0.0, 0.0], // n = 0
+            [1.0, 1.0, 0.0, 0.0, 0.0], // n = 1, the single row is (0,0)
+            [1.0, 0.0, 0.0, 0.0, 1.0], // n = 1, the single row is (1,1)
+        ];
+        for _ in 0..200 {
+            let n11 = next(40);
+            let n10 = next(40);
+            let n01 = next(40);
+            let n00 = next(40);
+            let n = n11 + n10 + n01 + n00;
+            tables.push([n as f64, n00 as f64, n01 as f64, n10 as f64, n11 as f64]);
+        }
+        for &[n, c00, c01, c10, c11] in &tables {
+            let lt = LogTable::new(n as usize);
+            let mut g = Mat64::zeros(1, 1);
+            g.set(0, 0, c11);
+            let ca = [c11 + c10];
+            let cb = [c11 + c01];
+            for kind in CombineKind::ALL {
+                let scalar = kind.combine(n, c00, c01, c10, c11);
+                let block = combine_block_with(kind, &lt, &g, &ca, &cb, n).get(0, 0);
+                assert_eq!(
+                    scalar.to_bits(),
+                    block.to_bits(),
+                    "{kind} on n={n} ({c00},{c01},{c10},{c11})"
+                );
+                assert!(scalar.is_finite(), "{kind} not finite on n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn entropy_from_count_matches_probability_form() {
+        use crate::mi::counts::entropy_bits;
+        let lt = LogTable::new(64);
+        let n = 64.0;
+        let ln = lt.log2(n);
+        for c in 0..=64 {
+            let c = c as f64;
+            let got = entropy_from_count(&lt, n, ln, c);
+            let want = entropy_bits(c / n);
+            assert!((got - want).abs() < 1e-12, "c = {c}: {got} vs {want}");
+            assert!(got >= 0.0);
+        }
+    }
+}

@@ -36,6 +36,13 @@
 //! mirror-writes stay bit-identical to monolithic runs for every
 //! measure, exactly as they do for MI.
 //!
+//! Both the scalar core and the block map are thin entry points over
+//! [`crate::mi::combine_kernels`]: the scalar path runs the same
+//! per-measure cell bodies in direct-`log2` mode, the block path runs
+//! them monomorphized with marginal invariants hoisted and integer
+//! logs served from a [`crate::mi::combine_kernels::LogTable`] — two
+//! evaluation speeds, one expression tree, identical bits.
+//!
 //! Only `mi` and `gstat` carry the G-test χ²₁ asymptotic null
 //! ([`crate::mi::significance`]); the `pvalue:` sink therefore accepts
 //! exactly those two ([`CombineKind::supports_pvalue_sink`]) and
@@ -63,7 +70,7 @@
 //! assert_eq!(CombineKind::parse("bogus"), None);
 //! ```
 
-use super::counts::{entropy_bits, mi_from_counts_f64};
+use super::combine_kernels::{combine_block_with, combine_cell, LogTable};
 use super::MiMatrix;
 use crate::data::dataset::BinaryDataset;
 use crate::linalg::dense::Mat64;
@@ -136,68 +143,15 @@ impl CombineKind {
     /// the four joint counts (`c10` counts rows with X=1, Y=0, etc.).
     ///
     /// Counts arrive as f64 because they come off a Gram matrix; they
-    /// are integral up to float rounding. The evaluation order is
-    /// chosen so the result is bitwise invariant under the
+    /// are integral up to float rounding. Delegates to the shared
+    /// kernel cell body ([`crate::mi::combine_kernels::combine_cell`])
+    /// in direct-log mode, so the value is bit-identical to the
+    /// table-driven block kernels and bitwise invariant under the
     /// `c10 <-> c01` (column swap) exchange — the blockwise engine's
     /// mirror-write exactness relies on it.
     #[inline]
     pub fn combine(self, n: f64, c00: f64, c01: f64, c10: f64, c11: f64) -> f64 {
-        if n <= 0.0 {
-            return 0.0;
-        }
-        let r1 = c11 + c10; // X = 1 marginal
-        let r0 = c01 + c00;
-        let k1 = c11 + c01; // Y = 1 marginal
-        let k0 = c10 + c00;
-        match self {
-            CombineKind::Mi => mi_from_counts_f64(c11, c10, c01, c00, n),
-            CombineKind::Nmi => {
-                let mi = mi_from_counts_f64(c11, c10, c01, c00, n);
-                let denom = entropy_bits(r1 / n).min(entropy_bits(k1 / n));
-                if denom > 0.0 {
-                    (mi / denom).clamp(0.0, 1.0)
-                } else {
-                    0.0
-                }
-            }
-            CombineKind::Vi => {
-                let mi = mi_from_counts_f64(c11, c10, c01, c00, n);
-                // hx + hy is a commutative add: swap-invariant
-                (entropy_bits(r1 / n) + entropy_bits(k1 / n) - 2.0 * mi).max(0.0)
-            }
-            CombineKind::GStat => {
-                2.0 * n * std::f64::consts::LN_2 * mi_from_counts_f64(c11, c10, c01, c00, n)
-            }
-            CombineKind::Chi2 => {
-                if r1 <= 0.0 || r0 <= 0.0 || k1 <= 0.0 || k0 <= 0.0 {
-                    return 0.0; // a constant column: no deviation possible
-                }
-                let term = |obs: f64, nx: f64, ny: f64| -> f64 {
-                    let e = nx * ny / n;
-                    let d = obs - e;
-                    d * d / e
-                };
-                // swap-invariant tree, mirroring mi_from_counts_f64
-                (term(c11, r1, k1) + term(c00, r0, k0))
-                    + (term(c10, r1, k0) + term(c01, r0, k1))
-            }
-            CombineKind::Phi => {
-                let denom = ((r1 * r0) * (k1 * k0)).sqrt();
-                if denom > 0.0 {
-                    (c11 * c00 - c10 * c01) / denom
-                } else {
-                    0.0
-                }
-            }
-            CombineKind::Jaccard => {
-                let union = c11 + (c10 + c01);
-                if union > 0.0 { c11 / union } else { 0.0 }
-            }
-            CombineKind::Ochiai => {
-                let denom = (r1 * k1).sqrt();
-                if denom > 0.0 { c11 / denom } else { 0.0 }
-            }
-        }
+        combine_cell(self, n, c00, c01, c10, c11)
     }
 }
 
@@ -213,24 +167,17 @@ impl std::fmt::Display for CombineKind {
 ///
 /// `g11[i][j]` counts co-occurring ones between variable `i` of block a
 /// and variable `j` of block b; `ca`/`cb` are the blocks' column sums.
+///
+/// Runs the monomorphized kernels with a per-call [`LogTable`] sized by
+/// the block's cell count (small blocks stay on the bit-identical
+/// direct-log path rather than paying an `O(n)` table build). Callers
+/// that map many blocks per run — the executor, cluster workers — hold
+/// one table and call
+/// [`combine_block_with`](crate::mi::combine_kernels::combine_block_with)
+/// instead.
 pub fn combine_block(kind: CombineKind, g11: &Mat64, ca: &[f64], cb: &[f64], n: f64) -> Mat64 {
-    let (ma, mb) = (g11.rows(), g11.cols());
-    assert_eq!(ca.len(), ma, "colsums_a length");
-    assert_eq!(cb.len(), mb, "colsums_b length");
-    let mut out = Mat64::zeros(ma, mb);
-    for i in 0..ma {
-        let ci = ca[i];
-        let grow = g11.row(i);
-        let orow = &mut out.data_mut()[i * mb..(i + 1) * mb];
-        for j in 0..mb {
-            let n11 = grow[j];
-            let n10 = ci - n11;
-            let n01 = cb[j] - n11;
-            let n00 = n - ci - cb[j] + n11;
-            orow[j] = kind.combine(n, n00, n01, n10, n11);
-        }
-    }
-    out
+    let lt = LogTable::sized_for(n, g11.rows() * g11.cols());
+    combine_block_with(kind, &lt, g11, ca, cb, n)
 }
 
 /// Sequential per-pair computation of any measure (the `pairwise`

@@ -15,6 +15,10 @@
 //!   measure the 2x2 table determines (MI, normalized MI, variation of
 //!   information, G-statistic, χ², φ, Jaccard, Ochiai) from the same
 //!   single Gram.
+//! * [`combine_kernels`] — the table-driven, monomorphized block
+//!   kernels behind that combine layer: integer-argument log
+//!   decomposition served from a once-per-job `LogTable`, bit-identical
+//!   to the scalar core.
 //! * [`sink`] — streaming consumers of MI blocks (dense / top-k /
 //!   threshold / disk-spill); what decouples computing all pairs from
 //!   storing all pairs.
@@ -35,6 +39,7 @@ pub mod categorical;
 pub mod bulk_bitpack;
 pub mod bulk_opt;
 pub mod bulk_sparse;
+pub mod combine_kernels;
 pub mod counts;
 pub mod entropy;
 pub mod measure;

@@ -299,6 +299,14 @@ pub struct BlockSizing {
     /// `JobSpec::task_latency_secs`; only binding when `source` is
     /// `"probe-throughput"`, recorded always so runs are comparable).
     pub task_latency_secs: f64,
+    /// The probed combine-stage throughput (output cells/sec) for the
+    /// run's measure that was folded into the latency model alongside
+    /// the Gram throughput
+    /// ([`crate::mi::autotune::ProbeReport::combine_throughput`]).
+    /// `None` when the sizing ignored combine cost: no probe ran, the
+    /// width was explicit, or the probe report carried no entry for the
+    /// measure.
+    pub combine_cells_per_sec: Option<f64>,
 }
 
 /// What a sink retained plus how the run was executed, returned by

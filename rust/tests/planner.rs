@@ -1,7 +1,8 @@
 //! Direct unit tests for the planner's block-width policy — previously
 //! exercised only indirectly through the job service. Covers the
 //! `block_policy` precedence chain (explicit > probe-throughput >
-//! caller fallback) and the `throughput_block` latency-cap math.
+//! caller fallback) and the `throughput_block` latency-cap math,
+//! including the combine-aware model `b² · (n/T_gram + 1/T_c)`.
 
 use bulkmi::coordinator::planner::{
     block_policy, matrix_free_block, task_bytes, throughput_block, DEFAULT_TASK_LATENCY_SECS,
@@ -11,10 +12,10 @@ use bulkmi::coordinator::planner::{
 fn explicit_width_beats_probe_and_fallback() {
     let t = DEFAULT_TASK_LATENCY_SECS;
     // an explicit caller width wins no matter what else is available
-    let (b, src) = block_policy(9, Some(1e9), 10_000, 500, 0, t, (7, "budget"));
+    let (b, src) = block_policy(9, Some(1e9), Some(1e7), 10_000, 500, 0, t, (7, "budget"));
     assert_eq!((b, src), (9, "explicit"));
     // ...even an absurdly small one
-    let (b, src) = block_policy(1, Some(f64::MAX), 10_000, 500, 0, t, (7, "monolithic"));
+    let (b, src) = block_policy(1, Some(f64::MAX), None, 10_000, 500, 0, t, (7, "monolithic"));
     assert_eq!((b, src), (1, "explicit"));
 }
 
@@ -22,14 +23,14 @@ fn explicit_width_beats_probe_and_fallback() {
 fn probe_throughput_beats_fallback() {
     let (n, m) = (10_000usize, 500usize);
     let t = DEFAULT_TASK_LATENCY_SECS;
-    let (b, src) = block_policy(0, Some(1e8), n, m, 0, t, (7, "budget"));
+    let (b, src) = block_policy(0, Some(1e8), None, n, m, 0, t, (7, "budget"));
     assert_eq!(src, "probe-throughput");
-    assert_eq!(b, throughput_block(n, m, 0, 1e8, t));
+    assert_eq!(b, throughput_block(n, m, 0, 1e8, None, t));
     assert!(b >= 1);
     // the caller's latency target feeds straight through: a longer
     // target affords blocks at least as large
-    let (short, _) = block_policy(0, Some(1e8), n, m, 0, 0.25, (7, "budget"));
-    let (long, _) = block_policy(0, Some(1e8), n, m, 0, 16.0, (7, "budget"));
+    let (short, _) = block_policy(0, Some(1e8), None, n, m, 0, 0.25, (7, "budget"));
+    let (long, _) = block_policy(0, Some(1e8), None, n, m, 0, 16.0, (7, "budget"));
     assert!(long >= short, "target 16s gave {long} < target 0.25s {short}");
 }
 
@@ -37,8 +38,19 @@ fn probe_throughput_beats_fallback() {
 fn fallback_applies_when_nothing_else_is_known() {
     let t = DEFAULT_TASK_LATENCY_SECS;
     // no explicit width, no probe: the caller's fallback rule verbatim
-    assert_eq!(block_policy(0, None, 10_000, 500, 0, t, (0, "monolithic")), (0, "monolithic"));
-    assert_eq!(block_policy(0, None, 10_000, 500, 0, t, (123, "budget")), (123, "budget"));
+    assert_eq!(
+        block_policy(0, None, None, 10_000, 500, 0, t, (0, "monolithic")),
+        (0, "monolithic")
+    );
+    assert_eq!(
+        block_policy(0, None, None, 10_000, 500, 0, t, (123, "budget")),
+        (123, "budget")
+    );
+    // a combine figure alone never sizes blocks: still the fallback
+    assert_eq!(
+        block_policy(0, None, Some(1e7), 10_000, 500, 0, t, (123, "budget")),
+        (123, "budget")
+    );
 }
 
 #[test]
@@ -47,7 +59,7 @@ fn latency_cap_math_is_maximal_under_the_target() {
     // the largest with b² · n / throughput <= target
     let (n, m) = (10_000usize, 5_000usize);
     let (tput, target) = (1e8f64, 1.0f64);
-    let b = throughput_block(n, m, usize::MAX, tput, target);
+    let b = throughput_block(n, m, usize::MAX, tput, None, target);
     assert!(b >= 1);
     if b < m {
         let latency = |w: usize| (w * w) as f64 * n as f64 / tput;
@@ -57,11 +69,43 @@ fn latency_cap_math_is_maximal_under_the_target() {
 }
 
 #[test]
+fn combine_throughput_folds_into_the_latency_cap() {
+    // with a probed combine throughput, the model charges each output
+    // cell n/T_gram + 1/T_combine seconds — a slow (entropy-heavy)
+    // combine stage shrinks blocks relative to Gram-only sizing
+    let (n, m) = (10_000usize, 5_000usize);
+    let (tput, target) = (1e8f64, 1.0f64);
+    let gram_only = throughput_block(n, m, usize::MAX, tput, None, target);
+    let combined = throughput_block(n, m, usize::MAX, tput, Some(1e6), target);
+    assert!(combined >= 1);
+    assert!(combined <= gram_only, "{combined} > gram-only {gram_only}");
+    if combined < m {
+        let per_cell = n as f64 / tput + 1.0 / 1e6;
+        let latency = |w: usize| (w * w) as f64 * per_cell;
+        assert!(latency(combined) <= target + 1e-9, "b = {combined} exceeds the target");
+        assert!(latency(combined + 1) > target, "b = {combined} is not maximal");
+    }
+    // degenerate combine figures are ignored rather than fatal
+    for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+        assert_eq!(
+            throughput_block(n, m, usize::MAX, tput, Some(bad), target),
+            gram_only,
+            "combine = {bad}"
+        );
+    }
+    // block_policy threads the figure through under the same source tag
+    let (b, src) =
+        block_policy(0, Some(tput), Some(1e6), n, m, usize::MAX, target, (7, "budget"));
+    assert_eq!(src, "probe-throughput");
+    assert_eq!(b, combined);
+}
+
+#[test]
 fn faster_substrates_get_larger_blocks() {
     let (n, m) = (10_000usize, 5_000usize);
     let mut last = 0usize;
     for tput in [1e6, 1e7, 1e8, 1e9] {
-        let b = throughput_block(n, m, 0, tput, DEFAULT_TASK_LATENCY_SECS);
+        let b = throughput_block(n, m, 0, tput, None, DEFAULT_TASK_LATENCY_SECS);
         assert!(b >= last, "throughput {tput}: block shrank {last} -> {b}");
         last = b;
     }
@@ -70,7 +114,7 @@ fn faster_substrates_get_larger_blocks() {
 #[test]
 fn memory_cap_still_binds_an_arbitrarily_fast_probe() {
     let (n, m) = (100_000usize, 1_000_000usize);
-    let b = throughput_block(n, m, 0, f64::MAX, 1e9);
+    let b = throughput_block(n, m, 0, f64::MAX, None, 1e9);
     assert_eq!(b, matrix_free_block(n, m, 0), "latency cap can only shrink the memory cap");
     assert!(task_bytes(n, b) <= 256 << 20 || b == 1);
 }
@@ -80,7 +124,7 @@ fn degenerate_throughput_falls_back_to_the_memory_rule() {
     let (n, m) = (10_000usize, 500usize);
     for bad in [0.0, -5.0, f64::NAN, f64::INFINITY] {
         assert_eq!(
-            throughput_block(n, m, 0, bad, DEFAULT_TASK_LATENCY_SECS),
+            throughput_block(n, m, 0, bad, None, DEFAULT_TASK_LATENCY_SECS),
             matrix_free_block(n, m, 0),
             "throughput = {bad}"
         );
@@ -88,7 +132,7 @@ fn degenerate_throughput_falls_back_to_the_memory_rule() {
     // a zero/negative/non-finite target is equally degenerate
     for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
         assert_eq!(
-            throughput_block(n, m, 0, 1e8, bad),
+            throughput_block(n, m, 0, 1e8, None, bad),
             matrix_free_block(n, m, 0),
             "target = {bad}"
         );
@@ -98,8 +142,8 @@ fn degenerate_throughput_falls_back_to_the_memory_rule() {
 #[test]
 fn latency_cap_is_clamped_to_valid_widths() {
     // a probe so slow the latency cap would be 0 still yields >= 1
-    assert!(throughput_block(1_000_000, 100, usize::MAX, 1.0, 1e-6) >= 1);
+    assert!(throughput_block(1_000_000, 100, usize::MAX, 1.0, None, 1e-6) >= 1);
     // and never exceeds the column count
-    let b = throughput_block(10, 4, usize::MAX, f64::MAX / 2.0, 1e6);
+    let b = throughput_block(10, 4, usize::MAX, f64::MAX / 2.0, None, 1e6);
     assert!(b <= 4, "b = {b}");
 }
